@@ -1,0 +1,62 @@
+//! Architecture report — train one Bayesian Bits configuration and dump
+//! the learned per-layer bit widths and channel sparsity (Figure 6 /
+//! Figures 15-18 style), plus analytic paper-scale BOP context.
+//!
+//!     cargo run --release --example architecture_report -- \
+//!         --model vgg7 --mu 0.05 --quick
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use bayesian_bits::bops::{BopCounter, QuantState};
+use bayesian_bits::cli::Args;
+use bayesian_bits::config::Mode;
+use bayesian_bits::coordinator::trainer::Trainer;
+use bayesian_bits::experiments::common::ExpOptions;
+use bayesian_bits::models::{descriptor, Preset};
+use bayesian_bits::report::arch_viz;
+use bayesian_bits::runtime::{Manifest, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let opt = ExpOptions::from_args(&args)?;
+    let model = args.str_flag("model", "vgg7");
+    let mu = args.f64_flag("mu", 0.05)?;
+
+    let rt = Arc::new(Runtime::cpu()?);
+    let man = Manifest::load(Path::new(&opt.artifacts_dir), &model)?;
+    let cfg = opt.config(&model, Mode::BayesianBits, mu, 1);
+    let mut trainer = Trainer::new(rt, man.clone(), cfg)?;
+    let result = trainer.run()?;
+
+    println!(
+        "trained {model} with mu={mu}: acc {:.2}%, rel GBOPs {:.2}%",
+        result.accuracy * 100.0, result.rel_bops_pct
+    );
+    println!("{}", arch_viz::architecture_report(&man, &result.states));
+    println!("{}", arch_viz::summary_line(&man, &result.states));
+
+    // What would this learned configuration cost at *paper scale*?
+    // Map learned per-layer bits onto the full-size descriptor by layer
+    // name (the topologies match 1:1 across presets).
+    let paper = descriptor(model.trim_end_matches("_dq"), Preset::Paper)?;
+    let counter = BopCounter::new(paper.clone());
+    let mut states: BTreeMap<String, QuantState> = BTreeMap::new();
+    for l in &paper {
+        if let Some(s) = result.states.get(&l.weight_q) {
+            states.insert(l.weight_q.clone(), *s);
+        }
+        if let Some(s) = result.states.get(&l.act_q) {
+            states.insert(l.act_q.clone(), *s);
+        }
+    }
+    println!(
+        "projected to paper-scale {model}: {:.2}% of FP32 GBOPs \
+         ({:.3} GBOPs absolute)",
+        counter.relative_bops_pct(&states),
+        counter.bops(&states) / 1e9
+    );
+    Ok(())
+}

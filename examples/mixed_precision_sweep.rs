@@ -1,0 +1,74 @@
+//! Mixed-precision sweep — a Table 1-style accuracy vs relative-GBOPs
+//! trade-off curve on one model, sweeping the global regularization
+//! strength mu and comparing against fixed-width baselines.
+//!
+//!     cargo run --release --example mixed_precision_sweep -- \
+//!         --model vgg7 --mus 0.01,0.05,0.1 --quick
+//!
+//! This is the workflow a practitioner uses to pick an operating point
+//! (App. B.2.1: "experiment with a range of regularization strengths to
+//! generate a Pareto curve").
+
+use bayesian_bits::cli::Args;
+use bayesian_bits::config::Mode;
+use bayesian_bits::coordinator::sweep::{aggregate, run_sweep, Job};
+use bayesian_bits::experiments::common::ExpOptions;
+use bayesian_bits::report::plot::{scatter, Series};
+use bayesian_bits::report::TableBuilder;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let opt = ExpOptions::from_args(&args)?;
+    let model = args.str_flag("model", "lenet5");
+    let mus = args.f64_list_flag("mus", &[0.01, 0.05, 0.1])?;
+
+    let mut jobs: Vec<Job> = Vec::new();
+    for mu in &mus {
+        jobs.extend(opt.jobs_for(&model, Mode::BayesianBits, *mu));
+    }
+    for (w, a) in [(8u32, 8u32), (4, 4), (2, 2)] {
+        jobs.extend(opt.jobs_for(&model,
+                                 Mode::Fixed { w_bits: w, a_bits: a },
+                                 0.0));
+    }
+    let results = run_sweep(jobs, opt.jobs)?;
+    let aggs = aggregate(&results);
+
+    let mut t = TableBuilder::new(
+        &format!("Mixed-precision sweep — {model}"),
+        &["Method", "Acc. (%)", "Rel. GBOPs (%)"],
+    );
+    for a in &aggs {
+        let label = if a.mu > 0.0 {
+            format!("Bayesian Bits mu={}", a.mu)
+        } else {
+            a.mode.clone()
+        };
+        t.row(&[
+            label,
+            TableBuilder::pm(a.acc_mean * 100.0, a.acc_stderr * 100.0, 2),
+            TableBuilder::pm(a.bops_mean, a.bops_stderr, 2),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let series = [
+        Series {
+            label: "Bayesian Bits".into(),
+            marker: 'o',
+            points: aggs.iter().filter(|a| a.mode == "bb")
+                .map(|a| (a.bops_mean, a.acc_mean * 100.0)).collect(),
+        },
+        Series {
+            label: "fixed wXaY".into(),
+            marker: 'x',
+            points: aggs.iter().filter(|a| a.mode.starts_with("fixed"))
+                .map(|a| (a.bops_mean, a.acc_mean * 100.0)).collect(),
+        },
+    ];
+    println!("{}", scatter(
+        &format!("{model}: accuracy vs relative GBOPs"),
+        "rel GBOPs (%)", "acc (%)", &series, 60, 18, true));
+    Ok(())
+}

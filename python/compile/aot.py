@@ -1,0 +1,163 @@
+"""AOT exporter: lower every executable once, emit HLO text + manifests.
+
+This is the only place Python runs in the whole system — ``make
+artifacts`` invokes it and the Rust coordinator is self-contained
+afterwards.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs per model m (engine bb):
+  m_train.hlo.txt, m_eval.hlo.txt, m_manifest.json, m_init.bin
+per DQ baseline model:  m_dq_{train,eval}.hlo.txt, m_dq_manifest.json, ...
+plus quantizer_fwd.hlo.txt + goldens.json for Rust-side kernel parity.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import steps
+from .dq import DQEngine
+from .kernels.bayesian_bits import bb_quantize
+from .models import build_model
+from .quant import BBEngine
+
+BATCH = {"lenet5": 64, "vgg7": 64, "resnet18": 32, "mobilenetv2": 32}
+BB_MODELS = ("lenet5", "vgg7", "resnet18", "mobilenetv2")
+DQ_MODELS = ("lenet5", "vgg7", "resnet18")
+
+TRAIN_ARGS = ["params", "adam_m", "adam_v", "x", "y", "seed", "step",
+              "lr_w", "lr_g", "lr_s", "lock_mask", "lock_val", "lam",
+              "det_flag"]
+TRAIN_OUTS = ["params", "adam_m", "adam_v", "loss", "correct", "reg",
+              "probs"]
+EVAL_ARGS = ["params", "gates", "x", "y"]
+EVAL_OUTS = ["loss", "correct"]
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants is ESSENTIAL: the default printer elides big
+    # literals as `constant({...})`, which the 0.5.1 text parser happily
+    # reads back as zeros — silently corrupting e.g. the per-group
+    # learning-rate masks (bisected the hard way; see EXPERIMENTS.md).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_model(name, engine, tag, out_dir, preset, seed=0):
+    spec, apply_fn = build_model(name, engine, preset, seed=seed)
+    # Distinguish baseline-engine exports (e.g. lenet5_dq) in run results.
+    spec.name = f"{name}{tag}-{preset}"
+    batch = BATCH[name]
+
+    train = steps.build_train_step(spec, apply_fn, engine)
+    ev = steps.build_eval_step(spec, apply_fn)
+    train_hlo = to_hlo_text(
+        jax.jit(train).lower(*steps.example_args_train(spec, batch)))
+    eval_hlo = to_hlo_text(
+        jax.jit(ev).lower(*steps.example_args_eval(spec, batch)))
+
+    base = f"{name}{tag}"
+    files = {
+        "hlo_train": f"{base}_train.hlo.txt",
+        "hlo_eval": f"{base}_eval.hlo.txt",
+        "init_file": f"{base}_init.bin",
+    }
+    with open(os.path.join(out_dir, files["hlo_train"]), "w") as f:
+        f.write(train_hlo)
+    with open(os.path.join(out_dir, files["hlo_eval"]), "w") as f:
+        f.write(eval_hlo)
+    spec.init_flat().tofile(os.path.join(out_dir, files["init_file"]))
+
+    manifest = spec.to_json()
+    manifest.update(files)
+    manifest.update({
+        "engine": engine.kind,
+        "preset": preset,
+        "batch": batch,
+        "train_args": TRAIN_ARGS,
+        "train_outputs": TRAIN_OUTS,
+        "eval_args": EVAL_ARGS,
+        "eval_outputs": EVAL_OUTS,
+    })
+    with open(os.path.join(out_dir, f"{base}_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {base}: P={spec.n_params} G={spec.n_slots} "
+          f"train={len(train_hlo) // 1024}KiB eval={len(eval_hlo) // 1024}KiB")
+    return spec
+
+
+def export_quantizer_parity(out_dir, shape=(8, 16), n_cases=6):
+    """Standalone quantizer forward + golden vectors for Rust parity."""
+    levels = (2, 4, 8, 16, 32)
+
+    def qfwd(x, beta, z2, zh):
+        return (bb_quantize(x, beta, z2, zh, signed=True, levels=levels),)
+
+    s = jax.ShapeDtypeStruct
+    lowered = jax.jit(qfwd).lower(
+        s(shape, jnp.float32), s((1,), jnp.float32),
+        s((shape[0],), jnp.float32), s((len(levels) - 1,), jnp.float32))
+    with open(os.path.join(out_dir, "quantizer_fwd.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    rng = np.random.default_rng(1234)
+    cases = []
+    gate_sets = [
+        [1, 1, 1, 1], [1, 1, 0, 0], [0, 0, 0, 0], [1, 0, 0, 0],
+        [0.5, 0.25, 1, 0], [1, 1, 1, 0],
+    ]
+    for i in range(n_cases):
+        x = rng.normal(0, 1.2, size=shape).astype(np.float32)
+        beta = np.array([abs(rng.normal(2.0, 0.3))], dtype=np.float32)
+        z2 = (rng.random(shape[0]) > 0.2).astype(np.float32)
+        zh = np.array(gate_sets[i % len(gate_sets)], dtype=np.float32)
+        out = np.asarray(qfwd(jnp.asarray(x), jnp.asarray(beta),
+                              jnp.asarray(z2), jnp.asarray(zh))[0])
+        cases.append({
+            "x": x.reshape(-1).tolist(),
+            "beta": beta.tolist(),
+            "z2": z2.tolist(),
+            "zh": zh.tolist(),
+            "out": out.reshape(-1).tolist(),
+        })
+    with open(os.path.join(out_dir, "goldens.json"), "w") as f:
+        json.dump({"shape": list(shape), "levels": list(levels),
+                   "cases": cases}, f)
+    print(f"  quantizer_fwd: {n_cases} golden cases")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(BB_MODELS))
+    ap.add_argument("--preset", default="small")
+    ap.add_argument("--skip-dq", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    models = [m for m in args.models.split(",") if m]
+    print("exporting artifacts ->", os.path.abspath(args.out))
+    for name in models:
+        export_model(name, BBEngine(), "", args.out, args.preset)
+    if not args.skip_dq:
+        for name in models:
+            if name in DQ_MODELS:
+                export_model(name, DQEngine(), "_dq", args.out, args.preset)
+    export_quantizer_parity(args.out)
+    print("done")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,264 @@
+"""Build-time model core: parameter registry, quantizer registry, context.
+
+Models are written once as plain forward functions over a :class:`Context`.
+The same code runs in two modes:
+
+* **build** — executed eagerly with a zeros input; every ``ctx.param``
+  call registers a parameter (name, shape, group, init value), every
+  quantizer call registers gate slots and layer MAC counts. The result
+  is a :class:`ModelSpec` that fixes the flat parameter layout and the
+  global gate-slot vector shared with the Rust coordinator (via the
+  JSON manifest).
+* **apply** — traced under ``jax.jit``; parameters come from one flat
+  f32 vector (sliced by the registry offsets) and gate values from one
+  flat slot vector. This keeps the AOT train/eval executables down to a
+  handful of large inputs, which the Rust runtime marshals cheaply.
+
+Parameter groups: ``'w'`` network weights/biases/affine, ``'g'`` gate
+logits phi, ``'s'`` quantizer range scales beta. The groups get separate
+learning rates in the train step (PTQ freezes ``'w'`` by ``lr_w = 0``).
+"""
+
+import numpy as np
+import jax.numpy as jnp  # noqa: F401 (apply-mode arrays flow through here)
+
+GROUPS = ("w", "g", "s")
+
+
+class ParamSpec:
+    """One registered parameter tensor in the flat layout."""
+
+    def __init__(self, name, shape, group, offset, init):
+        self.name = name
+        self.shape = tuple(int(d) for d in shape)
+        self.group = group
+        self.offset = offset
+        self.size = int(np.prod(self.shape)) if self.shape else 1
+        self.init = init  # numpy array, build-time only
+
+    def to_json(self):
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "group": self.group,
+            "offset": self.offset,
+            "size": self.size,
+        }
+
+
+class QuantizerSpec:
+    """One quantizer: a pruning-gate block plus the residual-gate chain.
+
+    Slot layout inside the global gate vector: ``channels`` slots for the
+    per-channel z2 gates (channels == 1 for per-tensor activation
+    quantizers) followed by ``len(levels) - 1`` slots for z4, z8, ...
+    """
+
+    def __init__(self, name, kind, signed, channels, levels, layer, offset,
+                 consumer_macs):
+        self.name = name
+        self.kind = kind  # 'w' | 'a'
+        self.signed = signed
+        self.channels = channels
+        self.levels = tuple(levels)
+        self.layer = layer
+        self.offset = offset  # first slot in the global gate vector
+        self.consumer_macs = consumer_macs
+        self.n_slots = channels + len(levels) - 1
+
+    def to_json(self):
+        return {
+            "name": self.name,
+            "kind": self.kind,
+            "signed": self.signed,
+            "channels": self.channels,
+            "levels": list(self.levels),
+            "layer": self.layer,
+            "offset": self.offset,
+            "consumer_macs": self.consumer_macs,
+            "n_slots": self.n_slots,
+        }
+
+
+class LayerSpec:
+    """Compute-layer metadata for MAC/BOP accounting (App. B.2)."""
+
+    def __init__(self, name, kind, macs, cin, cout, weight_q, act_q,
+                 residual_input=False):
+        self.name = name
+        self.kind = kind  # 'conv' | 'dwconv' | 'dense'
+        self.macs = macs
+        self.cin = cin
+        self.cout = cout
+        self.weight_q = weight_q  # quantizer name
+        self.act_q = act_q  # input-activation quantizer name
+        self.residual_input = residual_input  # B.2.3: input not prunable
+
+    def to_json(self):
+        return {
+            "name": self.name,
+            "kind": self.kind,
+            "macs": self.macs,
+            "cin": self.cin,
+            "cout": self.cout,
+            "weight_q": self.weight_q,
+            "act_q": self.act_q,
+            "residual_input": self.residual_input,
+        }
+
+
+class ModelSpec:
+    """Frozen result of a build pass."""
+
+    def __init__(self, name, params, quantizers, layers, input_shape,
+                 num_classes, levels, dataset):
+        self.name = name
+        self.params = params
+        self.quantizers = quantizers
+        self.layers = layers
+        self.input_shape = tuple(input_shape)
+        self.num_classes = num_classes
+        self.levels = tuple(levels)
+        self.dataset = dataset
+        self.n_params = sum(p.size for p in params)
+        self.n_slots = sum(q.n_slots for q in quantizers)
+        self.param_index = {p.name: p for p in params}
+        self.quant_index = {q.name: q for q in quantizers}
+
+    def init_flat(self):
+        flat = np.zeros(self.n_params, dtype=np.float32)
+        for p in self.params:
+            flat[p.offset:p.offset + p.size] = np.asarray(
+                p.init, dtype=np.float32).reshape(-1)
+        return flat
+
+    def group_mask(self, group):
+        mask = np.zeros(self.n_params, dtype=np.float32)
+        for p in self.params:
+            if p.group == group:
+                mask[p.offset:p.offset + p.size] = 1.0
+        return mask
+
+    def lam_base(self):
+        """Per-slot BOP-proportional regularizer weights lambda'_{jk}/mu.
+
+        App. B.2.1: lambda'_{jk} = b_j * MACs(l_k) / max_l MACs(l), where
+        MACs(l_k) is the MAC count *consuming* the quantized tensor
+        (B.2.4 sums over both consumers for tensors feeding two convs).
+        Per-channel z2 slots share lambda'_{2k} equally so that the slot
+        sum equals the paper's per-quantizer term.
+        """
+        max_macs = max(l.macs for l in self.layers) if self.layers else 1
+        lam = np.zeros(self.n_slots, dtype=np.float32)
+        for q in self.quantizers:
+            scale = q.consumer_macs / max_macs
+            # DQ quantizers (levels == (0,)) have a single slot whose
+            # regularizer multiplies the *learned* bit width at runtime,
+            # so the base weight is just the MAC scale.
+            base_bits = q.levels[0] if q.levels[0] > 0 else 1
+            for c in range(q.channels):
+                lam[q.offset + c] = base_bits * scale / q.channels
+            for i, b in enumerate(q.levels[1:]):
+                lam[q.offset + q.channels + i] = b * scale
+        return lam
+
+    def to_json(self):
+        return {
+            "name": self.name,
+            "n_params": self.n_params,
+            "n_slots": self.n_slots,
+            "input_shape": list(self.input_shape),
+            "num_classes": self.num_classes,
+            "levels": list(self.levels),
+            "dataset": self.dataset,
+            "params": [p.to_json() for p in self.params],
+            "quantizers": [q.to_json() for q in self.quantizers],
+            "layers": [l.to_json() for l in self.layers],
+            "lam_base": [float(v) for v in self.lam_base()],
+        }
+
+
+class Context:
+    """Mode-switched execution context threaded through model forwards."""
+
+    def __init__(self, mode, engine, seed=0):
+        assert mode in ("build", "apply")
+        self.mode = mode
+        self.engine = engine  # quant engine (BB, DQ, or FP32)
+        self.rng = np.random.default_rng(seed) if mode == "build" else None
+        # build-mode registries
+        self.params = []
+        self.quantizers = []
+        self.layers = []
+        self._offset = 0
+        self._slot_offset = 0
+        # apply-mode state
+        self.flat = None  # flat parameter vector
+        self.gates = None  # flat gate-slot vector
+        self._index = None  # name -> ParamSpec
+
+    # -- apply-mode wiring -------------------------------------------------
+    def bind(self, spec, flat, gates):
+        self.flat = flat
+        self.gates = gates
+        self._index = spec.param_index
+        self._qindex = spec.quant_index
+        return self
+
+    # -- parameters ---------------------------------------------------------
+    def param(self, name, shape, group, init_fn):
+        if self.mode == "build":
+            init = np.asarray(init_fn(self.rng, shape), dtype=np.float32)
+            assert init.shape == tuple(shape), (name, init.shape, shape)
+            spec = ParamSpec(name, shape, group, self._offset, init)
+            self.params.append(spec)
+            self._offset += spec.size
+            return jnp.asarray(init)
+        spec = self._index[name]
+        seg = self.flat[spec.offset:spec.offset + spec.size]
+        return seg.reshape(spec.shape)
+
+    # -- quantizers -----------------------------------------------------------
+    def register_quantizer(self, name, kind, signed, channels, levels,
+                           layer, consumer_macs):
+        spec = QuantizerSpec(name, kind, signed, channels, levels, layer,
+                             self._slot_offset, consumer_macs)
+        self.quantizers.append(spec)
+        self._slot_offset += spec.n_slots
+        return spec
+
+    def gate_slots(self, qname):
+        q = self._qindex[qname]
+        seg = self.gates[q.offset:q.offset + q.n_slots]
+        return seg[:q.channels], seg[q.channels:]
+
+    # -- layers ---------------------------------------------------------------
+    def record_layer(self, name, kind, macs, cin, cout, weight_q, act_q,
+                     residual_input=False):
+        if self.mode == "build":
+            self.layers.append(LayerSpec(
+                name, kind, int(macs), int(cin), int(cout), weight_q, act_q,
+                residual_input))
+
+
+# -- initializers ------------------------------------------------------------
+
+
+def he_normal(fan_in):
+    def init(rng, shape):
+        return rng.normal(0.0, np.sqrt(2.0 / fan_in), size=shape)
+    return init
+
+
+def zeros_init(rng, shape):
+    return np.zeros(shape)
+
+
+def ones_init(rng, shape):
+    return np.ones(shape)
+
+
+def const_init(v):
+    def init(rng, shape):
+        return np.full(shape, v)
+    return init

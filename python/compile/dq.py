@@ -1,0 +1,81 @@
+"""Differentiable Quantization (DQ) baseline engine (Uhlich et al. 2020).
+
+DQ learns a continuous step size ``d`` and range ``beta`` per tensor;
+the effective bit width is *inferred* as ``b = log2((beta - alpha)/d + 1)``
+and regularized directly (here with the same BOP-proportional weights as
+Bayesian Bits so Table 1 / Table 4 rows are apples-to-apples, §4.1).
+
+Hardware-unfriendliness is the paper's point: the learned ``b`` is
+fractional, so deployment must round up to the next power of two
+("DQ-restricted"), which inflates the BOP count without changing the
+accuracy. That rounding is done on the Rust side (``baselines/dq.rs``)
+from the inferred-bits vector this engine reports.
+
+Each DQ quantizer occupies exactly one gate slot in the global slot
+vector; the slot's "probability" output is the inferred bit width
+(clamped to [1, 32]) so the Rust coordinator can reuse the same
+reporting plumbing.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .core import const_init
+from .kernels.ref import BETA_EPS, round_ste, pact_clip
+
+D_INIT_BITS = 8.0  # start as an 8-bit quantizer
+
+
+class DQEngine:
+    kind = "dq"
+    levels = (0,)  # one slot per quantizer, no gate chain
+
+    def __init__(self, max_bits=32.0):
+        self.max_bits = max_bits
+
+    def _register(self, ctx, qname, kind, signed, consumer_macs, beta0):
+        ctx.register_quantizer(qname, kind, signed, 1, self.levels, None,
+                               consumer_macs)
+        # log step size: beta-alpha spans (2^b - 1) bins at b bits.
+        span = beta0 * (2.0 if signed else 1.0)
+        d0 = span / (2.0**D_INIT_BITS - 1.0)
+        ctx.param(qname + ".logd", (1,), "g", const_init(float(np.log(d0))))
+        ctx.param(qname + ".beta", (1,), "s", const_init(beta0))
+
+    def _apply(self, ctx, qname, x, signed):
+        logd = ctx.param(qname + ".logd", (1,), "g", None)
+        beta = ctx.param(qname + ".beta", (1,), "s", None)
+        d = jnp.exp(logd[0])
+        beta_grid = jnp.abs(beta[0])
+        alpha = -beta_grid if signed else 0.0
+        beta_clip = beta_grid * (1.0 - BETA_EPS)
+        alpha_clip = alpha * (1.0 - BETA_EPS)
+        xc = pact_clip(x, alpha_clip, beta_clip)
+        return d * round_ste(xc / d)
+
+    def quant_weight(self, ctx, name, w, consumer_macs, layer):
+        if ctx.mode == "build":
+            beta0 = float(np.max(np.abs(np.asarray(w)))) or 1.0
+            self._register(ctx, name, "w", True, consumer_macs, beta0)
+            return w
+        return self._apply(ctx, name, w, signed=True)
+
+    def quant_act(self, ctx, name, x, consumer_macs, signed):
+        if ctx.mode == "build":
+            self._register(ctx, name, "a", signed, consumer_macs,
+                           3.0 if signed else 6.0)
+            return x
+        return self._apply(ctx, name, x, signed=signed)
+
+    def bits(self, spec, flat):
+        """Inferred continuous bit widths, one per quantizer slot."""
+        out = []
+        for q in spec.quantizers:
+            pd = spec.param_index[q.name + ".logd"]
+            pb = spec.param_index[q.name + ".beta"]
+            d = jnp.exp(flat[pd.offset])
+            beta = jnp.abs(flat[pb.offset])
+            span = beta * (2.0 if q.signed else 1.0)
+            b = jnp.log2(span / d + 1.0)
+            out.append(jnp.clip(b, 1.0, self.max_bits))
+        return jnp.stack(out)

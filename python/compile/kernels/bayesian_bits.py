@@ -1,0 +1,167 @@
+"""Layer-1 Pallas kernel: the fused Bayesian Bits quantizer.
+
+The quantizer (clip -> 2-bit base -> gated residual chain, Eqs. 1-6) is
+the op the paper adds to *every* weight and activation tensor, so it is
+the compute hot-spot of the whole stack. The naive jnp formulation in
+``ref.py`` materializes every residual tensor ``eps_b`` in HBM; this
+kernel instead keeps one tile of ``x`` resident in VMEM and runs the
+whole chain in-register, writing a single output tile.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles axis 0
+(channels) so the per-channel pruning gate ``z2`` is loaded once per
+block; ``beta`` and the shared residual gates ride along as tiny
+replicated blocks. ``interpret=True`` everywhere — the CPU PJRT client
+cannot execute Mosaic custom-calls, and interpret mode lowers the kernel
+to plain HLO that the Rust runtime can run.
+
+Autodiff: pallas_call is not differentiable, so the public entry point
+``bb_quantize`` wraps the kernel in a ``custom_vjp`` with the paper's
+straight-through gradients:
+
+* d xq / d x    = z2 * 1[alpha < x < beta]           (STE through rounds)
+* d xq / d beta = z2 * (1[x >= beta] - signed*1[x <= alpha]) * sign(beta)
+* d xq / d z2_c = sum_r g * (x2 + z4*(e4 + ...))_cr   (exact)
+* d xq / d zh_i = sum   g * z2 * prod_{k<i} zh_k * (e_i + inner_{i+1})
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .ref import BETA_EPS, LEVELS
+
+
+def _chain(x, beta_grid, alpha, levels, rnd):
+    """Shared residual-chain body: returns [x2, eps4, eps8, ...].
+
+    The clip bound is ``beta_grid * (1 - eps)`` while step sizes use
+    ``beta_grid`` itself, so the top clipped value can never round up to
+    an invalid grid point (paper §2.4).
+    """
+    beta_clip = beta_grid * (1.0 - BETA_EPS)
+    alpha_clip = alpha * (1.0 - BETA_EPS)
+    xc = beta_clip - jnp.maximum(
+        beta_clip - alpha_clip - jnp.maximum(x - alpha_clip, 0.0), 0.0
+    )
+    s = (beta_grid - alpha) / (2.0**2 - 1.0)
+    x_cur = s * rnd(xc / s)
+    terms = [x_cur]
+    for b in levels[1:]:
+        s = s / (2.0 ** (b // 2) + 1.0)
+        eps = s * rnd((xc - x_cur) / s)
+        terms.append(eps)
+        x_cur = x_cur + eps
+    return terms
+
+
+def _bb_kernel(beta_ref, zh_ref, x_ref, z2_ref, o_ref, *, signed, levels):
+    """One grid step: quantize a (block_rows, N) tile fully in VMEM."""
+    x = x_ref[...]
+    beta_grid = jnp.abs(beta_ref[0])
+    alpha = -beta_grid if signed else 0.0
+    terms = _chain(x, beta_grid, alpha, levels, jnp.round)
+    # Gated accumulation, innermost residual first (Eq. 6).
+    inner = jnp.zeros_like(x)
+    for i in range(len(levels) - 2, -1, -1):
+        inner = zh_ref[i] * (terms[i + 1] + inner)
+    z2 = z2_ref[...].reshape(-1, 1)
+    o_ref[...] = z2 * (terms[0] + inner)
+
+
+def _bb_pallas(x, beta, z2, zh, *, signed, levels, block_rows):
+    m, n = x.shape
+    bm = block_rows if block_rows is not None else m
+    assert m % bm == 0, f"rows {m} not divisible by block_rows {bm}"
+    kernel = functools.partial(_bb_kernel, signed=signed, levels=levels)
+    # A bare 2-bit quantizer (levels == (2,)) has no residual gates; pad
+    # the zh block to one (unused) slot so the BlockSpec stays non-empty.
+    zh_len = max(1, len(levels) - 1)
+    if zh.shape[0] == 0:
+        zh = jnp.zeros((1,), x.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),          # beta
+            pl.BlockSpec((zh_len,), lambda i: (0,)),     # zh
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),     # x tile
+            pl.BlockSpec((bm,), lambda i: (i,)),         # z2 slice
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(beta, zh, x, z2)
+
+
+@functools.lru_cache(maxsize=None)
+def make_bb_quantizer(signed, levels=LEVELS, block_rows=None, use_pallas=True):
+    """Build the custom_vjp Bayesian Bits quantizer for a static config.
+
+    Returns f(x, beta, z2, zh) -> xq with
+      x:    (C, R) f32   beta: (1,) f32   z2: (C,) f32   zh: (L-1,) f32.
+
+    ``use_pallas=False`` swaps the forward for the pure-jnp oracle
+    (identical numerics; used for A/B perf comparison at L2).
+    """
+    levels = tuple(levels)
+
+    def fwd_impl(x, beta, z2, zh):
+        if use_pallas:
+            return _bb_pallas(
+                x, beta, z2, zh, signed=signed, levels=levels, block_rows=block_rows
+            )
+        return ref.bb_quantize_ref(x, beta, z2, zh, signed, levels=levels)
+
+    @jax.custom_vjp
+    def quantize(x, beta, z2, zh):
+        return fwd_impl(x, beta, z2, zh)
+
+    def vjp_fwd(x, beta, z2, zh):
+        return fwd_impl(x, beta, z2, zh), (x, beta, z2, zh)
+
+    def vjp_bwd(saved, g):
+        x, beta, z2, zh = saved
+        beta_grid = jnp.abs(beta[0])
+        beta_clip = beta_grid * (1.0 - BETA_EPS)
+        alpha = -beta_grid if signed else 0.0
+        alpha_clip = alpha * (1.0 - BETA_EPS)
+        terms = _chain(x, beta_grid, alpha, levels, jnp.round)
+        z2b = z2.reshape(-1, 1)
+
+        # Gate gradients (exact): inner_i = zh_i*(e_i + inner_{i+1}).
+        inners = [jnp.zeros_like(x)] * len(levels)
+        for i in range(len(levels) - 2, -1, -1):
+            inners[i] = zh[i] * (terms[i + 1] + inners[i + 1])
+        g_z2 = jnp.sum(g * (terms[0] + inners[0]), axis=1)
+        g_zh = []
+        prefix = z2b  # z2 * prod_{k<i} zh_k, broadcast over the tile
+        for i in range(len(levels) - 1):
+            g_zh.append(jnp.sum(g * prefix * (terms[i + 1] + inners[i + 1])))
+            prefix = prefix * zh[i]
+        g_zh = (jnp.stack(g_zh) if g_zh
+                else jnp.zeros((0,), x.dtype))
+
+        # STE gradients for x and the PACT range beta.
+        in_range = jnp.logical_and(x > alpha_clip, x < beta_clip).astype(x.dtype)
+        g_x = g * z2b * in_range
+        upper = (x >= beta_clip).astype(x.dtype)
+        d_beta = upper
+        if signed:
+            d_beta = upper - (x <= alpha_clip).astype(x.dtype)
+        g_beta = jnp.sum(g * z2b * d_beta) * jnp.sign(beta[0]) * (1.0 - BETA_EPS)
+        return g_x, jnp.reshape(g_beta, (1,)), g_z2, g_zh
+
+    quantize.defvjp(vjp_fwd, vjp_bwd)
+    return quantize
+
+
+def bb_quantize(x, beta, z2, zh, *, signed, levels=LEVELS, block_rows=None,
+                use_pallas=True):
+    """Convenience wrapper over :func:`make_bb_quantizer`."""
+    fn = make_bb_quantizer(
+        bool(signed), tuple(levels), block_rows, bool(use_pallas)
+    )
+    return fn(x, beta, z2, zh)

@@ -1,0 +1,172 @@
+"""Pure-jnp reference oracle for the Bayesian Bits quantizer.
+
+This module is the *correctness signal* for the Pallas kernel in
+``bayesian_bits.py``: it implements the paper's residual decomposition
+(Eqs. 1-6 of van Baalen et al., NeurIPS 2020) in the most literal,
+naive way possible — every quantized residual tensor is materialized —
+so that the fused kernel can be checked against it bit-for-bit
+(``pytest python/tests/test_kernel.py``).
+
+Conventions (shared with the kernel and with the Rust host mirror in
+``rust/src/quant``):
+
+* ``x`` is pre-shaped to 2-D ``(channels, rest)``; the pruning gate
+  ``z2`` is a vector over axis 0 (length ``channels``; broadcast a
+  scalar for per-tensor activation quantizers).
+* ``signed`` quantizers use ``alpha = -beta``; unsigned use
+  ``alpha = 0`` (post-ReLU activations).
+* ``beta`` is shrunk by ``(1 - 1e-7)`` before use (paper §2.4) so a
+  value of exactly ``beta`` cannot round to an invalid grid point.
+* Levels are the hardware-friendly doubling chain ``(2, 4, 8, 16, 32)``
+  (a prefix may be used, e.g. ``(2, 4, 8)`` for ImageNet configs).
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Hard-concrete hyperparameters (Louizos et al. 2018, used in App. A.2).
+GAMMA = -0.1
+ZETA = 1.1
+TAU = 2.0 / 3.0
+# Test-time pruning threshold t (Eq. 22); 0.34 ~ the point where the
+# probability mass of the exact-zero mixture component dominates.
+THRESHOLD = 0.34
+
+LEVELS = (2, 4, 8, 16, 32)
+
+BETA_EPS = 1e-7
+
+
+def round_ste(x):
+    """Round-to-nearest with a straight-through gradient (identity bwd)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def pact_clip(x, alpha, beta):
+    """PACT clipping, Eq. 17: beta - relu(beta - alpha - relu(x - alpha)).
+
+    Written with ReLUs (rather than ``jnp.clip``) so autodiff yields the
+    PACT gradient for the trainable range ``beta`` for free.
+    """
+    return beta - jax.nn.relu(beta - alpha - jax.nn.relu(x - alpha))
+
+
+def effective_range(beta, signed):
+    """(alpha, beta_grid, beta_clip) for a raw range parameter beta.
+
+    The grid (step sizes) uses ``|beta|``; the clip bound is shrunk by
+    ``(1 - 1e-7)`` (paper §2.4) so the maximum clipped value divided by
+    the step can never land exactly on a half-integer and round up to an
+    invalid grid point.
+    """
+    beta_grid = jnp.abs(beta)
+    beta_clip = beta_grid * (1.0 - BETA_EPS)
+    alpha = jnp.where(signed, -beta_grid, 0.0)
+    alpha_clip = jnp.where(signed, -beta_clip, 0.0)
+    return alpha, beta_grid, beta_clip, alpha_clip
+
+
+def step_sizes(beta, signed, levels=LEVELS):
+    """The step-size chain s_2, s_4, ... (s_b = s_{b/2} / (2^{b/2} + 1)).
+
+    By induction s_b == (beta - alpha) / (2^b - 1), which the tests
+    verify explicitly (the paper's Fig. 1 identity
+    (2^4 - 1) = (2^2 - 1)(2^2 + 1)).
+    """
+    alpha, beta_grid, _, _ = effective_range(beta, signed)
+    sizes = []
+    s = (beta_grid - alpha) / (2.0**2 - 1.0)
+    sizes.append(s)
+    for b in levels[1:]:
+        s = s / (2.0 ** (b // 2) + 1.0)
+        sizes.append(s)
+    return sizes
+
+
+def decompose(x, beta, signed, levels=LEVELS, ste=False):
+    """Return (x2, [eps_4, eps_8, ...]) — the raw decomposition terms.
+
+    ``ste=True`` wraps every rounding in a straight-through estimator so
+    the expression stays differentiable w.r.t. ``x`` (used by the L2
+    training graph; the plain version is the test oracle).
+    """
+    rnd = round_ste if ste else jnp.round
+    alpha, beta_grid, beta_clip, alpha_clip = effective_range(beta, signed)
+    xc = pact_clip(x, alpha_clip, beta_clip)
+    s = (beta_grid - alpha) / (2.0**2 - 1.0)
+    x_cur = s * rnd(xc / s)
+    terms = [x_cur]
+    for b in levels[1:]:
+        s = s / (2.0 ** (b // 2) + 1.0)
+        eps = s * rnd((xc - x_cur) / s)
+        terms.append(eps)
+        x_cur = x_cur + eps
+    return terms[0], terms[1:]
+
+
+def gated_sum(x2, residuals, z2, z_higher):
+    """Eq. 6: x_q = z2*(x2 + z4*(e4 + z8*(e8 + ...))) with broadcasting.
+
+    ``z2`` broadcasts over axis 0 (per-channel pruning); ``z_higher`` is
+    a vector of scalars, one per residual level, shared per tensor.
+    """
+    inner = jnp.zeros_like(x2)
+    for i in range(len(residuals) - 1, -1, -1):
+        inner = z_higher[i] * (residuals[i] + inner)
+    z2b = jnp.reshape(z2, (-1,) + (1,) * (x2.ndim - 1))
+    return z2b * (x2 + inner)
+
+
+def bb_quantize_ref(x, beta, z2, z_higher, signed, levels=LEVELS, ste=False):
+    """Full Bayesian Bits quantizer forward — the oracle for the kernel.
+
+    Args:
+      x:        (C, R) float32 tensor (2-D, channel-major).
+      beta:     scalar raw range parameter.
+      z2:       (C,) pruning gates in [0, 1].
+      z_higher: (len(levels)-1,) residual gates in [0, 1].
+      signed:   python bool (static).
+      levels:   static tuple of power-of-two bit widths, starting at 2.
+    """
+    x2, residuals = decompose(x, beta, signed, levels=levels, ste=ste)
+    return gated_sum(x2, residuals, z2, z_higher)
+
+
+def quantize_fixed(x, beta, bit, signed):
+    """Plain uniform quantizer x_q = s*round(clip(x)/s) at one bit width.
+
+    Used by tests to check that the decomposition with all gates up to
+    ``bit`` open (and the rest closed) is *exactly* the fixed-point
+    quantizer at that bit width.
+    """
+    alpha, beta_grid, beta_clip, alpha_clip = effective_range(beta, signed)
+    xc = pact_clip(x, alpha_clip, beta_clip)
+    s = (beta_grid - alpha) / (2.0**bit - 1.0)
+    return s * jnp.round(xc / s)
+
+
+# --- Hard-concrete gate distribution (App. A.2) -------------------------
+
+
+def hard_concrete_sample(phi, u):
+    """Sample z given logits phi and uniform noise u (Eq. 20)."""
+    g = jnp.log(u) - jnp.log1p(-u)
+    s = jax.nn.sigmoid((g + phi) / TAU)
+    return jnp.clip(s * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+
+
+def hard_concrete_mean(phi):
+    """Deterministic gate value with the noise switched off (u = 0.5)."""
+    s = jax.nn.sigmoid(phi / TAU)
+    return jnp.clip(s * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+
+
+def prob_active(phi):
+    """R_phi(z > 0) = sigmoid(phi - tau*log(-gamma/zeta)) (Eq. 21)."""
+    return jax.nn.sigmoid(phi - TAU * jnp.log(-GAMMA / ZETA))
+
+
+def test_time_gate(phi, threshold=THRESHOLD):
+    """Eq. 22: z = 1[ sigmoid(tau*log(-gamma/zeta) - phi) < t ]."""
+    p_zero = jax.nn.sigmoid(TAU * jnp.log(-GAMMA / ZETA) - phi)
+    return (p_zero < threshold).astype(jnp.float32)

@@ -1,0 +1,132 @@
+"""Quantization-aware NN layer library (Layer 2).
+
+Conventions:
+
+* NHWC activations, HWIO weights.
+* Each conv/dense quantizes its own *input* activation (output
+  quantization in the sense of Table 3: the tensor is quantized once at
+  production and consumed quantized). When one tensor feeds several
+  convs (ResNet downsample, B.2.4), the first consumer creates the
+  quantizer with ``extra_in_macs`` covering the other consumers, and the
+  others pass ``quant_in=False`` + ``in_q`` so the BOP table still knows
+  which quantizer feeds them.
+* Batch norm is modelled as a per-channel affine (``affine``) — the
+  paper folds BN into the preceding conv for quantization (§4, [18]);
+  training the folded form directly is equivalent for our purposes.
+* Biases and the output logits are not quantized (§4).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .core import he_normal, zeros_init, ones_init
+
+
+def conv_out_hw(h, w, ksize, stride, padding):
+    if padding == "SAME":
+        return -(-h // stride), -(-w // stride)
+    return (h - ksize) // stride + 1, (w - ksize) // stride + 1
+
+
+def conv_macs(h, w, cin, cout, ksize, stride, padding="SAME", groups=1):
+    """MACs(l) = C_o * W * H * (C_i/groups) * W_f * H_f (App. B.2.2)."""
+    ho, wo = conv_out_hw(h, w, ksize, stride, padding)
+    return ho * wo * cout * (cin // groups) * ksize * ksize
+
+
+def conv2d(ctx, name, x, cout, ksize, stride=1, padding="SAME",
+           use_bias=True, quant_in=True, in_signed=False, extra_in_macs=0,
+           groups=1, in_q=None, residual_input=False):
+    """Quantized 2-D convolution; returns pre-activation output."""
+    _, h, w, cin = x.shape
+    macs = conv_macs(h, w, cin, cout, ksize, stride, padding, groups)
+    kind = "dwconv" if groups == cin else "conv"
+    if quant_in:
+        in_q = f"{name}.in"
+        x = ctx.engine.quant_act(ctx, in_q, x, macs + extra_in_macs,
+                                 in_signed)
+    wshape = (ksize, ksize, cin // groups, cout)
+    wgt = ctx.param(f"{name}.w", wshape, "w",
+                    he_normal(ksize * ksize * cin // groups))
+    wq = ctx.engine.quant_weight(ctx, f"{name}.w", wgt, macs, name)
+    y = jax.lax.conv_general_dilated(
+        x, wq,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    if use_bias:
+        b = ctx.param(f"{name}.b", (cout,), "w", zeros_init)
+        y = y + b
+    ctx.record_layer(name, kind, macs, cin, cout, f"{name}.w", in_q,
+                     residual_input)
+    return y
+
+
+def dense(ctx, name, x, dout, quant_in=True, in_signed=False, in_q=None):
+    """Quantized fully-connected layer over (B, D) input."""
+    din = x.shape[-1]
+    macs = din * dout
+    if quant_in:
+        in_q = f"{name}.in"
+        x = ctx.engine.quant_act(ctx, in_q, x, macs, in_signed)
+    wgt = ctx.param(f"{name}.w", (din, dout), "w", he_normal(din))
+    wq = ctx.engine.quant_weight(ctx, f"{name}.w", wgt, macs, name)
+    b = ctx.param(f"{name}.b", (dout,), "w", zeros_init)
+    ctx.record_layer(name, "dense", macs, din, dout, f"{name}.w", in_q)
+    return x @ wq + b
+
+
+def affine(ctx, name, x):
+    """Per-channel scale+shift — the folded-BN stand-in (group 'w')."""
+    c = x.shape[-1]
+    g = ctx.param(f"{name}.gamma", (c,), "w", ones_init)
+    b = ctx.param(f"{name}.beta", (c,), "w", zeros_init)
+    return x * g + b
+
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+def max_pool2(x):
+    """2x2 max pooling, stride 2."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def flatten(x):
+    return x.reshape(x.shape[0], -1)
+
+
+def cross_entropy(logits, y):
+    """Mean softmax cross-entropy with integer labels.
+
+    Written with an equality-mask one-hot rather than
+    ``take_along_axis``: the gather that op lowers to has a
+    scatter-transpose gradient which the xla_extension 0.5.1 backend
+    executing the AOT artifacts miscompiles to zeros (bisected against
+    the jitted reference). The one-hot form differentiates through plain
+    elementwise ops.
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    classes = logits.shape[-1]
+    onehot = (y[:, None].astype(jnp.int32)
+              == jnp.arange(classes, dtype=jnp.int32)[None, :])
+    picked = jnp.sum(logp * onehot.astype(logp.dtype), axis=-1)
+    return -jnp.mean(picked)
+
+
+def correct_count(logits, y):
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.sum((pred == y.astype(jnp.int32)).astype(jnp.float32))

@@ -1,0 +1,46 @@
+"""Model zoo: paper architectures with CPU-feasible width presets.
+
+Each model module exposes ``model_fn(ctx, x, preset) -> logits`` plus a
+``PRESETS`` dict. ``build_model`` runs the build pass and returns the
+frozen :class:`ModelSpec` together with a jit-able ``apply`` function
+``apply(flat_params, gate_slots, x) -> logits``.
+"""
+
+import jax.numpy as jnp
+
+from ..core import Context, ModelSpec
+
+from . import lenet5, vgg7, resnet18, mobilenetv2
+
+MODELS = {
+    "lenet5": lenet5,
+    "vgg7": vgg7,
+    "resnet18": resnet18,
+    "mobilenetv2": mobilenetv2,
+}
+
+
+def build_model(name, engine, preset="small", seed=0):
+    mod = MODELS[name]
+    cfg = mod.PRESETS[preset]
+    input_shape = tuple(cfg["input"])
+    ctx = Context("build", engine, seed=seed)
+    x0 = jnp.zeros((1,) + input_shape, jnp.float32)
+    mod.model_fn(ctx, x0, cfg)
+    spec = ModelSpec(
+        name=f"{name}-{preset}",
+        params=ctx.params,
+        quantizers=ctx.quantizers,
+        layers=ctx.layers,
+        input_shape=input_shape,
+        num_classes=cfg["classes"],
+        levels=engine.levels,
+        dataset=dict(cfg["dataset"], input=list(input_shape),
+                     classes=cfg["classes"]),
+    )
+
+    def apply(flat, gates, x):
+        actx = Context("apply", engine).bind(spec, flat, gates)
+        return mod.model_fn(actx, x, cfg)
+
+    return spec, apply

@@ -1,0 +1,33 @@
+"""LeNet-5 (paper §4.1 / App. B.1: 32C5 - MP2 - 64C5 - MP2 - 512FC - Softmax).
+
+The ``small`` preset shrinks widths and input resolution to keep the CPU
+PJRT train step fast; ``paper`` is the architecture verbatim (used for
+analytic BOP tables and available for full-scale runs).
+"""
+
+from .. import layers as L
+
+PRESETS = {
+    "small": {
+        "input": (16, 16, 1),
+        "classes": 10,
+        "c1": 8, "c2": 16, "fc": 64, "k": 5,
+        "dataset": {"name": "mnist_like", "train": 4096, "test": 1024},
+    },
+    "paper": {
+        "input": (28, 28, 1),
+        "classes": 10,
+        "c1": 32, "c2": 64, "fc": 512, "k": 5,
+        "dataset": {"name": "mnist_like", "train": 16384, "test": 4096},
+    },
+}
+
+
+def model_fn(ctx, x, cfg):
+    x = L.conv2d(ctx, "conv1", x, cfg["c1"], cfg["k"], in_signed=True)
+    x = L.max_pool2(L.relu(x))
+    x = L.conv2d(ctx, "conv2", x, cfg["c2"], cfg["k"])
+    x = L.max_pool2(L.relu(x))
+    x = L.flatten(x)
+    x = L.relu(L.dense(ctx, "fc1", x, cfg["fc"]))
+    return L.dense(ctx, "fc2", x, cfg["classes"])

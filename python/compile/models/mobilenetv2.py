@@ -1,0 +1,67 @@
+"""MobileNetV2 (Sandler et al. 2018) — inverted residuals, linear bottlenecks.
+
+The projection (bottleneck) output is linear, hence its consumer
+quantizers are *signed*; this is exactly what makes MobileNetV2 hard to
+quantize (§4.2, [27, 28]) and why it is in the paper's evaluation.
+Depthwise convs use ``groups == cin`` (B == 1 in the paper's MAC
+formula, App. B.2.2).
+"""
+
+from .. import layers as L
+
+PRESETS = {
+    "small": {
+        "input": (24, 24, 3),
+        "classes": 10,
+        "stem": 8, "stem_stride": 1,
+        # (cout, stride, expansion, repeats)
+        "blocks": ((12, 1, 2, 1), (16, 2, 4, 2), (24, 2, 4, 2),
+                   (32, 2, 4, 1)),
+        "head": 64,
+        "dataset": {"name": "imagenet_like", "train": 4096, "test": 1024},
+    },
+    "paper": {
+        "input": (224, 224, 3),
+        "classes": 1000,
+        "stem": 32, "stem_stride": 2,  # stock stride-2 stem at 224px
+        "blocks": ((16, 1, 1, 1), (24, 2, 6, 2), (32, 2, 6, 3),
+                   (64, 2, 6, 4), (96, 1, 6, 3), (160, 2, 6, 3),
+                   (320, 1, 6, 1)),
+        "head": 1280,
+        "dataset": {"name": "imagenet_like", "train": 16384, "test": 4096},
+    },
+}
+
+
+def inverted_residual(ctx, name, x, cout, stride, expand):
+    cin = x.shape[-1]
+    mid = cin * expand
+    y = x
+    if expand != 1:
+        y = L.conv2d(ctx, f"{name}.expand", y, mid, 1, in_signed=True)
+        y = L.relu(L.affine(ctx, f"{name}.ebn", y))
+    y = L.conv2d(ctx, f"{name}.dw", y, mid, 3, stride=stride, groups=mid,
+                 in_signed=(expand == 1))
+    y = L.relu(L.affine(ctx, f"{name}.dbn", y))
+    # Linear bottleneck: no ReLU => the projection output is signed.
+    y = L.conv2d(ctx, f"{name}.project", y, cout, 1)
+    y = L.affine(ctx, f"{name}.pbn", y)
+    if stride == 1 and cin == cout:
+        return x + y  # residual add, un-quantized per App. D.1
+    return y
+
+
+def model_fn(ctx, x, cfg):
+    x = L.conv2d(ctx, "stem", x, cfg["stem"], 3,
+                 stride=cfg["stem_stride"], in_signed=True)
+    x = L.relu(L.affine(ctx, "stem.bn", x))
+    i = 0
+    for cout, stride, expand, repeats in cfg["blocks"]:
+        for r in range(repeats):
+            i += 1
+            x = inverted_residual(ctx, f"b{i}", x, cout,
+                                  stride if r == 0 else 1, expand)
+    x = L.conv2d(ctx, "head", x, cfg["head"], 1, in_signed=True)
+    x = L.relu(L.affine(ctx, "head.bn", x))
+    x = L.global_avg_pool(x)
+    return L.dense(ctx, "fc", x, cfg["classes"], in_signed=False)

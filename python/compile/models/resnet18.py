@@ -1,0 +1,69 @@
+"""ResNet18 (post-activation, BN folded — Table 3 row "Bayesian Bits").
+
+Activation quantization follows the paper's *updated* ImageNet setup
+(App. D.1): tensors feeding residual connections are not quantized; the
+post-add ReLU output is quantized once by the next block's first conv,
+whose quantizer also covers the downsample conv when present (B.2.4 —
+``extra_in_macs``).
+
+The ``small`` preset scales widths/resolution for the CPU testbed; the
+``paper`` preset is the stock ImageNet ResNet18 topology, used for
+analytic BOP accounting.
+"""
+
+from .. import layers as L
+
+PRESETS = {
+    "small": {
+        "input": (24, 24, 3),
+        "classes": 10,
+        "widths": (8, 16, 32, 64), "blocks": (2, 2, 2, 2),
+        "stem_kernel": 3, "stem_stride": 1, "stem_pool": False,
+        "dataset": {"name": "imagenet_like", "train": 4096, "test": 1024},
+    },
+    "paper": {
+        "input": (224, 224, 3),
+        "classes": 1000,
+        "widths": (64, 128, 256, 512), "blocks": (2, 2, 2, 2),
+        "stem_kernel": 7, "stem_stride": 2, "stem_pool": True,
+        "dataset": {"name": "imagenet_like", "train": 16384, "test": 4096},
+    },
+}
+
+
+def basic_block(ctx, name, x, cout, stride, first_signed=False):
+    cin = x.shape[-1]
+    need_ds = stride != 1 or cin != cout
+    _, h, w, _ = x.shape
+    ds_macs = L.conv_macs(h, w, cin, cout, 1, stride) if need_ds else 0
+
+    # conv1 quantizes the shared block input; the downsample conv reuses it.
+    y = L.conv2d(ctx, f"{name}.conv1", x, cout, 3, stride=stride,
+                 in_signed=first_signed, extra_in_macs=ds_macs,
+                 residual_input=True)
+    y = L.relu(L.affine(ctx, f"{name}.bn1", y))
+    y = L.conv2d(ctx, f"{name}.conv2", y, cout, 3)
+    y = L.affine(ctx, f"{name}.bn2", y)
+
+    if need_ds:
+        sc = L.conv2d(ctx, f"{name}.ds", x, cout, 1, stride=stride,
+                      quant_in=False, in_q=f"{name}.conv1.in",
+                      residual_input=True)
+        sc = L.affine(ctx, f"{name}.dsbn", sc)
+    else:
+        sc = x
+    return L.relu(y + sc)
+
+
+def model_fn(ctx, x, cfg):
+    x = L.conv2d(ctx, "stem", x, cfg["widths"][0], cfg["stem_kernel"],
+                 stride=cfg["stem_stride"], in_signed=True)
+    x = L.relu(L.affine(ctx, "stem.bn", x))
+    if cfg["stem_pool"]:
+        x = L.max_pool2(x)
+    for stage, (wdt, nblocks) in enumerate(zip(cfg["widths"], cfg["blocks"])):
+        for b in range(nblocks):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            x = basic_block(ctx, f"s{stage + 1}b{b + 1}", x, wdt, stride)
+    x = L.global_avg_pool(x)
+    return L.dense(ctx, "fc", x, cfg["classes"])

@@ -1,0 +1,36 @@
+"""VGG-7 (App. B.1: 2x(128C3)-MP2-2x(256C3)-MP2-2x(512C3)-MP2-1024FC-Softmax).
+
+Batch norm after every conv is modelled as the folded per-channel affine
+(see layers.affine and DESIGN.md §Substitutions).
+"""
+
+from .. import layers as L
+
+PRESETS = {
+    "small": {
+        "input": (16, 16, 3),
+        "classes": 10,
+        "widths": (16, 32, 64), "fc": 128,
+        "dataset": {"name": "cifar_like", "train": 4096, "test": 1024},
+    },
+    "paper": {
+        "input": (32, 32, 3),
+        "classes": 10,
+        "widths": (128, 256, 512), "fc": 1024,
+        "dataset": {"name": "cifar_like", "train": 16384, "test": 4096},
+    },
+}
+
+
+def model_fn(ctx, x, cfg):
+    first = True
+    for stage, w in enumerate(cfg["widths"]):
+        for i in range(2):
+            name = f"conv{stage + 1}_{i + 1}"
+            x = L.conv2d(ctx, name, x, w, 3, in_signed=first)
+            first = False
+            x = L.relu(L.affine(ctx, name + ".bn", x))
+        x = L.max_pool2(x)
+    x = L.flatten(x)
+    x = L.relu(L.dense(ctx, "fc1", x, cfg["fc"]))
+    return L.dense(ctx, "fc2", x, cfg["classes"])

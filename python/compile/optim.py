@@ -1,0 +1,29 @@
+"""Adam over the flat parameter vector, with per-group learning rates.
+
+Written explicitly (not optax — build-time dependency discipline, and
+the (m, v) state must have a fixed flat layout the Rust coordinator can
+checkpoint). Groups get separate scalar learning rates via static 0/1
+masks baked into the train-step HLO:
+
+    lr_vec = lr_w * mask_w + lr_g * mask_g + lr_s * mask_s
+
+so PTQ (lr_w = 0), gate freezing (lr_g = 0) and the paper's differing
+optimizer treatment of weights vs gates vs ranges (App. B.1) are all
+runtime choices of the Rust coordinator, not separate artifacts.
+"""
+
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def adam_update(flat, m, v, grad, lr_vec, step):
+    """One Adam step; ``step`` is the 1-based iteration count (f32)."""
+    m_new = BETA1 * m + (1.0 - BETA1) * grad
+    v_new = BETA2 * v + (1.0 - BETA2) * grad * grad
+    m_hat = m_new / (1.0 - BETA1**step)
+    v_hat = v_new / (1.0 - BETA2**step)
+    flat_new = flat - lr_vec * m_hat / (jnp.sqrt(v_hat) + EPS)
+    return flat_new, m_new, v_new

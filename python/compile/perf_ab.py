@@ -1,0 +1,28 @@
+"""Perf A/B: export lenet5 train steps with the fused Pallas quantizer
+vs the naive pure-jnp reference quantizer (materializes every residual).
+
+Used by the §Perf pass to measure what the L1 kernel's fused structure
+buys at the whole-step level: `python -m compile.perf_ab --out DIR`.
+"""
+
+import argparse
+import os
+
+from .aot import export_model
+from .quant import BBEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="/tmp/ab_artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    export_model("lenet5", BBEngine(use_pallas=True), "_pallas",
+                 args.out, "small")
+    export_model("lenet5", BBEngine(use_pallas=False), "_jnpref",
+                 args.out, "small")
+    print("A/B artifacts written to", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Quantization engines: Bayesian Bits (the paper) and an FP32 no-op.
+
+An *engine* owns the quantizer parameters (gate logits ``phi``, range
+scales ``beta``) and applies the quantizer inside layer forwards. The
+same model code builds either a Bayesian Bits network, a DQ baseline
+network (``dq.py``), or a plain float network, depending on the engine
+the context carries.
+
+Weight tensors are quantized per-output-channel for the pruning gate z2
+(channel-major reshape), with the residual gates z4..z32 shared across
+the tensor (paper §2.1: shared grid for surviving channels).
+Activation tensors are quantized per-tensor (channels == 1).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .core import const_init
+from .kernels.bayesian_bits import bb_quantize
+from .kernels import ref
+
+PHI_INIT = 6.0  # large => all gates initially open (§4: start at full 32-bit)
+ACT_BETA_INIT = 6.0
+ACT_BETA_INIT_SIGNED = 3.0
+
+
+class FP32Engine:
+    """Identity engine — no quantizers, no extra parameters."""
+
+    kind = "fp32"
+    levels = ()
+
+    def quant_weight(self, ctx, name, w, consumer_macs, layer):
+        return w
+
+    def quant_act(self, ctx, name, x, consumer_macs, signed):
+        return x
+
+
+class BBEngine:
+    """Bayesian Bits: gated residual decomposition on every tensor."""
+
+    kind = "bb"
+
+    def __init__(self, levels=(2, 4, 8, 16, 32), use_pallas=True):
+        self.levels = tuple(levels)
+        self.use_pallas = use_pallas
+
+    def _register(self, ctx, qname, kind, signed, channels, consumer_macs,
+                  layer, beta0):
+        n_slots = channels + len(self.levels) - 1
+        ctx.register_quantizer(qname, kind, signed, channels, self.levels,
+                               layer, consumer_macs)
+        ctx.param(qname + ".phi", (n_slots,), "g", const_init(PHI_INIT))
+        ctx.param(qname + ".beta", (1,), "s", const_init(beta0))
+
+    def _apply(self, ctx, qname, x2d, signed):
+        beta = ctx.param(qname + ".beta", (1,), "s", None)
+        z2, zh = ctx.gate_slots(qname)
+        return bb_quantize(x2d, beta, z2, zh, signed=signed,
+                           levels=self.levels, use_pallas=self.use_pallas)
+
+    def quant_weight(self, ctx, name, w, consumer_macs, layer):
+        cout = int(w.shape[-1])
+        if ctx.mode == "build":
+            beta0 = float(np.max(np.abs(np.asarray(w)))) or 1.0
+            self._register(ctx, name, "w", True, cout, consumer_macs, layer,
+                           beta0)
+            return w
+        w2d = jnp.moveaxis(w, -1, 0).reshape(cout, -1)
+        wq = self._apply(ctx, name, w2d, signed=True)
+        return jnp.moveaxis(wq.reshape((cout,) + w.shape[:-1]), 0, -1)
+
+    def quant_act(self, ctx, name, x, consumer_macs, signed):
+        if ctx.mode == "build":
+            beta0 = ACT_BETA_INIT_SIGNED if signed else ACT_BETA_INIT
+            self._register(ctx, name, "a", signed, 1, consumer_macs, None,
+                           beta0)
+            return x
+        x2d = x.reshape(1, -1)
+        xq = self._apply(ctx, name, x2d, signed=signed)
+        return xq.reshape(x.shape)
+
+
+def gate_param_index(spec):
+    """int32 map: gate slot -> position of its phi logit in the flat params."""
+    idx = np.zeros(spec.n_slots, dtype=np.int32)
+    for q in spec.quantizers:
+        p = spec.param_index[q.name + ".phi"]
+        assert p.size == q.n_slots
+        idx[q.offset:q.offset + q.n_slots] = np.arange(
+            p.offset, p.offset + p.size, dtype=np.int32)
+    return idx
+
+
+def gather_phi(spec, flat):
+    """All gate logits in slot order, via *static slices*.
+
+    Deliberately avoids `flat[phi_index]` (a gather op): the xla_extension
+    0.5.1 backend that executes the AOT artifacts miscompiles the
+    large-constant-index gather this produces (verified against the
+    jitted reference), while static slice + concatenate round-trips
+    exactly. Slot order == registration order, so the concatenation is
+    contiguous and cheap.
+    """
+    parts = []
+    for q in spec.quantizers:
+        p = spec.param_index[q.name + ".phi"]
+        parts.append(jax.lax.slice(flat, (p.offset,),
+                                   (p.offset + p.size,)))
+    return jnp.concatenate(parts)
+
+
+def sample_gates(phi, u, lock_mask, lock_val):
+    """Stochastic hard-concrete gates with per-slot lock overrides.
+
+    lock_mask == 1 forces the gate to lock_val (used for fixed-width
+    baselines, quantization-only / pruning-only ablations, and frozen
+    gates during fine-tuning); lock_mask == 0 samples from the
+    hard-concrete relaxation (Eq. 20).
+    """
+    z = ref.hard_concrete_sample(phi, u)
+    return lock_mask * lock_val + (1.0 - lock_mask) * z
+
+
+def gate_probs(phi, lock_mask, lock_val):
+    """Per-slot inclusion probabilities R_phi(z>0) with lock overrides."""
+    p = ref.prob_active(phi)
+    return lock_mask * lock_val + (1.0 - lock_mask) * p
+
+
+def chains(spec, probs):
+    """Per-slot chain probabilities Pi_{j<=i} q(z_j = 1) (Eq. 16).
+
+    Channel slots carry q(z2c); the residual slot for bit b carries
+    mean_c q(z2c) * prod_{2<j<=b} q(z_j). Dotting with the lam vector
+    (mu * lam_base from the manifest) gives the paper's regularizer.
+    """
+    parts = []
+    for q in spec.quantizers:
+        q2 = probs[q.offset:q.offset + q.channels]
+        qh = probs[q.offset + q.channels:q.offset + q.n_slots]
+        parts.append(q2)
+        parts.append(jnp.cumprod(qh) * jnp.mean(q2))
+    return jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.float32)

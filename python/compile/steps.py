@@ -1,0 +1,105 @@
+"""Train/eval step builders — the functions that get AOT-lowered to HLO.
+
+One train-step executable per model covers every experiment mode in the
+paper through its runtime inputs (see DESIGN.md §6):
+
+* ``lock_mask`` / ``lock_val`` — per-gate-slot overrides: fixed-width
+  baselines (w8a8, w4a4, ...), quantization-only (z2 locked 1),
+  pruning-only (z4+ locked), frozen-gate fine-tuning (§4.2), and the
+  FP32 reference (everything locked 1).
+* ``det_flag`` — deterministic-gate ablation (App. A.3, Table 2):
+  replaces the uniform noise with 0.5.
+* ``lr_w / lr_g / lr_s`` — per-group Adam rates; post-training mode
+  (§4.2.1) is ``lr_w = 0`` with gates-only (``lr_s = 0``) or
+  gates+scales variants.
+* ``lam`` — per-slot regularizer weights mu * lam_base (App. B.2.1).
+
+Signature (all f32 unless noted):
+  train(flat P, m P, v P, x B..., y B i32, seed i32, step, lr_w, lr_g,
+        lr_s, lock_mask G, lock_val G, lam G, det_flag)
+    -> (flat', m', v', loss_ce, correct, reg, probs G)
+  eval(flat P, gates G, x, y) -> (loss_ce, correct)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import optim
+from .quant import gather_phi, sample_gates, gate_probs, chains
+
+
+def build_train_step(spec, apply_fn, engine):
+    is_dq = engine.kind == "dq"
+    mask_w = jnp.asarray(spec.group_mask("w"))
+    mask_g = jnp.asarray(spec.group_mask("g"))
+    mask_s = jnp.asarray(spec.group_mask("s"))
+
+    def train_step(flat, m, v, x, y, seed, step, lr_w, lr_g, lr_s,
+                   lock_mask, lock_val, lam, det_flag):
+        key = jax.random.PRNGKey(seed)
+        u = jax.random.uniform(key, (spec.n_slots,), minval=1e-6,
+                               maxval=1.0 - 1e-6)
+        u = det_flag * 0.5 + (1.0 - det_flag) * u
+
+        def loss_fn(flat):
+            if is_dq:
+                z = jnp.zeros((spec.n_slots,), jnp.float32)
+                probs = engine.bits(spec, flat)
+                reg = jnp.dot(lam, probs)
+            elif spec.n_slots:
+                phi = gather_phi(spec, flat)
+                z = sample_gates(phi, u, lock_mask, lock_val)
+                probs = gate_probs(phi, lock_mask, lock_val)
+                reg = jnp.dot(lam, chains(spec, probs))
+            else:  # fp32 engine
+                z = jnp.zeros((0,), jnp.float32)
+                probs = z
+                reg = jnp.float32(0.0)
+            logits = apply_fn(flat, z, x)
+            ce = L.cross_entropy(logits, y)
+            return ce + reg, (ce, reg, logits, probs)
+
+        grads, (ce, reg, logits, probs) = jax.grad(
+            loss_fn, has_aux=True)(flat)
+        lr_vec = lr_w * mask_w + lr_g * mask_g + lr_s * mask_s
+        flat_new, m_new, v_new = optim.adam_update(
+            flat, m, v, grads, lr_vec, step)
+        correct = L.correct_count(logits, y)
+        return flat_new, m_new, v_new, ce, correct, reg, probs
+
+    return train_step
+
+
+def build_eval_step(spec, apply_fn):
+    def eval_step(flat, gates, x, y):
+        logits = apply_fn(flat, gates, x)
+        return L.cross_entropy(logits, y), L.correct_count(logits, y)
+
+    return eval_step
+
+
+def example_args_train(spec, batch):
+    """ShapeDtypeStructs matching train_step, for jax.jit(...).lower()."""
+    f32 = jnp.float32
+    P, G = spec.n_params, spec.n_slots
+    s = jax.ShapeDtypeStruct
+    return (
+        s((P,), f32), s((P,), f32), s((P,), f32),
+        s((batch,) + spec.input_shape, f32),
+        s((batch,), jnp.int32),
+        s((), jnp.int32), s((), f32),
+        s((), f32), s((), f32), s((), f32),
+        s((G,), f32), s((G,), f32), s((G,), f32),
+        s((), f32),
+    )
+
+
+def example_args_eval(spec, batch):
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return (
+        s((spec.n_params,), f32), s((spec.n_slots,), f32),
+        s((batch,) + spec.input_shape, f32),
+        s((batch,), jnp.int32),
+    )

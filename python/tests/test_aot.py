@@ -1,0 +1,87 @@
+"""Artifact consistency: manifests vs built specs, HLO text parseability."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.models import build_model
+from compile.quant import BBEngine
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "lenet5_manifest.json")),
+    reason="artifacts not built (run `make artifacts`)")
+
+
+def load_manifest(name):
+    with open(os.path.join(ART, f"{name}_manifest.json")) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", ["lenet5", "vgg7", "resnet18",
+                                  "mobilenetv2"])
+def test_manifest_matches_fresh_build(name):
+    man = load_manifest(name)
+    spec, _ = build_model(name, BBEngine(), man["preset"])
+    assert man["n_params"] == spec.n_params
+    assert man["n_slots"] == spec.n_slots
+    assert [p["name"] for p in man["params"]] == \
+        [p.name for p in spec.params]
+    assert [q["offset"] for q in man["quantizers"]] == \
+        [q.offset for q in spec.quantizers]
+    np.testing.assert_allclose(man["lam_base"], spec.lam_base(), rtol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["lenet5", "vgg7", "resnet18",
+                                  "mobilenetv2"])
+def test_init_bin_size_and_values(name):
+    man = load_manifest(name)
+    raw = np.fromfile(os.path.join(ART, man["init_file"]), dtype=np.float32)
+    assert raw.size == man["n_params"]
+    assert np.all(np.isfinite(raw))
+    spec, _ = build_model(name, BBEngine(), man["preset"])
+    np.testing.assert_array_equal(raw, spec.init_flat())
+
+
+def test_hlo_text_is_parseable_header():
+    """HLO text must start with an HloModule header (text interchange)."""
+    for f in os.listdir(ART):
+        if f.endswith(".hlo.txt"):
+            with open(os.path.join(ART, f)) as fh:
+                head = fh.read(64)
+            assert head.startswith("HloModule"), f
+
+
+def test_goldens_match_ref():
+    from compile.kernels import ref
+    import jax.numpy as jnp
+    with open(os.path.join(ART, "goldens.json")) as f:
+        g = json.load(f)
+    shape = tuple(g["shape"])
+    for case in g["cases"]:
+        x = jnp.asarray(np.asarray(case["x"], np.float32).reshape(shape))
+        out = ref.bb_quantize_ref(
+            x, jnp.asarray(case["beta"]), jnp.asarray(case["z2"]),
+            jnp.asarray(case["zh"]), True, levels=tuple(g["levels"]))
+        np.testing.assert_allclose(
+            np.asarray(out).reshape(-1), case["out"], rtol=1e-5, atol=1e-6)
+
+
+def test_train_hlo_mentions_no_custom_calls():
+    """Interpret-mode Pallas must lower to plain HLO (no Mosaic calls)."""
+    for name in ("lenet5", "resnet18"):
+        man = load_manifest(name)
+        with open(os.path.join(ART, man["hlo_train"])) as f:
+            text = f.read()
+        assert "mosaic" not in text.lower()
+
+
+def test_manifest_lists_io_contract():
+    man = load_manifest("lenet5")
+    assert man["train_args"][:5] == ["params", "adam_m", "adam_v", "x", "y"]
+    assert man["train_outputs"][-1] == "probs"
+    assert man["eval_args"] == ["params", "gates", "x", "y"]
+    assert man["batch"] > 0

@@ -1,0 +1,138 @@
+"""Decomposition identities from §2.1 / Fig. 1 — properties of the grids."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+@given(beta=st.floats(0.05, 50.0), signed=st.booleans())
+@settings(max_examples=50, deadline=None)
+def test_step_size_recursion_equals_closed_form(beta, signed):
+    """s_b = s_{b/2}/(2^{b/2}+1)  ==  (beta-alpha)/(2^b-1)  for all b."""
+    sizes = ref.step_sizes(jnp.asarray([beta]), signed)
+    span = (2.0 if signed else 1.0) * beta
+    for s, b in zip(sizes, ref.LEVELS):
+        np.testing.assert_allclose(
+            float(s[0]), span / (2.0**b - 1.0), rtol=1e-5)
+
+
+def test_fig1_identity():
+    """(2^4 - 1) == (2^2 - 1)(2^2 + 1) and its higher-order versions."""
+    for b in (4, 8, 16, 32):
+        h = b // 2
+        assert (2**b - 1) == (2**h - 1) * (2**h + 1)
+
+
+@given(seed=st.integers(0, 10_000), beta=st.floats(0.2, 4.0),
+       signed=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_residuals_bounded_by_half_step(seed, beta, signed):
+    """x - x_b lies in [-s_b/2, s_b/2] after every chain stage (§2.1)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, beta, size=(4, 32)).astype(np.float32)
+    if not signed:
+        x = np.abs(x)
+    b = jnp.asarray([beta])
+    x2, residuals = ref.decompose(jnp.asarray(x), b, signed)
+    sizes = ref.step_sizes(b, signed)
+    alpha, beta_grid, beta_clip, alpha_clip = ref.effective_range(b, signed)
+    xc = np.asarray(ref.pact_clip(jnp.asarray(x), alpha_clip, beta_clip))
+    x_cur = np.asarray(x2)
+    for i, eps in enumerate(residuals):
+        s = float(sizes[i][0])  # step of the level we just *came from*
+        assert np.all(np.abs(xc - x_cur) <= s / 2 + 1e-6)
+        x_cur = x_cur + np.asarray(eps)
+
+
+@given(seed=st.integers(0, 10_000), bit_i=st.integers(0, 4),
+       signed=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_partial_sums_live_on_their_grid(seed, bit_i, signed):
+    """x_2 + eps_4 + ... + eps_b is an integer multiple of s_b."""
+    rng = np.random.default_rng(seed)
+    beta = 2.0
+    x = rng.normal(0, 2, size=(4, 16)).astype(np.float32)
+    if not signed:
+        x = np.abs(x)
+    b = jnp.asarray([beta])
+    x2, residuals = ref.decompose(jnp.asarray(x), b, signed)
+    sizes = ref.step_sizes(b, signed)
+    partial = np.asarray(x2, dtype=np.float64)
+    for i in range(bit_i):
+        partial = partial + np.asarray(residuals[i], dtype=np.float64)
+    s = float(sizes[bit_i][0])
+    ratio = partial / s
+    np.testing.assert_allclose(ratio, np.round(ratio), atol=2e-2)
+
+
+def test_quantization_error_shrinks_with_each_gate():
+    """Quantization error vs the *clipped* tensor vanishes as gates open
+    (the clipping error itself is range-, not bit-width-, limited)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1.5, size=(8, 64)).astype(np.float32))
+    beta = jnp.asarray([2.0])
+    z2 = jnp.ones(8)
+    alpha, bg, bc, ac = ref.effective_range(beta, True)
+    xc = ref.pact_clip(x, ac, bc)
+    errs = []
+    for k in range(5):
+        zh = jnp.asarray([1.0] * k + [0.0] * (4 - k))
+        xq = ref.bb_quantize_ref(x, beta, z2, zh, True)
+        errs.append(float(jnp.mean((xc - xq) ** 2)))
+    for lo, hi in zip(errs[1:], errs[:-1]):
+        assert lo < hi * 0.5, errs  # each extra gate at least halves MSE
+    assert errs[-1] < 1e-9  # 32-bit chain ~ lossless vs clipped input at f32
+
+
+def test_unsigned_output_nonnegative():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.abs(rng.normal(0, 2, (4, 16))).astype(np.float32))
+    xq = ref.bb_quantize_ref(x, jnp.asarray([1.5]), jnp.ones(4),
+                             jnp.ones(4), False)
+    assert float(jnp.min(xq)) >= 0.0
+
+
+def test_output_within_range():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 10, (4, 64)).astype(np.float32))
+    beta = 1.25
+    xq = ref.bb_quantize_ref(x, jnp.asarray([beta]), jnp.ones(4),
+                             jnp.ones(4), True)
+    assert float(jnp.max(jnp.abs(xq))) <= beta + 1e-6
+
+
+class TestHardConcrete:
+    def test_prob_active_matches_empirical(self):
+        rng = np.random.default_rng(0)
+        for phi in (-2.0, 0.0, 1.0, 3.0):
+            u = jnp.asarray(rng.uniform(1e-6, 1 - 1e-6, 200_000)
+                            .astype(np.float32))
+            z = ref.hard_concrete_sample(jnp.float32(phi), u)
+            emp = float(jnp.mean((z > 0).astype(jnp.float32)))
+            theory = float(ref.prob_active(jnp.float32(phi)))
+            assert abs(emp - theory) < 5e-3
+
+    def test_samples_hit_exact_zero_and_one(self):
+        rng = np.random.default_rng(1)
+        u = jnp.asarray(rng.uniform(1e-6, 1 - 1e-6, 10_000)
+                        .astype(np.float32))
+        z = np.asarray(ref.hard_concrete_sample(jnp.float32(0.0), u))
+        assert (z == 0.0).sum() > 0 and (z == 1.0).sum() > 0
+        assert np.all((z >= 0) & (z <= 1))
+
+    def test_threshold_consistent_with_p_zero(self):
+        """Eq. 22: gate open iff P(z==0) < t."""
+        for phi in np.linspace(-4, 4, 41):
+            gate = float(ref.test_time_gate(jnp.float32(phi)))
+            p_zero = 1.0 - float(ref.prob_active(jnp.float32(phi)))
+            assert gate == (1.0 if p_zero < ref.THRESHOLD else 0.0)
+
+    def test_deterministic_gate_is_mean(self):
+        z = ref.hard_concrete_sample(jnp.float32(1.3),
+                                     jnp.float32(0.5))
+        np.testing.assert_allclose(
+            float(z), float(ref.hard_concrete_mean(jnp.float32(1.3))),
+            rtol=1e-6)

@@ -1,0 +1,145 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, ranges, gate patterns and signedness;
+assert_allclose against ref.bb_quantize_ref on every draw.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bayesian_bits import bb_quantize
+
+LEVELS_CHOICES = [(2,), (2, 4), (2, 4, 8), (2, 4, 8, 16), (2, 4, 8, 16, 32)]
+
+
+def make_inputs(rows, cols, beta, seed, signed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0.0, beta, size=(rows, cols)).astype(np.float32)
+    if not signed:
+        x = np.abs(x)
+    return jnp.asarray(x)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rows=st.integers(1, 12),
+    cols=st.integers(1, 24),
+    beta=st.floats(0.1, 8.0),
+    seed=st.integers(0, 2**31 - 1),
+    signed=st.booleans(),
+    levels_i=st.integers(0, len(LEVELS_CHOICES) - 1),
+    data=st.data(),
+)
+def test_kernel_matches_ref(rows, cols, beta, seed, signed, levels_i, data):
+    levels = LEVELS_CHOICES[levels_i]
+    x = make_inputs(rows, cols, beta, seed, signed)
+    b = jnp.asarray([beta], jnp.float32)
+    z2 = jnp.asarray(
+        data.draw(st.lists(st.sampled_from([0.0, 0.3, 1.0]),
+                           min_size=rows, max_size=rows)), jnp.float32)
+    zh = jnp.asarray(
+        data.draw(st.lists(st.floats(0.0, 1.0), min_size=len(levels) - 1,
+                           max_size=len(levels) - 1)), jnp.float32)
+    out_k = bb_quantize(x, b, z2, zh, signed=signed, levels=levels)
+    out_r = ref.bb_quantize_ref(x, b, z2, zh, signed, levels=levels)
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("signed", [True, False])
+@pytest.mark.parametrize("block_rows", [None, 2, 4])
+def test_block_tiling_invariant(signed, block_rows):
+    """Tiling the grid must not change the numbers."""
+    x = make_inputs(8, 16, 2.0, 7, signed)
+    b = jnp.asarray([2.0])
+    z2 = jnp.ones(8)
+    zh = jnp.asarray([1.0, 1.0, 0.5, 0.0])
+    full = bb_quantize(x, b, z2, zh, signed=signed, block_rows=None)
+    tiled = bb_quantize(x, b, z2, zh, signed=signed, block_rows=block_rows)
+    np.testing.assert_allclose(full, tiled, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize(
+    "bit,zh", [(2, [0, 0, 0, 0]), (4, [1, 0, 0, 0]), (8, [1, 1, 0, 0]),
+               (16, [1, 1, 1, 0]), (32, [1, 1, 1, 1])])
+@pytest.mark.parametrize("signed", [True, False])
+def test_gated_chain_equals_fixed_quantizer(bit, zh, signed):
+    """Gates open to level b  <=>  plain uniform b-bit quantizer (Fig. 1)."""
+    x = make_inputs(16, 32, 1.5, 11, signed)
+    b = jnp.asarray([1.5])
+    out = bb_quantize(x, b, jnp.ones(16), jnp.asarray(zh, jnp.float32),
+                      signed=signed)
+    fixed = ref.quantize_fixed(x, b, bit, signed)
+    np.testing.assert_allclose(out, fixed, rtol=1e-4, atol=1e-6)
+
+
+def test_pruned_channels_are_zero():
+    x = make_inputs(6, 10, 2.0, 3, True)
+    z2 = jnp.asarray([1, 0, 1, 0, 0, 1], jnp.float32)
+    out = bb_quantize(x, jnp.asarray([2.0]), z2, jnp.ones(4), signed=True)
+    np.testing.assert_array_equal(np.asarray(out)[1], 0.0)
+    np.testing.assert_array_equal(np.asarray(out)[3], 0.0)
+    np.testing.assert_array_equal(np.asarray(out)[4], 0.0)
+    assert np.abs(np.asarray(out)[0]).sum() > 0
+
+
+def test_use_pallas_false_matches_true():
+    x = make_inputs(8, 8, 2.0, 5, True)
+    args = (jnp.asarray([2.0]), jnp.ones(8), jnp.asarray([1., 1., 1., 1.]))
+    a = bb_quantize(x, *args, signed=True, use_pallas=True)
+    b = bb_quantize(x, *args, signed=True, use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+class TestGradients:
+    def setup_method(self):
+        self.x = make_inputs(4, 6, 2.0, 17, True)
+        self.beta = jnp.asarray([2.0])
+        self.z2 = jnp.ones(4)
+        self.zh = jnp.asarray([1.0, 1.0, 0.5, 0.2])
+
+    def loss(self, x, beta, z2, zh):
+        return jnp.sum(
+            bb_quantize(x, beta, z2, zh, signed=True) ** 2)
+
+    def test_grad_shapes(self):
+        g = jax.grad(self.loss, argnums=(0, 1, 2, 3))(
+            self.x, self.beta, self.z2, self.zh)
+        assert g[0].shape == self.x.shape
+        assert g[1].shape == (1,)
+        assert g[2].shape == (4,)
+        assert g[3].shape == (4,)
+
+    def test_ste_inside_range_is_gated_identity(self):
+        """dxq/dx == z2 inside the clip range (STE)."""
+        x = jnp.asarray([[0.3]], jnp.float32)
+        for z2v in (1.0, 0.5, 0.0):
+            g = jax.grad(lambda x: jnp.sum(bb_quantize(
+                x, self.beta, jnp.asarray([z2v]), self.zh, signed=True)))(x)
+            np.testing.assert_allclose(g[0, 0], z2v, rtol=1e-6)
+
+    def test_ste_outside_range_flows_to_beta(self):
+        """Clipped elements route gradient to beta, not x (PACT)."""
+        x = jnp.asarray([[5.0]], jnp.float32)  # above beta=2
+        gx = jax.grad(lambda x: jnp.sum(bb_quantize(
+            x, self.beta, jnp.ones(1), self.zh, signed=True)))(x)
+        gb = jax.grad(lambda b: jnp.sum(bb_quantize(
+            x, b, jnp.ones(1), self.zh, signed=True)))(self.beta)
+        assert float(gx[0, 0]) == 0.0
+        assert float(gb[0]) > 0.0
+
+    def test_gate_grad_matches_residual_magnitude(self):
+        """dxq/dz4 == z2 * (e4 + z8*(...)): finite-difference check."""
+        def f(zh):
+            return jnp.sum(bb_quantize(self.x, self.beta, self.z2, zh,
+                                       signed=True))
+        g = jax.grad(f)(self.zh)
+        eps = 1e-3
+        for i in range(4):
+            zp = self.zh.at[i].add(eps)
+            zm = self.zh.at[i].add(-eps)
+            fd = (f(zp) - f(zm)) / (2 * eps)
+            np.testing.assert_allclose(g[i], fd, rtol=1e-2, atol=1e-3)

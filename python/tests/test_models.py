@@ -1,0 +1,165 @@
+"""Model-zoo build/apply checks: shapes, registries, MACs, engines."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.models import build_model, MODELS
+from compile.quant import BBEngine, FP32Engine
+from compile.dq import DQEngine
+from compile import layers as L
+
+
+@pytest.fixture(scope="module")
+def lenet():
+    eng = BBEngine()
+    spec, apply_fn = build_model("lenet5", eng, "small")
+    return eng, spec, apply_fn
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_build_and_apply_all_models(name):
+    eng = BBEngine()
+    spec, apply_fn = build_model(name, eng, "small")
+    assert spec.n_params > 0 and spec.n_slots > 0
+    flat = jnp.asarray(spec.init_flat())
+    gates = jnp.ones(spec.n_slots)
+    x = jnp.zeros((2,) + spec.input_shape)
+    logits = apply_fn(flat, gates, x)
+    assert logits.shape == (2, spec.num_classes)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_param_layout_contiguous(lenet):
+    _, spec, _ = lenet
+    off = 0
+    for p in spec.params:
+        assert p.offset == off
+        off += p.size
+    assert off == spec.n_params
+
+
+def test_gate_slot_layout_contiguous(lenet):
+    _, spec, _ = lenet
+    off = 0
+    for q in spec.quantizers:
+        assert q.offset == off
+        assert q.n_slots == q.channels + len(q.levels) - 1
+        off += q.n_slots
+    assert off == spec.n_slots
+
+
+def test_every_quantizer_has_phi_and_beta(lenet):
+    _, spec, _ = lenet
+    for q in spec.quantizers:
+        phi = spec.param_index[q.name + ".phi"]
+        beta = spec.param_index[q.name + ".beta"]
+        assert phi.size == q.n_slots and phi.group == "g"
+        assert beta.size == 1 and beta.group == "s"
+
+
+def test_weight_quantizers_per_channel(lenet):
+    _, spec, _ = lenet
+    w_quants = [q for q in spec.quantizers if q.kind == "w"]
+    assert w_quants, "no weight quantizers registered"
+    for q in w_quants:
+        layer = next(l for l in spec.layers if l.weight_q == q.name)
+        assert q.channels == layer.cout
+        assert q.signed
+
+
+def test_act_quantizers_per_tensor(lenet):
+    _, spec, _ = lenet
+    a_quants = [q for q in spec.quantizers if q.kind == "a"]
+    assert a_quants
+    for q in a_quants:
+        assert q.channels == 1
+
+
+def test_mac_counts_match_formula(lenet):
+    _, spec, _ = lenet
+    by_name = {l.name: l for l in spec.layers}
+    # conv1: 16x16 SAME stride1, 1->8 channels, 5x5 kernel
+    assert by_name["conv1"].macs == 16 * 16 * 8 * 1 * 5 * 5
+    assert by_name["conv2"].macs == 8 * 8 * 16 * 8 * 5 * 5
+    assert by_name["fc1"].macs == 4 * 4 * 16 * 64
+    assert by_name["fc2"].macs == 64 * 10
+
+
+def test_lam_base_scaling(lenet):
+    """lambda'_{jk} = b_j MACs/maxMAC, split equally over channel slots."""
+    _, spec, _ = lenet
+    lam = spec.lam_base()
+    max_macs = max(l.macs for l in spec.layers)
+    for q in spec.quantizers:
+        scale = q.consumer_macs / max_macs
+        np.testing.assert_allclose(
+            lam[q.offset:q.offset + q.channels].sum(), 2 * scale, rtol=1e-4)
+        for i, b in enumerate(q.levels[1:]):
+            np.testing.assert_allclose(
+                lam[q.offset + q.channels + i], b * scale, rtol=1e-4)
+
+
+def test_pruning_gate_zeroes_channel_logits_effect(lenet):
+    """Closing all weight z2 gates of fc2 must freeze logits to bias."""
+    _, spec, apply_fn = lenet
+    flat = jnp.asarray(spec.init_flat())
+    gates = np.ones(spec.n_slots, np.float32)
+    q = spec.quant_index["fc2.w"]
+    gates[q.offset:q.offset + q.channels] = 0.0
+    x = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=(2,) + spec.input_shape).astype(np.float32))
+    logits = apply_fn(flat, jnp.asarray(gates), x)
+    bias = np.asarray(flat[spec.param_index["fc2.b"].offset:
+                           spec.param_index["fc2.b"].offset + 10])
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.tile(bias, (2, 1)), atol=1e-5)
+
+
+def test_fp32_engine_has_no_quantizers():
+    spec, apply_fn = build_model("lenet5", FP32Engine(), "small")
+    assert spec.n_slots == 0
+    assert all(".phi" not in p.name for p in spec.params)
+
+
+def test_dq_engine_one_slot_per_quantizer():
+    eng = DQEngine()
+    spec, apply_fn = build_model("lenet5", eng, "small")
+    assert all(q.n_slots == 1 for q in spec.quantizers)
+    flat = jnp.asarray(spec.init_flat())
+    bits = eng.bits(spec, flat)
+    # initialized as an 8-bit quantizer
+    np.testing.assert_allclose(np.asarray(bits), 8.0, atol=0.1)
+
+
+def test_resnet_shared_input_quantizer():
+    """Downsample convs reuse the block-input quantizer (B.2.4)."""
+    spec, _ = build_model("resnet18", BBEngine(), "small")
+    ds_layers = [l for l in spec.layers if l.name.endswith(".ds")]
+    assert ds_layers
+    for l in ds_layers:
+        assert l.act_q.endswith(".conv1.in")
+        q = spec.quant_index[l.act_q]
+        conv1 = next(x for x in spec.layers
+                     if x.name == l.name.replace(".ds", ".conv1"))
+        # shared quantizer's consumer MACs covers both convs
+        assert q.consumer_macs == conv1.macs + l.macs
+
+
+def test_depthwise_macs():
+    spec, _ = build_model("mobilenetv2", BBEngine(), "small")
+    dw = [l for l in spec.layers if l.kind == "dwconv"]
+    assert dw
+    for l in dw:
+        assert l.cin == l.cout  # depthwise
+        # B == 1 in the paper's MAC formula
+        assert l.macs % (l.cout * 9) == 0
+
+
+def test_cross_entropy_and_correct():
+    logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0], [10.0, 0.0]])
+    y = jnp.asarray([0, 1, 1], jnp.int32)
+    ce = L.cross_entropy(logits, y)
+    assert float(ce) > 0
+    assert float(L.correct_count(logits, y)) == 2.0

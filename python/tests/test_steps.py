@@ -1,0 +1,191 @@
+"""Train/eval step semantics: locks, groups, determinism, learning."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.models import build_model
+from compile.quant import BBEngine, gate_param_index, chains
+from compile.dq import DQEngine
+from compile import steps
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def setup():
+    eng = BBEngine()
+    spec, apply_fn = build_model("lenet5", eng, "small")
+    train = jax.jit(steps.build_train_step(spec, apply_fn, eng))
+    ev = jax.jit(steps.build_eval_step(spec, apply_fn))
+    rng = np.random.default_rng(0)
+    B = 16
+    x = jnp.asarray(rng.normal(size=(B,) + spec.input_shape)
+                    .astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, B).astype(np.int32))
+    return eng, spec, train, ev, x, y
+
+
+def base_args(spec, x, y, **kw):
+    G = spec.n_slots
+    d = dict(
+        flat=jnp.asarray(spec.init_flat()),
+        m=jnp.zeros(spec.n_params), v=jnp.zeros(spec.n_params),
+        x=x, y=y, seed=jnp.int32(7), step=jnp.float32(1),
+        lr_w=jnp.float32(1e-3), lr_g=jnp.float32(1e-2),
+        lr_s=jnp.float32(1e-3),
+        lock_mask=jnp.zeros(G), lock_val=jnp.zeros(G),
+        lam=jnp.full(G, 1e-3), det_flag=jnp.float32(0),
+    )
+    d.update(kw)
+    return list(d.values())
+
+
+def test_loss_decreases_over_steps(setup):
+    eng, spec, train, ev, x, y = setup
+    args = base_args(spec, x, y)
+    flat, m, v = args[0], args[1], args[2]
+    losses = []
+    for i in range(1, 31):
+        out = train(flat, m, v, *args[3:5], jnp.int32(i), jnp.float32(i),
+                    *args[7:])
+        flat, m, v = out[0], out[1], out[2]
+        losses.append(float(out[3]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.7
+
+
+def test_same_seed_same_result(setup):
+    eng, spec, train, ev, x, y = setup
+    args = base_args(spec, x, y)
+    o1 = train(*args)
+    o2 = train(*args)
+    np.testing.assert_array_equal(np.asarray(o1[0]), np.asarray(o2[0]))
+
+
+def test_different_seed_different_gates(setup):
+    eng, spec, train, ev, x, y = setup
+    args = base_args(spec, x, y)
+    o1 = train(*args)
+    args[5] = jnp.int32(123)
+    o2 = train(*args)
+    assert not np.array_equal(np.asarray(o1[0]), np.asarray(o2[0]))
+
+
+def test_lock_freezes_gate_effect(setup):
+    """With all gates locked and lr zeroed the phi params must not move."""
+    eng, spec, train, ev, x, y = setup
+    G = spec.n_slots
+    args = base_args(spec, x, y,
+                     lock_mask=jnp.ones(G), lock_val=jnp.ones(G),
+                     lr_g=jnp.float32(0.0))
+    out = train(*args)
+    idx = gate_param_index(spec)
+    before = spec.init_flat()[idx]
+    after = np.asarray(out[0])[idx]
+    np.testing.assert_array_equal(before, after)
+    # locked probs are reported as the lock value
+    np.testing.assert_array_equal(np.asarray(out[6]), np.ones(G))
+
+
+def test_lr_w_zero_freezes_weights(setup):
+    """PTQ mode: weights stay put, gates/scales move."""
+    eng, spec, train, ev, x, y = setup
+    args = base_args(spec, x, y, lr_w=jnp.float32(0.0))
+    out = train(*args)
+    after = np.asarray(out[0])
+    before = spec.init_flat()
+    mask_w = spec.group_mask("w").astype(bool)
+    np.testing.assert_array_equal(before[mask_w], after[mask_w])
+    assert not np.array_equal(before[~mask_w], after[~mask_w])
+
+
+def test_det_flag_removes_noise(setup):
+    eng, spec, train, ev, x, y = setup
+    a1 = base_args(spec, x, y, det_flag=jnp.float32(1.0))
+    o1 = train(*a1)
+    a2 = base_args(spec, x, y, det_flag=jnp.float32(1.0),
+                   seed=jnp.int32(999))
+    o2 = train(*a2)
+    np.testing.assert_array_equal(np.asarray(o1[0]), np.asarray(o2[0]))
+
+
+def test_reg_increases_with_lam(setup):
+    eng, spec, train, ev, x, y = setup
+    o_small = train(*base_args(spec, x, y, lam=jnp.full(spec.n_slots, 1e-4)))
+    o_big = train(*base_args(spec, x, y, lam=jnp.full(spec.n_slots, 1e-1)))
+    assert float(o_big[5]) > float(o_small[5])
+
+
+def test_eval_matches_manual_forward(setup):
+    eng, spec, train, ev, x, y = setup
+    flat = jnp.asarray(spec.init_flat())
+    gates = jnp.ones(spec.n_slots)
+    loss, correct = ev(flat, gates, x, y)
+    assert np.isfinite(float(loss))
+    assert 0 <= float(correct) <= x.shape[0]
+
+
+def test_eval_fullgates_close_to_fp32(setup):
+    """All gates open => 32-bit chain => near-lossless quantization."""
+    from compile.quant import FP32Engine
+    eng, spec, train, ev, x, y = setup
+    spec32, apply32 = build_model("lenet5", FP32Engine(), "small")
+    ev32 = jax.jit(steps.build_eval_step(spec32, apply32))
+    # share the common (non-quantizer) parameters
+    init = spec.init_flat().copy()
+    # widen every clip range so only rounding (not clipping) differs
+    for q in spec.quantizers:
+        p = spec.param_index[q.name + ".beta"]
+        init[p.offset] = 64.0
+    flat32 = np.zeros(spec32.n_params, np.float32)
+    for p32 in spec32.params:
+        p = spec.param_index[p32.name]
+        flat32[p32.offset:p32.offset + p32.size] = \
+            init[p.offset:p.offset + p.size]
+    l_bb, c_bb = ev(jnp.asarray(init), jnp.ones(spec.n_slots), x, y)
+    l_fp, c_fp = ev32(jnp.asarray(flat32), jnp.zeros(0), x, y)
+    np.testing.assert_allclose(float(l_bb), float(l_fp), rtol=2e-2)
+
+
+def test_chains_product_structure():
+    """chain slots = q2c then cumprod of higher gates * mean(q2)."""
+    eng = BBEngine(levels=(2, 4, 8))
+    spec, _ = build_model("lenet5", eng, "small")
+    probs = np.random.default_rng(0).uniform(0.1, 1.0, spec.n_slots) \
+        .astype(np.float32)
+    ch = np.asarray(chains(spec, jnp.asarray(probs)))
+    for q in spec.quantizers:
+        p2 = probs[q.offset:q.offset + q.channels]
+        ph = probs[q.offset + q.channels:q.offset + q.n_slots]
+        np.testing.assert_allclose(ch[q.offset:q.offset + q.channels], p2,
+                                   rtol=1e-5)
+        expect = np.cumprod(ph) * p2.mean()
+        np.testing.assert_allclose(
+            ch[q.offset + q.channels:q.offset + q.n_slots], expect,
+            rtol=1e-4)
+
+
+def test_dq_train_step_runs_and_bits_shrink():
+    eng = DQEngine()
+    spec, apply_fn = build_model("lenet5", eng, "small")
+    train = jax.jit(steps.build_train_step(spec, apply_fn, eng))
+    rng = np.random.default_rng(0)
+    B = 16
+    x = jnp.asarray(rng.normal(size=(B,) + spec.input_shape)
+                    .astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, B).astype(np.int32))
+    G = spec.n_slots
+    flat = jnp.asarray(spec.init_flat())
+    m = jnp.zeros(spec.n_params)
+    v = jnp.zeros(spec.n_params)
+    bits0 = None
+    for i in range(1, 40):
+        out = train(flat, m, v, x, y, jnp.int32(i), jnp.float32(i),
+                    jnp.float32(0), jnp.float32(5e-2), jnp.float32(0),
+                    jnp.zeros(G), jnp.zeros(G), jnp.full(G, 0.05),
+                    jnp.float32(0))
+        flat, m, v = out[0], out[1], out[2]
+        if bits0 is None:
+            bits0 = np.asarray(out[6]).copy()
+    bits = np.asarray(out[6])
+    assert bits.mean() < bits0.mean()  # BOP regularizer pushes bits down

@@ -1,0 +1,48 @@
+//! Data-pipeline benches: generator throughput and the per-step batch
+//! assembly cost (which sits on the training hot loop).
+
+use bayesian_bits::data::synth::{generate, DatasetSpec};
+use bayesian_bits::data::Batcher;
+use bayesian_bits::util::bench::{header, Bench};
+
+fn main() {
+    header("data pipeline — generation + batch assembly");
+    let b = Bench::quick();
+
+    for (name, c) in [("mnist_like", 1), ("cifar_like", 3),
+                      ("imagenet_like", 3)] {
+        let spec = DatasetSpec {
+            name: name.into(),
+            input: (24, 24, c),
+            classes: 10,
+            train: 1024,
+            test: 0,
+        };
+        let s = b.run(&format!("generate({name}, 1024x24x24x{c})"), || {
+            let ds = generate(&spec, 1, false).unwrap();
+            std::hint::black_box(ds);
+        });
+        println!("{}", s.line(Some((1024.0, "img"))));
+    }
+
+    let spec = DatasetSpec {
+        name: "cifar_like".into(),
+        input: (24, 24, 3),
+        classes: 10,
+        train: 4096,
+        test: 0,
+    };
+    let ds = generate(&spec, 1, false).unwrap();
+    let n_px = ds.image_size();
+    for augment in [false, true] {
+        let mut batcher = Batcher::new(ds.clone(), 32, augment, 1);
+        let mut x = vec![0.0f32; 32 * n_px];
+        let mut y = vec![0i32; 32];
+        let bb = Bench::default();
+        let s = bb.run(&format!("next_into(batch=32, augment={augment})"),
+                       || {
+            batcher.next_into(&mut x, &mut y);
+        });
+        println!("{}", s.line(Some((32.0, "img"))));
+    }
+}

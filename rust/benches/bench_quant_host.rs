@@ -1,0 +1,59 @@
+//! Host quantizer-math benches: the Rust-side mirror used for gate
+//! thresholding, BOP accounting and parity tests. These run on every
+//! eval boundary, so they should be negligible next to device steps.
+
+use std::collections::BTreeMap;
+
+use bayesian_bits::bops::{BopCounter, QuantState};
+use bayesian_bits::models::{descriptor, Preset};
+use bayesian_bits::quant::gates::{test_time_gate, GateView};
+use bayesian_bits::quant::grid::{bb_quantize_host, QuantConfig};
+use bayesian_bits::util::bench::{header, Bench};
+
+fn main() {
+    header("quant host — oracle quantizer, thresholding, BOP accounting");
+    let b = Bench::default();
+
+    let cfg = QuantConfig::new(true, &[2, 4, 8, 16, 32]);
+    let n = 64 * 1024;
+    let x: Vec<f32> =
+        (0..n).map(|i| ((i % 997) as f32 - 498.0) / 200.0).collect();
+    let z2 = vec![1.0f32; 64];
+    let zh = [1.0f32, 1.0, 1.0, 1.0];
+    let s = b.run("bb_quantize_host(64x1024, 5 levels)", || {
+        let out = bb_quantize_host(&x, 64, 2.0, &z2, &zh, &cfg);
+        std::hint::black_box(out);
+    });
+    println!("{}", s.line(Some((n as f64 / 1e6, "Melem"))));
+
+    let phis: Vec<f64> =
+        (0..10_000).map(|i| (i as f64 - 5000.0) / 500.0).collect();
+    let s = b.run("test_time_gate x 10k (Eq. 22)", || {
+        let open = phis.iter().filter(|p| test_time_gate(**p)).count();
+        std::hint::black_box(open);
+    });
+    println!("{}", s.line(Some((10_000.0, "gate"))));
+
+    let view = GateView { channels: 512, levels: vec![2, 4, 8, 16, 32] };
+    let probs = vec![0.97f32; view.n_slots()];
+    let s = b.run("expected_bits(512-channel quantizer)", || {
+        std::hint::black_box(view.expected_bits(&probs));
+    });
+    println!("{}", s.line(None));
+
+    // BOP accounting at paper-scale ResNet18
+    let layers = descriptor("resnet18", Preset::Paper).unwrap();
+    let counter = BopCounter::new(layers.clone());
+    let mut states: BTreeMap<String, QuantState> =
+        counter.fixed_states(8, 8);
+    for (i, l) in layers.iter().enumerate() {
+        states.insert(l.weight_q.clone(), QuantState {
+            bits: [2u32, 4, 8, 16][i % 4],
+            keep_ratio: 0.9,
+        });
+    }
+    let s = b.run("BopCounter::bops(paper resnet18, mixed)", || {
+        std::hint::black_box(counter.bops(&states));
+    });
+    println!("{}", s.line(None));
+}

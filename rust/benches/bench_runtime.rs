@@ -1,0 +1,50 @@
+//! Runtime microbenches: isolate the PJRT execute + literal marshalling
+//! overhead from the model compute, to show where L3 time goes.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use bayesian_bits::runtime::{Manifest, Runtime, TrainState};
+use bayesian_bits::util::bench::{header, Bench};
+
+fn main() {
+    header("runtime — PJRT execute + marshalling overhead");
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+
+    // tiny executable: quantizer forward (8x16) isolates dispatch cost
+    let qexe = rt.load(&dir.join("quantizer_fwd.hlo.txt")).unwrap();
+    let x = vec![0.5f32; 8 * 16];
+    let b = Bench::default();
+    let s = b.run("quantizer_fwd(8x16) dispatch", || {
+        rt.quantizer_fwd(&qexe, &x, 8, &[2.0], &[1.0; 8], &[1.0; 4])
+            .unwrap();
+    });
+    println!("{}", s.line(None));
+
+    // literal construction costs at train-state sizes
+    let man = Manifest::load(&dir, "resnet18").unwrap();
+    let state = TrainState::init(&man).unwrap();
+    let s = b.run(&format!("Literal::vec1({} f32)", man.n_params), || {
+        let lit = xla::Literal::vec1(&state.params);
+        std::hint::black_box(lit);
+    });
+    println!("{}", s.line(Some((man.n_params as f64 * 4.0 / 1e6,
+                                "MB"))));
+
+    let lit = xla::Literal::vec1(&state.params);
+    let s = b.run(&format!("Literal::to_vec({} f32)", man.n_params),
+                  || {
+        let v = lit.to_vec::<f32>().unwrap();
+        std::hint::black_box(v);
+    });
+    println!("{}", s.line(Some((man.n_params as f64 * 4.0 / 1e6,
+                                "MB"))));
+
+    // executable cache hit path
+    let s = b.run("Runtime::load (cache hit)", || {
+        let e = rt.load(&dir.join("quantizer_fwd.hlo.txt")).unwrap();
+        std::hint::black_box(e);
+    });
+    println!("{}", s.line(None));
+}

@@ -1,0 +1,56 @@
+//! Bench for Table 1's end-to-end inner loops: full train-step latency
+//! and eval throughput for LeNet-5 (MNIST-like) and VGG-7 (CIFAR-like),
+//! the two workloads of the paper's first experiment.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use bayesian_bits::config::Mode;
+use bayesian_bits::coordinator::gate_manager::GateManager;
+use bayesian_bits::data::{generate, Batcher};
+use bayesian_bits::runtime::{Manifest, Runtime, TrainState};
+use bayesian_bits::util::bench::{header, Bench};
+
+fn main() {
+    header("table1 — lenet5 / vgg7 end-to-end step latency");
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    for model in ["lenet5", "vgg7"] {
+        bench_model(&rt, &dir, model);
+    }
+}
+
+fn bench_model(rt: &Arc<Runtime>, dir: &Path, model: &str) {
+    let man = Manifest::load(dir, model).unwrap();
+    let train_exe = rt.load(&man.hlo_train).unwrap();
+    let eval_exe = rt.load(&man.hlo_eval).unwrap();
+    let mut state = TrainState::init(&man).unwrap();
+    let ds = generate(&man.dataset, 1, false).unwrap();
+    let mut batcher = Batcher::new(ds, man.batch, false, 1);
+    let n_in = man.batch * man.input_shape.iter().product::<usize>();
+    let mut x = vec![0.0f32; n_in];
+    let mut y = vec![0i32; man.batch];
+    let g = man.n_slots;
+    let gm = GateManager::new(&man);
+    let (mask, val) = gm.locks(&Mode::BayesianBits);
+    let lam: Vec<f32> =
+        man.lam_base.iter().map(|b| b * 0.01).collect();
+
+    let b = Bench::default();
+    let s = b.run(&format!("{model}/train_step(batch={})", man.batch),
+                  || {
+        batcher.next_into(&mut x, &mut y);
+        rt.train_step(&train_exe, &man, &mut state, &x, &y, 7,
+                      (1e-3, 3e-2, 1e-3), &mask, &val, &lam, 0.0)
+            .unwrap();
+    });
+    println!("{}", s.line(Some((man.batch as f64, "img"))));
+
+    let gates = vec![1.0f32; g];
+    let s = b.run(&format!("{model}/eval_step(batch={})", man.batch),
+                  || {
+        rt.eval_step(&eval_exe, &man, &state.params, &gates, &x, &y)
+            .unwrap();
+    });
+    println!("{}", s.line(Some((man.batch as f64, "img"))));
+}

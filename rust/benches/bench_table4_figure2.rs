@@ -1,0 +1,51 @@
+//! Bench for Table 4 / Figure 2's workloads: ResNet18 and MobileNetV2
+//! train-step latency across training modes (locks are runtime inputs
+//! of a single executable, so mode must not change step cost — this
+//! bench verifies that claim empirically).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use bayesian_bits::config::Mode;
+use bayesian_bits::coordinator::gate_manager::GateManager;
+use bayesian_bits::data::{generate, Batcher};
+use bayesian_bits::runtime::{Manifest, Runtime, TrainState};
+use bayesian_bits::util::bench::{header, Bench};
+
+fn main() {
+    header("table4/figure2 — resnet18 / mobilenetv2 step latency by mode");
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    for model in ["resnet18", "mobilenetv2"] {
+        let man = Manifest::load(&dir, model).unwrap();
+        let exe = rt.load(&man.hlo_train).unwrap();
+        let mut state = TrainState::init(&man).unwrap();
+        let ds = generate(&man.dataset, 1, false).unwrap();
+        let mut batcher = Batcher::new(ds, man.batch, true, 1);
+        let n_in =
+            man.batch * man.input_shape.iter().product::<usize>();
+        let mut x = vec![0.0f32; n_in];
+        let mut y = vec![0i32; man.batch];
+        let gm = GateManager::new(&man);
+        let lam: Vec<f32> =
+            man.lam_base.iter().map(|b| b * 0.05).collect();
+        let bench = Bench::quick();
+        for mode in [
+            Mode::BayesianBits,
+            Mode::QuantOnly,
+            Mode::PruneOnly { w_bits: 4, a_bits: 8 },
+            Mode::Fixed { w_bits: 8, a_bits: 8 },
+        ] {
+            let (mask, val) = gm.locks(&mode);
+            let s = bench.run(
+                &format!("{model}/train_step[{}]", mode.label()), || {
+                    batcher.next_into(&mut x, &mut y);
+                    rt.train_step(&exe, &man, &mut state, &x, &y, 7,
+                                  (1e-3, 3e-2, 1e-3), &mask, &val,
+                                  &lam, 0.0)
+                        .unwrap();
+                });
+            println!("{}", s.line(Some((man.batch as f64, "img"))));
+        }
+    }
+}

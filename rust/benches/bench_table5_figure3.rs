@@ -1,0 +1,51 @@
+//! Bench for Table 5 / Figure 3's post-training loop: the PTQ step
+//! (weights frozen, gates+scales learning) and the sensitivity
+//! baseline's unit of work (one full-testset evaluation).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use bayesian_bits::config::Mode;
+use bayesian_bits::coordinator::gate_manager::GateManager;
+use bayesian_bits::data::{generate, Batcher};
+use bayesian_bits::runtime::{Manifest, Runtime, TrainState};
+use bayesian_bits::util::bench::{header, Bench};
+
+fn main() {
+    header("table5/figure3 — post-training step + sensitivity eval unit");
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let man = Manifest::load(&dir, "resnet18").unwrap();
+    let train_exe = rt.load(&man.hlo_train).unwrap();
+    let eval_exe = rt.load(&man.hlo_eval).unwrap();
+    let mut state = TrainState::init(&man).unwrap();
+    let ds = generate(&man.dataset, 1, false).unwrap();
+    let test = generate(&man.dataset, 1, true).unwrap();
+    let mut batcher = Batcher::new(ds, man.batch, false, 1);
+    let n_in = man.batch * man.input_shape.iter().product::<usize>();
+    let mut x = vec![0.0f32; n_in];
+    let mut y = vec![0i32; man.batch];
+    let gm = GateManager::new(&man);
+    let (mask, val) = gm.locks(&Mode::BayesianBits);
+    let lam: Vec<f32> = man.lam_base.iter().map(|b| b * 0.005).collect();
+
+    let bench = Bench::quick();
+    // PTQ step: lr_w = 0 (frozen weights), gates + scales learn.
+    let s = bench.run("resnet18/ptq_step(lr_w=0)", || {
+        batcher.next_into(&mut x, &mut y);
+        rt.train_step(&train_exe, &man, &mut state, &x, &y, 7,
+                      (0.0, 3e-2, 1e-3), &mask, &val, &lam, 0.0)
+            .unwrap();
+    });
+    println!("{}", s.line(Some((man.batch as f64, "img"))));
+
+    // sensitivity baseline unit: one full test-set evaluation
+    let gates = vec![1.0f32; man.n_slots];
+    let s = bench.run("resnet18/full_testset_eval", || {
+        Batcher::for_eval(&test, man.batch, |bx, by, _| {
+            rt.eval_step(&eval_exe, &man, &state.params, &gates, bx, by)
+                .unwrap();
+        });
+    });
+    println!("{}", s.line(Some((test.len() as f64, "img"))));
+}

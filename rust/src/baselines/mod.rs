@@ -1,0 +1,84 @@
+//! Baseline methods the paper compares against.
+//!
+//! * Fixed-width QAT with learned ranges ("LSQ/PACT-like") — expressed
+//!   as lock patterns of the Bayesian Bits artifact
+//!   (`Mode::Fixed{w,a}`), so they share the data pipeline and training
+//!   loop and the comparison is apples-to-apples (§4 / App. C).
+//! * DQ / DQ-restricted — the separate `_dq` artifacts learn continuous
+//!   bit widths; `dq_restricted_pct` recomputes the BOP count after
+//!   rounding every learned width *up* to the next power of two (the
+//!   paper's point about hardware-unfriendly methods; accuracy is
+//!   unchanged by construction, Table 1).
+//! * Sensitivity-ordered iterative PTQ — `coordinator::ptq`.
+
+use std::collections::BTreeMap;
+
+use crate::bops::{BopCounter, QuantState};
+use crate::config::Mode;
+use crate::runtime::Manifest;
+
+/// The fixed-width baseline grid used in the tables, mirroring the
+/// paper's rows: (label, mode).
+pub fn fixed_grid() -> Vec<(String, Mode)> {
+    [(32, 32), (8, 8), (4, 8), (4, 4), (2, 8), (2, 2)]
+        .into_iter()
+        .map(|(w, a)| {
+            (
+                format!("w{w}a{a}"),
+                Mode::Fixed { w_bits: w, a_bits: a },
+            )
+        })
+        .collect()
+}
+
+/// Round a learned continuous bit width up to the next hardware-friendly
+/// (power-of-two, >= 2) width.
+pub fn round_up_pow2_bits(bits: f64) -> u32 {
+    let mut b = 2u32;
+    while (b as f64) < bits && b < 32 {
+        b *= 2;
+    }
+    b
+}
+
+/// DQ: BOPs (%) of the learned *continuous* configuration.
+pub fn dq_pct(counter: &BopCounter, man: &Manifest, bits: &[f32]) -> f64 {
+    crate::coordinator::trainer::dq_expected_pct(counter, man, bits)
+}
+
+/// DQ-restricted: BOPs (%) after rounding every width up to a power of
+/// two. Accuracy is the DQ accuracy (rounding up only adds precision).
+pub fn dq_restricted_pct(counter: &BopCounter, man: &Manifest,
+                         bits: &[f32]) -> f64 {
+    let mut states: BTreeMap<String, QuantState> = BTreeMap::new();
+    for q in &man.quantizers {
+        states.insert(
+            q.name.clone(),
+            QuantState::full(round_up_pow2_bits(bits[q.offset] as f64)),
+        );
+    }
+    counter.relative_bops_pct(&states)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_pow2() {
+        assert_eq!(round_up_pow2_bits(1.2), 2);
+        assert_eq!(round_up_pow2_bits(2.0), 2);
+        assert_eq!(round_up_pow2_bits(2.1), 4);
+        assert_eq!(round_up_pow2_bits(5.7), 8);
+        assert_eq!(round_up_pow2_bits(9.0), 16);
+        assert_eq!(round_up_pow2_bits(31.0), 32);
+        assert_eq!(round_up_pow2_bits(40.0), 32);
+    }
+
+    #[test]
+    fn fixed_grid_has_paper_rows() {
+        let g = fixed_grid();
+        assert!(g.iter().any(|(l, _)| l == "w8a8"));
+        assert!(g.iter().any(|(l, _)| l == "w2a8"));
+    }
+}

@@ -1,0 +1,239 @@
+//! MAC / BOP accounting (paper App. B.2).
+//!
+//! * `BOPs(l) = MACs(l) * b_w * b_a` (Eq. 23), accumulator bits ignored.
+//! * Pruning scales MACs by the kept input/output channel ratios
+//!   (Eq. 26-27): `BOPs_pruned(l) = p_i p_o MACs(l) b_w b_a`.
+//! * ResNet rule (B.2.3): a residual-block input cannot be pruned away
+//!   by the previous layer (the skip path still carries it), so `p_i` is
+//!   only applied where the layer metadata says the input is prunable.
+//!
+//! The module consumes the manifest's layer table (`runtime::Manifest`)
+//! plus a learned network configuration (bits + keep ratios per
+//! quantizer) and produces absolute and relative GBOP counts.
+
+use std::collections::BTreeMap;
+
+use crate::models::LayerDesc;
+
+/// Learned configuration of one quantizer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantState {
+    /// Effective bit width (0 = pruned entirely).
+    pub bits: u32,
+    /// Fraction of output channels kept (weights; 1.0 for activations).
+    pub keep_ratio: f64,
+}
+
+impl QuantState {
+    pub fn full(bits: u32) -> Self {
+        Self { bits, keep_ratio: 1.0 }
+    }
+}
+
+/// Network-level BOP accounting over a layer table.
+#[derive(Debug, Clone)]
+pub struct BopCounter {
+    pub layers: Vec<LayerDesc>,
+}
+
+impl BopCounter {
+    pub fn new(layers: Vec<LayerDesc>) -> Self {
+        Self { layers }
+    }
+
+    /// Total MACs of the unpruned network.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Full-precision (32/32) BOP count — the relative-GBOPs denominator.
+    pub fn fp32_bops(&self) -> f64 {
+        self.total_macs() as f64 * 32.0 * 32.0
+    }
+
+    /// BOPs under a learned configuration.
+    ///
+    /// `states` maps quantizer name -> state. A layer's weight bits come
+    /// from its weight quantizer, activation bits from its input
+    /// quantizer; `p_o` is the weight quantizer's keep ratio and `p_i`
+    /// the *producing* weight quantizer's keep ratio, found by matching
+    /// the previous layer. For residual-fed inputs `p_i = 1` (B.2.3
+    /// upper bound).
+    pub fn bops(&self, states: &BTreeMap<String, QuantState>) -> f64 {
+        let mut total = 0.0;
+        for (idx, layer) in self.layers.iter().enumerate() {
+            let w = states
+                .get(&layer.weight_q)
+                .copied()
+                .unwrap_or(QuantState::full(32));
+            let a = states
+                .get(&layer.act_q)
+                .copied()
+                .unwrap_or(QuantState::full(32));
+            if w.bits == 0 || a.bits == 0 {
+                continue; // layer fully pruned
+            }
+            let p_o = w.keep_ratio;
+            let p_i = if layer.residual_input {
+                1.0
+            } else {
+                self.producer_keep_ratio(idx, states)
+            };
+            total += p_i
+                * p_o
+                * layer.macs as f64
+                * w.bits as f64
+                * a.bits as f64;
+        }
+        total
+    }
+
+    /// Keep ratio of the layer feeding `idx`'s input activation:
+    /// pruning output channels of layer l-1 prunes input channels of l
+    /// (App. B.2.2). The producer is the nearest earlier layer whose
+    /// cout matches this layer's cin (conv/pool chains preserve channel
+    /// count); falls back to 1.0 (upper bound) when ambiguous.
+    fn producer_keep_ratio(&self, idx: usize,
+                           states: &BTreeMap<String, QuantState>) -> f64 {
+        let cin = self.layers[idx].cin;
+        for prev in self.layers[..idx].iter().rev() {
+            if prev.cout == cin && prev.kind != "dense" {
+                return states
+                    .get(&prev.weight_q)
+                    .map(|s| s.keep_ratio)
+                    .unwrap_or(1.0);
+            }
+            if prev.kind == "dense" && prev.cout == cin {
+                return states
+                    .get(&prev.weight_q)
+                    .map(|s| s.keep_ratio)
+                    .unwrap_or(1.0);
+            }
+        }
+        1.0
+    }
+
+    /// Relative GBOPs in percent vs the FP32 network (paper tables).
+    pub fn relative_bops_pct(&self,
+                             states: &BTreeMap<String, QuantState>) -> f64 {
+        100.0 * self.bops(states) / self.fp32_bops()
+    }
+
+    /// Uniform fixed-width configuration (baseline rows: wX/aY).
+    pub fn fixed_states(&self, w_bits: u32, a_bits: u32)
+                        -> BTreeMap<String, QuantState> {
+        let mut m = BTreeMap::new();
+        for l in &self.layers {
+            m.insert(l.weight_q.clone(), QuantState::full(w_bits));
+            m.insert(l.act_q.clone(), QuantState::full(a_bits));
+        }
+        m
+    }
+}
+
+/// Expected (soft) BOPs during training, from per-quantizer expected
+/// bits — used for live tracking, not for reported tables.
+pub fn expected_bops(counter: &BopCounter,
+                     exp_bits: &BTreeMap<String, f64>) -> f64 {
+    counter
+        .layers
+        .iter()
+        .map(|l| {
+            let bw = exp_bits.get(&l.weight_q).copied().unwrap_or(32.0);
+            let ba = exp_bits.get(&l.act_q).copied().unwrap_or(32.0);
+            l.macs as f64 * bw * ba
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LayerDesc;
+    use crate::util::prop::{check, PropResult};
+
+    fn chain() -> BopCounter {
+        BopCounter::new(vec![
+            LayerDesc {
+                name: "conv1".into(), kind: "conv".into(), macs: 1000,
+                cin: 3, cout: 8, weight_q: "conv1.w".into(),
+                act_q: "conv1.in".into(), residual_input: false,
+            },
+            LayerDesc {
+                name: "conv2".into(), kind: "conv".into(), macs: 2000,
+                cin: 8, cout: 16, weight_q: "conv2.w".into(),
+                act_q: "conv2.in".into(), residual_input: false,
+            },
+        ])
+    }
+
+    #[test]
+    fn fp32_baseline_is_100pct() {
+        let c = chain();
+        let states = c.fixed_states(32, 32);
+        assert!((c.relative_bops_pct(&states) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn w8a8_is_6_25pct() {
+        let c = chain();
+        let states = c.fixed_states(8, 8);
+        assert!((c.relative_bops_pct(&states) - 6.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pruning_scales_both_consumers() {
+        let c = chain();
+        let mut states = c.fixed_states(8, 8);
+        // prune half of conv1's outputs: conv1 p_o = 0.5, conv2 p_i = 0.5
+        states.insert("conv1.w".into(),
+                      QuantState { bits: 8, keep_ratio: 0.5 });
+        let bops = c.bops(&states);
+        let want = 0.5 * 1000.0 * 64.0 + 0.5 * 2000.0 * 64.0;
+        assert!((bops - want).abs() < 1e-6, "{bops} vs {want}");
+    }
+
+    #[test]
+    fn residual_input_not_input_pruned() {
+        let mut c = chain();
+        c.layers[1].residual_input = true;
+        let mut states = c.fixed_states(8, 8);
+        states.insert("conv1.w".into(),
+                      QuantState { bits: 8, keep_ratio: 0.5 });
+        let bops = c.bops(&states);
+        // conv2 keeps p_i = 1.0 (B.2.3 upper bound)
+        let want = 0.5 * 1000.0 * 64.0 + 1.0 * 2000.0 * 64.0;
+        assert!((bops - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_bits_prunes_layer() {
+        let c = chain();
+        let mut states = c.fixed_states(8, 8);
+        states.insert("conv2.w".into(),
+                      QuantState { bits: 0, keep_ratio: 0.0 });
+        let bops = c.bops(&states);
+        assert!((bops - 1000.0 * 64.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_bops_monotone_in_bits_and_keep() {
+        check("bops_monotone", 200, |g| {
+            let c = chain();
+            let b1 = *g.choose(&[2u32, 4, 8, 16]);
+            let b2 = b1 * 2;
+            let k1 = g.f64_in(0.0, 1.0);
+            let k2 = (k1 + g.f64_in(0.0, 1.0 - k1)).min(1.0);
+            let mk = |bits, keep| {
+                let mut s = c.fixed_states(8, 8);
+                s.insert("conv1.w".into(),
+                         QuantState { bits, keep_ratio: keep });
+                c.bops(&s)
+            };
+            let lo = mk(b1, k1);
+            let hi = mk(b2, k2);
+            PropResult::check(lo <= hi + 1e-9,
+                              || format!("{lo} > {hi} (b1={b1} k1={k1})"))
+        });
+    }
+}

@@ -1,0 +1,178 @@
+//! Hand-rolled CLI parser (clap is not vendored).
+//!
+//! Grammar: `bbits <command> [positional...] [--flag[=| ]value] [--switch]`.
+//! Flags collect into a string map; typed access helpers do the parsing
+//! and produce uniform error messages. `--help` works on every command.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+/// Flags that are boolean switches (present => "true").
+const SWITCHES: &[&str] = &[
+    "help", "det-gates", "show-preft", "curves", "quick", "paper-scale",
+    "skip-baselines", "no-finetune",
+];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if SWITCHES.contains(&name) {
+                    args.flags.insert(name.to_string(), "true".into());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        anyhow!("flag --{name} expects a value")
+                    })?;
+                    args.flags.insert(name.to_string(), v.clone());
+                }
+            } else if args.command.is_empty() {
+                args.command = a.clone();
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn str_flag(&self, name: &str, default: &str) -> String {
+        self.flags
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn bool_flag(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true"))
+    }
+
+    /// Comma-separated f64 list flag.
+    pub fn f64_list_flag(&self, name: &str, default: &[f64])
+                         -> Result<Vec<f64>> {
+        match self.flags.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|_| {
+                        anyhow!("--{name}: bad number {p:?}")
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Top-level usage text.
+pub fn usage() -> String {
+    "\
+bbits — Bayesian Bits: unified quantization + pruning (NeurIPS 2020)
+
+USAGE: bbits <command> [flags]
+
+Training / evaluation
+  train           train one configuration
+                  --model M --mode bb|quant-only|prune-only:WxA|fixed:WxA|fp32|dq
+                  --mu F --steps N --finetune-steps N --seed N [--det-gates]
+  sweep           Pareto sweep over --mus 0.01,0.05,... (threads: --jobs N)
+  ptq             post-training mode on a pretrained checkpoint
+                  --variant gates|gates+scales|sensitivity|fixed8
+
+Paper experiments (each regenerates one table/figure)
+  table1          MNIST + CIFAR10 (LeNet-5 / VGG-7) accuracy vs rel. GBOPs
+  table2          deterministic vs stochastic gates ablation
+  table4          ResNet18 grid incl. QO/PO ablations (+ --show-preft)
+  table5          post-training grid (gates-only vs gates+scales)
+  figure2         ResNet18 / MobileNetV2 Pareto fronts (--model)
+  figure3         post-training Pareto front vs sensitivity baseline
+  figure6         learned per-layer bit widths + sparsity (--run DIR)
+  figure10        gate-probability evolution (--run DIR) [--curves]
+
+Utilities
+  parity          check Rust runtime vs golden quantizer vectors
+  bops            print analytic BOP tables (small + paper scale)
+  report          summarize a runs directory (--runs DIR)
+
+Common flags
+  --artifacts DIR (default: artifacts)   --out DIR (default: runs)
+  --quick         shrink step budgets ~10x for smoke runs
+  --log-level debug|info|warn|error
+"
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let v: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_positional() {
+        let a = parse("train pos1 --model vgg7 --mu=0.05 --det-gates pos2");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+        assert_eq!(a.str_flag("model", "x"), "vgg7");
+        assert_eq!(a.f64_flag("mu", 0.0).unwrap(), 0.05);
+        assert!(a.bool_flag("det-gates"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let v: Vec<String> = vec!["train".into(), "--mu".into()];
+        assert!(Args::parse(&v).is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse("sweep --mus 0.01,0.05,0.2");
+        assert_eq!(a.f64_list_flag("mus", &[]).unwrap(),
+                   vec![0.01, 0.05, 0.2]);
+        let b = parse("sweep");
+        assert_eq!(b.f64_list_flag("mus", &[1.0]).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn typed_flag_errors() {
+        let a = parse("train --steps abc");
+        assert!(a.usize_flag("steps", 1).is_err());
+        assert_eq!(a.usize_flag("other", 7).unwrap(), 7);
+    }
+}

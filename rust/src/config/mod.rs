@@ -1,0 +1,197 @@
+//! Run configuration: a TOML-subset parser plus typed experiment configs.
+//!
+//! The config file format supports `[sections]`, `key = value` with
+//! strings, numbers, booleans and flat arrays — exactly what experiment
+//! presets need. CLI flags override file values (`cli` module).
+
+mod parse;
+pub mod presets;
+
+pub use parse::{ConfigDoc, ConfigValue};
+
+use anyhow::{anyhow, Result};
+
+/// Fully-resolved training run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Model key: lenet5 | vgg7 | resnet18 | mobilenetv2 (+ `_dq`).
+    pub model: String,
+    /// Global regularization strength mu (§4: lambda'_{jk} = mu * base).
+    pub mu: f64,
+    /// Training mode, selects the gate-lock pattern.
+    pub mode: Mode,
+    /// Steps of phase 1 (stochastic gates).
+    pub steps: usize,
+    /// Steps of phase 2 (gates frozen by Eq. 22 thresholding, fine-tune).
+    pub finetune_steps: usize,
+    /// Learning rates per parameter group.
+    pub lr_w: f64,
+    pub lr_g: f64,
+    pub lr_s: f64,
+    /// Evaluate every n steps (0 = only at phase boundaries).
+    pub eval_every: usize,
+    /// Dataset seed (generator is fully deterministic).
+    pub seed: u64,
+    /// Deterministic-gate ablation (Table 2).
+    pub deterministic_gates: bool,
+    /// Directory holding AOT artifacts.
+    pub artifacts_dir: String,
+    /// Output directory for metrics/checkpoints.
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            model: "lenet5".into(),
+            mu: 0.01,
+            mode: Mode::BayesianBits,
+            steps: 400,
+            finetune_steps: 100,
+            lr_w: 1e-3,
+            lr_g: 3e-2,
+            lr_s: 1e-3,
+            eval_every: 0,
+            seed: 1,
+            deterministic_gates: false,
+            artifacts_dir: "artifacts".into(),
+            out_dir: "runs".into(),
+        }
+    }
+}
+
+/// Training mode — maps to a gate-lock pattern (see `coordinator::gate_manager`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Mode {
+    /// Full method: learn pruning + mixed precision jointly.
+    BayesianBits,
+    /// Ablation: z2 locked open everywhere (no pruning; §4.2 "QO").
+    QuantOnly,
+    /// Ablation: fixed wX/aY bits, learn only weight z2 (§4.2 "PO").
+    PruneOnly { w_bits: u32, a_bits: u32 },
+    /// Fixed-width baseline wX/aY with learned ranges ("LSQ-like").
+    Fixed { w_bits: u32, a_bits: u32 },
+    /// All gates open at the full chain — the FP32-equivalent reference.
+    Fp32,
+    /// DQ baseline (separate artifact; locks unused).
+    Dq,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode> {
+        if let Some(rest) = s.strip_prefix("fixed:") {
+            let (w, a) = parse_wa(rest)?;
+            return Ok(Mode::Fixed { w_bits: w, a_bits: a });
+        }
+        if let Some(rest) = s.strip_prefix("prune-only:") {
+            let (w, a) = parse_wa(rest)?;
+            return Ok(Mode::PruneOnly { w_bits: w, a_bits: a });
+        }
+        match s {
+            "bb" | "bayesian-bits" => Ok(Mode::BayesianBits),
+            "quant-only" | "qo" => Ok(Mode::QuantOnly),
+            "fp32" => Ok(Mode::Fp32),
+            "dq" => Ok(Mode::Dq),
+            _ => Err(anyhow!(
+                "unknown mode {s:?} (bb|quant-only|prune-only:WxA|\
+                 fixed:WxA|fp32|dq)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Mode::BayesianBits => "bb".into(),
+            Mode::QuantOnly => "quant-only".into(),
+            Mode::PruneOnly { w_bits, a_bits } => {
+                format!("prune-only:w{w_bits}a{a_bits}")
+            }
+            Mode::Fixed { w_bits, a_bits } => format!("fixed:w{w_bits}a{a_bits}"),
+            Mode::Fp32 => "fp32".into(),
+            Mode::Dq => "dq".into(),
+        }
+    }
+}
+
+fn parse_wa(s: &str) -> Result<(u32, u32)> {
+    // "w4a8" or "4x8"
+    let t = s.trim_start_matches('w');
+    let (w, a) = t
+        .split_once(['a', 'x'])
+        .ok_or_else(|| anyhow!("expected WxA spec, got {s:?}"))?;
+    Ok((w.parse()?, a.parse()?))
+}
+
+impl RunConfig {
+    /// Apply `key = value` overrides (from file sections or CLI flags).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "model" => self.model = value.into(),
+            "mu" => self.mu = value.parse()?,
+            "mode" => self.mode = Mode::parse(value)?,
+            "steps" => self.steps = value.parse()?,
+            "finetune_steps" | "finetune-steps" => {
+                self.finetune_steps = value.parse()?
+            }
+            "lr_w" | "lr-w" => self.lr_w = value.parse()?,
+            "lr_g" | "lr-g" => self.lr_g = value.parse()?,
+            "lr_s" | "lr-s" => self.lr_s = value.parse()?,
+            "eval_every" | "eval-every" => self.eval_every = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "deterministic_gates" | "det-gates" => {
+                self.deterministic_gates = value.parse()?
+            }
+            "artifacts" | "artifacts_dir" => {
+                self.artifacts_dir = value.into()
+            }
+            "out" | "out_dir" => self.out_dir = value.into(),
+            _ => return Err(anyhow!("unknown config key {key:?}")),
+        }
+        Ok(())
+    }
+
+    pub fn from_doc(doc: &ConfigDoc, section: &str) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(map) = doc.section(section) {
+            for (k, v) in map {
+                cfg.set(k, &v.to_flag_string())?;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(Mode::parse("bb").unwrap(), Mode::BayesianBits);
+        assert_eq!(Mode::parse("fixed:w4a8").unwrap(),
+                   Mode::Fixed { w_bits: 4, a_bits: 8 });
+        assert_eq!(Mode::parse("prune-only:w4a8").unwrap(),
+                   Mode::PruneOnly { w_bits: 4, a_bits: 8 });
+        assert!(Mode::parse("nope").is_err());
+    }
+
+    #[test]
+    fn mode_labels_roundtrip() {
+        for m in [Mode::BayesianBits, Mode::QuantOnly,
+                  Mode::Fixed { w_bits: 8, a_bits: 8 },
+                  Mode::PruneOnly { w_bits: 4, a_bits: 8 }, Mode::Fp32] {
+            assert_eq!(Mode::parse(&m.label()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = RunConfig::default();
+        c.set("mu", "0.2").unwrap();
+        c.set("mode", "fixed:w4a4").unwrap();
+        c.set("steps", "1000").unwrap();
+        assert_eq!(c.mu, 0.2);
+        assert_eq!(c.steps, 1000);
+        assert!(c.set("bogus", "1").is_err());
+    }
+}

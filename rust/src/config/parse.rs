@@ -1,0 +1,208 @@
+//! TOML-subset parser for config files.
+//!
+//! Grammar: `[section]` headers, `key = value` assignments, `#` comments.
+//! Values: quoted strings, integers/floats, booleans, and flat arrays of
+//! those. That covers the experiment presets; nested tables are out of
+//! scope on purpose.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<ConfigValue>),
+}
+
+impl ConfigValue {
+    /// Render as the string form `RunConfig::set` accepts.
+    pub fn to_flag_string(&self) -> String {
+        match self {
+            ConfigValue::Str(s) => s.clone(),
+            ConfigValue::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    format!("{}", *n as i64)
+                } else {
+                    format!("{n}")
+                }
+            }
+            ConfigValue::Bool(b) => b.to_string(),
+            ConfigValue::Arr(a) => a
+                .iter()
+                .map(|v| v.to_flag_string())
+                .collect::<Vec<_>>()
+                .join(","),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            ConfigValue::Num(n) => Ok(*n),
+            other => Err(anyhow!("expected number, got {other:?}")),
+        }
+    }
+}
+
+/// Parsed config document: section -> key -> value. Keys before any
+/// section header land in the "" (root) section.
+#[derive(Debug, Default, Clone)]
+pub struct ConfigDoc {
+    sections: BTreeMap<String, BTreeMap<String, ConfigValue>>,
+}
+
+impl ConfigDoc {
+    pub fn parse(text: &str) -> Result<ConfigDoc> {
+        let mut doc = ConfigDoc::default();
+        let mut current = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: bad section header",
+                                           lineno + 1))?;
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                anyhow!("line {}: expected key = value", lineno + 1)
+            })?;
+            let parsed = parse_value(value.trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            doc.sections
+                .entry(current.clone())
+                .or_default()
+                .insert(key.trim().to_string(), parsed);
+        }
+        Ok(doc)
+    }
+
+    pub fn section(&self, name: &str)
+                   -> Option<&BTreeMap<String, ConfigValue>> {
+        self.sections.get(name)
+    }
+
+    pub fn section_names(&self) -> Vec<&str> {
+        self.sections.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&ConfigValue> {
+        self.sections.get(section)?.get(key)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<ConfigValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(ConfigValue::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(ConfigValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(ConfigValue::Bool(true)),
+        "false" => return Ok(ConfigValue::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>()
+        .map(ConfigValue::Num)
+        .map_err(|_| anyhow!("cannot parse value {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = ConfigDoc::parse(
+            "top = 1\n[run]\nmodel = \"vgg7\"\nmu = 0.05 # strength\n\
+             flag = true\nmus = [0.01, 0.1]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&ConfigValue::Num(1.0)));
+        assert_eq!(doc.get("run", "model"),
+                   Some(&ConfigValue::Str("vgg7".into())));
+        assert_eq!(doc.get("run", "flag"), Some(&ConfigValue::Bool(true)));
+        assert_eq!(
+            doc.get("run", "mus"),
+            Some(&ConfigValue::Arr(vec![ConfigValue::Num(0.01),
+                                        ConfigValue::Num(0.1)]))
+        );
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = ConfigDoc::parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("", "k"),
+                   Some(&ConfigValue::Str("a#b".into())));
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = ConfigDoc::parse("\nbad line\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn flag_string_roundtrip() {
+        assert_eq!(ConfigValue::Num(5.0).to_flag_string(), "5");
+        assert_eq!(ConfigValue::Num(0.5).to_flag_string(), "0.5");
+        assert_eq!(ConfigValue::Bool(false).to_flag_string(), "false");
+    }
+}

@@ -1,0 +1,74 @@
+//! Experiment presets: the mu grids and step budgets used by each paper
+//! table/figure, scaled to the CPU testbed.
+//!
+//! The paper's epoch counts (100 MNIST / 300 CIFAR / 30+10 ImageNet on
+//! V100s) map here to step budgets chosen so a full table regenerates in
+//! minutes on one CPU. `--steps`/`--mus` CLI flags override everything
+//! for longer runs.
+
+use crate::config::RunConfig;
+
+/// mu grid for Table 1 (MNIST/CIFAR10).
+pub const TABLE1_MUS: &[f64] = &[0.01, 0.1];
+/// mu grid for Figure 2a / Table 4 (ResNet18).
+pub const FIGURE2_MUS: &[f64] = &[0.01, 0.03, 0.05, 0.07, 0.2];
+/// mu grid for pruning-only ablation (Figure 2a).
+pub const PRUNE_ONLY_MUS: &[f64] = &[0.05, 0.2, 0.5, 0.7, 1.0];
+/// mu grid for post-training (Table 5 / Figure 3).
+pub const PTQ_MUS: &[f64] =
+    &[0.0001, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.02, 0.05];
+
+/// Default phase-1/phase-2 step budgets per model (CPU-scaled).
+pub fn default_steps(model: &str) -> (usize, usize) {
+    match model {
+        "lenet5" => (500, 120),
+        "vgg7" => (600, 150),
+        "resnet18" => (400, 100),
+        "mobilenetv2" => (350, 80),
+        _ => (400, 100),
+    }
+}
+
+/// Baseline run config for a model (paper App. B.1 hyper-parameters,
+/// learning-rate magnitudes preserved; Adam for all groups).
+pub fn base_config(model: &str) -> RunConfig {
+    let (steps, ft) = default_steps(model);
+    RunConfig {
+        model: model.to_string(),
+        steps,
+        finetune_steps: ft,
+        lr_w: 1e-3,
+        lr_g: 3e-2,
+        lr_s: 1e-3,
+        ..RunConfig::default()
+    }
+}
+
+/// Step budget for post-training mode ("small dataset, minor compute").
+/// Must be enough for phi to travel from its +6 init to the Eq. 22
+/// threshold (~-0.94) under Adam at `PTQ_LR_G`.
+pub fn ptq_steps() -> usize {
+    250
+}
+
+/// Gate learning rate for post-training mode.
+pub const PTQ_LR_G: f64 = 5e-2;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_match_paper() {
+        assert_eq!(FIGURE2_MUS.len(), 5);
+        assert!(PTQ_MUS.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn base_config_known_models() {
+        for m in ["lenet5", "vgg7", "resnet18", "mobilenetv2"] {
+            let c = base_config(m);
+            assert!(c.steps > 0 && c.lr_g > c.lr_w);
+        }
+    }
+}

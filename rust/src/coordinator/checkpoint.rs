@@ -1,0 +1,92 @@
+//! Checkpoints: full train-state save/restore.
+//!
+//! Container format (all sections length-prefixed, little-endian):
+//!   magic "BBCKPT1", model name, step (as f32 section of len 1 for
+//!   format uniformity), params, adam_m, adam_v.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::TrainState;
+use crate::util::binio::{SectionReader, SectionWriter};
+
+const MAGIC: &str = "BBCKPT1";
+
+pub fn save(path: &Path, model: &str, state: &TrainState) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = BufWriter::new(
+        File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    let mut w = SectionWriter::new(f);
+    w.write_str(MAGIC)?;
+    w.write_str(model)?;
+    w.write_f32s(&[state.step as f32])?;
+    w.write_f32s(&state.params)?;
+    w.write_f32s(&state.m)?;
+    w.write_f32s(&state.v)?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<(String, TrainState)> {
+    let f = BufReader::new(
+        File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut r = SectionReader::new(f);
+    let magic = r.read_str()?;
+    if magic != MAGIC {
+        bail!("bad checkpoint magic {magic:?}");
+    }
+    let model = r.read_str()?;
+    let step = r.read_f32s()?;
+    let params = r.read_f32s()?;
+    let m = r.read_f32s()?;
+    let v = r.read_f32s()?;
+    if m.len() != params.len() || v.len() != params.len() {
+        bail!("checkpoint section length mismatch");
+    }
+    Ok((
+        model,
+        TrainState { params, m, v, step: step.first().copied()
+                     .unwrap_or(0.0) as u64 },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("bbits_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.ckpt");
+        let st = TrainState {
+            params: vec![1.0, -2.0, 3.5],
+            m: vec![0.1, 0.2, 0.3],
+            v: vec![0.0, 0.5, 1.0],
+            step: 42,
+        };
+        save(&p, "lenet5", &st).unwrap();
+        let (model, got) = load(&p).unwrap();
+        assert_eq!(model, "lenet5");
+        assert_eq!(got.params, st.params);
+        assert_eq!(got.m, st.m);
+        assert_eq!(got.step, 42);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("bbits_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.ckpt");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,154 @@
+//! Gate management: lock patterns per training mode, Eq. 22
+//! thresholding, chain-consistent test-time gates, and the translation
+//! from gates to per-quantizer [`QuantState`]s for BOP accounting.
+
+use std::collections::BTreeMap;
+
+use crate::bops::QuantState;
+use crate::config::Mode;
+use crate::quant::gates::test_time_gate;
+use crate::runtime::Manifest;
+
+/// Per-slot lock vectors plus helpers bound to one manifest.
+pub struct GateManager<'m> {
+    man: &'m Manifest,
+}
+
+impl<'m> GateManager<'m> {
+    pub fn new(man: &'m Manifest) -> Self {
+        Self { man }
+    }
+
+    /// (lock_mask, lock_val) for a training mode.
+    ///
+    /// Paper conventions encoded here:
+    /// * activations are never *pruned* (§4: group sparsity on weight
+    ///   output channels only), so activation z2 slots are always
+    ///   locked open except in `Fixed{a_bits: 0}` style configs;
+    /// * `QuantOnly` locks every z2 open (§4.2 ablation);
+    /// * `PruneOnly{w,a}` locks the residual chains at fixed widths and
+    ///   leaves only the weight-channel gates learnable;
+    /// * `Fixed`/`Fp32` lock everything.
+    pub fn locks(&self, mode: &Mode) -> (Vec<f32>, Vec<f32>) {
+        let g = self.man.n_slots;
+        let mut mask = vec![0.0f32; g];
+        let mut val = vec![0.0f32; g];
+        for q in &self.man.quantizers {
+            let view = q.view();
+            let ch = q.channels;
+            let set_fixed = |bits: u32, mask: &mut [f32],
+                             val: &mut [f32]| {
+                let (m, v) = view.lock_fixed(bits);
+                mask[q.offset..q.offset + q.n_slots].copy_from_slice(&m);
+                val[q.offset..q.offset + q.n_slots].copy_from_slice(&v);
+            };
+            match mode {
+                Mode::Dq => {}
+                Mode::Fp32 => {
+                    set_fixed(*q.levels.last().unwrap(), &mut mask,
+                              &mut val)
+                }
+                Mode::Fixed { w_bits, a_bits } => {
+                    let bits =
+                        if q.kind == 'w' { *w_bits } else { *a_bits };
+                    set_fixed(bits, &mut mask, &mut val);
+                }
+                Mode::BayesianBits => {
+                    if q.kind == 'a' {
+                        // activation z2 locked open (no act pruning)
+                        mask[q.offset] = 1.0;
+                        val[q.offset] = 1.0;
+                    }
+                }
+                Mode::QuantOnly => {
+                    for c in 0..ch {
+                        mask[q.offset + c] = 1.0;
+                        val[q.offset + c] = 1.0;
+                    }
+                }
+                Mode::PruneOnly { w_bits, a_bits } => {
+                    let bits =
+                        if q.kind == 'w' { *w_bits } else { *a_bits };
+                    set_fixed(bits, &mut mask, &mut val);
+                    if q.kind == 'w' {
+                        // channel gates stay learnable
+                        for c in 0..ch {
+                            mask[q.offset + c] = 0.0;
+                            val[q.offset + c] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        (mask, val)
+    }
+
+    /// Test-time binary gates: locked slots take their lock value,
+    /// learnable slots are thresholded from phi (Eq. 22), and residual
+    /// chains are made consistent (z_b forced 0 when z_{b/2} is 0 —
+    /// matching the autoregressive posterior's support).
+    pub fn test_gates(&self, phi: &[f64], lock_mask: &[f32],
+                      lock_val: &[f32]) -> Vec<f32> {
+        let mut z = vec![0.0f32; self.man.n_slots];
+        for q in &self.man.quantizers {
+            for i in 0..q.n_slots {
+                let s = q.offset + i;
+                z[s] = if lock_mask[s] > 0.5 {
+                    lock_val[s]
+                } else if test_time_gate(phi[s]) {
+                    1.0
+                } else {
+                    0.0
+                };
+            }
+            // enforce the chain on residual slots
+            let mut open = true;
+            for i in 0..q.levels.len() - 1 {
+                let s = q.offset + q.channels + i;
+                if !open {
+                    z[s] = 0.0;
+                }
+                open = open && z[s] > 0.5;
+            }
+        }
+        z
+    }
+
+    /// Freeze: convert binary gates into an all-locked (mask, val) pair
+    /// for phase-2 fine-tuning.
+    pub fn freeze(&self, gates: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        (vec![1.0; gates.len()], gates.to_vec())
+    }
+
+    /// Per-quantizer learned state (bits + keep ratio) from binary gates.
+    pub fn quant_states(&self, gates: &[f32])
+                        -> BTreeMap<String, QuantState> {
+        let mut out = BTreeMap::new();
+        for q in &self.man.quantizers {
+            let view = q.view();
+            let z = &gates[q.offset..q.offset + q.n_slots];
+            out.insert(
+                q.name.clone(),
+                QuantState {
+                    bits: view.effective_bits(z),
+                    keep_ratio: view.keep_ratio(z),
+                },
+            );
+        }
+        out
+    }
+
+    /// Expected (soft) bits per quantizer from inclusion probabilities —
+    /// the live BOP estimate logged during training.
+    pub fn expected_bits(&self, probs: &[f32]) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        for q in &self.man.quantizers {
+            let view = q.view();
+            out.insert(
+                q.name.clone(),
+                view.expected_bits(&probs[q.offset..q.offset + q.n_slots]),
+            );
+        }
+        out
+    }
+}

@@ -1,0 +1,229 @@
+//! Run metrics: step history, eval snapshots, gate-probability traces.
+//!
+//! Everything serializes to a single `metrics.json` per run, which the
+//! figure harnesses (`experiments::figure10` etc.) read back, and a
+//! `history.csv` for ad-hoc plotting.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::{arr_f64, num, obj, Json};
+
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f32,
+    pub batch_acc: f32,
+    pub reg: f32,
+    /// Live relative-BOPs estimate (%), from expected bits.
+    pub exp_bops_pct: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalRecord {
+    pub step: u64,
+    pub loss: f64,
+    pub accuracy: f64,
+    /// Relative BOPs (%) of the thresholded configuration.
+    pub rel_bops_pct: f64,
+    pub phase: u8,
+}
+
+/// Snapshot of per-slot gate probabilities (Figure 10 traces).
+#[derive(Debug, Clone)]
+pub struct GateSnapshot {
+    pub step: u64,
+    pub probs: Vec<f32>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct History {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub gate_snapshots: Vec<GateSnapshot>,
+}
+
+impl History {
+    pub fn record_step(&mut self, r: StepRecord) {
+        self.steps.push(r);
+    }
+
+    pub fn record_eval(&mut self, r: EvalRecord) {
+        self.evals.push(r);
+    }
+
+    pub fn record_gates(&mut self, step: u64, probs: &[f32]) {
+        self.gate_snapshots
+            .push(GateSnapshot { step, probs: probs.to_vec() });
+    }
+
+    pub fn smoothed_loss(&self, window: usize) -> f64 {
+        let n = self.steps.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let take = window.min(n);
+        self.steps[n - take..]
+            .iter()
+            .map(|r| r.loss as f64)
+            .sum::<f64>()
+            / take as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "steps",
+                Json::Arr(
+                    self.steps
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("step", num(r.step as f64)),
+                                ("loss", num(r.loss as f64)),
+                                ("batch_acc", num(r.batch_acc as f64)),
+                                ("reg", num(r.reg as f64)),
+                                ("exp_bops_pct", num(r.exp_bops_pct)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "evals",
+                Json::Arr(
+                    self.evals
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("step", num(r.step as f64)),
+                                ("loss", num(r.loss)),
+                                ("accuracy", num(r.accuracy)),
+                                ("rel_bops_pct", num(r.rel_bops_pct)),
+                                ("phase", num(r.phase as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "gate_snapshots",
+                Json::Arr(
+                    self.gate_snapshots
+                        .iter()
+                        .map(|g| {
+                            obj(vec![
+                                ("step", num(g.step as f64)),
+                                (
+                                    "probs",
+                                    arr_f64(
+                                        &g.probs
+                                            .iter()
+                                            .map(|p| *p as f64)
+                                            .collect::<Vec<_>>(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<History> {
+        let mut h = History::default();
+        for r in v.get("steps")?.as_arr()? {
+            h.steps.push(StepRecord {
+                step: r.get("step")?.as_f64()? as u64,
+                loss: r.get("loss")?.as_f64()? as f32,
+                batch_acc: r.get("batch_acc")?.as_f64()? as f32,
+                reg: r.get("reg")?.as_f64()? as f32,
+                exp_bops_pct: r.get("exp_bops_pct")?.as_f64()?,
+            });
+        }
+        for r in v.get("evals")?.as_arr()? {
+            h.evals.push(EvalRecord {
+                step: r.get("step")?.as_f64()? as u64,
+                loss: r.get("loss")?.as_f64()?,
+                accuracy: r.get("accuracy")?.as_f64()?,
+                rel_bops_pct: r.get("rel_bops_pct")?.as_f64()?,
+                phase: r.get("phase")?.as_f64()? as u8,
+            });
+        }
+        for g in v.get("gate_snapshots")?.as_arr()? {
+            h.gate_snapshots.push(GateSnapshot {
+                step: g.get("step")?.as_f64()? as u64,
+                probs: g.get("probs")?.f32_vec()?,
+            });
+        }
+        Ok(h)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<History> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// history.csv with one row per step record.
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        let mut out =
+            String::from("step,loss,batch_acc,reg,exp_bops_pct\n");
+        for r in &self.steps {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                r.step, r.loss, r.batch_acc, r.reg, r.exp_bops_pct
+            ));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> History {
+        let mut h = History::default();
+        h.record_step(StepRecord {
+            step: 1, loss: 2.3, batch_acc: 0.1, reg: 0.5,
+            exp_bops_pct: 88.0,
+        });
+        h.record_eval(EvalRecord {
+            step: 1, loss: 2.2, accuracy: 0.15, rel_bops_pct: 100.0,
+            phase: 1,
+        });
+        h.record_gates(1, &[0.9, 0.8]);
+        h
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let h = sample();
+        let j = h.to_json();
+        let h2 = History::from_json(&j).unwrap();
+        assert_eq!(h2.steps.len(), 1);
+        assert_eq!(h2.evals[0].phase, 1);
+        assert_eq!(h2.gate_snapshots[0].probs, vec![0.9, 0.8]);
+    }
+
+    #[test]
+    fn smoothed_loss_window() {
+        let mut h = History::default();
+        for (i, l) in [4.0f32, 2.0, 1.0].iter().enumerate() {
+            h.record_step(StepRecord {
+                step: i as u64, loss: *l, batch_acc: 0.0, reg: 0.0,
+                exp_bops_pct: 0.0,
+            });
+        }
+        assert!((h.smoothed_loss(2) - 1.5).abs() < 1e-9);
+        assert!((h.smoothed_loss(10) - 7.0 / 3.0).abs() < 1e-9);
+    }
+}

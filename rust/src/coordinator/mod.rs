@@ -1,0 +1,25 @@
+//! Layer-3 coordinator: the training orchestrator.
+//!
+//! * [`gate_manager`] — turns a training [`Mode`](crate::config::Mode)
+//!   into per-slot lock vectors, thresholds phi into test-time gates
+//!   (Eq. 22), and derives effective bit widths / prune ratios.
+//! * [`trainer`] — two-phase training loop (stochastic gates, then
+//!   frozen-gate fine-tuning, §4.2) driving the AOT train/eval
+//!   executables; cosine learning-rate schedules; periodic evaluation.
+//! * [`metrics`] — step/eval history, gate-probability traces
+//!   (Figures 10-14), JSON/CSV export.
+//! * [`checkpoint`] — binary save/restore of the full train state.
+//! * [`sweep`] — thread-parallel mu sweeps producing Pareto fronts.
+//! * [`ptq`] — post-training mode (§4.2.1): gates-only / gates+scales
+//!   on a frozen pretrained model, plus the sensitivity-ordered
+//!   iterative baseline.
+
+pub mod checkpoint;
+pub mod gate_manager;
+pub mod metrics;
+pub mod ptq;
+pub mod sweep;
+pub mod trainer;
+
+pub use gate_manager::GateManager;
+pub use trainer::{RunResult, Trainer};

@@ -1,0 +1,205 @@
+//! Post-training mixed precision (§4.2.1, Table 5, Figure 3).
+//!
+//! Starts from a *pretrained* model (trained here at the full-chain
+//! FP32-equivalent configuration and checkpointed), then:
+//! * `gates`        — learn only the gate logits (lr_w = lr_s = 0);
+//! * `gates+scales` — learn gate logits and clip ranges (lr_w = 0);
+//! * `sensitivity`  — the iterative baseline: measure each quantizer's
+//!   sensitivity (accuracy drop when it alone is set to a low bit width
+//!   while the rest stay at 16 bits), then cumulatively lower the least
+//!   sensitive quantizers, evaluating after each step;
+//! * `fixed8`       — the 8/8 push-button baseline row.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::checkpoint;
+use super::gate_manager::GateManager;
+use super::trainer::Trainer;
+use crate::config::{Mode, RunConfig};
+use crate::runtime::{Manifest, Runtime, TrainState};
+use crate::util::logging;
+
+/// One point on a post-training trade-off curve.
+#[derive(Debug, Clone)]
+pub struct PtqPoint {
+    pub label: String,
+    pub mu: f64,
+    pub accuracy: f64,
+    pub rel_bops_pct: f64,
+}
+
+/// Train (or load a cached) full-precision-equivalent base model.
+pub fn pretrain_or_load(rt: Arc<Runtime>, man: &Manifest,
+                        base_cfg: &RunConfig, cache: &Path)
+                        -> Result<TrainState> {
+    if cache.exists() {
+        let (model, state) = checkpoint::load(cache)?;
+        if model == man.name && state.params.len() == man.n_params {
+            logging::info(format!("loaded pretrained model from {cache:?}"));
+            return Ok(state);
+        }
+        logging::warn(format!(
+            "checkpoint {cache:?} is for {model}, retraining"));
+    }
+    let mut cfg = base_cfg.clone();
+    cfg.mode = Mode::Fp32;
+    cfg.mu = 0.0;
+    cfg.finetune_steps = 0;
+    let mut trainer = Trainer::new(rt, man.clone(), cfg)?;
+    let (state, result) = trainer.run_keeping_state(TrainState::init(man)?)?;
+    logging::info(format!(
+        "pretrained {}: acc {:.4}", man.name, result.accuracy));
+    checkpoint::save(cache, &man.name, &state)?;
+    Ok(state)
+}
+
+/// Learn gates (and optionally scales) post-training.
+#[allow(clippy::too_many_arguments)]
+pub fn ptq_learn(rt: Arc<Runtime>, man: &Manifest, base: &TrainState,
+                 mu: f64, learn_scales: bool, steps: usize, seed: u64,
+                 lr_g: f64) -> Result<PtqPoint> {
+    let mut cfg = RunConfig {
+        model: man.name.clone(),
+        mode: Mode::BayesianBits,
+        mu,
+        steps,
+        finetune_steps: 0,
+        lr_w: 0.0,
+        lr_g,
+        lr_s: if learn_scales { 1e-3 } else { 0.0 },
+        seed,
+        ..RunConfig::default()
+    };
+    cfg.eval_every = 0;
+    let mut trainer = Trainer::new(rt, man.clone(), cfg)?;
+    let (_, result) = trainer.run_keeping_state(base.clone())?;
+    Ok(PtqPoint {
+        label: if learn_scales { "gates+scales" } else { "gates" }.into(),
+        mu,
+        accuracy: result.accuracy,
+        rel_bops_pct: result.rel_bops_pct,
+    })
+}
+
+/// The iterative sensitivity-ordered baseline (App. D.4.2).
+///
+/// Returns the cumulative curve: after lowering the k least sensitive
+/// quantizers to `low_bits`, (accuracy, rel BOPs).
+pub fn sensitivity_baseline(rt: Arc<Runtime>, man: &Manifest,
+                            base: &TrainState, low_bits: u32)
+                            -> Result<Vec<PtqPoint>> {
+    let cfg = RunConfig {
+        model: man.name.clone(),
+        mode: Mode::Fixed { w_bits: 16, a_bits: 16 },
+        ..RunConfig::default()
+    };
+    let trainer = Trainer::new(rt, man.clone(), cfg)?;
+    let gm = GateManager::new(man);
+    let (_, base_gates) = gm.locks(&Mode::Fixed { w_bits: 16,
+                                                  a_bits: 16 });
+
+    // 1) per-quantizer sensitivity: accuracy with only this quantizer low
+    let mut sens: Vec<(usize, f64)> = Vec::new();
+    for (qi, q) in man.quantizers.iter().enumerate() {
+        let mut gates = base_gates.clone();
+        set_quantizer_bits(man, qi, low_bits, &mut gates);
+        let (_, acc) = trainer.evaluate(base, &gates)?;
+        sens.push((qi, acc));
+        logging::debug(format!("sensitivity {}: acc {:.4}", q.name, acc));
+    }
+    // least sensitive first = highest accuracy first
+    sens.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+    // 2) cumulative lowering
+    let counter = trainer.counter().clone();
+    let mut gates = base_gates.clone();
+    let mut points = Vec::new();
+    let (_, acc0) = trainer.evaluate(base, &gates)?;
+    points.push(PtqPoint {
+        label: "sensitivity".into(),
+        mu: 0.0,
+        accuracy: acc0,
+        rel_bops_pct: counter
+            .relative_bops_pct(&gm.quant_states(&gates)),
+    });
+    for (qi, _) in &sens {
+        set_quantizer_bits(man, *qi, low_bits, &mut gates);
+        let (_, acc) = trainer.evaluate(base, &gates)?;
+        points.push(PtqPoint {
+            label: "sensitivity".into(),
+            mu: 0.0,
+            accuracy: acc,
+            rel_bops_pct: counter
+                .relative_bops_pct(&gm.quant_states(&gates)),
+        });
+    }
+    Ok(points)
+}
+
+/// Evaluate a fixed wX/aY configuration of the pretrained model.
+pub fn fixed_point(rt: Arc<Runtime>, man: &Manifest, base: &TrainState,
+                   w_bits: u32, a_bits: u32) -> Result<PtqPoint> {
+    let cfg = RunConfig {
+        model: man.name.clone(),
+        mode: Mode::Fixed { w_bits, a_bits },
+        ..RunConfig::default()
+    };
+    let trainer = Trainer::new(rt, man.clone(), cfg)?;
+    let gm = GateManager::new(man);
+    let (_, gates) = gm.locks(&Mode::Fixed { w_bits, a_bits });
+    let (_, acc) = trainer.evaluate(base, &gates)?;
+    Ok(PtqPoint {
+        label: format!("fixed w{w_bits}a{a_bits}"),
+        mu: 0.0,
+        accuracy: acc,
+        rel_bops_pct: trainer
+            .counter()
+            .relative_bops_pct(&gm.quant_states(&gates)),
+    })
+}
+
+fn set_quantizer_bits(man: &Manifest, qi: usize, bits: u32,
+                      gates: &mut [f32]) {
+    let q = &man.quantizers[qi];
+    let (_, val) = q.view().lock_fixed(bits);
+    gates[q.offset..q.offset + q.n_slots].copy_from_slice(&val);
+}
+
+/// Pareto front: keep points not dominated (higher BOPs and lower or
+/// equal accuracy than another point).
+pub fn pareto_front(points: &[PtqPoint]) -> Vec<PtqPoint> {
+    let mut sorted: Vec<&PtqPoint> = points.iter().collect();
+    sorted.sort_by(|a, b| a.rel_bops_pct.partial_cmp(&b.rel_bops_pct)
+                   .unwrap());
+    let mut out: Vec<PtqPoint> = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    for p in sorted {
+        if p.accuracy > best_acc {
+            out.push(p.clone());
+            best_acc = p.accuracy;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(acc: f64, bops: f64) -> PtqPoint {
+        PtqPoint { label: "x".into(), mu: 0.0, accuracy: acc,
+                   rel_bops_pct: bops }
+    }
+
+    #[test]
+    fn pareto_front_filters_dominated() {
+        let pts = vec![pt(0.9, 10.0), pt(0.8, 5.0), pt(0.7, 6.0),
+                       pt(0.95, 12.0)];
+        let front = pareto_front(&pts);
+        let accs: Vec<f64> = front.iter().map(|p| p.accuracy).collect();
+        assert_eq!(accs, vec![0.8, 0.9, 0.95]); // 0.7@6.0 dominated
+    }
+}

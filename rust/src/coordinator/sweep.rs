@@ -1,0 +1,180 @@
+//! Thread-parallel mu sweeps: the Pareto-front generator behind every
+//! accuracy-vs-BOPs figure.
+//!
+//! The `xla` wrappers hold raw PJRT pointers and are not `Send`, so each
+//! worker thread owns its own `Runtime` (client + compilations). Jobs
+//! are distributed round-robin; results come back over a channel.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::trainer::{RunResult, Trainer};
+use crate::config::RunConfig;
+use crate::runtime::{Manifest, Runtime};
+use crate::util::logging;
+
+/// One sweep job.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub cfg: RunConfig,
+}
+
+/// Run all jobs, `jobs_parallel` at a time, returning results in job
+/// order. Each thread builds its own PJRT client.
+pub fn run_sweep(jobs: Vec<Job>, jobs_parallel: usize)
+                 -> Result<Vec<RunResult>> {
+    let n = jobs.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = jobs_parallel.clamp(1, n);
+    if workers == 1 {
+        // fast path: reuse one runtime + executable cache
+        let rt = Arc::new(Runtime::cpu()?);
+        let mut out = Vec::with_capacity(n);
+        for job in jobs {
+            out.push(run_job(rt.clone(), job)?);
+        }
+        return Ok(out);
+    }
+
+    let (tx, rx) = mpsc::channel::<(usize, Result<RunResult>)>();
+    let mut queue: Vec<(usize, Job)> = jobs.into_iter().enumerate()
+        .collect();
+    // round-robin static partition
+    let mut shards: Vec<Vec<(usize, Job)>> = (0..workers)
+        .map(|_| Vec::new())
+        .collect();
+    for (i, j) in queue.drain(..) {
+        shards[i % workers].push((i, j));
+    }
+    let mut handles = Vec::new();
+    for shard in shards {
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || {
+            let rt = match Runtime::cpu() {
+                Ok(rt) => Arc::new(rt),
+                Err(e) => {
+                    for (i, _) in &shard {
+                        let _ = tx.send((*i, Err(anyhow!(
+                            "runtime init failed: {e}"))));
+                    }
+                    return;
+                }
+            };
+            for (i, job) in shard {
+                let res = run_job(rt.clone(), job);
+                let _ = tx.send((i, res));
+            }
+        }));
+    }
+    drop(tx);
+    let mut slots: Vec<Option<RunResult>> = (0..n).map(|_| None).collect();
+    for (i, res) in rx {
+        slots[i] = Some(res?);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("sweep worker panicked"))?;
+    }
+    slots
+        .into_iter()
+        .map(|s| s.ok_or_else(|| anyhow!("missing sweep result")))
+        .collect()
+}
+
+fn run_job(rt: Arc<Runtime>, job: Job) -> Result<RunResult> {
+    let man = Manifest::load(
+        std::path::Path::new(&job.cfg.artifacts_dir),
+        &job.cfg.model,
+    )?;
+    logging::info(format!(
+        "sweep job: {} mode={} mu={} seed={}",
+        job.cfg.model,
+        job.cfg.mode.label(),
+        job.cfg.mu,
+        job.cfg.seed
+    ));
+    let mut trainer = Trainer::new(rt, man, job.cfg)?;
+    trainer.run()
+}
+
+/// Aggregate repeated-seed results: mean and standard error per
+/// (mode, mu) key, in first-seen order — the "mean±stderr over 3 runs"
+/// the paper's tables report.
+pub struct Aggregated {
+    pub mode: String,
+    pub mu: f64,
+    pub acc_mean: f64,
+    pub acc_stderr: f64,
+    pub bops_mean: f64,
+    pub bops_stderr: f64,
+    pub n: usize,
+}
+
+pub fn aggregate(results: &[RunResult]) -> Vec<Aggregated> {
+    let mut order: Vec<(String, f64)> = Vec::new();
+    for r in results {
+        let key = (r.mode.clone(), r.mu);
+        if !order.contains(&key) {
+            order.push(key);
+        }
+    }
+    order
+        .into_iter()
+        .map(|(mode, mu)| {
+            let accs: Vec<f64> = results
+                .iter()
+                .filter(|r| r.mode == mode && r.mu == mu)
+                .map(|r| r.accuracy)
+                .collect();
+            let bops: Vec<f64> = results
+                .iter()
+                .filter(|r| r.mode == mode && r.mu == mu)
+                .map(|r| r.rel_bops_pct)
+                .collect();
+            Aggregated {
+                mode,
+                mu,
+                acc_mean: crate::util::mean_std(&accs).0,
+                acc_stderr: crate::util::stderr_of_mean(&accs),
+                bops_mean: crate::util::mean_std(&bops).0,
+                bops_stderr: crate::util::stderr_of_mean(&bops),
+                n: accs.len(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::History;
+    use std::collections::BTreeMap;
+
+    fn fake(mode: &str, mu: f64, acc: f64, bops: f64) -> RunResult {
+        RunResult {
+            model: "m".into(), mode: mode.into(), mu, seed: 0,
+            deterministic: false,
+            accuracy: acc, pre_ft_accuracy: acc, test_loss: 0.0,
+            rel_bops_pct: bops, gates: vec![], states: BTreeMap::new(),
+            history: History::default(),
+        }
+    }
+
+    #[test]
+    fn aggregate_groups_and_averages() {
+        let rs = vec![
+            fake("bb", 0.1, 0.90, 1.0),
+            fake("bb", 0.1, 0.92, 1.2),
+            fake("bb", 0.2, 0.85, 0.5),
+        ];
+        let agg = aggregate(&rs);
+        assert_eq!(agg.len(), 2);
+        assert!((agg[0].acc_mean - 0.91).abs() < 1e-12);
+        assert_eq!(agg[0].n, 2);
+        assert_eq!(agg[1].n, 1);
+        assert_eq!(agg[1].acc_stderr, 0.0);
+    }
+}

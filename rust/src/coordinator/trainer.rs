@@ -1,0 +1,319 @@
+//! Two-phase training loop (§4.2).
+//!
+//! Phase 1: stochastic hard-concrete gates, BOP-proportional regularizer
+//! `lam = mu * lam_base`, cosine-decayed learning rates. Phase 2: gates
+//! thresholded (Eq. 22) and frozen, weights + ranges fine-tuned with a
+//! smaller rate (`lr/10`, annealed to zero), matching the paper's 30+10
+//! epoch recipe scaled to steps.
+//!
+//! The trainer owns the data pipeline and all device interaction; one
+//! `Trainer` = one run = one (model, mode, mu, seed) configuration.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::gate_manager::GateManager;
+use super::metrics::{EvalRecord, History, StepRecord};
+use crate::bops::{expected_bops, BopCounter, QuantState};
+use crate::config::RunConfig;
+use crate::data::{generate, Batcher, Dataset};
+use crate::runtime::{Executable, Manifest, Runtime, TrainState};
+use crate::util::logging;
+
+/// Final result of one training run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub model: String,
+    pub mode: String,
+    pub mu: f64,
+    pub seed: u64,
+    /// Deterministic-gate ablation run (Table 2).
+    pub deterministic: bool,
+    /// Test accuracy after phase 2 (and after phase 1, for Fig. 7).
+    pub accuracy: f64,
+    pub pre_ft_accuracy: f64,
+    pub test_loss: f64,
+    /// Relative BOPs (%) of the final thresholded configuration.
+    pub rel_bops_pct: f64,
+    /// Final binary gates (n_slots).
+    pub gates: Vec<f32>,
+    /// Per-quantizer learned state.
+    pub states: BTreeMap<String, QuantState>,
+    pub history: History,
+}
+
+/// One full training run over a loaded artifact.
+pub struct Trainer {
+    pub rt: Arc<Runtime>,
+    pub man: Manifest,
+    pub cfg: RunConfig,
+    train_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    counter: BopCounter,
+    test_set: Dataset,
+    batcher: Batcher,
+    x_buf: Vec<f32>,
+    y_buf: Vec<i32>,
+}
+
+impl Trainer {
+    pub fn new(rt: Arc<Runtime>, man: Manifest, cfg: RunConfig)
+               -> Result<Trainer> {
+        let train_exe = rt.load(&man.hlo_train)?;
+        let eval_exe = rt.load(&man.hlo_eval)?;
+        let counter = BopCounter::new(man.layers.clone());
+        let train_set = generate(&man.dataset, cfg.seed, false)
+            .context("generate train set")?;
+        let test_set = generate(&man.dataset, cfg.seed, true)
+            .context("generate test set")?;
+        let augment = man.dataset.name != "mnist_like";
+        let batcher = Batcher::new(train_set, man.batch, augment, cfg.seed);
+        let n_in = man.batch * man.input_shape.iter().product::<usize>();
+        Ok(Trainer {
+            rt,
+            train_exe,
+            eval_exe,
+            counter,
+            test_set,
+            batcher,
+            x_buf: vec![0.0; n_in],
+            y_buf: vec![0i32; man.batch],
+            man,
+            cfg,
+        })
+    }
+
+    /// Cosine-annealed learning rate over a phase.
+    pub fn cosine(lr0: f64, t: usize, total: usize) -> f32 {
+        let frac = t as f64 / total.max(1) as f64;
+        (lr0 * 0.5 * (1.0 + (std::f64::consts::PI * frac).cos())) as f32
+    }
+
+    /// Full evaluation over the test set with fixed binary gates.
+    pub fn evaluate(&self, state: &TrainState, gates: &[f32])
+                    -> Result<(f64, f64)> {
+        let mut total_loss = 0.0f64;
+        let mut total_correct = 0.0f64;
+        let mut total = 0usize;
+        let mut err: Option<anyhow::Error> = None;
+        Batcher::for_eval(&self.test_set, self.man.batch, |x, y, count| {
+            if err.is_some() {
+                return;
+            }
+            match self.rt.eval_step(&self.eval_exe, &self.man,
+                                    &state.params, gates, x, y) {
+                Ok(out) => {
+                    // partial batches: the padded rows contribute to the
+                    // batch mean; rescale by batch/count for the loss and
+                    // cap correct by count (labels are 0-padded; a padded
+                    // row can count as correct, so subtract its expected
+                    // contribution by evaluating only full batches when
+                    // possible).
+                    total_loss += out.loss as f64 * count as f64;
+                    total_correct += out.correct as f64
+                        - (self.man.batch - count) as f64
+                            * Self::padded_correct_rate(out.correct,
+                                                        self.man.batch,
+                                                        count);
+                    total += count;
+                }
+                Err(e) => err = Some(e),
+            }
+        });
+        if let Some(e) = err {
+            return Err(e);
+        }
+        Ok((total_loss / total as f64, total_correct / total as f64))
+    }
+
+    // For padded eval batches we cannot distinguish which rows were
+    // correct; assume padded rows (all-zero image, label 0) are wrong —
+    // a conservative, deterministic choice (exact when batch divides the
+    // test set, which the default specs ensure).
+    fn padded_correct_rate(_correct: f32, _batch: usize,
+                           _count: usize) -> f64 {
+        0.0
+    }
+
+    /// Run both phases from the artifact's initial parameters.
+    pub fn run(&mut self) -> Result<RunResult> {
+        let init = TrainState::init(&self.man)?;
+        Ok(self.run_keeping_state(init)?.1)
+    }
+
+    /// Run both phases from a provided state (PTQ starts from a
+    /// pretrained checkpoint) and return the final state too.
+    pub fn run_keeping_state(&mut self, init: TrainState)
+                             -> Result<(TrainState, RunResult)> {
+        let gm = GateManager::new(&self.man);
+        let (lock_mask, lock_val) = gm.locks(&self.cfg.mode);
+        let lam: Vec<f32> = self
+            .man
+            .lam_base
+            .iter()
+            .map(|b| (*b as f64 * self.cfg.mu) as f32)
+            .collect();
+        let det = if self.cfg.deterministic_gates { 1.0 } else { 0.0 };
+        let mut state = init;
+        let mut history = History::default();
+        let fp32 = self.counter.fp32_bops();
+        let snapshot_every = (self.cfg.steps / 24).max(1);
+
+        // ---- phase 1: stochastic gates --------------------------------
+        let mut probs = vec![1.0f32; self.man.n_slots];
+        for t in 0..self.cfg.steps {
+            self.batcher.next_into(&mut self.x_buf, &mut self.y_buf);
+            let lrs = (
+                Self::cosine(self.cfg.lr_w, t, self.cfg.steps),
+                Self::cosine(self.cfg.lr_g, t, self.cfg.steps),
+                Self::cosine(self.cfg.lr_s, t, self.cfg.steps),
+            );
+            let seed = (self.cfg.seed as i32)
+                .wrapping_mul(2654435761u32 as i32)
+                .wrapping_add(t as i32);
+            let out = self.rt.train_step(
+                &self.train_exe, &self.man, &mut state, &self.x_buf,
+                &self.y_buf, seed, lrs, &lock_mask, &lock_val, &lam, det,
+            )?;
+            probs = out.probs;
+            let exp_bits = gm.expected_bits(&probs);
+            let exp_pct = if self.man.engine == "dq" {
+                dq_expected_pct(&self.counter, &self.man, &probs)
+            } else {
+                100.0 * expected_bops(&self.counter, &exp_bits) / fp32
+            };
+            history.record_step(StepRecord {
+                step: state.step,
+                loss: out.loss,
+                batch_acc: out.correct / self.man.batch as f32,
+                reg: out.reg,
+                exp_bops_pct: exp_pct,
+            });
+            if t % snapshot_every == 0 {
+                history.record_gates(state.step, &probs);
+            }
+            if self.cfg.eval_every > 0 && (t + 1) % self.cfg.eval_every == 0
+            {
+                let gates = self.current_gates(&gm, &state, &lock_mask,
+                                               &lock_val, &probs);
+                let (loss, acc) = self.evaluate(&state, &gates)?;
+                let rel = self.rel_bops(&gm, &gates, &probs);
+                history.record_eval(EvalRecord {
+                    step: state.step, loss, accuracy: acc,
+                    rel_bops_pct: rel, phase: 1,
+                });
+                logging::info(format!(
+                    "[{} mu={} {}] step {:>5} loss {:.3} acc {:.3} \
+                     relBOPs {:.2}%",
+                    self.man.name, self.cfg.mu, self.cfg.mode.label(),
+                    state.step, loss, acc, rel
+                ));
+            }
+        }
+
+        // ---- threshold + pre-finetune eval (Fig. 7) --------------------
+        let gates =
+            self.current_gates(&gm, &state, &lock_mask, &lock_val, &probs);
+        let (pre_loss, pre_acc) = self.evaluate(&state, &gates)?;
+        let rel = self.rel_bops(&gm, &gates, &probs);
+        history.record_eval(EvalRecord {
+            step: state.step, loss: pre_loss, accuracy: pre_acc,
+            rel_bops_pct: rel, phase: 1,
+        });
+
+        // ---- phase 2: frozen gates, fine-tune weights + scales ---------
+        if self.cfg.finetune_steps > 0 && self.man.engine != "dq" {
+            let (fmask, fval) = gm.freeze(&gates);
+            state.reset_optimizer();
+            for t in 0..self.cfg.finetune_steps {
+                self.batcher.next_into(&mut self.x_buf, &mut self.y_buf);
+                let lrs = (
+                    Self::cosine(self.cfg.lr_w / 10.0, t,
+                                 self.cfg.finetune_steps),
+                    0.0,
+                    Self::cosine(self.cfg.lr_s / 10.0, t,
+                                 self.cfg.finetune_steps),
+                );
+                let seed = (self.cfg.seed as i32).wrapping_add(t as i32);
+                let out = self.rt.train_step(
+                    &self.train_exe, &self.man, &mut state, &self.x_buf,
+                    &self.y_buf, seed, lrs, &fmask, &fval, &lam, det,
+                )?;
+                history.record_step(StepRecord {
+                    step: state.step,
+                    loss: out.loss,
+                    batch_acc: out.correct / self.man.batch as f32,
+                    reg: out.reg,
+                    exp_bops_pct: rel,
+                });
+            }
+        }
+
+        let (loss, acc) = self.evaluate(&state, &gates)?;
+        history.record_eval(EvalRecord {
+            step: state.step, loss, accuracy: acc, rel_bops_pct: rel,
+            phase: 2,
+        });
+        let states = gm.quant_states(&gates);
+        let result = RunResult {
+            model: self.man.name.clone(),
+            mode: self.cfg.mode.label(),
+            mu: self.cfg.mu,
+            seed: self.cfg.seed,
+            deterministic: self.cfg.deterministic_gates,
+            accuracy: acc,
+            pre_ft_accuracy: pre_acc,
+            test_loss: loss,
+            rel_bops_pct: rel,
+            gates,
+            states,
+            history,
+        };
+        Ok((state, result))
+    }
+
+    /// Current test-time gates for evaluation.
+    fn current_gates(&self, gm: &GateManager, state: &TrainState,
+                     lock_mask: &[f32], lock_val: &[f32],
+                     _probs: &[f32]) -> Vec<f32> {
+        if self.man.engine == "dq" {
+            // DQ has no gates; the eval executable ignores the vector.
+            return vec![0.0; self.man.n_slots];
+        }
+        let phi = state.phi_slots(&self.man);
+        gm.test_gates(&phi, lock_mask, lock_val)
+    }
+
+    /// Relative BOPs of the configuration implied by `gates` (BB) or by
+    /// the inferred-bits vector (DQ).
+    fn rel_bops(&self, gm: &GateManager, gates: &[f32],
+                probs: &[f32]) -> f64 {
+        if self.man.engine == "dq" {
+            return dq_expected_pct(&self.counter, &self.man, probs);
+        }
+        let states = gm.quant_states(gates);
+        self.counter.relative_bops_pct(&states)
+    }
+
+    /// Expose pieces for the PTQ module.
+    pub fn manifest(&self) -> &Manifest {
+        &self.man
+    }
+
+    pub fn counter(&self) -> &BopCounter {
+        &self.counter
+    }
+}
+
+/// DQ: relative BOPs from continuous inferred bits (one slot per
+/// quantizer; see python/compile/dq.py).
+pub fn dq_expected_pct(counter: &BopCounter, man: &Manifest,
+                       bits: &[f32]) -> f64 {
+    let mut by_name: BTreeMap<String, f64> = BTreeMap::new();
+    for q in &man.quantizers {
+        by_name.insert(q.name.clone(), bits[q.offset] as f64);
+    }
+    100.0 * expected_bops(counter, &by_name) / counter.fp32_bops()
+}

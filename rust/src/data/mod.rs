@@ -1,0 +1,101 @@
+//! Synthetic dataset substrate (DESIGN.md §Substitutions).
+//!
+//! No real MNIST/CIFAR/ImageNet is available offline, so each generator
+//! procedurally builds a *learnable* classification task with the
+//! statistics the paper's method cares about: class-conditional
+//! structure (so accuracy improves with capacity), within-class
+//! variation (so the task does not saturate instantly), and
+//! heterogeneous feature scales across spatial frequencies (so layers
+//! differ in quantization sensitivity — the property that makes mixed
+//! precision beat fixed precision).
+//!
+//! Everything is deterministic in (dataset name, seed, index): train and
+//! test splits draw from disjoint PRNG streams of the same distribution.
+
+pub mod batcher;
+pub mod synth;
+
+pub use batcher::Batcher;
+pub use synth::{generate, DatasetSpec};
+
+/// An in-memory dataset: NHWC images + integer labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    /// (H, W, C)
+    pub shape: (usize, usize, usize),
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image_size(&self) -> usize {
+        self.shape.0 * self.shape.1 * self.shape.2
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let n = self.image_size();
+        &self.images[i * n..(i + 1) * n]
+    }
+
+    /// Channel-wise standardization statistics over the whole set.
+    pub fn mean_std(&self) -> (f32, f32) {
+        let n = self.images.len() as f64;
+        let mean = self.images.iter().map(|v| *v as f64).sum::<f64>() / n;
+        let var = self
+            .images
+            .iter()
+            .map(|v| (*v as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n;
+        (mean as f32, var.sqrt() as f32)
+    }
+
+    /// In-place standardization to zero mean / unit std.
+    pub fn normalize(&mut self) {
+        let (m, s) = self.mean_std();
+        let s = if s < 1e-6 { 1.0 } else { s };
+        for v in &mut self.images {
+            *v = (*v - m) / s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> DatasetSpec {
+        DatasetSpec {
+            name: "mnist_like".into(),
+            input: (16, 16, 1),
+            classes: 10,
+            train: 256,
+            test: 64,
+        }
+    }
+
+    #[test]
+    fn dataset_indexing() {
+        let ds = generate(&spec(), 1, false).unwrap();
+        assert_eq!(ds.len(), 256);
+        assert_eq!(ds.image(3).len(), 16 * 16);
+    }
+
+    #[test]
+    fn normalize_standardizes() {
+        let mut ds = generate(&spec(), 1, false).unwrap();
+        ds.normalize();
+        let (m, s) = ds.mean_std();
+        assert!(m.abs() < 1e-3, "mean {m}");
+        assert!((s - 1.0).abs() < 1e-3, "std {s}");
+    }
+}

@@ -1,0 +1,148 @@
+//! Shared experiment plumbing: job construction, result persistence,
+//! table row formatting.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::{Mode, RunConfig};
+use crate::coordinator::sweep::{aggregate, Aggregated, Job};
+use crate::coordinator::trainer::RunResult;
+use crate::config::presets;
+use crate::report::TableBuilder;
+use crate::util::json::{num, obj, s, Json};
+
+/// Common experiment options parsed from CLI flags.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    pub seeds: usize,
+    pub quick: bool,
+    pub jobs: usize,
+    pub steps_override: Option<usize>,
+}
+
+impl ExpOptions {
+    pub fn from_args(args: &crate::cli::Args) -> Result<ExpOptions> {
+        Ok(ExpOptions {
+            artifacts_dir: args.str_flag("artifacts", "artifacts"),
+            out_dir: args.str_flag("out", "runs"),
+            seeds: args.usize_flag("seeds", 1)?,
+            quick: args.bool_flag("quick"),
+            jobs: args.usize_flag("jobs", 1)?,
+            steps_override: args.opt_flag("steps")
+                .map(|v| v.parse()).transpose()
+                .map_err(|_| anyhow::anyhow!("--steps expects integer"))?,
+        })
+    }
+
+    /// Build a run config for (model, mode, mu, seed) under these options.
+    pub fn config(&self, model: &str, mode: Mode, mu: f64, seed: u64)
+                  -> RunConfig {
+        let base = model.trim_end_matches("_dq");
+        let mut cfg = presets::base_config(base);
+        cfg.model = model.to_string();
+        cfg.mode = mode;
+        cfg.mu = mu;
+        cfg.seed = seed;
+        cfg.artifacts_dir = self.artifacts_dir.clone();
+        cfg.out_dir = self.out_dir.clone();
+        if let Some(steps) = self.steps_override {
+            cfg.steps = steps;
+            cfg.finetune_steps = steps / 4;
+        }
+        if self.quick {
+            let full = cfg.steps as f64;
+            cfg.steps = (cfg.steps / 10).max(40);
+            cfg.finetune_steps = (cfg.finetune_steps / 10).max(5);
+            // Gates must still be able to travel from the +6 phi init to
+            // the Eq. 22 threshold within the shrunken budget: scale the
+            // gate LR by the shrink factor (capped).
+            let boost = (full / cfg.steps as f64).min(10.0);
+            cfg.lr_g = (cfg.lr_g * boost).min(0.3);
+        }
+        cfg
+    }
+
+    /// Jobs across seeds.
+    pub fn jobs_for(&self, model: &str, mode: Mode, mu: f64) -> Vec<Job> {
+        (0..self.seeds)
+            .map(|s| Job {
+                cfg: self.config(model, mode.clone(), mu, 1 + s as u64),
+            })
+            .collect()
+    }
+
+    pub fn out_path(&self, name: &str) -> PathBuf {
+        let dir = Path::new(&self.out_dir);
+        let _ = std::fs::create_dir_all(dir);
+        dir.join(name)
+    }
+}
+
+/// Persist raw results + aggregates for one experiment.
+pub fn save_results(path: &Path, experiment: &str, results: &[RunResult])
+                    -> Result<()> {
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("model", s(&r.model)),
+                ("mode", s(&r.mode)),
+                ("mu", num(r.mu)),
+                ("seed", num(r.seed as f64)),
+                ("accuracy", num(r.accuracy)),
+                ("pre_ft_accuracy", num(r.pre_ft_accuracy)),
+                ("rel_bops_pct", num(r.rel_bops_pct)),
+                ("test_loss", num(r.test_loss)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("experiment", s(experiment)),
+        ("results", Json::Arr(rows)),
+    ]);
+    std::fs::write(path, doc.to_string())?;
+    Ok(())
+}
+
+/// Persist per-run history (metrics.json per run) for figure harnesses.
+pub fn save_histories(dir: &Path, results: &[RunResult]) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    for r in results {
+        let name = format!(
+            "{}_{}_mu{}_s{}.metrics.json",
+            r.model.replace('/', "_"),
+            r.mode.replace([':', '/'], "_"),
+            r.mu,
+            r.seed
+        );
+        r.history.save(&dir.join(name))?;
+    }
+    Ok(())
+}
+
+/// Standard "Method | #bits | Acc | Rel GBOPs" rows from aggregates.
+pub fn method_rows(table: &mut TableBuilder, label_prefix: &str,
+                   aggs: &[Aggregated], acc_scale: f64) {
+    for a in aggs {
+        let label = if a.mu > 0.0 {
+            format!("{label_prefix} mu={}", a.mu)
+        } else {
+            label_prefix.to_string()
+        };
+        table.row(&[
+            label,
+            "Mixed".to_string(),
+            TableBuilder::pm(a.acc_mean * acc_scale,
+                             a.acc_stderr * acc_scale, 2),
+            TableBuilder::pm(a.bops_mean, a.bops_stderr, 2),
+        ]);
+    }
+}
+
+/// Aggregate helper re-export for harnesses.
+pub fn agg(results: &[RunResult]) -> Vec<Aggregated> {
+    aggregate(results)
+}

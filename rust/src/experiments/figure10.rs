@@ -1,0 +1,113 @@
+//! Figures 10-14: gate-probability evolution and training curves.
+//!
+//! Reads a `metrics.json` produced by any training run (the table
+//! harnesses save one per run) and renders: mean gate probability per
+//! bit level over steps (Fig. 10/13/14), loss + accuracy curves
+//! (Fig. 11), and the BOPs-vs-accuracy co-evolution (Fig. 12).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::common::ExpOptions;
+use crate::coordinator::metrics::History;
+use crate::report::plot::{scatter, Series};
+use crate::runtime::Manifest;
+
+pub fn run(opt: &ExpOptions, metrics_path: &Path, model: &str,
+           curves: bool) -> Result<String> {
+    let history = History::load(metrics_path)
+        .with_context(|| format!("load metrics {metrics_path:?}"))?;
+    let man = Manifest::load(Path::new(&opt.artifacts_dir), model)?;
+    let mut out = render_gate_evolution(&man, &history);
+    if curves {
+        out.push_str(&render_curves(&history));
+    }
+    println!("{out}");
+    std::fs::write(opt.out_path("figure10.md"), &out)?;
+    Ok(out)
+}
+
+/// Mean inclusion probability per bit level over training steps.
+pub fn render_gate_evolution(man: &Manifest, h: &History) -> String {
+    if h.gate_snapshots.is_empty() {
+        return "figure10: no gate snapshots recorded\n".into();
+    }
+    let levels: Vec<u32> = man
+        .quantizers
+        .first()
+        .map(|q| q.levels.clone())
+        .unwrap_or_default();
+    let mut series: Vec<Series> = Vec::new();
+    let markers = ['2', '4', '8', 'S', 'T'];
+    for (li, level) in levels.iter().enumerate() {
+        let mut pts = Vec::new();
+        for snap in &h.gate_snapshots {
+            let mut sum = 0.0f64;
+            let mut n = 0usize;
+            for q in &man.quantizers {
+                if li == 0 {
+                    for c in 0..q.channels {
+                        sum += snap.probs[q.offset + c] as f64;
+                        n += 1;
+                    }
+                } else if li - 1 < q.levels.len() - 1 {
+                    sum += snap.probs[q.offset + q.channels + li - 1]
+                        as f64;
+                    n += 1;
+                }
+            }
+            if n > 0 {
+                pts.push((snap.step as f64, sum / n as f64));
+            }
+        }
+        series.push(Series {
+            label: format!("mean q(z_{level})"),
+            marker: markers[li % markers.len()],
+            points: pts,
+        });
+    }
+    scatter("Figure 10 — gate probability evolution", "step",
+            "mean inclusion prob", &series, 70, 18, false)
+}
+
+/// Loss/accuracy and BOPs co-evolution curves (Figures 11-12).
+pub fn render_curves(h: &History) -> String {
+    let loss: Vec<(f64, f64)> = h
+        .steps
+        .iter()
+        .map(|r| (r.step as f64, r.loss as f64))
+        .collect();
+    let bops: Vec<(f64, f64)> = h
+        .steps
+        .iter()
+        .map(|r| (r.step as f64, r.exp_bops_pct))
+        .collect();
+    let acc: Vec<(f64, f64)> = h
+        .evals
+        .iter()
+        .map(|r| (r.step as f64, r.accuracy * 100.0))
+        .collect();
+    let mut out = scatter(
+        "Figure 11 — training loss",
+        "step", "CE loss",
+        &[Series { label: "loss".into(), marker: 'l', points: loss }],
+        70, 14, false,
+    );
+    out.push_str(&scatter(
+        "Figure 12 — expected rel. BOPs (%) during training",
+        "step", "exp rel BOPs (%)",
+        &[Series { label: "exp BOPs".into(), marker: 'b', points: bops }],
+        70, 14, false,
+    ));
+    if !acc.is_empty() {
+        out.push_str(&scatter(
+            "Figure 11b — validation accuracy",
+            "step", "acc (%)",
+            &[Series { label: "val acc".into(), marker: 'a',
+                       points: acc }],
+            70, 12, false,
+        ));
+    }
+    out
+}

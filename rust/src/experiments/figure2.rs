@@ -1,0 +1,87 @@
+//! Figure 2: Pareto fronts — (a) ResNet18, (b) MobileNetV2.
+//!
+//! Plots accuracy vs relative GBOPs (log x) for Bayesian Bits,
+//! quantization-only, pruning-only (ResNet18 only), and the fixed-width
+//! baselines, as an ASCII scatter plus a sorted point table.
+
+use anyhow::Result;
+
+use super::common::{agg, save_results, ExpOptions};
+use crate::config::presets::{FIGURE2_MUS, PRUNE_ONLY_MUS};
+use crate::config::Mode;
+use crate::coordinator::sweep::{run_sweep, Job};
+use crate::coordinator::trainer::RunResult;
+use crate::report::plot::{scatter, Series};
+use crate::report::TableBuilder;
+
+pub fn run(opt: &ExpOptions, model: &str) -> Result<Vec<RunResult>> {
+    let mut jobs: Vec<Job> = Vec::new();
+    for (w, a) in [(8, 8), (4, 4), (2, 2)] {
+        jobs.extend(opt.jobs_for(model,
+                                 Mode::Fixed { w_bits: w, a_bits: a },
+                                 0.0));
+    }
+    for mu in FIGURE2_MUS {
+        jobs.extend(opt.jobs_for(model, Mode::BayesianBits, *mu));
+        jobs.extend(opt.jobs_for(model, Mode::QuantOnly, *mu));
+    }
+    if model == "resnet18" {
+        for mu in PRUNE_ONLY_MUS {
+            jobs.extend(opt.jobs_for(
+                model, Mode::PruneOnly { w_bits: 4, a_bits: 8 }, *mu));
+        }
+    }
+    let results = run_sweep(jobs, opt.jobs)?;
+    print_figure(opt, model, &results)?;
+    save_results(&opt.out_path(&format!("figure2_{model}.json")),
+                 "figure2", &results)?;
+    Ok(results)
+}
+
+pub fn print_figure(opt: &ExpOptions, model: &str,
+                    results: &[RunResult]) -> Result<()> {
+    let aggs = agg(results);
+    let pick = |prefix: &str, marker: char, label: &str| -> Series {
+        Series {
+            label: label.to_string(),
+            marker,
+            points: aggs
+                .iter()
+                .filter(|a| a.mode == prefix
+                            || a.mode.starts_with(prefix))
+                .map(|a| (a.bops_mean, a.acc_mean * 100.0))
+                .collect(),
+        }
+    };
+    let mut series = vec![
+        pick("bb", 'o', "Bayesian Bits"),
+        pick("quant-only", 'q', "BB quantization only"),
+        pick("fixed:", 'x', "fixed wXaY (LSQ-like)"),
+    ];
+    if model == "resnet18" {
+        series.push(pick("prune-only", 'p', "BB pruning only"));
+    }
+    let fig = scatter(
+        &format!("Figure 2 — {model}: accuracy vs relative GBOPs"),
+        "rel GBOPs (%)", "top-1 acc (%)", &series, 64, 20, true,
+    );
+
+    let mut t = TableBuilder::new(
+        &format!("Figure 2 points — {model}"),
+        &["Method", "mu", "Acc. (%)", "Rel. GBOPs (%)"],
+    );
+    let mut sorted = aggs;
+    sorted.sort_by(|a, b| a.bops_mean.partial_cmp(&b.bops_mean).unwrap());
+    for a in &sorted {
+        t.row(&[
+            a.mode.clone(),
+            format!("{}", a.mu),
+            TableBuilder::pm(a.acc_mean * 100.0, a.acc_stderr * 100.0, 2),
+            TableBuilder::pm(a.bops_mean, a.bops_stderr, 2),
+        ]);
+    }
+    let out = format!("{fig}{}", t.render());
+    println!("{out}");
+    std::fs::write(opt.out_path(&format!("figure2_{model}.md")), out)?;
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Figure 6 / Figures 15-18: learned per-layer bit allocation and
+//! sparsity. Trains one configuration (or reuses results passed in) and
+//! prints the architecture report.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::common::ExpOptions;
+use crate::config::Mode;
+use crate::coordinator::trainer::{RunResult, Trainer};
+use crate::report::arch_viz::{architecture_report, summary_line};
+use crate::runtime::{Manifest, Runtime};
+
+pub fn run(opt: &ExpOptions, model: &str, mu: f64) -> Result<RunResult> {
+    let rt = Arc::new(Runtime::cpu()?);
+    let man = Manifest::load(std::path::Path::new(&opt.artifacts_dir),
+                             model)?;
+    let cfg = opt.config(model, Mode::BayesianBits, mu, 1);
+    let mut trainer = Trainer::new(rt, man.clone(), cfg)?;
+    let result = trainer.run()?;
+    let text = print_report(&man, &result);
+    std::fs::write(opt.out_path(&format!("figure6_{model}.md")), &text)?;
+    Ok(result)
+}
+
+pub fn print_report(man: &Manifest, result: &RunResult) -> String {
+    let mut text = format!(
+        "Figure 6 — learned architecture ({}, mu={}, acc {:.2}%, \
+         rel GBOPs {:.2}%)\n",
+        result.model, result.mu, result.accuracy * 100.0,
+        result.rel_bops_pct
+    );
+    text.push_str(&architecture_report(man, &result.states));
+    text.push_str(&summary_line(man, &result.states));
+    text.push('\n');
+    println!("{text}");
+    text
+}

@@ -1,0 +1,24 @@
+//! Experiment harnesses — one module per paper table/figure.
+//!
+//! | module     | regenerates                                          |
+//! |------------|------------------------------------------------------|
+//! | `table1`   | Table 1: MNIST + CIFAR10 acc vs rel. GBOPs           |
+//! | `table2`   | Table 2: deterministic vs stochastic gates           |
+//! | `table4`   | Table 4 + Figures 2a/7/8/9: ResNet18 grid + ablations |
+//! | `table5`   | Table 5 + Figure 3: post-training mixed precision    |
+//! | `figure2`  | Figure 2a/2b Pareto fronts (resnet18 / mobilenetv2)  |
+//! | `figure6`  | Figure 6 / 15-18: learned architectures              |
+//! | `figure10` | Figures 10-14: gate evolution + training curves      |
+//!
+//! Every harness prints the paper-shaped table/plot, writes
+//! `<out>/<experiment>.json` + `.md`, and returns the rows so benches
+//! and tests can drive the same code.
+
+pub mod common;
+pub mod figure10;
+pub mod figure2;
+pub mod figure6;
+pub mod table1;
+pub mod table2;
+pub mod table4;
+pub mod table5;

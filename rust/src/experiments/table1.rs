@@ -1,0 +1,147 @@
+//! Table 1: MNIST (LeNet-5) and CIFAR10 (VGG-7) — accuracy vs relative
+//! GBOPs for FP32, fixed-width baselines, DQ / DQ-restricted, and
+//! Bayesian Bits at mu in {0.01, 0.1}.
+//!
+//! Fixed-width rows stand in for the paper's TWN/LR-Net/RQ/WAGE
+//! comparators (their static bit configurations trained with learned
+//! ranges on our substrate); DQ rows use the `_dq` artifacts.
+
+use anyhow::Result;
+
+use super::common::{agg, method_rows, save_histories, save_results,
+                    ExpOptions};
+use crate::baselines;
+use crate::bops::BopCounter;
+use crate::config::Mode;
+use crate::coordinator::sweep::{run_sweep, Job};
+use crate::coordinator::trainer::RunResult;
+use crate::report::TableBuilder;
+use crate::runtime::Manifest;
+
+pub const MODELS: [&str; 2] = ["lenet5", "vgg7"];
+pub const FIXED_ROWS: [(u32, u32); 4] = [(8, 8), (4, 4), (2, 8), (2, 32)];
+
+pub fn run(opt: &ExpOptions, skip_baselines: bool)
+           -> Result<Vec<RunResult>> {
+    let mut jobs: Vec<Job> = Vec::new();
+    for model in MODELS {
+        jobs.extend(opt.jobs_for(model, Mode::Fp32, 0.0));
+        if !skip_baselines {
+            for (w, a) in FIXED_ROWS {
+                jobs.extend(opt.jobs_for(
+                    model, Mode::Fixed { w_bits: w, a_bits: a }, 0.0));
+            }
+            jobs.extend(opt.jobs_for(&format!("{model}_dq"), Mode::Dq,
+                                     0.05));
+        }
+        for mu in crate::config::presets::TABLE1_MUS {
+            jobs.extend(opt.jobs_for(model, Mode::BayesianBits, *mu));
+        }
+    }
+    let results = run_sweep(jobs, opt.jobs)?;
+    print_table(opt, &results)?;
+    save_results(&opt.out_path("table1.json"), "table1", &results)?;
+    save_histories(&opt.out_path("table1_runs"), &results)?;
+    Ok(results)
+}
+
+pub fn print_table(opt: &ExpOptions, results: &[RunResult]) -> Result<()> {
+    let mut out = String::new();
+    for model in MODELS {
+        let title = format!(
+            "Table 1 ({}) — {} — acc (%) vs relative GBOPs (%)",
+            if model == "lenet5" { "MNIST-like" } else { "CIFAR-like" },
+            model
+        );
+        let mut t = TableBuilder::new(&title,
+                                      &["Method", "# bits W/A", "Acc. (%)",
+                                        "Rel. GBOPs (%)"]);
+        let of_model = |rs: &[RunResult], mode: &str| -> Vec<RunResult> {
+            rs.iter()
+                .filter(|r| r.model.starts_with(model)
+                            && r.mode == mode
+                            && !r.model.contains("_dq"))
+                .cloned()
+                .collect()
+        };
+        // FP32 reference
+        let fp = of_model(results, "fp32");
+        if !fp.is_empty() {
+            let a = agg(&fp);
+            t.row(&[
+                "FP32".into(),
+                "32/32".into(),
+                format!("{:.2}", a[0].acc_mean * 100.0),
+                format!("{:.2}", a[0].bops_mean),
+            ]);
+        }
+        // fixed-width baselines
+        for (w, aa) in FIXED_ROWS {
+            let label = format!("fixed:w{w}a{aa}");
+            let rows = of_model(results, &label);
+            if rows.is_empty() {
+                continue;
+            }
+            let a = agg(&rows);
+            t.row(&[
+                format!("Fixed (LSQ-like) w{w}a{aa}"),
+                format!("{w}/{aa}"),
+                TableBuilder::pm(a[0].acc_mean * 100.0,
+                                 a[0].acc_stderr * 100.0, 2),
+                TableBuilder::pm(a[0].bops_mean, a[0].bops_stderr, 2),
+            ]);
+        }
+        // DQ + DQ-restricted
+        let dq: Vec<RunResult> = results
+            .iter()
+            .filter(|r| r.model.starts_with(model)
+                        && r.model.contains("_dq"))
+            .cloned()
+            .collect();
+        if !dq.is_empty() {
+            let man = Manifest::load(
+                std::path::Path::new(&opt.artifacts_dir),
+                &format!("{model}_dq"),
+            )?;
+            let counter = BopCounter::new(man.layers.clone());
+            let a = agg(&dq);
+            t.row(&[
+                "DQ".into(),
+                "Mixed".into(),
+                TableBuilder::pm(a[0].acc_mean * 100.0,
+                                 a[0].acc_stderr * 100.0, 2),
+                TableBuilder::pm(a[0].bops_mean, a[0].bops_stderr, 2),
+            ]);
+            // restricted: recompute BOPs with widths rounded up to pow2
+            let restricted: Vec<f64> = dq
+                .iter()
+                .map(|r| {
+                    // final inferred bits = last gate snapshot probs
+                    let bits = r
+                        .history
+                        .gate_snapshots
+                        .last()
+                        .map(|g| g.probs.clone())
+                        .unwrap_or_else(|| vec![8.0; man.n_slots]);
+                    baselines::dq_restricted_pct(&counter, &man, &bits)
+                })
+                .collect();
+            let (bm, _) = crate::util::mean_std(&restricted);
+            let bse = crate::util::stderr_of_mean(&restricted);
+            t.row(&[
+                "DQ - restricted".into(),
+                "Mixed (pow2)".into(),
+                TableBuilder::pm(a[0].acc_mean * 100.0,
+                                 a[0].acc_stderr * 100.0, 2),
+                TableBuilder::pm(bm, bse, 2),
+            ]);
+        }
+        // Bayesian Bits
+        let bb = of_model(results, "bb");
+        method_rows(&mut t, "Bayesian Bits", &agg(&bb), 100.0);
+        out.push_str(&t.render());
+    }
+    println!("{out}");
+    std::fs::write(opt.out_path("table1.md"), out)?;
+    Ok(())
+}

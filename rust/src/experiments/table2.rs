@@ -1,0 +1,64 @@
+//! Table 2 (App. A.3): deterministic vs stochastic gates ablation.
+//!
+//! Stochastic rows are standard Bayesian Bits runs; deterministic rows
+//! set the `det_flag` executable input (noise pinned to 0.5) with the
+//! paper's adjusted gate hyper-parameters (lower gate LR). Reported
+//! pre- and post-fine-tuning, matching the paper's observation that
+//! deterministic gates train to configurations whose train loss
+//! disagrees with validation accuracy.
+
+use anyhow::Result;
+
+use super::common::{save_results, ExpOptions};
+use crate::config::Mode;
+use crate::coordinator::sweep::{run_sweep, Job};
+use crate::coordinator::trainer::RunResult;
+use crate::report::TableBuilder;
+
+pub fn run(opt: &ExpOptions) -> Result<Vec<RunResult>> {
+    let cases = [("vgg7", 0.01), ("resnet18", 0.03)];
+    let mut jobs: Vec<Job> = Vec::new();
+    for (model, mu) in cases {
+        for det in [false, true] {
+            for seed in 0..opt.seeds {
+                let mut cfg = opt.config(model, Mode::BayesianBits, mu,
+                                         1 + seed as u64);
+                cfg.deterministic_gates = det;
+                if det {
+                    // paper: lower gate LR, init closer to saturation
+                    cfg.lr_g /= 10.0;
+                }
+                jobs.push(Job { cfg });
+            }
+        }
+    }
+    let results = run_sweep(jobs, opt.jobs)?;
+    print_table(opt, &results)?;
+    save_results(&opt.out_path("table2.json"), "table2", &results)?;
+    Ok(results)
+}
+
+fn print_table(opt: &ExpOptions, results: &[RunResult]) -> Result<()> {
+    let mut t = TableBuilder::new(
+        "Table 2 — deterministic vs stochastic gates",
+        &["Experiment", "Gating type", "Acc. (%)", "Pre-FT Acc. (%)",
+          "Rel. GBOPs (%)", "CE Loss"],
+    );
+    for r in results {
+        let gating = if r.deterministic { "Deterministic" }
+                     else { "Stochastic" };
+        t.row(&[
+            format!("{} mu={}", r.model, r.mu),
+            gating.into(),
+            format!("{:.2}", r.accuracy * 100.0),
+            format!("{:.2}", r.pre_ft_accuracy * 100.0),
+            format!("{:.2}", r.rel_bops_pct),
+            format!("{:.3}", r.history.smoothed_loss(20)),
+        ]);
+    }
+    let out = t.render();
+    println!("{out}");
+    std::fs::write(opt.out_path("table2.md"), out)?;
+    Ok(())
+}
+

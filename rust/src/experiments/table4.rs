@@ -1,0 +1,119 @@
+//! Table 4 + Figures 7/8/9: the full ResNet18 grid — Bayesian Bits over
+//! the mu grid, quantization-only (QO), pruning-only at w4a8 (PO48) and
+//! w8a8 (PO8), fixed-width and FP32 baselines, with pre/post fine-tune
+//! accuracy columns.
+
+use anyhow::Result;
+
+use super::common::{agg, save_histories, save_results, ExpOptions};
+use crate::config::presets::{FIGURE2_MUS, PRUNE_ONLY_MUS};
+use crate::config::Mode;
+use crate::coordinator::sweep::{run_sweep, Job};
+use crate::coordinator::trainer::RunResult;
+use crate::report::TableBuilder;
+
+pub fn run(opt: &ExpOptions, show_preft: bool) -> Result<Vec<RunResult>> {
+    let model = "resnet18";
+    let mut jobs: Vec<Job> = Vec::new();
+    jobs.extend(opt.jobs_for(model, Mode::Fp32, 0.0));
+    for (w, a) in [(8, 8), (4, 4), (2, 2)] {
+        jobs.extend(opt.jobs_for(model,
+                                 Mode::Fixed { w_bits: w, a_bits: a },
+                                 0.0));
+    }
+    for mu in FIGURE2_MUS {
+        jobs.extend(opt.jobs_for(model, Mode::BayesianBits, *mu));
+        jobs.extend(opt.jobs_for(model, Mode::QuantOnly, *mu));
+    }
+    for mu in PRUNE_ONLY_MUS {
+        jobs.extend(opt.jobs_for(
+            model, Mode::PruneOnly { w_bits: 4, a_bits: 8 }, *mu));
+        jobs.extend(opt.jobs_for(
+            model, Mode::PruneOnly { w_bits: 8, a_bits: 8 }, *mu));
+    }
+    let results = run_sweep(jobs, opt.jobs)?;
+    print_table(opt, &results, show_preft)?;
+    save_results(&opt.out_path("table4.json"), "table4", &results)?;
+    save_histories(&opt.out_path("table4_runs"), &results)?;
+    Ok(results)
+}
+
+pub fn print_table(opt: &ExpOptions, results: &[RunResult],
+                   show_preft: bool) -> Result<()> {
+    let mut t = TableBuilder::new(
+        "Table 4 — ResNet18 (ImageNet-like): acc vs relative GBOPs",
+        &["Method", "# bits W/A", "Top-1 Acc. (%)", "Rel. GBOPs (%)"],
+    );
+    let aggs = agg(results);
+    for a in &aggs {
+        let (label, bits) = pretty_mode(&a.mode, a.mu);
+        t.row(&[
+            label,
+            bits,
+            TableBuilder::pm(a.acc_mean * 100.0, a.acc_stderr * 100.0, 2),
+            TableBuilder::pm(a.bops_mean, a.bops_stderr, 2),
+        ]);
+    }
+    let mut out = t.render();
+
+    if show_preft {
+        let mut t2 = TableBuilder::new(
+            "Figure 7 — effect of fine-tuning (pre vs post FT accuracy)",
+            &["Method", "mu", "Pre-FT Acc. (%)", "Post-FT Acc. (%)"],
+        );
+        for r in results {
+            if r.mode == "bb" || r.mode.starts_with("prune-only")
+                || r.mode == "quant-only"
+            {
+                t2.row(&[
+                    r.mode.clone(),
+                    format!("{}", r.mu),
+                    format!("{:.2}", r.pre_ft_accuracy * 100.0),
+                    format!("{:.2}", r.accuracy * 100.0),
+                ]);
+            }
+        }
+        out.push_str(&t2.render());
+    }
+    println!("{out}");
+    std::fs::write(opt.out_path("table4.md"), out)?;
+    Ok(())
+}
+
+pub fn pretty_mode(mode: &str, mu: f64) -> (String, String) {
+    if mode == "fp32" {
+        return ("Full precision".into(), "32/32".into());
+    }
+    if let Some(rest) = mode.strip_prefix("fixed:") {
+        return (format!("Fixed (LSQ-like) {rest}"),
+                rest.replace('w', "").replace('a', "/"));
+    }
+    if mode == "bb" {
+        return (format!("Bayesian Bits mu={mu}"), "Mixed".into());
+    }
+    if mode == "quant-only" {
+        return (format!("Bayesian Bits, QO; mu={mu}"), "Mixed".into());
+    }
+    if let Some(rest) = mode.strip_prefix("prune-only:") {
+        let tag = if rest == "w4a8" { "PO48" } else { "PO8" };
+        return (format!("Bayesian Bits, {tag}; mu={mu}"),
+                rest.replace('w', "").replace('a', "/"));
+    }
+    if mode == "dq" {
+        return (format!("DQ mu={mu}"), "Mixed".into());
+    }
+    (mode.to_string(), "?".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pretty_mode_labels() {
+        assert_eq!(pretty_mode("fp32", 0.0).0, "Full precision");
+        assert_eq!(pretty_mode("fixed:w4a4", 0.0).1, "4/4");
+        assert!(pretty_mode("prune-only:w4a8", 0.5).0.contains("PO48"));
+        assert!(pretty_mode("quant-only", 0.1).0.contains("QO"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Table 5 + Figure 3: post-training mixed precision (§4.2.1).
+//!
+//! Pretrains one ResNet18-small base model (cached checkpoint), then for
+//! each mu learns gates-only and gates+scales with frozen weights, and
+//! compares against the sensitivity-ordered iterative baseline and the
+//! fixed 8/8 push-button row, plotting all Pareto fronts.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::common::ExpOptions;
+use crate::config::presets::{ptq_steps, PTQ_MUS};
+use crate::config::RunConfig;
+use crate::coordinator::ptq::{self, PtqPoint};
+use crate::report::plot::{scatter, Series};
+use crate::report::TableBuilder;
+use crate::runtime::{Manifest, Runtime};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::logging;
+
+pub struct Table5Output {
+    pub gates_only: Vec<PtqPoint>,
+    pub gates_scales: Vec<PtqPoint>,
+    pub sensitivity: Vec<PtqPoint>,
+    pub fixed8: PtqPoint,
+}
+
+pub fn run(opt: &ExpOptions, model: &str, mus: &[f64])
+           -> Result<Table5Output> {
+    let rt = Arc::new(Runtime::cpu()?);
+    let man = Manifest::load(std::path::Path::new(&opt.artifacts_dir),
+                             model)?;
+    let mut base_cfg = RunConfig {
+        model: model.to_string(),
+        artifacts_dir: opt.artifacts_dir.clone(),
+        out_dir: opt.out_dir.clone(),
+        ..crate::config::presets::base_config(model)
+    };
+    if opt.quick {
+        base_cfg.steps = (base_cfg.steps / 5).max(50);
+    }
+    let ckpt = opt.out_path(&format!("{model}_pretrained.ckpt"));
+    let base = ptq::pretrain_or_load(rt.clone(), &man, &base_cfg, &ckpt)?;
+
+    let steps = if opt.quick { ptq_steps() / 3 } else { ptq_steps() };
+    let mus = if mus.is_empty() { PTQ_MUS } else { mus };
+    let mut gates_only = Vec::new();
+    let mut gates_scales = Vec::new();
+    for mu in mus {
+        logging::info(format!("PTQ mu={mu}: gates-only"));
+        gates_only.push(ptq::ptq_learn(rt.clone(), &man, &base, *mu,
+                                       false, steps, 1, crate::config::presets::PTQ_LR_G)?);
+        logging::info(format!("PTQ mu={mu}: gates+scales"));
+        gates_scales.push(ptq::ptq_learn(rt.clone(), &man, &base, *mu,
+                                         true, steps, 1, crate::config::presets::PTQ_LR_G)?);
+    }
+    logging::info("PTQ: sensitivity baseline");
+    let sensitivity = ptq::sensitivity_baseline(rt.clone(), &man, &base,
+                                                4)?;
+    let fixed8 = ptq::fixed_point(rt, &man, &base, 8, 8)?;
+
+    let out = Table5Output { gates_only, gates_scales, sensitivity,
+                             fixed8 };
+    print_output(opt, model, mus, &out)?;
+    Ok(out)
+}
+
+fn points_json(pts: &[PtqPoint]) -> Json {
+    Json::Arr(
+        pts.iter()
+            .map(|p| {
+                obj(vec![
+                    ("label", s(&p.label)),
+                    ("mu", num(p.mu)),
+                    ("accuracy", num(p.accuracy)),
+                    ("rel_bops_pct", num(p.rel_bops_pct)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn print_output(opt: &ExpOptions, model: &str, mus: &[f64],
+                out: &Table5Output) -> Result<()> {
+    let mut t = TableBuilder::new(
+        &format!("Table 5 — post-training mixed precision ({model})"),
+        &["Regularization", "Gates-only Acc (%)", "Gates-only GBOPs (%)",
+          "Gates+scales Acc (%)", "Gates+scales GBOPs (%)"],
+    );
+    for (i, mu) in mus.iter().enumerate() {
+        t.row(&[
+            format!("mu = {mu}"),
+            format!("{:.2}", out.gates_only[i].accuracy * 100.0),
+            format!("{:.2}", out.gates_only[i].rel_bops_pct),
+            format!("{:.2}", out.gates_scales[i].accuracy * 100.0),
+            format!("{:.2}", out.gates_scales[i].rel_bops_pct),
+        ]);
+    }
+    let mk = |pts: &[PtqPoint], marker, label: &str| Series {
+        label: label.into(),
+        marker,
+        points: pts.iter().map(|p| (p.rel_bops_pct, p.accuracy * 100.0))
+            .collect(),
+    };
+    let fig = scatter(
+        &format!("Figure 3 — post-training Pareto fronts ({model})"),
+        "rel GBOPs (%)", "top-1 acc (%)",
+        &[
+            mk(&ptq::pareto_front(&out.gates_only), 'g', "BB gates only"),
+            mk(&ptq::pareto_front(&out.gates_scales), 's',
+               "BB gates + scales"),
+            mk(&ptq::pareto_front(&out.sensitivity), 'i',
+               "iterative sensitivity baseline"),
+            mk(std::slice::from_ref(&out.fixed8), '8', "fixed 8/8"),
+        ],
+        64, 20, true,
+    );
+    let text = format!("{}{fig}", t.render());
+    println!("{text}");
+    std::fs::write(opt.out_path("table5.md"), &text)?;
+    let doc = obj(vec![
+        ("experiment", s("table5")),
+        ("gates_only", points_json(&out.gates_only)),
+        ("gates_scales", points_json(&out.gates_scales)),
+        ("sensitivity", points_json(&out.sensitivity)),
+        ("fixed8", points_json(std::slice::from_ref(&out.fixed8))),
+    ]);
+    std::fs::write(opt.out_path("table5.json"), doc.to_string())?;
+    Ok(())
+}

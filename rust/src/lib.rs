@@ -1,0 +1,52 @@
+//! # Bayesian Bits — Rust coordinator (Layer 3)
+//!
+//! Reproduction of *Bayesian Bits: Unifying Quantization and Pruning*
+//! (van Baalen et al., NeurIPS 2020) as a three-layer Rust + JAX + Pallas
+//! stack: the Pallas quantizer kernel and the JAX model are AOT-lowered
+//! once to HLO text (`make artifacts`); this crate owns everything that
+//! runs afterwards — the PJRT runtime, the training orchestrator, gate
+//! management, BOP accounting, the synthetic data pipeline, and the
+//! experiment harnesses that regenerate every table and figure of the
+//! paper's evaluation.
+//!
+//! Python never executes on the training path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! * [`util`] — JSON, binary I/O, logging, property-test + bench harnesses
+//!   (the offline registry vendors only the `xla` closure, so these are
+//!   hand-rolled rather than serde/proptest/criterion).
+//! * [`rng`] — PCG64 PRNG and distributions (deterministic datasets).
+//! * [`tensor`] — small host-side f32 tensor.
+//! * [`data`] — procedural MNIST/CIFAR/ImageNet-like dataset generators,
+//!   augmentation, batching.
+//! * [`quant`] — host mirror of the quantizer math: hard-concrete gates,
+//!   decomposition grids, effective bit widths, thresholding (Eq. 22).
+//! * [`bops`] — MAC/BOP accounting (App. B.2) incl. the ResNet rules.
+//! * [`models`] — architecture descriptors (small + paper scale).
+//! * [`runtime`] — PJRT client wrapper: artifact loading, executable
+//!   cache, train state marshalling.
+//! * [`coordinator`] — trainer, gate manager, sweeps, post-training
+//!   quantization, checkpoints, metrics.
+//! * [`baselines`] — fixed-width / LSQ-like / DQ-restricted / sensitivity
+//!   baselines.
+//! * [`experiments`] — one harness per paper table/figure.
+//! * [`report`] — tables, Pareto fronts, ASCII plots, architecture viz.
+//! * [`config`] + [`cli`] — run configuration and the `bbits` launcher.
+
+pub mod baselines;
+pub mod bops;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod models;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,299 @@
+//! `bbits` — the Bayesian Bits launcher (Layer-3 entrypoint).
+//!
+//! See `bbits --help` (or `cli::usage`) for the command surface. Every
+//! paper table/figure has a dedicated subcommand; `train`/`sweep`/`ptq`
+//! expose the underlying machinery for custom runs.
+
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use bayesian_bits::cli::{self, Args};
+use bayesian_bits::config::{presets, Mode};
+use bayesian_bits::coordinator::sweep::{run_sweep, Job};
+use bayesian_bits::coordinator::trainer::Trainer;
+use bayesian_bits::experiments::{self, common::ExpOptions};
+use bayesian_bits::models::{descriptor, Preset};
+use bayesian_bits::bops::BopCounter;
+use bayesian_bits::quant::grid::{bb_quantize_host, QuantConfig};
+use bayesian_bits::report::{arch_viz, TableBuilder};
+use bayesian_bits::runtime::{Manifest, Runtime};
+use bayesian_bits::util::json::Json;
+use bayesian_bits::util::logging;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        logging::error(format!("{e:#}"));
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    if let Some(level) = args.opt_flag("log-level") {
+        match logging::level_from_str(level) {
+            Some(l) => logging::set_level(l),
+            None => bail!("bad --log-level {level:?}"),
+        }
+    }
+    if args.command.is_empty() || args.bool_flag("help") {
+        println!("{}", cli::usage());
+        return Ok(());
+    }
+    let opt = ExpOptions::from_args(&args)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args, &opt),
+        "sweep" => cmd_sweep(&args, &opt),
+        "ptq" | "table5" => {
+            let model = args.str_flag("model", "resnet18");
+            let mus = args.f64_list_flag("mus", &[])?;
+            experiments::table5::run(&opt, &model, &mus)?;
+            Ok(())
+        }
+        "table1" => {
+            experiments::table1::run(&opt, args.bool_flag(
+                "skip-baselines"))?;
+            Ok(())
+        }
+        "table2" => {
+            experiments::table2::run(&opt)?;
+            Ok(())
+        }
+        "table4" => {
+            experiments::table4::run(&opt, args.bool_flag("show-preft"))?;
+            Ok(())
+        }
+        "figure2" => {
+            let model = args.str_flag("model", "resnet18");
+            experiments::figure2::run(&opt, &model)?;
+            Ok(())
+        }
+        "figure3" => {
+            let model = args.str_flag("model", "resnet18");
+            let mus = args.f64_list_flag("mus", &[])?;
+            experiments::table5::run(&opt, &model, &mus)?;
+            Ok(())
+        }
+        "figure6" => {
+            let model = args.str_flag("model", "vgg7");
+            let mu = args.f64_flag("mu", 0.01)?;
+            experiments::figure6::run(&opt, &model, mu)?;
+            Ok(())
+        }
+        "figure10" => {
+            let model = args.str_flag("model", "resnet18");
+            let run_file = args.str_flag(
+                "run",
+                &format!("{}/table4_runs", opt.out_dir),
+            );
+            let path = resolve_metrics_path(Path::new(&run_file))?;
+            experiments::figure10::run(&opt, &path, &model,
+                                       args.bool_flag("curves"))?;
+            Ok(())
+        }
+        "parity" => cmd_parity(&opt),
+        "bops" => cmd_bops(),
+        "report" => cmd_report(&args, &opt),
+        other => bail!("unknown command {other:?}\n\n{}", cli::usage()),
+    }
+}
+
+fn cmd_train(args: &Args, opt: &ExpOptions) -> Result<()> {
+    let model = args.str_flag("model", "lenet5");
+    let mode = Mode::parse(&args.str_flag("mode", "bb"))?;
+    let mu = args.f64_flag("mu", 0.01)?;
+    let seed = args.usize_flag("seed", 1)? as u64;
+    let mut cfg = opt.config(&model, mode, mu, seed);
+    cfg.deterministic_gates = args.bool_flag("det-gates");
+    cfg.lr_w = args.f64_flag("lr-w", cfg.lr_w)?;
+    cfg.lr_g = args.f64_flag("lr-g", cfg.lr_g)?;
+    cfg.lr_s = args.f64_flag("lr-s", cfg.lr_s)?;
+    cfg.eval_every = args.usize_flag("eval-every", cfg.steps / 5)?;
+    cfg.finetune_steps =
+        args.usize_flag("finetune-steps", cfg.finetune_steps)?;
+    if args.bool_flag("no-finetune") {
+        cfg.finetune_steps = 0;
+    }
+
+    let rt = Arc::new(Runtime::cpu()?);
+    let man = Manifest::load(Path::new(&cfg.artifacts_dir), &cfg.model)?;
+    let mut trainer = Trainer::new(rt, man.clone(), cfg.clone())?;
+    let result = trainer.run()?;
+    println!(
+        "\nresult: model={} mode={} mu={} acc={:.4} (pre-FT {:.4}) \
+         relBOPs={:.2}% loss={:.4}",
+        result.model, result.mode, result.mu, result.accuracy,
+        result.pre_ft_accuracy, result.rel_bops_pct, result.test_loss
+    );
+    println!("{}", arch_viz::architecture_report(&man, &result.states));
+    println!("{}", arch_viz::summary_line(&man, &result.states));
+    let out = opt.out_path(&format!(
+        "train_{}_{}_mu{}.metrics.json",
+        cfg.model,
+        cfg.mode.label().replace(':', "_"),
+        cfg.mu
+    ));
+    result.history.save(&out)?;
+    logging::info(format!("metrics written to {out:?}"));
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, opt: &ExpOptions) -> Result<()> {
+    let model = args.str_flag("model", "lenet5");
+    let mode = Mode::parse(&args.str_flag("mode", "bb"))?;
+    let mus = args.f64_list_flag("mus", presets::FIGURE2_MUS)?;
+    let mut jobs: Vec<Job> = Vec::new();
+    for mu in &mus {
+        jobs.extend(opt.jobs_for(&model, mode.clone(), *mu));
+    }
+    let results = run_sweep(jobs, opt.jobs)?;
+    let mut t = TableBuilder::new(
+        &format!("Sweep — {model} ({})", mode.label()),
+        &["mu", "Acc. (%)", "Rel. GBOPs (%)"],
+    );
+    for a in experiments::common::agg(&results) {
+        t.row(&[
+            format!("{}", a.mu),
+            TableBuilder::pm(a.acc_mean * 100.0, a.acc_stderr * 100.0, 2),
+            TableBuilder::pm(a.bops_mean, a.bops_stderr, 2),
+        ]);
+    }
+    println!("{}", t.render());
+    experiments::common::save_results(
+        &opt.out_path("sweep.json"), "sweep", &results)?;
+    experiments::common::save_histories(
+        &opt.out_path("sweep_runs"), &results)?;
+    Ok(())
+}
+
+/// Check the Rust host quantizer and the PJRT-executed kernel against
+/// the golden vectors exported by aot.py — the three-layer parity proof.
+fn cmd_parity(opt: &ExpOptions) -> Result<()> {
+    let dir = Path::new(&opt.artifacts_dir);
+    let text = std::fs::read_to_string(dir.join("goldens.json"))
+        .context("read goldens.json (run `make artifacts`)")?;
+    let g = Json::parse(&text)?;
+    let shape = g.get("shape")?.usize_vec()?;
+    let levels: Vec<u32> = g
+        .get("levels")?
+        .usize_vec()?
+        .iter()
+        .map(|v| *v as u32)
+        .collect();
+    let rt = Runtime::cpu()?;
+    let exe = rt.load(&dir.join("quantizer_fwd.hlo.txt"))?;
+    let cfg = QuantConfig::new(true, &levels);
+    let mut max_host = 0.0f32;
+    let mut max_dev = 0.0f32;
+    for (i, case) in g.get("cases")?.as_arr()?.iter().enumerate() {
+        let x = case.get("x")?.f32_vec()?;
+        let beta = case.get("beta")?.f32_vec()?;
+        let z2 = case.get("z2")?.f32_vec()?;
+        let zh = case.get("zh")?.f32_vec()?;
+        let want = case.get("out")?.f32_vec()?;
+        let host = bb_quantize_host(&x, shape[0], beta[0], &z2, &zh, &cfg);
+        let dev = rt.quantizer_fwd(&exe, &x, shape[0], &beta, &z2, &zh)?;
+        for ((h, d), w) in host.iter().zip(&dev).zip(&want) {
+            max_host = max_host.max((h - w).abs());
+            max_dev = max_dev.max((d - w).abs());
+        }
+        println!("case {i}: host max|err|={max_host:.2e} \
+                  device max|err|={max_dev:.2e}");
+    }
+    if max_host > 1e-5 || max_dev > 1e-6 {
+        bail!("parity failure: host {max_host} device {max_dev}");
+    }
+    println!("parity OK (host oracle + PJRT kernel vs python goldens)");
+    Ok(())
+}
+
+/// Analytic BOP tables at both presets for all models.
+fn cmd_bops() -> Result<()> {
+    for preset in [Preset::Small, Preset::Paper] {
+        let mut t = TableBuilder::new(
+            &format!("Analytic BOP table ({preset:?} preset)"),
+            &["Model", "GMACs", "FP32 GBOPs", "w8a8 (%)", "w4a4 (%)",
+              "w2a2 (%)"],
+        );
+        for model in ["lenet5", "vgg7", "resnet18", "mobilenetv2"] {
+            let layers = descriptor(model, preset)?;
+            let c = BopCounter::new(layers);
+            let row = |w, a| {
+                let states = c.fixed_states(w, a);
+                format!("{:.2}", c.relative_bops_pct(&states))
+            };
+            t.row(&[
+                model.to_string(),
+                format!("{:.4}", c.total_macs() as f64 / 1e9),
+                format!("{:.3}", c.fp32_bops() / 1e9),
+                row(8, 8),
+                row(4, 4),
+                row(2, 2),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args, opt: &ExpOptions) -> Result<()> {
+    let runs = args.str_flag("runs", &opt.out_dir);
+    let dir = Path::new(&runs);
+    let mut t = TableBuilder::new(
+        &format!("Run summary — {runs}"),
+        &["File", "Experiment", "Rows"],
+    );
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("read dir {dir:?}"))?
+    {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                if let Ok(v) = Json::parse(&text) {
+                    let exp = v
+                        .get("experiment")
+                        .ok()
+                        .and_then(|e| e.as_str().ok().map(String::from))
+                        .unwrap_or_else(|| "-".into());
+                    let rows = v
+                        .get("results")
+                        .ok()
+                        .and_then(|r| r.as_arr().ok().map(|a| a.len()))
+                        .unwrap_or(0);
+                    t.row(&[
+                        path.file_name().unwrap().to_string_lossy()
+                            .to_string(),
+                        exp,
+                        rows.to_string(),
+                    ]);
+                }
+            }
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn resolve_metrics_path(p: &Path) -> Result<std::path::PathBuf> {
+    if p.is_file() {
+        return Ok(p.to_path_buf());
+    }
+    if p.is_dir() {
+        // pick the first metrics file
+        for entry in std::fs::read_dir(p)? {
+            let path = entry?.path();
+            if path
+                .file_name()
+                .map(|n| n.to_string_lossy().ends_with(".metrics.json"))
+                .unwrap_or(false)
+            {
+                return Ok(path);
+            }
+        }
+    }
+    bail!("no metrics file found at {p:?} (train something first, e.g. \
+           `bbits train --model resnet18`)")
+}

@@ -1,0 +1,291 @@
+//! Architecture descriptors: the layer tables (MACs, channel counts,
+//! quantizer wiring) for every model, at both the CPU-scaled `small`
+//! preset and the paper-scale preset.
+//!
+//! The `small` tables must agree exactly with the manifests produced by
+//! `python/compile/aot.py` (checked in integration tests); the `paper`
+//! tables power the analytic BOP columns for paper-scale comparisons
+//! (`bbits bops`) without requiring paper-scale training.
+
+use anyhow::{bail, Result};
+
+/// One compute layer — mirrors `LayerSpec.to_json()` in python/compile/core.py.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerDesc {
+    pub name: String,
+    /// conv | dwconv | dense
+    pub kind: String,
+    pub macs: u64,
+    pub cin: usize,
+    pub cout: usize,
+    /// Weight quantizer name (per-output-channel pruning gates).
+    pub weight_q: String,
+    /// Input-activation quantizer name.
+    pub act_q: String,
+    /// B.2.3: input feeds from a residual join — not input-prunable.
+    pub residual_input: bool,
+}
+
+/// Model preset selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preset {
+    Small,
+    Paper,
+}
+
+/// Build the descriptor table for a model.
+pub fn descriptor(model: &str, preset: Preset) -> Result<Vec<LayerDesc>> {
+    match model {
+        "lenet5" => Ok(lenet5(preset)),
+        "vgg7" => Ok(vgg7(preset)),
+        "resnet18" => Ok(resnet18(preset)),
+        "mobilenetv2" => Ok(mobilenetv2(preset)),
+        _ => bail!("unknown model {model:?}"),
+    }
+}
+
+/// Builder mirroring `python/compile/layers.py` MAC bookkeeping.
+struct Builder {
+    h: usize,
+    w: usize,
+    c: usize,
+    layers: Vec<LayerDesc>,
+}
+
+impl Builder {
+    fn new(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c, layers: Vec::new() }
+    }
+
+    fn out_hw(&self, stride: usize) -> (usize, usize) {
+        // SAME padding: ceil division
+        (self.h.div_ceil(stride), self.w.div_ceil(stride))
+    }
+
+    fn conv(&mut self, name: &str, cout: usize, k: usize, stride: usize,
+            groups: usize, quant_in: bool, in_q: Option<String>,
+            residual_input: bool) {
+        let (ho, wo) = self.out_hw(stride);
+        let macs =
+            (ho * wo * cout * (self.c / groups) * k * k) as u64;
+        let act_q = if quant_in {
+            format!("{name}.in")
+        } else {
+            in_q.expect("non-quantizing conv needs in_q")
+        };
+        self.layers.push(LayerDesc {
+            name: name.into(),
+            kind: if groups == self.c { "dwconv" } else { "conv" }.into(),
+            macs,
+            cin: self.c,
+            cout,
+            weight_q: format!("{name}.w"),
+            act_q,
+            residual_input,
+        });
+        self.h = ho;
+        self.w = wo;
+        self.c = cout;
+    }
+
+    fn pool2(&mut self) {
+        self.h /= 2;
+        self.w /= 2;
+    }
+
+    fn dense(&mut self, name: &str, din: usize, dout: usize) {
+        self.layers.push(LayerDesc {
+            name: name.into(),
+            kind: "dense".into(),
+            macs: (din * dout) as u64,
+            cin: din,
+            cout: dout,
+            weight_q: format!("{name}.w"),
+            act_q: format!("{name}.in"),
+            residual_input: false,
+        });
+    }
+
+    fn spatial(&self) -> usize {
+        self.h * self.w
+    }
+}
+
+fn lenet5(preset: Preset) -> Vec<LayerDesc> {
+    let (hw, c1, c2, fc, k, classes) = match preset {
+        Preset::Small => (16, 8, 16, 64, 5, 10),
+        Preset::Paper => (28, 32, 64, 512, 5, 10),
+    };
+    let mut b = Builder::new(hw, hw, 1);
+    b.conv("conv1", c1, k, 1, 1, true, None, false);
+    b.pool2();
+    b.conv("conv2", c2, k, 1, 1, true, None, false);
+    b.pool2();
+    let din = b.spatial() * b.c;
+    b.dense("fc1", din, fc);
+    b.dense("fc2", fc, classes);
+    b.layers
+}
+
+fn vgg7(preset: Preset) -> Vec<LayerDesc> {
+    let (hw, widths, fc, classes): (usize, [usize; 3], usize, usize) =
+        match preset {
+            Preset::Small => (16, [16, 32, 64], 128, 10),
+            Preset::Paper => (32, [128, 256, 512], 1024, 10),
+        };
+    let mut b = Builder::new(hw, hw, 3);
+    for (stage, w) in widths.iter().enumerate() {
+        for i in 0..2 {
+            b.conv(&format!("conv{}_{}", stage + 1, i + 1), *w, 3, 1, 1,
+                   true, None, false);
+        }
+        b.pool2();
+    }
+    let din = b.spatial() * b.c;
+    b.dense("fc1", din, fc);
+    b.dense("fc2", fc, classes);
+    b.layers
+}
+
+fn resnet18(preset: Preset) -> Vec<LayerDesc> {
+    let (hw, widths, stem_k, stem_s, stem_pool, classes): (
+        usize, [usize; 4], usize, usize, bool, usize,
+    ) = match preset {
+        Preset::Small => (24, [8, 16, 32, 64], 3, 1, false, 10),
+        Preset::Paper => (224, [64, 128, 256, 512], 7, 2, true, 1000),
+    };
+    let mut b = Builder::new(hw, hw, 3);
+    b.conv("stem", widths[0], stem_k, stem_s, 1, true, None, false);
+    if stem_pool {
+        b.pool2();
+    }
+    for (stage, w) in widths.iter().enumerate() {
+        for blk in 0..2usize {
+            let name = format!("s{}b{}", stage + 1, blk + 1);
+            let stride = if stage > 0 && blk == 0 { 2 } else { 1 };
+            let need_ds = stride != 1 || b.c != *w;
+            let cin = b.c;
+            let (h0, w0) = (b.h, b.w);
+            b.conv(&format!("{name}.conv1"), *w, 3, stride, 1, true, None,
+                   true);
+            b.conv(&format!("{name}.conv2"), *w, 3, 1, 1, true, None,
+                   false);
+            if need_ds {
+                // downsample shares conv1's input quantizer (B.2.4)
+                let (ho, wo) =
+                    (h0.div_ceil(stride), w0.div_ceil(stride));
+                b.layers.push(LayerDesc {
+                    name: format!("{name}.ds"),
+                    kind: "conv".into(),
+                    macs: (ho * wo * *w * cin) as u64,
+                    cin,
+                    cout: *w,
+                    weight_q: format!("{name}.ds.w"),
+                    act_q: format!("{name}.conv1.in"),
+                    residual_input: true,
+                });
+            }
+        }
+    }
+    b.dense("fc", widths[3], classes);
+    b.layers
+}
+
+fn mobilenetv2(preset: Preset) -> Vec<LayerDesc> {
+    // (cout, stride, expansion, repeats)
+    let (hw, stem, stem_stride, blocks, head, classes): (
+        usize, usize, usize, Vec<(usize, usize, usize, usize)>, usize,
+        usize,
+    ) = match preset {
+        Preset::Small => (
+            24, 8, 1,
+            vec![(12, 1, 2, 1), (16, 2, 4, 2), (24, 2, 4, 2),
+                 (32, 2, 4, 1)],
+            64, 10,
+        ),
+        Preset::Paper => (
+            224, 32, 2, // stock MobileNetV2: stride-2 stem at 224px
+            vec![(16, 1, 1, 1), (24, 2, 6, 2), (32, 2, 6, 3),
+                 (64, 2, 6, 4), (96, 1, 6, 3), (160, 2, 6, 3),
+                 (320, 1, 6, 1)],
+            1280, 1000,
+        ),
+    };
+    let mut b = Builder::new(hw, hw, 3);
+    b.conv("stem", stem, 3, stem_stride, 1, true, None, false);
+    let mut i = 0;
+    for (cout, stride, expand, repeats) in blocks {
+        for r in 0..repeats {
+            i += 1;
+            let name = format!("b{i}");
+            let s = if r == 0 { stride } else { 1 };
+            let mid = b.c * expand;
+            if expand != 1 {
+                b.conv(&format!("{name}.expand"), mid, 1, 1, 1, true,
+                       None, false);
+            }
+            b.conv(&format!("{name}.dw"), mid, 3, s, mid, true, None,
+                   false);
+            b.conv(&format!("{name}.project"), cout, 1, 1, 1, true, None,
+                   false);
+        }
+    }
+    b.conv("head", head, 1, 1, 1, true, None, false);
+    b.dense("fc", head, classes);
+    b.layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_small_macs() {
+        let l = lenet5(Preset::Small);
+        assert_eq!(l[0].macs, 16 * 16 * 8 * 25);
+        assert_eq!(l[1].macs, 8 * 8 * 16 * 8 * 25);
+        assert_eq!(l[2].macs, 4 * 4 * 16 * 64);
+        assert_eq!(l[3].macs, 64 * 10);
+    }
+
+    #[test]
+    fn paper_scale_resnet18_macs_plausible() {
+        // Stock ResNet18 @224 is ~1.8 GMAC.
+        let total: u64 = resnet18(Preset::Paper).iter()
+            .map(|l| l.macs).sum();
+        assert!(total > 1_500_000_000 && total < 2_200_000_000,
+                "total={total}");
+    }
+
+    #[test]
+    fn paper_scale_mobilenetv2_macs_plausible() {
+        // Stock MobileNetV2 @224 is ~0.3 GMAC.
+        let total: u64 = mobilenetv2(Preset::Paper).iter()
+            .map(|l| l.macs).sum();
+        assert!(total > 200_000_000 && total < 450_000_000,
+                "total={total}");
+    }
+
+    #[test]
+    fn resnet_downsample_shares_quantizer() {
+        let l = resnet18(Preset::Small);
+        let ds: Vec<_> =
+            l.iter().filter(|x| x.name.ends_with(".ds")).collect();
+        assert_eq!(ds.len(), 3);
+        for d in ds {
+            assert!(d.act_q.ends_with(".conv1.in"));
+            assert!(d.residual_input);
+        }
+    }
+
+    #[test]
+    fn dwconv_marked() {
+        let l = mobilenetv2(Preset::Small);
+        assert!(l.iter().any(|x| x.kind == "dwconv"));
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        assert!(descriptor("alexnet", Preset::Small).is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! Hard-concrete gate distribution (App. A.2) and test-time thresholding.
+//!
+//! Mirrors `python/compile/kernels/ref.py`; the constants must stay in
+//! lock-step (checked by the golden-vector parity test).
+
+/// Hard-concrete hyper-parameters (Louizos et al. 2018).
+pub const GAMMA: f64 = -0.1;
+pub const ZETA: f64 = 1.1;
+pub const TAU: f64 = 2.0 / 3.0;
+/// Test-time pruning threshold t in Eq. 22.
+pub const THRESHOLD: f64 = 0.34;
+
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// The stretched/clipped hard-concrete distribution for one gate.
+#[derive(Debug, Clone, Copy)]
+pub struct HardConcrete {
+    pub phi: f64,
+}
+
+impl HardConcrete {
+    pub fn new(phi: f64) -> Self {
+        Self { phi }
+    }
+
+    /// Sample z given uniform noise u in (0,1) (Eq. 20).
+    pub fn sample(&self, u: f64) -> f64 {
+        let g = (u / (1.0 - u)).ln();
+        let s = sigmoid((g + self.phi) / TAU);
+        (s * (ZETA - GAMMA) + GAMMA).clamp(0.0, 1.0)
+    }
+
+    /// Deterministic value with the noise switched off (u = 0.5).
+    pub fn mean_gate(&self) -> f64 {
+        let s = sigmoid(self.phi / TAU);
+        (s * (ZETA - GAMMA) + GAMMA).clamp(0.0, 1.0)
+    }
+
+    /// R_phi(z > 0) = sigma(phi - tau * log(-gamma/zeta)) (Eq. 21).
+    pub fn prob_active(&self) -> f64 {
+        prob_active(self.phi)
+    }
+
+    /// Test-time binary gate (Eq. 22).
+    pub fn test_gate(&self) -> bool {
+        test_time_gate(self.phi)
+    }
+}
+
+pub fn prob_active(phi: f64) -> f64 {
+    sigmoid(phi - TAU * (-GAMMA / ZETA).ln())
+}
+
+/// Eq. 22: z = 1[ sigma(tau log(-gamma/zeta) - phi) < t ].
+pub fn test_time_gate(phi: f64) -> bool {
+    sigmoid(TAU * (-GAMMA / ZETA).ln() - phi) < THRESHOLD
+}
+
+/// A view over one quantizer's slots in the global gate vector:
+/// `channels` pruning gates (z2, per output channel) followed by the
+/// shared residual gates (z4, z8, ...).
+#[derive(Debug, Clone)]
+pub struct GateView {
+    pub channels: usize,
+    pub levels: Vec<u32>,
+}
+
+impl GateView {
+    pub fn n_slots(&self) -> usize {
+        self.channels + self.levels.len().saturating_sub(1)
+    }
+
+    /// Threshold a slice of phi logits into test-time binary gates.
+    pub fn threshold(&self, phi: &[f64]) -> Vec<f32> {
+        assert_eq!(phi.len(), self.n_slots());
+        phi.iter()
+            .map(|p| if test_time_gate(*p) { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    /// Effective bit width given binary slot values: 0 if all channels
+    /// pruned, otherwise the highest level whose gate chain is open.
+    pub fn effective_bits(&self, z: &[f32]) -> u32 {
+        assert_eq!(z.len(), self.n_slots());
+        let any_channel = z[..self.channels].iter().any(|v| *v > 0.5);
+        if !any_channel {
+            return 0;
+        }
+        let mut bits = self.levels[0];
+        for (i, b) in self.levels.iter().skip(1).enumerate() {
+            if z[self.channels + i] > 0.5 {
+                bits = *b;
+            } else {
+                break;
+            }
+        }
+        bits
+    }
+
+    /// Fraction of output channels kept (1.0 when no channels pruned).
+    pub fn keep_ratio(&self, z: &[f32]) -> f64 {
+        if self.channels == 0 {
+            return 1.0;
+        }
+        z[..self.channels].iter().filter(|v| **v > 0.5).count() as f64
+            / self.channels as f64
+    }
+
+    /// Expected (soft) bit width from inclusion probabilities — the live
+    /// BOP estimate used during training (Figure 12-style tracking).
+    pub fn expected_bits(&self, probs: &[f32]) -> f64 {
+        assert_eq!(probs.len(), self.n_slots());
+        let p2 = probs[..self.channels]
+            .iter()
+            .map(|p| *p as f64)
+            .sum::<f64>()
+            / self.channels.max(1) as f64;
+        let mut bits = self.levels[0] as f64 * p2;
+        let mut chain = p2;
+        let mut prev = self.levels[0] as f64;
+        for (i, b) in self.levels.iter().skip(1).enumerate() {
+            chain *= probs[self.channels + i] as f64;
+            bits += (*b as f64 - prev) * chain;
+            prev = *b as f64;
+        }
+        bits
+    }
+
+    /// Build lock (mask, value) pairs fixing this quantizer at `bits`
+    /// (0 => pruned). Channel gates lock to 1 unless pruned.
+    pub fn lock_fixed(&self, bits: u32) -> (Vec<f32>, Vec<f32>) {
+        let n = self.n_slots();
+        let mask = vec![1.0f32; n];
+        let mut val = vec![0.0f32; n];
+        if bits >= self.levels[0] {
+            for v in val[..self.channels].iter_mut() {
+                *v = 1.0;
+            }
+            for (i, b) in self.levels.iter().skip(1).enumerate() {
+                if *b <= bits {
+                    val[self.channels + i] = 1.0;
+                }
+            }
+        }
+        (mask, val)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view() -> GateView {
+        GateView { channels: 3, levels: vec![2, 4, 8, 16, 32] }
+    }
+
+    #[test]
+    fn threshold_matches_eq22() {
+        // phi = 0: p_zero = sigma(tau log(-g/z)) = sigma(0.2665*...)
+        let p_zero = sigmoid(TAU * (-GAMMA / ZETA).ln());
+        assert_eq!(test_time_gate(0.0), p_zero < THRESHOLD);
+        assert!(test_time_gate(5.0));
+        assert!(!test_time_gate(-5.0));
+    }
+
+    #[test]
+    fn prob_active_monotone() {
+        let mut last = 0.0;
+        for phi in [-6.0, -2.0, 0.0, 2.0, 6.0] {
+            let p = prob_active(phi);
+            assert!(p > last);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn sample_within_unit_interval_and_hits_endpoints() {
+        let hc = HardConcrete::new(0.0);
+        let mut zeros = 0;
+        let mut ones = 0;
+        let mut rng = crate::rng::Pcg64::new(1);
+        for _ in 0..5000 {
+            let z = hc.sample(rng.next_f64().clamp(1e-9, 1.0 - 1e-9));
+            assert!((0.0..=1.0).contains(&z));
+            if z == 0.0 {
+                zeros += 1;
+            }
+            if z == 1.0 {
+                ones += 1;
+            }
+        }
+        assert!(zeros > 0 && ones > 0);
+    }
+
+    #[test]
+    fn effective_bits_chain() {
+        let v = view();
+        // all channels on, z4 on, z8 off => 4 bits regardless of z16/z32
+        let z = vec![1., 1., 1., 1., 0., 1., 1.];
+        assert_eq!(v.effective_bits(&z), 4);
+        // all gates open => 32
+        let z = vec![1.; 7];
+        assert_eq!(v.effective_bits(&z), 32);
+        // all channels pruned => 0 bits
+        let z = vec![0., 0., 0., 1., 1., 1., 1.];
+        assert_eq!(v.effective_bits(&z), 0);
+    }
+
+    #[test]
+    fn keep_ratio_counts_channels() {
+        let v = view();
+        let z = vec![1., 0., 1., 1., 1., 1., 1.];
+        assert!((v.keep_ratio(&z) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expected_bits_extremes() {
+        let v = view();
+        let all = vec![1.0f32; 7];
+        assert!((v.expected_bits(&all) - 32.0).abs() < 1e-9);
+        let none = vec![0.0f32; 7];
+        assert_eq!(v.expected_bits(&none), 0.0);
+        // z2 only: expected 2 bits
+        let two = vec![1., 1., 1., 0., 0., 0., 0.];
+        assert!((v.expected_bits(&two) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lock_fixed_patterns() {
+        let v = view();
+        let (mask, val) = v.lock_fixed(8);
+        assert!(mask.iter().all(|m| *m == 1.0));
+        assert_eq!(val, vec![1., 1., 1., 1., 1., 0., 0.]);
+        let (_, val0) = v.lock_fixed(0);
+        assert!(val0.iter().all(|z| *z == 0.0));
+        assert_eq!(v.effective_bits(&val), 8);
+    }
+}

@@ -1,0 +1,231 @@
+//! Host re-implementation of the residual-decomposition quantizer
+//! (Eqs. 1-6) — the independent oracle for artifact parity tests.
+//!
+//! Numerics match the kernel: f32 arithmetic, clip bound shrunk by
+//! (1 - 1e-7) while grid steps use |beta| itself (paper §2.4).
+
+pub const BETA_EPS: f32 = 1e-7;
+
+/// Static configuration of one quantizer.
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    pub signed: bool,
+    pub levels: Vec<u32>,
+}
+
+impl QuantConfig {
+    pub fn new(signed: bool, levels: &[u32]) -> Self {
+        assert!(levels[0] == 2, "chain starts at 2 bits");
+        Self { signed, levels: levels.to_vec() }
+    }
+}
+
+/// Step-size chain s_2, s_4, ... (s_b = s_{b/2} / (2^{b/2} + 1)).
+pub fn step_sizes(beta: f32, cfg: &QuantConfig) -> Vec<f32> {
+    let beta_grid = beta.abs();
+    let alpha = if cfg.signed { -beta_grid } else { 0.0 };
+    let mut out = Vec::with_capacity(cfg.levels.len());
+    let mut s = (beta_grid - alpha) / 3.0;
+    out.push(s);
+    for b in &cfg.levels[1..] {
+        s /= (2.0f32).powi((b / 2) as i32) + 1.0;
+        out.push(s);
+    }
+    out
+}
+
+fn pact_clip(x: f32, alpha_clip: f32, beta_clip: f32) -> f32 {
+    beta_clip - (beta_clip - alpha_clip - (x - alpha_clip).max(0.0)).max(0.0)
+}
+
+/// Full quantizer forward over a (channels, rest) tensor.
+///
+/// * `x` — row-major (channels x rest);
+/// * `z2` — per-channel pruning gates (len == channels);
+/// * `zh` — residual gates (len == levels.len() - 1);
+/// returns the quantized tensor (same layout).
+pub fn bb_quantize_host(x: &[f32], channels: usize, beta: f32, z2: &[f32],
+                        zh: &[f32], cfg: &QuantConfig) -> Vec<f32> {
+    assert_eq!(z2.len(), channels);
+    assert_eq!(zh.len(), cfg.levels.len() - 1);
+    assert_eq!(x.len() % channels.max(1), 0);
+    let rest = x.len() / channels.max(1);
+
+    let beta_grid = beta.abs();
+    let beta_clip = beta_grid * (1.0 - BETA_EPS);
+    let alpha = if cfg.signed { -beta_grid } else { 0.0 };
+    let alpha_clip = alpha * (1.0 - BETA_EPS);
+
+    let mut out = vec![0.0f32; x.len()];
+    let n_res = cfg.levels.len() - 1;
+    let mut terms = vec![0.0f32; n_res + 1];
+    for c in 0..channels {
+        for r in 0..rest {
+            let v = x[c * rest + r];
+            let xc = pact_clip(v, alpha_clip, beta_clip);
+            // residual chain
+            let mut s = (beta_grid - alpha) / 3.0;
+            let mut cur = s * round_half_even(xc / s);
+            terms[0] = cur;
+            for (i, b) in cfg.levels[1..].iter().enumerate() {
+                s /= (2.0f32).powi((b / 2) as i32) + 1.0;
+                let eps = s * round_half_even((xc - cur) / s);
+                terms[i + 1] = eps;
+                cur += eps;
+            }
+            // gated sum, innermost first (Eq. 6)
+            let mut inner = 0.0f32;
+            for i in (0..n_res).rev() {
+                inner = zh[i] * (terms[i + 1] + inner);
+            }
+            out[c * rest + r] = z2[c] * (terms[0] + inner);
+        }
+    }
+    out
+}
+
+/// XLA's `round` op rounds half away from zero... jnp.round rounds half
+/// to even (banker's rounding), matching numpy. The decomposition's
+/// residual ratios land exactly on .5 boundaries only at clip edges
+/// (prevented by BETA_EPS), but we match jnp exactly anyway.
+#[inline]
+fn round_half_even(v: f32) -> f32 {
+    let r = v.round(); // half away from zero
+    if (v - v.trunc()).abs() == 0.5 {
+        // half-to-even correction
+        let t = v.trunc();
+        if t as i64 % 2 == 0 {
+            t
+        } else {
+            t + v.signum()
+        }
+    } else {
+        r
+    }
+}
+
+/// Plain uniform quantizer at one bit width (tests/fixed baselines).
+pub fn quantize_fixed_host(x: &[f32], beta: f32, bit: u32,
+                           signed: bool) -> Vec<f32> {
+    let beta_grid = beta.abs();
+    let beta_clip = beta_grid * (1.0 - BETA_EPS);
+    let alpha = if signed { -beta_grid } else { 0.0 };
+    let alpha_clip = alpha * (1.0 - BETA_EPS);
+    let s = (beta_grid - alpha) / ((2.0f64.powi(bit as i32) - 1.0) as f32);
+    x.iter()
+        .map(|v| {
+            let xc = pact_clip(*v, alpha_clip, beta_clip);
+            s * round_half_even(xc / s)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PropResult};
+
+    fn cfg() -> QuantConfig {
+        QuantConfig::new(true, &[2, 4, 8, 16, 32])
+    }
+
+    #[test]
+    fn step_sizes_closed_form() {
+        let sizes = step_sizes(2.0, &cfg());
+        for (s, b) in sizes.iter().zip([2u32, 4, 8, 16, 32]) {
+            let want = 4.0 / (2.0f64.powi(b as i32) - 1.0);
+            assert!(((*s as f64) - want).abs() < want * 1e-5,
+                    "b={b} s={s} want={want}");
+        }
+    }
+
+    #[test]
+    fn full_chain_equals_fixed_quantizer() {
+        let mut rng = crate::rng::Pcg64::new(3);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal() * 1.5).collect();
+        for (bits, zh) in [
+            (2u32, [0., 0., 0., 0.]),
+            (4, [1., 0., 0., 0.]),
+            (8, [1., 1., 0., 0.]),
+            (32, [1., 1., 1., 1.]),
+        ] {
+            let got = bb_quantize_host(&x, 4, 2.0, &[1.; 4], &zh, &cfg());
+            let want = quantize_fixed_host(&x, 2.0, bits, true);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-5, "bits={bits} {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_channel_is_zero() {
+        let x = vec![1.0f32; 8];
+        let out = bb_quantize_host(&x, 2, 2.0, &[0.0, 1.0],
+                                   &[1., 1., 1., 1.], &cfg());
+        assert!(out[..4].iter().all(|v| *v == 0.0));
+        assert!(out[4..].iter().all(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn prop_output_on_grid_and_in_range() {
+        check("quantizer_grid_membership", 200, |g| {
+            let beta = g.f32_in(0.1, 5.0);
+            let signed = g.bool();
+            let cfg = QuantConfig::new(signed, &[2, 4, 8]);
+            let n = g.usize_in(1, 32);
+            let x: Vec<f32> = (0..n)
+                .map(|_| {
+                    let v = g.f32_in(-8.0, 8.0);
+                    if signed { v } else { v.abs() }
+                })
+                .collect();
+            let zh_opts: [[f32; 2]; 3] = [[0., 0.], [1., 0.], [1., 1.]];
+            let zh = *g.choose(&zh_opts);
+            let bits = if zh[0] == 0.0 { 2 } else if zh[1] == 0.0 { 4 }
+                       else { 8 };
+            let out = bb_quantize_host(&x, 1, beta, &[1.0], &zh, &cfg);
+            let s = step_sizes(beta, &cfg)
+                [match bits { 2 => 0, 4 => 1, _ => 2 }];
+            for v in &out {
+                if *v > beta.abs() + 1e-5 {
+                    return PropResult::Fail(format!("out of range {v}"));
+                }
+                let ratio = v / s;
+                if (ratio - ratio.round()).abs() > 1e-2 {
+                    return PropResult::Fail(format!(
+                        "off grid: v={v} s={s} ratio={ratio}"));
+                }
+            }
+            PropResult::Pass
+        });
+    }
+
+    #[test]
+    fn prop_monotone_error_in_gates() {
+        check("more_gates_less_error", 100, |g| {
+            let beta = g.f32_in(0.5, 4.0);
+            let x: Vec<f32> =
+                (0..32).map(|_| g.f32_in(-beta, beta)).collect();
+            let cfg = QuantConfig::new(true, &[2, 4, 8, 16, 32]);
+            let mut last = f64::INFINITY;
+            for k in 0..=4usize {
+                let mut zh = [0.0f32; 4];
+                for z in zh.iter_mut().take(k) {
+                    *z = 1.0;
+                }
+                let out = bb_quantize_host(&x, 1, beta, &[1.0], &zh, &cfg);
+                let err: f64 = x
+                    .iter()
+                    .zip(&out)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum();
+                if err > last + 1e-9 {
+                    return PropResult::Fail(format!(
+                        "error grew at k={k}: {err} > {last}"));
+                }
+                last = err;
+            }
+            PropResult::Pass
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! Host-side mirror of the Bayesian Bits quantizer math.
+//!
+//! The device executables carry the authoritative implementation
+//! (lowered from the Pallas kernel); this module re-implements the same
+//! equations in Rust for three purposes:
+//! 1. gate management — thresholding phi into test-time 0/1 gates
+//!    (Eq. 22), effective-bit-width and sparsity reports;
+//! 2. an independent oracle for parity/property tests against the
+//!    artifacts (`tests/runtime_parity.rs`);
+//! 3. BOP estimation from checkpoints without touching the device.
+
+pub mod gates;
+pub mod grid;
+
+pub use gates::{prob_active, test_time_gate, GateView, HardConcrete};
+pub use grid::{bb_quantize_host, step_sizes, QuantConfig};
+
+/// Hardware-friendly bit-width chain (paper Eq. 4).
+pub const LEVELS: [u32; 5] = [2, 4, 8, 16, 32];

@@ -1,0 +1,87 @@
+//! Learned-architecture report: per-layer weight/activation bit widths
+//! and channel sparsity — the text analogue of Figures 6 and 15-18.
+
+use std::collections::BTreeMap;
+
+use crate::bops::QuantState;
+use crate::runtime::Manifest;
+
+/// Render the learned configuration as a bar-annotated table.
+pub fn architecture_report(man: &Manifest,
+                           states: &BTreeMap<String, QuantState>)
+                           -> String {
+    let mut out = format!(
+        "\nLearned architecture: {} ({} layers)\n\
+         {:<16} {:>6} {:>6} {:>8} {:>9}  bits\n",
+        man.name,
+        man.layers.len(),
+        "layer", "w-bit", "a-bit", "keep%", "MACs"
+    );
+    for l in &man.layers {
+        let w = states.get(&l.weight_q).copied()
+            .unwrap_or(QuantState::full(32));
+        let a = states.get(&l.act_q).copied()
+            .unwrap_or(QuantState::full(32));
+        let bar_len = if w.bits == 0 { 0 }
+                      else { (w.bits as usize).min(32) };
+        out.push_str(&format!(
+            "{:<16} {:>6} {:>6} {:>7.1}% {:>9}  {}\n",
+            truncate(&l.name, 16),
+            bits_str(w.bits),
+            bits_str(a.bits),
+            100.0 * w.keep_ratio,
+            l.macs,
+            "#".repeat(bar_len)
+        ));
+    }
+    out
+}
+
+fn bits_str(b: u32) -> String {
+    if b == 0 { "prune".into() } else { b.to_string() }
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("..{}", &s[s.len() - (n - 2)..])
+    }
+}
+
+/// Aggregate summary line: mean bits weighted by MACs + global sparsity.
+pub fn summary_line(man: &Manifest,
+                    states: &BTreeMap<String, QuantState>) -> String {
+    let total: f64 = man.layers.iter().map(|l| l.macs as f64).sum();
+    let mut wbits = 0.0;
+    let mut abits = 0.0;
+    let mut kept = 0.0;
+    for l in &man.layers {
+        let w = states.get(&l.weight_q).copied()
+            .unwrap_or(QuantState::full(32));
+        let a = states.get(&l.act_q).copied()
+            .unwrap_or(QuantState::full(32));
+        let frac = l.macs as f64 / total;
+        wbits += frac * w.bits as f64;
+        abits += frac * a.bits as f64;
+        kept += frac * w.keep_ratio;
+    }
+    format!(
+        "MAC-weighted mean bits: w={wbits:.2} a={abits:.2}; \
+         channel keep ratio {:.1}%",
+        kept * 100.0
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_and_truncate_format() {
+        assert_eq!(bits_str(0), "prune");
+        assert_eq!(bits_str(8), "8");
+        assert_eq!(truncate("short", 16), "short");
+        assert_eq!(truncate("averyverylongname.conv1", 10).len(), 10);
+    }
+}

@@ -1,0 +1,11 @@
+//! Reporting: markdown tables, ASCII scatter plots, Pareto fronts, and
+//! per-layer architecture visualizations (the text analogue of the
+//! paper's Figures 6 and 15-18).
+
+pub mod arch_viz;
+pub mod plot;
+pub mod table;
+
+pub use arch_viz::architecture_report;
+pub use plot::scatter;
+pub use table::TableBuilder;

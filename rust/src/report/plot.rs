@@ -1,0 +1,118 @@
+//! ASCII scatter/line plots for terminal figures.
+//!
+//! Multiple labeled series share one canvas; the x axis can be log-scaled
+//! (relative BOPs span two orders of magnitude in the paper's figures).
+
+/// One plotted series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+    pub marker: char,
+}
+
+/// Render series into an ASCII canvas of the given size.
+pub fn scatter(title: &str, xlabel: &str, ylabel: &str, series: &[Series],
+               width: usize, height: usize, log_x: bool) -> String {
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for s in series {
+        for (x, y) in &s.points {
+            let x = if log_x { x.max(1e-12).log10() } else { *x };
+            pts.push((x, *y));
+        }
+    }
+    if pts.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (x, y) in &pts {
+        x0 = x0.min(*x);
+        x1 = x1.max(*x);
+        y0 = y0.min(*y);
+        y1 = y1.max(*y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    // margin
+    let ypad = (y1 - y0) * 0.05;
+    let y0 = y0 - ypad;
+    let y1 = y1 + ypad;
+
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for (px, py) in &s.points {
+            let x = if log_x { px.max(1e-12).log10() } else { *px };
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64)
+                .round() as usize;
+            let cy = (((py - y0) / (y1 - y0)) * (height - 1) as f64)
+                .round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = s.marker;
+        }
+    }
+    let mut out = format!("\n{title}\n");
+    let yfmt = |v: f64| format!("{v:8.2}");
+    for (i, row) in grid.iter().enumerate() {
+        let yval = y1 - (y1 - y0) * i as f64 / (height - 1) as f64;
+        let label = if i % 4 == 0 { yfmt(yval) } else { " ".repeat(8) };
+        out.push_str(&format!("{label} |{}\n",
+                              row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("{} +{}\n", " ".repeat(8), "-".repeat(width)));
+    let xl = if log_x {
+        format!("log10({xlabel}): {:.2} .. {:.2}", x0, x1)
+    } else {
+        format!("{xlabel}: {x0:.2} .. {x1:.2}")
+    };
+    out.push_str(&format!("{} {xl}   (y: {ylabel})\n", " ".repeat(8)));
+    for s in series {
+        out.push_str(&format!("{}   {} = {}\n", " ".repeat(8), s.marker,
+                              s.label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markers_and_legend() {
+        let s = scatter(
+            "Fig", "bops", "acc",
+            &[
+                Series { label: "bb".into(),
+                         points: vec![(1.0, 0.9), (10.0, 0.95)],
+                         marker: 'o' },
+                Series { label: "fixed".into(),
+                         points: vec![(5.0, 0.85)], marker: 'x' },
+            ],
+            40, 12, true,
+        );
+        assert!(s.contains('o') && s.contains('x'));
+        assert!(s.contains("o = bb"));
+        assert!(s.contains("log10(bops)"));
+    }
+
+    #[test]
+    fn empty_is_graceful() {
+        let s = scatter("F", "x", "y", &[], 10, 5, false);
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn degenerate_ranges_ok() {
+        let s = scatter(
+            "F", "x", "y",
+            &[Series { label: "a".into(), points: vec![(1.0, 1.0)],
+                       marker: '*' }],
+            10, 5, false,
+        );
+        assert!(s.contains('*'));
+    }
+}

@@ -1,0 +1,115 @@
+//! Markdown/ASCII table builder used by every experiment harness.
+
+/// Accumulates rows and renders a padded, pipe-delimited table.
+#[derive(Debug, Clone, Default)]
+pub struct TableBuilder {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl TableBuilder {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(),
+                   "row width mismatch in table {:?}", self.title);
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> =
+            cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// `value ± err` cell in paper style.
+    pub fn pm(value: f64, err: f64, digits: usize) -> String {
+        format!("{value:.digits$}±{err:.digits$}")
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("\n## {}\n\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// Comma-separated form for machine consumption.
+    pub fn render_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TableBuilder::new("T", &["Method", "Acc"]);
+        t.row_str(&["FP32", "93.05"]);
+        t.row_str(&["BB mu=0.01", "93.2"]);
+        let s = t.render();
+        assert!(s.contains("## T"));
+        assert!(s.contains("| FP32       | 93.05 |"));
+    }
+
+    #[test]
+    fn pm_formats() {
+        assert_eq!(TableBuilder::pm(93.234, 0.104, 2), "93.23±0.10");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut t = TableBuilder::new("T", &["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn csv_roundtrip_width() {
+        let mut t = TableBuilder::new("T", &["a", "b"]);
+        t.row_str(&["1", "2"]);
+        assert_eq!(t.render_csv(), "a,b\n1,2\n");
+    }
+}

@@ -1,0 +1,313 @@
+//! Artifact manifests — the L2 <-> L3 contract (DESIGN.md §6).
+//!
+//! A manifest freezes the flat parameter layout, the gate-slot vector,
+//! the layer MAC table and the executable I/O ordering for one exported
+//! model. Everything the coordinator knows about a model comes from
+//! here; the Rust model descriptors (`models::descriptor`) are used only
+//! to cross-check it in tests and to produce paper-scale analytic
+//! tables.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::synth::DatasetSpec;
+use crate::models::LayerDesc;
+use crate::quant::gates::GateView;
+use crate::util::json::Json;
+
+/// One parameter tensor in the flat layout.
+#[derive(Debug, Clone)]
+pub struct ParamDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// 'w' weights | 'g' gate logits | 's' range scales.
+    pub group: char,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// One quantizer's slot block in the global gate vector.
+#[derive(Debug, Clone)]
+pub struct QuantDesc {
+    pub name: String,
+    /// 'w' weight | 'a' activation.
+    pub kind: char,
+    pub signed: bool,
+    pub channels: usize,
+    pub levels: Vec<u32>,
+    pub offset: usize,
+    pub n_slots: usize,
+    pub consumer_macs: u64,
+}
+
+impl QuantDesc {
+    pub fn view(&self) -> GateView {
+        GateView { channels: self.channels, levels: self.levels.clone() }
+    }
+}
+
+/// Parsed `<model>_manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub engine: String,
+    pub preset: String,
+    pub batch: usize,
+    pub n_params: usize,
+    pub n_slots: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub params: Vec<ParamDesc>,
+    pub quantizers: Vec<QuantDesc>,
+    pub layers: Vec<LayerDesc>,
+    pub lam_base: Vec<f32>,
+    pub dataset: DatasetSpec,
+    pub hlo_train: PathBuf,
+    pub hlo_eval: PathBuf,
+    pub init_file: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/<model>_manifest.json`.
+    pub fn load(dir: &Path, model: &str) -> Result<Manifest> {
+        let path = dir.join(format!("{model}_manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {path:?}"))?;
+        let v = Json::parse(&text)
+            .with_context(|| format!("parse manifest {path:?}"))?;
+        Self::from_json(&v, dir)
+    }
+
+    pub fn from_json(v: &Json, dir: &Path) -> Result<Manifest> {
+        let params = v
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| -> Result<ParamDesc> {
+                Ok(ParamDesc {
+                    name: p.get("name")?.as_str()?.into(),
+                    shape: p.get("shape")?.usize_vec()?,
+                    group: p.get("group")?.as_str()?.chars().next()
+                        .unwrap_or('w'),
+                    offset: p.get("offset")?.as_usize()?,
+                    size: p.get("size")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let quantizers = v
+            .get("quantizers")?
+            .as_arr()?
+            .iter()
+            .map(|q| -> Result<QuantDesc> {
+                Ok(QuantDesc {
+                    name: q.get("name")?.as_str()?.into(),
+                    kind: q.get("kind")?.as_str()?.chars().next()
+                        .unwrap_or('a'),
+                    signed: q.get("signed")?.as_bool()?,
+                    channels: q.get("channels")?.as_usize()?,
+                    levels: q
+                        .get("levels")?
+                        .usize_vec()?
+                        .into_iter()
+                        .map(|b| b as u32)
+                        .collect(),
+                    offset: q.get("offset")?.as_usize()?,
+                    n_slots: q.get("n_slots")?.as_usize()?,
+                    consumer_macs: q.get("consumer_macs")?.as_f64()? as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let layers = v
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| -> Result<LayerDesc> {
+                Ok(LayerDesc {
+                    name: l.get("name")?.as_str()?.into(),
+                    kind: l.get("kind")?.as_str()?.into(),
+                    macs: l.get("macs")?.as_f64()? as u64,
+                    cin: l.get("cin")?.as_usize()?,
+                    cout: l.get("cout")?.as_usize()?,
+                    weight_q: l.get("weight_q")?.as_str()?.into(),
+                    act_q: l.get("act_q")?.as_str()?.into(),
+                    residual_input: l.get("residual_input")?.as_bool()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let man = Manifest {
+            name: v.get("name")?.as_str()?.into(),
+            engine: v.get("engine")?.as_str()?.into(),
+            preset: v.get("preset")?.as_str()?.into(),
+            batch: v.get("batch")?.as_usize()?,
+            n_params: v.get("n_params")?.as_usize()?,
+            n_slots: v.get("n_slots")?.as_usize()?,
+            input_shape: v.get("input_shape")?.usize_vec()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            params,
+            quantizers,
+            layers,
+            lam_base: v.get("lam_base")?.f32_vec()?,
+            dataset: DatasetSpec::from_json(v.get("dataset")?)?,
+            hlo_train: dir.join(v.get("hlo_train")?.as_str()?),
+            hlo_eval: dir.join(v.get("hlo_eval")?.as_str()?),
+            init_file: dir.join(v.get("init_file")?.as_str()?),
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Internal consistency checks — fail fast on a stale manifest.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0;
+        for p in &self.params {
+            if p.offset != off {
+                bail!("param {} offset {} != expected {}", p.name,
+                      p.offset, off);
+            }
+            let n: usize = p.shape.iter().product::<usize>().max(1);
+            if n != p.size {
+                bail!("param {} size mismatch", p.name);
+            }
+            off += p.size;
+        }
+        if off != self.n_params {
+            bail!("param total {off} != n_params {}", self.n_params);
+        }
+        let mut soff = 0;
+        for q in &self.quantizers {
+            if q.offset != soff {
+                bail!("quantizer {} slot offset mismatch", q.name);
+            }
+            soff += q.n_slots;
+        }
+        if soff != self.n_slots {
+            bail!("slot total {soff} != n_slots {}", self.n_slots);
+        }
+        if self.lam_base.len() != self.n_slots {
+            bail!("lam_base length mismatch");
+        }
+        Ok(())
+    }
+
+    pub fn param(&self, name: &str) -> Result<&ParamDesc> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| format!("no param {name:?}"))
+    }
+
+    pub fn quantizer(&self, name: &str) -> Result<&QuantDesc> {
+        self.quantizers
+            .iter()
+            .find(|q| q.name == name)
+            .with_context(|| format!("no quantizer {name:?}"))
+    }
+
+    /// Load the initial flat parameter vector.
+    pub fn load_init(&self) -> Result<Vec<f32>> {
+        let v = crate::util::binio::read_f32_file(&self.init_file)?;
+        if v.len() != self.n_params {
+            bail!("init file has {} params, manifest says {}", v.len(),
+                  self.n_params);
+        }
+        Ok(v)
+    }
+
+    /// Per-slot phi parameter indices (slot -> flat offset), for
+    /// thresholding gates out of a checkpoint. Empty for DQ manifests.
+    pub fn phi_index(&self) -> Vec<usize> {
+        if self.engine == "dq" {
+            return Vec::new();
+        }
+        let mut idx = vec![0usize; self.n_slots];
+        for q in &self.quantizers {
+            if let Ok(p) = self.param(&format!("{}.phi", q.name)) {
+                for i in 0..q.n_slots {
+                    idx[q.offset + i] = p.offset + i;
+                }
+            }
+        }
+        idx
+    }
+
+    /// Group mask as per-element learning-rate selector ('w'|'g'|'s').
+    pub fn group_of(&self, flat_index: usize) -> char {
+        // params are offset-sorted; binary search the segment
+        let mut lo = 0;
+        let mut hi = self.params.len();
+        while lo + 1 < hi {
+            let mid = (lo + hi) / 2;
+            if self.params[mid].offset <= flat_index {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        self.params[lo].group
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json() -> String {
+        r#"{
+        "name":"tiny","engine":"bb","preset":"small","batch":4,
+        "n_params":10,"n_slots":6,"input_shape":[2,2,1],"num_classes":2,
+        "levels":[2,4,8],
+        "dataset":{"name":"mnist_like","input":[2,2,1],"classes":2,
+                   "train":8,"test":4},
+        "params":[
+         {"name":"a.w","shape":[2,2],"group":"w","offset":0,"size":4},
+         {"name":"a.w.phi","shape":[4],"group":"g","offset":4,"size":4},
+         {"name":"a.w.beta","shape":[1],"group":"s","offset":8,"size":1},
+         {"name":"a.b","shape":[1],"group":"w","offset":9,"size":1}],
+        "quantizers":[
+         {"name":"a.w","kind":"w","signed":true,"channels":2,
+          "levels":[2,4,8],"layer":"a","offset":0,"consumer_macs":100,
+          "n_slots":4},
+         {"name":"a.in","kind":"a","signed":false,"channels":1,
+          "levels":[2,4,8],"layer":null,"offset":4,"consumer_macs":100,
+          "n_slots":2}],
+        "layers":[
+         {"name":"a","kind":"conv","macs":100,"cin":1,"cout":2,
+          "weight_q":"a.w","act_q":"a.in","residual_input":false}],
+        "lam_base":[1,1,4,8,2,4],
+        "hlo_train":"t.hlo.txt","hlo_eval":"e.hlo.txt",
+        "init_file":"i.bin"}"#
+            .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let v = Json::parse(&tiny_manifest_json()).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp")).unwrap();
+        assert_eq!(m.n_params, 10);
+        assert_eq!(m.quantizers[1].offset, 4);
+        assert_eq!(m.param("a.w.beta").unwrap().offset, 8);
+        assert_eq!(m.group_of(0), 'w');
+        assert_eq!(m.group_of(5), 'g');
+        assert_eq!(m.group_of(8), 's');
+        assert_eq!(m.group_of(9), 'w');
+    }
+
+    #[test]
+    fn phi_index_maps_slots() {
+        let v = Json::parse(&tiny_manifest_json()).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp")).unwrap();
+        let idx = m.phi_index();
+        assert_eq!(idx.len(), 6);
+        assert_eq!(&idx[..4], &[4, 5, 6, 7]);
+        // a.in has no phi param in this tiny manifest -> stays 0
+    }
+
+    #[test]
+    fn validate_catches_bad_offsets() {
+        let bad = tiny_manifest_json().replace(
+            "\"offset\":4,\"size\":4", "\"offset\":5,\"size\":4");
+        let v = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&v, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! Executable loading and typed execution over the PJRT CPU client.
+//!
+//! One global client per process; compiled executables are cached by
+//! path so sweeps across modes reuse compilations. The train/eval entry
+//! points marshal flat `Vec<f32>` state into `Literal`s and unpack the
+//! tuple outputs.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::Manifest;
+use super::state::TrainState;
+use crate::util::logging;
+
+/// Outputs of one train step (host copies of scalar/small outputs; the
+/// updated state is written back into the passed-in `TrainState`).
+#[derive(Debug, Clone)]
+pub struct TrainOutputs {
+    pub loss: f32,
+    pub correct: f32,
+    pub reg: f32,
+    /// Per-slot gate inclusion probabilities (BB) or inferred bits (DQ).
+    pub probs: Vec<f32>,
+}
+
+/// Outputs of one eval step.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOutputs {
+    pub loss: f32,
+    pub correct: f32,
+}
+
+/// A compiled HLO executable plus its role metadata.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {:?}", self.path))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Process-wide runtime: PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT client")?;
+        logging::debug(format!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        ));
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load + compile an HLO text file (cached).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Executable>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(path) {
+            return Ok(hit.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))?;
+        logging::debug(format!(
+            "compiled {path:?} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        ));
+        let arc = std::sync::Arc::new(Executable {
+            exe,
+            path: path.to_path_buf(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Run one train step. Input ordering matches
+    /// `steps.example_args_train`; see the manifest's `train_args`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        exe: &Executable,
+        man: &Manifest,
+        state: &mut TrainState,
+        x: &[f32],
+        y: &[i32],
+        seed: i32,
+        lrs: (f32, f32, f32),
+        lock_mask: &[f32],
+        lock_val: &[f32],
+        lam: &[f32],
+        det_flag: f32,
+    ) -> Result<TrainOutputs> {
+        if lock_mask.len() != man.n_slots
+            || lock_val.len() != man.n_slots
+            || lam.len() != man.n_slots
+        {
+            bail!("gate vector length mismatch vs n_slots {}", man.n_slots);
+        }
+        state.step += 1;
+        let mut dims: Vec<i64> = vec![man.batch as i64];
+        dims.extend(man.input_shape.iter().map(|d| *d as i64));
+        // DQ artifacts have no gates: the lowering dead-code-eliminates
+        // the unused (seed, lock_mask, lock_val, det_flag) parameters,
+        // leaving the 10 remaining inputs in their original order.
+        let dq = man.engine == "dq";
+        let mut inputs = vec![
+            xla::Literal::vec1(&state.params),
+            xla::Literal::vec1(&state.m),
+            xla::Literal::vec1(&state.v),
+            xla::Literal::vec1(x).reshape(&dims)?,
+            xla::Literal::vec1(y),
+        ];
+        if !dq {
+            inputs.push(xla::Literal::scalar(seed));
+        }
+        inputs.push(xla::Literal::scalar(state.step as f32));
+        inputs.push(xla::Literal::scalar(lrs.0));
+        inputs.push(xla::Literal::scalar(lrs.1));
+        inputs.push(xla::Literal::scalar(lrs.2));
+        if !dq {
+            inputs.push(xla::Literal::vec1(lock_mask));
+            inputs.push(xla::Literal::vec1(lock_val));
+        }
+        inputs.push(xla::Literal::vec1(lam));
+        if !dq {
+            inputs.push(xla::Literal::scalar(det_flag));
+        }
+        let outs = exe.execute(&inputs)?;
+        if outs.len() != 7 {
+            bail!("train step returned {} outputs, want 7", outs.len());
+        }
+        state.params = outs[0].to_vec::<f32>()?;
+        state.m = outs[1].to_vec::<f32>()?;
+        state.v = outs[2].to_vec::<f32>()?;
+        Ok(TrainOutputs {
+            loss: outs[3].to_vec::<f32>()?[0],
+            correct: outs[4].to_vec::<f32>()?[0],
+            reg: outs[5].to_vec::<f32>()?[0],
+            probs: outs[6].to_vec::<f32>()?,
+        })
+    }
+
+    /// Run one eval step with explicit binary gates.
+    pub fn eval_step(
+        &self,
+        exe: &Executable,
+        man: &Manifest,
+        params: &[f32],
+        gates: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<EvalOutputs> {
+        let mut dims: Vec<i64> = vec![man.batch as i64];
+        dims.extend(man.input_shape.iter().map(|d| *d as i64));
+        // DQ eval has no gates parameter (dead-code-eliminated).
+        let mut inputs = vec![xla::Literal::vec1(params)];
+        if man.engine != "dq" {
+            inputs.push(xla::Literal::vec1(gates));
+        }
+        inputs.push(xla::Literal::vec1(x).reshape(&dims)?);
+        inputs.push(xla::Literal::vec1(y));
+        let outs = exe.execute(&inputs)?;
+        if outs.len() != 2 {
+            bail!("eval step returned {} outputs, want 2", outs.len());
+        }
+        Ok(EvalOutputs {
+            loss: outs[0].to_vec::<f32>()?[0],
+            correct: outs[1].to_vec::<f32>()?[0],
+        })
+    }
+
+    /// Run the standalone quantizer-forward artifact (parity checks).
+    pub fn quantizer_fwd(
+        &self,
+        exe: &Executable,
+        x: &[f32],
+        rows: usize,
+        beta: &[f32],
+        z2: &[f32],
+        zh: &[f32],
+    ) -> Result<Vec<f32>> {
+        let cols = x.len() / rows;
+        let inputs = vec![
+            xla::Literal::vec1(x).reshape(&[rows as i64, cols as i64])?,
+            xla::Literal::vec1(beta),
+            xla::Literal::vec1(z2),
+            xla::Literal::vec1(zh),
+        ];
+        let outs = exe.execute(&inputs)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}

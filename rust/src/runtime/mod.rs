@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT artifacts and execute them from the hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO **text** from
+//! `artifacts/` is parsed into an `HloModuleProto`, compiled once per
+//! process, and executed with `Literal` inputs. Text is the interchange
+//! format because jax >= 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1's proto path rejects (see aot.py).
+
+pub mod artifact;
+pub mod exec;
+pub mod state;
+
+pub use artifact::{Manifest, ParamDesc, QuantDesc};
+pub use exec::{Executable, Runtime};
+pub use state::TrainState;

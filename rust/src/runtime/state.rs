@@ -1,0 +1,68 @@
+//! Mutable training state: flat parameters + Adam moments + step count.
+
+use anyhow::Result;
+
+use super::artifact::Manifest;
+
+/// The complete optimizer-visible state of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// 1-based Adam step counter (bias correction).
+    pub step: u64,
+}
+
+impl TrainState {
+    /// Fresh state from the artifact's initial parameters.
+    pub fn init(man: &Manifest) -> Result<TrainState> {
+        let params = man.load_init()?;
+        let n = params.len();
+        Ok(TrainState { params, m: vec![0.0; n], v: vec![0.0; n], step: 0 })
+    }
+
+    /// State around externally-provided parameters (checkpoint restore).
+    pub fn from_params(params: Vec<f32>) -> TrainState {
+        let n = params.len();
+        TrainState { params, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+
+    /// Read the phi logits for every gate slot (BB manifests).
+    pub fn phi_slots(&self, man: &Manifest) -> Vec<f64> {
+        man.phi_index()
+            .iter()
+            .map(|i| self.params[*i] as f64)
+            .collect()
+    }
+
+    /// Reset optimizer moments (used between training phases, matching
+    /// the paper's separate fine-tuning stage).
+    pub fn reset_optimizer(&mut self) {
+        self.m.iter_mut().for_each(|v| *v = 0.0);
+        self.v.iter_mut().for_each(|v| *v = 0.0);
+        self.step = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_params_zeroes_moments() {
+        let st = TrainState::from_params(vec![1.0, 2.0]);
+        assert_eq!(st.m, vec![0.0, 0.0]);
+        assert_eq!(st.step, 0);
+    }
+
+    #[test]
+    fn reset_optimizer_clears() {
+        let mut st = TrainState::from_params(vec![1.0]);
+        st.m[0] = 5.0;
+        st.step = 9;
+        st.reset_optimizer();
+        assert_eq!(st.m[0], 0.0);
+        assert_eq!(st.step, 0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Minimal host-side f32 tensor (ndarray is not vendored).
+//!
+//! Device compute happens in the AOT executables; this type only backs
+//! the host paths: dataset batches, parameter blobs, metric reductions.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n,
+                  data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {} elements to {:?}", self.data.len(),
+                  shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// View row `i` of a 2-D-interpreted tensor (first axis splits).
+    pub fn row(&self, i: usize) -> &[f32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &self.data[i * stride..(i + 1) * stride]
+    }
+
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.shape[0])
+            .map(|i| {
+                let r = self.row(i);
+                let mut best = 0;
+                for (j, v) in r.iter().enumerate() {
+                    if *v > r[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, b| a.max(b.abs()))
+    }
+
+    /// Elementwise maximum absolute difference vs another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |a, (x, y)| a.max((x - y).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let t = Tensor::new(vec![2, 3], vec![1., 5., 2., 9., 0., 3.])
+            .unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let r = t.clone().reshape(vec![4]).unwrap();
+        assert_eq!(r.data, t.data);
+        assert!(t.reshape(vec![3]).is_err());
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::new(vec![3], vec![-2.0, 1.0, 0.5]).unwrap();
+        assert!((t.mean() + 1.0 / 6.0).abs() < 1e-6);
+        assert_eq!(t.max_abs(), 2.0);
+    }
+}

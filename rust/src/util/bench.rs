@@ -1,0 +1,135 @@
+//! Hand-rolled micro/throughput benchmark harness (criterion is not
+//! vendored). Used by every `cargo bench` target (`harness = false`).
+//!
+//! Reports min/median/mean/p95 wall time per iteration plus an optional
+//! user-supplied throughput unit, in a criterion-like one-line format
+//! that `EXPERIMENTS.md §Perf` quotes directly.
+
+use std::time::Instant;
+
+/// One benchmark's timing summary (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Summary {
+    pub fn line(&self, throughput: Option<(f64, &str)>) -> String {
+        let mut s = format!(
+            "{:<44} iters={:<4} min={} median={} mean={} p95={}",
+            self.name,
+            self.iters,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+        );
+        if let Some((per_iter, unit)) = throughput {
+            let rate = per_iter / (self.median_ns * 1e-9);
+            s.push_str(&format!("  [{rate:.1} {unit}/s]"));
+        }
+        s
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Bench runner: warms up, then runs timed iterations until both the
+/// minimum iteration count and the time budget are satisfied.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget_secs: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup_iters: 3, min_iters: 10, max_iters: 1000,
+               budget_secs: 5.0 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { warmup_iters: 1, min_iters: 5, max_iters: 50,
+               budget_secs: 2.0 }
+    }
+
+    /// Time `f`, which performs one iteration per call.
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> Summary {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < self.min_iters
+                || start.elapsed().as_secs_f64() < self.budget_secs)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        summarize(name, &mut samples)
+    }
+}
+
+fn summarize(name: &str, samples: &mut [f64]) -> Summary {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    Summary {
+        name: name.to_string(),
+        iters: n,
+        min_ns: samples[0],
+        median_ns: samples[n / 2],
+        mean_ns: mean,
+        p95_ns: samples[(n as f64 * 0.95) as usize % n],
+    }
+}
+
+/// Convenience for bench binaries: print header once.
+pub fn header(title: &str) {
+    println!("=== bench: {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_summarizes() {
+        let b = Bench { warmup_iters: 1, min_iters: 5, max_iters: 10,
+                        budget_secs: 0.2 };
+        let mut acc = 0u64;
+        let s = b.run("noop", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.iters >= 5);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn format_scales() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,144 @@
+//! Little-endian binary I/O for parameter/checkpoint blobs.
+//!
+//! Format shared with `python/compile/aot.py` (`init.bin`: raw f32 LE)
+//! and with the checkpoint writer (`coordinator::checkpoint`), which
+//! adds a small header on top of these primitives.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Read a whole file of raw little-endian f32 values.
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let mut f = BufReader::new(
+        File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    bytes_to_f32(&bytes)
+}
+
+/// Write raw little-endian f32 values.
+pub fn write_f32_file(path: &Path, data: &[f32]) -> Result<()> {
+    let mut f = BufWriter::new(
+        File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    f.write_all(&f32_to_bytes(data))?;
+    Ok(())
+}
+
+pub fn bytes_to_f32(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("byte length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn f32_to_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Length-prefixed section writer for simple container formats.
+pub struct SectionWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> SectionWriter<W> {
+    pub fn new(w: W) -> Self {
+        Self { w }
+    }
+
+    pub fn write_str(&mut self, s: &str) -> Result<()> {
+        self.write_bytes(s.as_bytes())
+    }
+
+    pub fn write_f32s(&mut self, data: &[f32]) -> Result<()> {
+        self.write_bytes(&f32_to_bytes(data))
+    }
+
+    fn write_bytes(&mut self, b: &[u8]) -> Result<()> {
+        self.w.write_all(&(b.len() as u64).to_le_bytes())?;
+        self.w.write_all(b)?;
+        Ok(())
+    }
+}
+
+/// Length-prefixed section reader.
+pub struct SectionReader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> SectionReader<R> {
+    pub fn new(r: R) -> Self {
+        Self { r }
+    }
+
+    pub fn read_str(&mut self) -> Result<String> {
+        Ok(String::from_utf8(self.read_bytes()?)?)
+    }
+
+    pub fn read_f32s(&mut self) -> Result<Vec<f32>> {
+        bytes_to_f32(&self.read_bytes()?)
+    }
+
+    fn read_bytes(&mut self) -> Result<Vec<u8>> {
+        let mut len = [0u8; 8];
+        self.r.read_exact(&mut len)?;
+        let n = u64::from_le_bytes(len) as usize;
+        if n > (1 << 32) {
+            bail!("section too large: {n}");
+        }
+        let mut buf = vec![0u8; n];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let v = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32(&f32_to_bytes(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_misaligned() {
+        assert!(bytes_to_f32(&[0, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("bbits_binio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let v: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        write_f32_file(&p, &v).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), v);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn sections_roundtrip() {
+        let mut buf = Vec::new();
+        {
+            let mut w = SectionWriter::new(&mut buf);
+            w.write_str("header").unwrap();
+            w.write_f32s(&[1.0, 2.0]).unwrap();
+        }
+        let mut r = SectionReader::new(&buf[..]);
+        assert_eq!(r.read_str().unwrap(), "header");
+        assert_eq!(r.read_f32s().unwrap(), vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,89 @@
+//! Tiny leveled logger with wall-clock timestamps.
+//!
+//! One global level, set once from the CLI (`--log-level`). Macro-free
+//! call sites (`log::info(...)`) keep the dependency surface at zero.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level_from_str(s: &str) -> Option<Level> {
+    match s {
+        "debug" => Some(Level::Debug),
+        "info" => Some(Level::Info),
+        "warn" => Some(Level::Warn),
+        "error" => Some(Level::Error),
+        _ => None,
+    }
+}
+
+fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+fn emit(level: &str, msg: &str) {
+    let t = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default();
+    let secs = t.as_secs() % 86_400;
+    eprintln!(
+        "[{:02}:{:02}:{:02}.{:03} {level:5}] {msg}",
+        secs / 3600,
+        (secs % 3600) / 60,
+        secs % 60,
+        t.subsec_millis()
+    );
+}
+
+pub fn debug(msg: impl AsRef<str>) {
+    if enabled(Level::Debug) {
+        emit("DEBUG", msg.as_ref());
+    }
+}
+
+pub fn info(msg: impl AsRef<str>) {
+    if enabled(Level::Info) {
+        emit("INFO", msg.as_ref());
+    }
+}
+
+pub fn warn(msg: impl AsRef<str>) {
+    if enabled(Level::Warn) {
+        emit("WARN", msg.as_ref());
+    }
+}
+
+pub fn error(msg: impl AsRef<str>) {
+    if enabled(Level::Error) {
+        emit("ERROR", msg.as_ref());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(level_from_str("debug"), Some(Level::Debug));
+        assert_eq!(level_from_str("bogus"), None);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Level::Debug < Level::Error);
+    }
+}

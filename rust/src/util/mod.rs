@@ -1,0 +1,66 @@
+//! Infrastructure substrates hand-rolled for the offline environment.
+//!
+//! The vendored registry only carries the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (serde, clap, criterion,
+//! proptest, rand, tokio) are unavailable. Each submodule here is a
+//! deliberately small, well-tested replacement for the slice of
+//! functionality this project needs.
+
+pub mod bench;
+pub mod binio;
+pub mod json;
+pub mod logging;
+pub mod prop;
+
+/// Format a float with engineering-style precision for tables.
+pub fn fmt_sig(v: f64, digits: usize) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let mag = v.abs().log10().floor() as i32;
+    let dec = (digits as i32 - 1 - mag).max(0) as usize;
+    format!("{v:.dec$}")
+}
+
+/// Mean and (population) standard deviation of a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Standard error of the mean.
+pub fn stderr_of_mean(xs: &[f64]) -> f64 {
+    if xs.len() <= 1 {
+        return 0.0;
+    }
+    let (_, sd) = mean_std(xs);
+    sd / ((xs.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_sig_rounds() {
+        assert_eq!(fmt_sig(0.5123, 2), "0.51");
+        assert_eq!(fmt_sig(93.05123, 4), "93.05");
+        assert_eq!(fmt_sig(0.0, 3), "0");
+    }
+
+    #[test]
+    fn stderr_zero_for_single() {
+        assert_eq!(stderr_of_mean(&[5.0]), 0.0);
+    }
+}

@@ -1,0 +1,60 @@
+//! Focused debug: does one train step move the parameters?
+
+use std::path::Path;
+
+use bayesian_bits::data::{generate, Batcher};
+use bayesian_bits::runtime::{Manifest, Runtime, TrainState};
+
+#[test]
+fn train_step_moves_params() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let man = Manifest::load(&dir, "lenet5").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&man.hlo_train).unwrap();
+    let mut state = TrainState::init(&man).unwrap();
+    let before = state.params.clone();
+    let train = generate(&man.dataset, 1, false).unwrap();
+    let mut b = Batcher::new(train, man.batch, false, 1);
+    let n_in = man.batch * man.input_shape.iter().product::<usize>();
+    let mut x = vec![0.0f32; n_in];
+    let mut y = vec![0i32; man.batch];
+    let g = man.n_slots;
+    let mut last_loss = 0.0;
+    let mut last_reg = 0.0;
+    for t in 0..20 {
+        b.next_into(&mut x, &mut y);
+        let out = rt
+            .train_step(
+                &exe, &man, &mut state, &x, &y, 7 + t,
+                (1e-3, 3e-2, 1e-3),
+                &vec![0.0; g], &vec![0.0; g], &vec![1e-3; g], 0.0,
+            )
+            .unwrap();
+        if t < 3 || t == 19 {
+            eprintln!("t={t} loss={} reg={} probs[0]={} probs[last]={}",
+                      out.loss, out.reg, out.probs[0],
+                      out.probs[g - 1]);
+        }
+        last_loss = out.loss;
+        last_reg = out.reg;
+    }
+    let _ = (last_loss, last_reg);
+    // group-wise |delta|
+    let mut dw = 0.0f64;
+    let mut dg = 0.0f64;
+    let mut ds = 0.0f64;
+    for p in &man.params {
+        let d: f64 = (p.offset..p.offset + p.size)
+            .map(|i| (state.params[i] - before[i]).abs() as f64)
+            .sum();
+        match p.group {
+            'w' => dw += d,
+            'g' => dg += d,
+            's' => ds += d,
+            _ => {}
+        }
+    }
+    eprintln!("delta by group: w={dw:.6} g={dg:.6} s={ds:.6}");
+    assert!(dw > 0.0, "weight parameters did not move");
+    assert!(dg > 0.0, "gate parameters did not move");
+}

@@ -1,0 +1,244 @@
+//! Cross-module property tests (hand-rolled harness, util::prop).
+//!
+//! Invariants spanning quant/bops/gates/data that unit tests inside the
+//! modules don't cover.
+
+use std::collections::BTreeMap;
+
+use bayesian_bits::bops::{BopCounter, QuantState};
+use bayesian_bits::data::synth::{generate, DatasetSpec};
+use bayesian_bits::models::{descriptor, Preset};
+use bayesian_bits::quant::gates::{
+    prob_active, test_time_gate, GateView, HardConcrete,
+};
+use bayesian_bits::quant::grid::{
+    bb_quantize_host, quantize_fixed_host, step_sizes, QuantConfig,
+};
+use bayesian_bits::util::json::Json;
+use bayesian_bits::util::prop::{check, Gen, PropResult};
+
+#[test]
+fn prop_step_size_recursion_matches_closed_form() {
+    check("step_size_closed_form", 300, |g: &mut Gen| {
+        let beta = g.f32_in(0.01, 100.0);
+        let signed = g.bool();
+        let cfg = QuantConfig::new(signed, &[2, 4, 8, 16, 32]);
+        let sizes = step_sizes(beta, &cfg);
+        let span = if signed { 2.0 * beta } else { beta };
+        for (s, b) in sizes.iter().zip([2u32, 4, 8, 16, 32]) {
+            let want = span as f64 / (2f64.powi(b as i32) - 1.0);
+            if ((*s as f64) - want).abs() > want * 1e-4 {
+                return PropResult::Fail(format!(
+                    "beta={beta} b={b}: {s} vs {want}"));
+            }
+        }
+        PropResult::Pass
+    });
+}
+
+#[test]
+fn prop_gated_chain_equals_fixed_quantizer() {
+    check("chain_equals_fixed", 150, |g: &mut Gen| {
+        let beta = g.f32_in(0.2, 6.0);
+        let signed = g.bool();
+        let n = g.usize_in(1, 64);
+        let x: Vec<f32> = (0..n)
+            .map(|_| {
+                let v = g.f32_in(-2.0 * beta, 2.0 * beta);
+                if signed { v } else { v.abs() }
+            })
+            .collect();
+        let k = g.usize_in(0, 4);
+        let mut zh = [0.0f32; 4];
+        for z in zh.iter_mut().take(k) {
+            *z = 1.0;
+        }
+        let bits = [2u32, 4, 8, 16, 32][k];
+        let cfg = QuantConfig::new(signed, &[2, 4, 8, 16, 32]);
+        let got = bb_quantize_host(&x, 1, beta, &[1.0], &zh, &cfg);
+        let want = quantize_fixed_host(&x, beta, bits, signed);
+        for (a, b) in got.iter().zip(&want) {
+            if (a - b).abs() > 2e-4 * beta.max(1.0) {
+                return PropResult::Fail(format!(
+                    "bits={bits} beta={beta}: {a} vs {b}"));
+            }
+        }
+        PropResult::Pass
+    });
+}
+
+#[test]
+fn prop_effective_bits_consistent_with_expected_bits() {
+    // For binary slot vectors, the soft expectation equals the hard
+    // effective bit width (pruning -> 0).
+    check("hard_vs_soft_bits", 300, |g: &mut Gen| {
+        let channels = g.usize_in(1, 8);
+        let view = GateView { channels, levels: vec![2, 4, 8, 16, 32] };
+        let n = view.n_slots();
+        let z: Vec<f32> = (0..n)
+            .map(|_| if g.bool() { 1.0 } else { 0.0 })
+            .collect();
+        // make channel block all-equal so "any channel" == "mean prob"
+        let all_on = z[0] > 0.5;
+        let mut z = z;
+        for c in 0..channels {
+            z[c] = if all_on { 1.0 } else { 0.0 };
+        }
+        let hard = view.effective_bits(&z) as f64;
+        // chain-consistent copy for the expectation
+        let mut zc = z.clone();
+        let mut open = all_on;
+        for i in 0..4 {
+            if !open {
+                zc[channels + i] = 0.0;
+            }
+            open = open && zc[channels + i] > 0.5;
+        }
+        let soft = view.expected_bits(&zc);
+        PropResult::check((hard - soft).abs() < 1e-9, || {
+            format!("hard {hard} vs soft {soft} (z={zc:?})")
+        })
+    });
+}
+
+#[test]
+fn prop_threshold_matches_prob_mass() {
+    check("threshold_vs_prob", 500, |g: &mut Gen| {
+        let phi = g.f64_in(-12.0, 12.0);
+        let open = test_time_gate(phi);
+        let p_zero = 1.0 - prob_active(phi);
+        PropResult::check(open == (p_zero < 0.34),
+                          || format!("phi={phi}"))
+    });
+}
+
+#[test]
+fn prop_hard_concrete_sample_bounds_and_monotonicity() {
+    check("hc_sample", 300, |g: &mut Gen| {
+        let phi = g.f64_in(-8.0, 8.0);
+        let u = g.f64_in(1e-6, 1.0 - 1e-6);
+        let hc = HardConcrete::new(phi);
+        let z = hc.sample(u);
+        if !(0.0..=1.0).contains(&z) {
+            return PropResult::Fail(format!("z={z}"));
+        }
+        // monotone in both u and phi
+        let z_up = HardConcrete::new(phi + 1.0).sample(u);
+        let z_uu = hc.sample((u + 0.1).min(1.0 - 1e-9));
+        PropResult::check(z_up >= z && z_uu >= z, || {
+            format!("phi={phi} u={u}: {z} {z_up} {z_uu}")
+        })
+    });
+}
+
+#[test]
+fn prop_bops_scale_invariance() {
+    // Relative BOPs are invariant to uniformly scaling all MACs.
+    check("bops_scale_invariant", 100, |g: &mut Gen| {
+        for model in ["lenet5", "vgg7", "resnet18"] {
+            let layers = descriptor(model, Preset::Small).unwrap();
+            let scale = g.usize_in(2, 50) as u64;
+            let scaled: Vec<_> = layers
+                .iter()
+                .cloned()
+                .map(|mut l| {
+                    l.macs *= scale;
+                    l
+                })
+                .collect();
+            let c1 = BopCounter::new(layers);
+            let c2 = BopCounter::new(scaled);
+            let w = *g.choose(&[2u32, 4, 8, 16]);
+            let s1 = c1.fixed_states(w, w);
+            let s2 = c2.fixed_states(w, w);
+            let (r1, r2) =
+                (c1.relative_bops_pct(&s1), c2.relative_bops_pct(&s2));
+            if (r1 - r2).abs() > 1e-9 {
+                return PropResult::Fail(format!("{model}: {r1} vs {r2}"));
+            }
+        }
+        PropResult::Pass
+    });
+}
+
+#[test]
+fn prop_pruning_reduces_bops() {
+    check("pruning_reduces_bops", 150, |g: &mut Gen| {
+        let layers = descriptor("vgg7", Preset::Small).unwrap();
+        let c = BopCounter::new(layers.clone());
+        let mut states: BTreeMap<String, QuantState> =
+            c.fixed_states(8, 8);
+        let full = c.bops(&states);
+        // prune a random layer's outputs by a random ratio
+        let li = g.usize_in(0, layers.len() - 1);
+        let keep = g.f64_in(0.0, 1.0);
+        states.insert(layers[li].weight_q.clone(),
+                      QuantState { bits: 8, keep_ratio: keep });
+        let pruned = c.bops(&states);
+        PropResult::check(pruned <= full + 1e-6, || {
+            format!("layer {li} keep {keep}: {pruned} > {full}")
+        })
+    });
+}
+
+#[test]
+fn prop_dataset_deterministic_and_finite() {
+    check("dataset_determinism", 20, |g: &mut Gen| {
+        let name = *g.choose(&["mnist_like", "cifar_like",
+                               "imagenet_like"]);
+        let c = if name == "mnist_like" { 1 } else { 3 };
+        let seed = g.rng.next_u64() % 1000;
+        let spec = DatasetSpec {
+            name: name.into(),
+            input: (8, 8, c),
+            classes: 4,
+            train: 32,
+            test: 8,
+        };
+        let a = generate(&spec, seed, false).unwrap();
+        let b = generate(&spec, seed, false).unwrap();
+        if a.images != b.images {
+            return PropResult::Fail("non-deterministic".into());
+        }
+        PropResult::check(a.images.iter().all(|v| v.is_finite()),
+                          || "non-finite pixels".into())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_numbers_and_strings() {
+    check("json_roundtrip", 300, |g: &mut Gen| {
+        let n = g.usize_in(0, 12);
+        let mut fields = Vec::new();
+        for i in 0..n {
+            let v = match g.usize_in(0, 3) {
+                0 => Json::Num(g.f64_in(-1e9, 1e9)),
+                1 => Json::Bool(g.bool()),
+                2 => Json::Str(format!("s{}\n\"{}", i,
+                                       g.usize_in(0, 100))),
+                _ => Json::Arr(vec![Json::Num(g.f64_in(-5.0, 5.0))]),
+            };
+            fields.push((format!("k{i}"), v));
+        }
+        let obj = Json::Obj(fields.into_iter().collect());
+        let text = obj.to_string();
+        match Json::parse(&text) {
+            Ok(back) if back == obj => PropResult::Pass,
+            Ok(_) => PropResult::Fail(format!("mismatch: {text}")),
+            Err(e) => PropResult::Fail(format!("parse error {e}: {text}")),
+        }
+    });
+}
+
+#[test]
+fn prop_lock_fixed_roundtrips_through_effective_bits() {
+    check("lock_fixed_roundtrip", 200, |g: &mut Gen| {
+        let channels = g.usize_in(1, 16);
+        let view = GateView { channels, levels: vec![2, 4, 8, 16, 32] };
+        let bits = *g.choose(&[0u32, 2, 4, 8, 16, 32]);
+        let (_, val) = view.lock_fixed(bits);
+        let got = view.effective_bits(&val);
+        PropResult::check(got == bits,
+                          || format!("bits {bits} -> {got}"))
+    });
+}

@@ -1,0 +1,137 @@
+//! Three-layer parity: python goldens vs Rust host oracle vs the
+//! PJRT-executed Pallas kernel, plus manifest <-> descriptor
+//! cross-checks. Requires `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+use bayesian_bits::models::{descriptor, Preset};
+use bayesian_bits::quant::grid::{bb_quantize_host, QuantConfig};
+use bayesian_bits::runtime::{Manifest, Runtime};
+use bayesian_bits::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn goldens_match_host_and_device() {
+    let dir = artifacts_dir();
+    let text =
+        std::fs::read_to_string(dir.join("goldens.json")).unwrap();
+    let g = Json::parse(&text).unwrap();
+    let shape = g.get("shape").unwrap().usize_vec().unwrap();
+    let levels: Vec<u32> = g.get("levels").unwrap().usize_vec().unwrap()
+        .iter().map(|v| *v as u32).collect();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&dir.join("quantizer_fwd.hlo.txt")).unwrap();
+    let cfg = QuantConfig::new(true, &levels);
+    for case in g.get("cases").unwrap().as_arr().unwrap() {
+        let x = case.get("x").unwrap().f32_vec().unwrap();
+        let beta = case.get("beta").unwrap().f32_vec().unwrap();
+        let z2 = case.get("z2").unwrap().f32_vec().unwrap();
+        let zh = case.get("zh").unwrap().f32_vec().unwrap();
+        let want = case.get("out").unwrap().f32_vec().unwrap();
+        let host =
+            bb_quantize_host(&x, shape[0], beta[0], &z2, &zh, &cfg);
+        let dev = rt
+            .quantizer_fwd(&exe, &x, shape[0], &beta, &z2, &zh)
+            .unwrap();
+        for ((h, d), w) in host.iter().zip(&dev).zip(&want) {
+            assert!((h - w).abs() < 1e-5,
+                    "host {h} vs golden {w}");
+            assert!((d - w).abs() < 1e-6,
+                    "device {d} vs golden {w}");
+        }
+    }
+}
+
+#[test]
+fn manifests_parse_and_validate_for_all_models() {
+    let dir = artifacts_dir();
+    for model in ["lenet5", "vgg7", "resnet18", "mobilenetv2",
+                  "lenet5_dq", "vgg7_dq", "resnet18_dq"] {
+        let man = Manifest::load(&dir, model).unwrap();
+        assert!(man.n_params > 0);
+        assert!(man.hlo_train.exists(), "{model} train HLO missing");
+        assert!(man.hlo_eval.exists());
+        let init = man.load_init().unwrap();
+        assert_eq!(init.len(), man.n_params);
+        assert!(init.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn manifest_layers_match_rust_descriptors() {
+    // The Rust-side model descriptors must agree with the python-built
+    // manifests on MACs, channel counts and quantizer wiring.
+    let dir = artifacts_dir();
+    for model in ["lenet5", "vgg7", "resnet18", "mobilenetv2"] {
+        let man = Manifest::load(&dir, model).unwrap();
+        let desc = descriptor(model, Preset::Small).unwrap();
+        assert_eq!(man.layers.len(), desc.len(), "{model} layer count");
+        for (a, b) in man.layers.iter().zip(&desc) {
+            assert_eq!(a.name, b.name, "{model}");
+            assert_eq!(a.macs, b.macs, "{model}/{}", a.name);
+            assert_eq!(a.cin, b.cin, "{model}/{}", a.name);
+            assert_eq!(a.cout, b.cout, "{model}/{}", a.name);
+            assert_eq!(a.weight_q, b.weight_q);
+            assert_eq!(a.act_q, b.act_q);
+        }
+    }
+}
+
+#[test]
+fn weight_quantizer_channels_match_layer_cout() {
+    let dir = artifacts_dir();
+    let man = Manifest::load(&dir, "resnet18").unwrap();
+    for l in &man.layers {
+        let q = man.quantizer(&l.weight_q).unwrap();
+        assert_eq!(q.channels, l.cout, "{}", l.name);
+        assert!(q.signed);
+        assert_eq!(q.kind, 'w');
+    }
+}
+
+#[test]
+fn lam_base_is_bop_proportional() {
+    let dir = artifacts_dir();
+    let man = Manifest::load(&dir, "lenet5").unwrap();
+    let max_macs =
+        man.layers.iter().map(|l| l.macs).max().unwrap() as f64;
+    for q in &man.quantizers {
+        let scale = q.consumer_macs as f64 / max_macs;
+        let ch_sum: f64 = man.lam_base
+            [q.offset..q.offset + q.channels]
+            .iter()
+            .map(|v| *v as f64)
+            .sum();
+        assert!((ch_sum - 2.0 * scale).abs() < 1e-3,
+                "{}: {ch_sum} vs {}", q.name, 2.0 * scale);
+        for (i, b) in q.levels.iter().skip(1).enumerate() {
+            let lam = man.lam_base[q.offset + q.channels + i] as f64;
+            assert!((lam - *b as f64 * scale).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn eval_is_deterministic_and_gate_sensitive() {
+    let dir = artifacts_dir();
+    let man = Manifest::load(&dir, "lenet5").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&man.hlo_eval).unwrap();
+    let params = man.load_init().unwrap();
+    let n_in = man.batch * man.input_shape.iter().product::<usize>();
+    let x: Vec<f32> =
+        (0..n_in).map(|i| ((i % 23) as f32 - 11.0) / 11.0).collect();
+    let y: Vec<i32> = (0..man.batch).map(|i| (i % 10) as i32).collect();
+    let open = vec![1.0f32; man.n_slots];
+    let a = rt.eval_step(&exe, &man, &params, &open, &x, &y).unwrap();
+    let b = rt.eval_step(&exe, &man, &params, &open, &x, &y).unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert_eq!(a.correct, b.correct);
+    // closing every gate prunes the whole network -> different loss
+    let closed = vec![0.0f32; man.n_slots];
+    let c = rt.eval_step(&exe, &man, &params, &closed, &x, &y).unwrap();
+    assert_ne!(a.loss, c.loss);
+}

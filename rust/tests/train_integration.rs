@@ -1,0 +1,206 @@
+//! Integration tests over the full training stack (artifacts required).
+//!
+//! These drive the real Trainer on the real PJRT runtime with reduced
+//! step budgets: learning happens, modes produce the configurations
+//! they promise, fixed baselines land on the paper's exact BOP
+//! percentages, and checkpoints round-trip.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use bayesian_bits::config::{Mode, RunConfig};
+use bayesian_bits::coordinator::gate_manager::GateManager;
+use bayesian_bits::coordinator::ptq;
+use bayesian_bits::coordinator::trainer::Trainer;
+use bayesian_bits::runtime::{Manifest, Runtime, TrainState};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn quick_cfg(model: &str, mode: Mode, mu: f64, steps: usize)
+             -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        mode,
+        mu,
+        steps,
+        finetune_steps: steps / 4,
+        lr_w: 1e-3,
+        lr_g: 3e-2,
+        lr_s: 1e-3,
+        eval_every: 0,
+        seed: 1,
+        deterministic_gates: false,
+        artifacts_dir: artifacts_dir().to_string_lossy().into_owned(),
+        out_dir: std::env::temp_dir().join("bbits_it")
+            .to_string_lossy().into_owned(),
+    }
+}
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::cpu().unwrap())
+}
+
+#[test]
+fn bb_training_learns_and_compresses() {
+    let rt = runtime();
+    let man = Manifest::load(&artifacts_dir(), "lenet5").unwrap();
+    // phi travels from +6 to the -0.94 threshold (Eq. 22); with Adam at
+    // lr_g = 3e-2 that takes ~250 steps, so give it 320.
+    let cfg = quick_cfg("lenet5", Mode::BayesianBits, 0.01, 320);
+    let mut trainer = Trainer::new(rt, man, cfg).unwrap();
+    let r = trainer.run().unwrap();
+    assert!(r.accuracy > 0.8, "accuracy {} too low", r.accuracy);
+    assert!(r.rel_bops_pct < 50.0,
+            "no compression learned: {}%", r.rel_bops_pct);
+    assert!(r.history.steps.len() >= 200);
+    // loss decreased
+    let first = r.history.steps[..10].iter()
+        .map(|s| s.loss as f64).sum::<f64>() / 10.0;
+    assert!(r.history.smoothed_loss(10) < first * 0.5);
+}
+
+#[test]
+fn fixed_mode_hits_paper_bops_exactly() {
+    let rt = runtime();
+    let man = Manifest::load(&artifacts_dir(), "lenet5").unwrap();
+    for ((w, a), want_pct) in
+        [((8u32, 8u32), 6.25), ((4, 4), 1.5625), ((2, 2), 0.390625)]
+    {
+        let cfg = quick_cfg("lenet5",
+                            Mode::Fixed { w_bits: w, a_bits: a }, 0.0, 20);
+        let mut trainer = Trainer::new(rt.clone(), man.clone(), cfg)
+            .unwrap();
+        let r = trainer.run().unwrap();
+        assert!((r.rel_bops_pct - want_pct).abs() < 1e-6,
+                "w{w}a{a}: {} vs {want_pct}", r.rel_bops_pct);
+    }
+}
+
+#[test]
+fn quant_only_mode_never_prunes() {
+    let rt = runtime();
+    let man = Manifest::load(&artifacts_dir(), "lenet5").unwrap();
+    let cfg = quick_cfg("lenet5", Mode::QuantOnly, 0.1, 80);
+    let mut trainer = Trainer::new(rt, man, cfg).unwrap();
+    let r = trainer.run().unwrap();
+    for (name, st) in &r.states {
+        assert!(st.keep_ratio == 1.0, "{name} pruned in quant-only mode");
+        assert!(st.bits >= 2, "{name} fully pruned in quant-only mode");
+    }
+}
+
+#[test]
+fn prune_only_mode_keeps_fixed_bits() {
+    let rt = runtime();
+    let man = Manifest::load(&artifacts_dir(), "lenet5").unwrap();
+    let cfg = quick_cfg(
+        "lenet5", Mode::PruneOnly { w_bits: 4, a_bits: 8 }, 0.5, 80);
+    let mut trainer = Trainer::new(rt, man.clone(), cfg).unwrap();
+    let r = trainer.run().unwrap();
+    for q in &man.quantizers {
+        let st = &r.states[&q.name];
+        if q.kind == 'a' {
+            assert_eq!(st.bits, 8, "{}", q.name);
+        } else if st.keep_ratio > 0.0 {
+            assert_eq!(st.bits, 4, "{}", q.name);
+        }
+    }
+}
+
+#[test]
+fn deterministic_gates_run_end_to_end() {
+    let rt = runtime();
+    let man = Manifest::load(&artifacts_dir(), "lenet5").unwrap();
+    let mut cfg = quick_cfg("lenet5", Mode::BayesianBits, 0.01, 40);
+    cfg.deterministic_gates = true;
+    cfg.lr_g /= 10.0;
+    let mut trainer = Trainer::new(rt, man, cfg).unwrap();
+    let r = trainer.run().unwrap();
+    assert!(r.deterministic);
+    assert!(r.accuracy.is_finite());
+}
+
+#[test]
+fn dq_baseline_trains_and_reports_bits() {
+    let rt = runtime();
+    let man = Manifest::load(&artifacts_dir(), "lenet5_dq").unwrap();
+    let cfg = quick_cfg("lenet5_dq", Mode::Dq, 0.05, 120);
+    let mut trainer = Trainer::new(rt, man, cfg).unwrap();
+    let r = trainer.run().unwrap();
+    assert!(r.accuracy > 0.5, "dq accuracy {}", r.accuracy);
+    // inferred bits live in the gate snapshots (one slot per quantizer)
+    let last = r.history.gate_snapshots.last().unwrap();
+    assert!(last.probs.iter().all(|b| (1.0..=32.0).contains(b)));
+    // regularizer should push bits below the 8-bit init on average
+    let mean: f32 =
+        last.probs.iter().sum::<f32>() / last.probs.len() as f32;
+    assert!(mean < 8.5, "mean bits {mean}");
+}
+
+#[test]
+fn ptq_pretrain_cache_and_learn() {
+    let rt = runtime();
+    let man = Manifest::load(&artifacts_dir(), "lenet5").unwrap();
+    let mut base_cfg = quick_cfg("lenet5", Mode::Fp32, 0.0, 150);
+    base_cfg.finetune_steps = 0;
+    let dir = std::env::temp_dir().join("bbits_it_ptq");
+    let _ = std::fs::remove_dir_all(&dir);
+    let ckpt = dir.join("base.ckpt");
+    let base =
+        ptq::pretrain_or_load(rt.clone(), &man, &base_cfg, &ckpt)
+            .unwrap();
+    assert!(ckpt.exists());
+    // second call loads from cache (same params)
+    let base2 =
+        ptq::pretrain_or_load(rt.clone(), &man, &base_cfg, &ckpt)
+            .unwrap();
+    assert_eq!(base.params, base2.params);
+
+    let p = ptq::ptq_learn(rt.clone(), &man, &base, 0.02, true, 300, 1,
+                           5e-2).unwrap();
+    assert!(p.accuracy > 0.5, "ptq accuracy {}", p.accuracy);
+    assert!(p.rel_bops_pct < 100.0);
+
+    let fixed = ptq::fixed_point(rt, &man, &base, 8, 8).unwrap();
+    assert!((fixed.rel_bops_pct - 6.25).abs() < 1e-6);
+}
+
+#[test]
+fn gate_manager_locks_cover_all_slots() {
+    let man = Manifest::load(&artifacts_dir(), "resnet18").unwrap();
+    let gm = GateManager::new(&man);
+    for mode in [
+        Mode::Fp32,
+        Mode::Fixed { w_bits: 4, a_bits: 8 },
+        Mode::QuantOnly,
+        Mode::PruneOnly { w_bits: 4, a_bits: 8 },
+        Mode::BayesianBits,
+    ] {
+        let (mask, val) = gm.locks(&mode);
+        assert_eq!(mask.len(), man.n_slots);
+        assert!(mask.iter().all(|m| *m == 0.0 || *m == 1.0));
+        assert!(val.iter().all(|v| *v == 0.0 || *v == 1.0));
+        // test-time gates under full locks equal the lock values
+        if matches!(mode, Mode::Fp32 | Mode::Fixed { .. }) {
+            let phi = vec![0.0f64; man.n_slots];
+            let z = gm.test_gates(&phi, &mask, &val);
+            assert_eq!(z, val);
+        }
+    }
+}
+
+#[test]
+fn frozen_state_restores_from_checkpoint() {
+    use bayesian_bits::coordinator::checkpoint;
+    let man = Manifest::load(&artifacts_dir(), "lenet5").unwrap();
+    let state = TrainState::init(&man).unwrap();
+    let dir = std::env::temp_dir().join("bbits_it_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("x.ckpt");
+    checkpoint::save(&p, &man.name, &state).unwrap();
+    let (name, got) = checkpoint::load(&p).unwrap();
+    assert_eq!(name, man.name);
+    assert_eq!(got.params, state.params);
+}
