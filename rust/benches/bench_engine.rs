@@ -1,0 +1,38 @@
+//! Integer engine throughput: images/sec per bit-width config and
+//! batch size, integer path vs the f32 simulated-quant fallback.
+//!
+//! The packed low-bit path wins on memory traffic (a 2-bit layer
+//! streams 16x fewer weight bytes than f32) and the win grows with
+//! batch size because each packed row is decoded once per batch.
+//! Emits `BENCH_engine.json` in the working directory — the
+//! machine-readable artifact perf tracking reads. The sweep itself is
+//! `engine::throughput_sweep`, shared with `bbits engine-bench`.
+
+use std::path::Path;
+
+use bayesian_bits::engine::throughput_sweep;
+use bayesian_bits::util::bench::{header, save_json, Bench};
+
+fn main() {
+    // Large enough that f32 weights (ROWS*COLS*4 = 16 MiB) fall out
+    // of cache while 2-bit packed rows (1 MiB) do not.
+    const ROWS: usize = 2048;
+    const COLS: usize = 2048;
+    header(&format!(
+        "integer engine — {ROWS}x{COLS} layer, int vs f32 fallback"
+    ));
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bench::quick() } else { Bench::default() };
+
+    let records =
+        throughput_sweep(ROWS, COLS, &[1, 16], &[2, 4, 8, 16], &b)
+            .unwrap();
+    for rec in &records {
+        println!("{}", rec.line());
+    }
+    save_json(Path::new("BENCH_engine.json"),
+              "engine images/sec vs batch size per bit-width config",
+              records.iter().map(|r| r.to_json()).collect())
+        .unwrap();
+    println!("wrote BENCH_engine.json");
+}

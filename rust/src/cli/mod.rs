@@ -3,6 +3,11 @@
 //! Grammar: `bbits <command> [positional...] [--flag[=| ]value] [--switch]`.
 //! Flags collect into a string map; typed access helpers do the parsing
 //! and produce uniform error messages. `--help` works on every command.
+//!
+//! Both switches and value flags come from explicit registries: an
+//! unknown `--flag` is an error instead of silently swallowing the
+//! next positional as its value (a misspelled `--quikc` used to eat
+//! the following argument).
 
 use std::collections::BTreeMap;
 
@@ -19,7 +24,20 @@ pub struct Args {
 /// Flags that are boolean switches (present => "true").
 const SWITCHES: &[&str] = &[
     "help", "det-gates", "show-preft", "curves", "quick", "paper-scale",
-    "skip-baselines", "no-finetune",
+    "skip-baselines", "no-finetune", "no-int",
+];
+
+/// Flags that take a value (`--flag v` or `--flag=v`). Anything not
+/// listed here or in [`SWITCHES`] is rejected at parse time.
+const VALUE_FLAGS: &[&str] = &[
+    // shared experiment/trainer flags
+    "artifacts", "out", "log-level", "model", "mode", "mu", "mus",
+    "steps", "finetune-steps", "eval-every", "lr-w", "lr-g", "lr-s",
+    "seed", "seeds", "jobs", "threads", "run", "runs", "variant",
+    // engine / serving flags
+    "checkpoint", "dims", "wbits", "abits", "prune", "max-batch",
+    "deadline-ms", "queue-cap", "clients", "requests", "rows", "cols",
+    "batch",
 ];
 
 impl Args {
@@ -29,14 +47,20 @@ impl Args {
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
+                    if !SWITCHES.contains(&k) && !VALUE_FLAGS.contains(&k)
+                    {
+                        return Err(unknown_flag(k));
+                    }
                     args.flags.insert(k.to_string(), v.to_string());
                 } else if SWITCHES.contains(&name) {
                     args.flags.insert(name.to_string(), "true".into());
-                } else {
+                } else if VALUE_FLAGS.contains(&name) {
                     let v = it.next().ok_or_else(|| {
                         anyhow!("flag --{name} expects a value")
                     })?;
                     args.flags.insert(name.to_string(), v.clone());
+                } else {
+                    return Err(unknown_flag(name));
                 }
             } else if args.command.is_empty() {
                 args.command = a.clone();
@@ -80,6 +104,22 @@ impl Args {
         matches!(self.flags.get(name).map(|s| s.as_str()), Some("true"))
     }
 
+    /// Comma-separated usize list flag (layer dims etc.).
+    pub fn usize_list_flag(&self, name: &str, default: &[usize])
+                           -> Result<Vec<usize>> {
+        match self.flags.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|_| {
+                        anyhow!("--{name}: bad integer {p:?}")
+                    })
+                })
+                .collect(),
+        }
+    }
+
     /// Comma-separated f64 list flag.
     pub fn f64_list_flag(&self, name: &str, default: &[f64])
                          -> Result<Vec<f64>> {
@@ -95,6 +135,12 @@ impl Args {
                 .collect(),
         }
     }
+}
+
+fn unknown_flag(name: &str) -> anyhow::Error {
+    anyhow!("unknown flag --{name} (see `bbits --help`); flags are \
+             registered explicitly so a typo cannot swallow the next \
+             argument")
 }
 
 /// Top-level usage text.
@@ -122,6 +168,17 @@ Paper experiments (each regenerates one table/figure)
   figure6         learned per-layer bit widths + sparsity (--run DIR)
   figure10        gate-probability evolution (--run DIR) [--curves]
 
+Integer inference engine (rust/src/engine)
+  serve           lower a checkpoint into the integer engine and serve
+                  batched requests from a closed-loop load generator
+                  --model M --checkpoint PATH  (or, without a
+                  checkpoint, a synthetic plan: --dims 128,256,10
+                  --wbits N --abits N --prune F)
+                  --threads N --max-batch B --deadline-ms F
+                  --queue-cap N --clients C --requests N [--no-int]
+  engine-bench    packed integer GEMM vs f32 fallback throughput
+                  --rows N --cols N --batch B
+
 Utilities
   parity          check Rust runtime vs golden quantizer vectors
   bops            print analytic BOP tables (small + paper scale)
@@ -130,6 +187,8 @@ Utilities
 Common flags
   --artifacts DIR (default: artifacts)   --out DIR (default: runs)
   --quick         shrink step budgets ~10x for smoke runs
+  --threads N     worker threads: serve workers / parallel sweep jobs
+                  (--jobs is an alias for sweeps)
   --log-level debug|info|warn|error
 "
     .to_string()
@@ -174,5 +233,38 @@ mod tests {
         let a = parse("train --steps abc");
         assert!(a.usize_flag("steps", 1).is_err());
         assert_eq!(a.usize_flag("other", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_not_swallowed() {
+        // a misspelled switch used to eat the next positional as its
+        // "value"; now it is a parse error
+        let v: Vec<String> = "train --quikc pos1"
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+        let err = Args::parse(&v).unwrap_err();
+        assert!(format!("{err}").contains("--quikc"), "{err}");
+        // unknown --flag=value form is rejected too
+        let v: Vec<String> =
+            vec!["train".into(), "--bogus=3".into()];
+        assert!(Args::parse(&v).is_err());
+        // known switches and value flags still parse
+        let a = parse("serve --no-int --threads 4 --dims 8,16,4");
+        assert!(a.bool_flag("no-int"));
+        assert_eq!(a.usize_flag("threads", 1).unwrap(), 4);
+        assert_eq!(a.usize_list_flag("dims", &[]).unwrap(),
+                   vec![8, 16, 4]);
+    }
+
+    #[test]
+    fn usize_list_flag_parses_and_defaults() {
+        let a = parse("serve --dims 1,2,3");
+        assert_eq!(a.usize_list_flag("dims", &[9]).unwrap(),
+                   vec![1, 2, 3]);
+        assert_eq!(parse("serve").usize_list_flag("dims", &[9]).unwrap(),
+                   vec![9]);
+        let bad = parse("serve --dims 1,x");
+        assert!(bad.usize_list_flag("dims", &[]).is_err());
     }
 }

@@ -1,8 +1,17 @@
 //! Checkpoints: full train-state save/restore.
 //!
 //! Container format (all sections length-prefixed, little-endian):
-//!   magic "BBCKPT1", model name, step (as f32 section of len 1 for
-//!   format uniformity), params, adam_m, adam_v.
+//!   magic "BBCKPT<version>", model name, step, params, adam_m, adam_v.
+//!
+//! Version history:
+//! * v1 — step stored as a single-f32 section (loses precision past
+//!   2^24 steps); still readable.
+//! * v2 (current) — step stored as a decimal string section (exact
+//!   u64), and loads validate section lengths against each other.
+//!
+//! Readers fail with a distinct message for each corruption class:
+//! not-a-checkpoint, truncated/corrupt sections, a checkpoint from a
+//! newer writer, and moment/param length mismatches.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter};
@@ -13,7 +22,8 @@ use anyhow::{bail, Context, Result};
 use crate::runtime::TrainState;
 use crate::util::binio::{SectionReader, SectionWriter};
 
-const MAGIC: &str = "BBCKPT1";
+const MAGIC_PREFIX: &str = "BBCKPT";
+const VERSION: u32 = 2;
 
 pub fn save(path: &Path, model: &str, state: &TrainState) -> Result<()> {
     if let Some(dir) = path.parent() {
@@ -23,9 +33,9 @@ pub fn save(path: &Path, model: &str, state: &TrainState) -> Result<()> {
         File::create(path).with_context(|| format!("create {path:?}"))?,
     );
     let mut w = SectionWriter::new(f);
-    w.write_str(MAGIC)?;
+    w.write_str(&format!("{MAGIC_PREFIX}{VERSION}"))?;
     w.write_str(model)?;
-    w.write_f32s(&[state.step as f32])?;
+    w.write_str(&state.step.to_string())?;
     w.write_f32s(&state.params)?;
     w.write_f32s(&state.m)?;
     w.write_f32s(&state.v)?;
@@ -37,56 +47,153 @@ pub fn load(path: &Path) -> Result<(String, TrainState)> {
         File::open(path).with_context(|| format!("open {path:?}"))?,
     );
     let mut r = SectionReader::new(f);
-    let magic = r.read_str()?;
-    if magic != MAGIC {
-        bail!("bad checkpoint magic {magic:?}");
+    let magic = r
+        .read_str()
+        .with_context(|| format!("{path:?} is not a bbits checkpoint"))?;
+    let version = match magic.strip_prefix(MAGIC_PREFIX) {
+        Some(v) => v.parse::<u32>().with_context(|| {
+            format!("{path:?}: malformed checkpoint magic {magic:?}")
+        })?,
+        None => bail!("{path:?} is not a bbits checkpoint \
+                       (magic {magic:?})"),
+    };
+    if version > VERSION {
+        bail!("{path:?} is a v{version} checkpoint; this build reads \
+               up to v{VERSION} — upgrade bbits to load it");
     }
-    let model = r.read_str()?;
-    let step = r.read_f32s()?;
-    let params = r.read_f32s()?;
-    let m = r.read_f32s()?;
-    let v = r.read_f32s()?;
+    let corrupt = || format!("{path:?}: checkpoint truncated or corrupt");
+    let model = r.read_str().with_context(corrupt)?;
+    let step = match version {
+        1 => {
+            // v1 stored the step as one f32 for format uniformity
+            let s = r.read_f32s().with_context(corrupt)?;
+            if s.len() != 1 {
+                bail!("{path:?}: v1 step section has {} values",
+                      s.len());
+            }
+            s[0] as u64
+        }
+        _ => {
+            let s = r.read_str().with_context(corrupt)?;
+            s.parse::<u64>().with_context(|| {
+                format!("{path:?}: bad step count {s:?}")
+            })?
+        }
+    };
+    let params = r.read_f32s().with_context(corrupt)?;
+    let m = r.read_f32s().with_context(corrupt)?;
+    let v = r.read_f32s().with_context(corrupt)?;
+    if params.is_empty() {
+        bail!("{path:?}: checkpoint has no parameters");
+    }
     if m.len() != params.len() || v.len() != params.len() {
-        bail!("checkpoint section length mismatch");
+        bail!("{path:?}: Adam moment sections ({}, {}) do not match \
+               param section ({})", m.len(), v.len(), params.len());
     }
-    Ok((
-        model,
-        TrainState { params, m, v, step: step.first().copied()
-                     .unwrap_or(0.0) as u64 },
-    ))
+    Ok((model, TrainState { params, m, v, step }))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip() {
+    fn tmp(name: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join("bbits_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("a.ckpt");
-        let st = TrainState {
+        dir.join(name)
+    }
+
+    fn state() -> TrainState {
+        TrainState {
             params: vec![1.0, -2.0, 3.5],
             m: vec![0.1, 0.2, 0.3],
             v: vec![0.0, 0.5, 1.0],
-            step: 42,
-        };
+            step: (1u64 << 33) + 7, // beyond f32-exact range
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact_including_large_steps() {
+        let p = tmp("a.ckpt");
+        let st = state();
         save(&p, "lenet5", &st).unwrap();
         let (model, got) = load(&p).unwrap();
         assert_eq!(model, "lenet5");
         assert_eq!(got.params, st.params);
         assert_eq!(got.m, st.m);
-        assert_eq!(got.step, 42);
+        assert_eq!(got.v, st.v);
+        assert_eq!(got.step, st.step);
         std::fs::remove_file(&p).unwrap();
     }
 
     #[test]
-    fn rejects_bad_magic() {
-        let dir = std::env::temp_dir().join("bbits_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("bad.ckpt");
+    fn legacy_v1_checkpoints_still_load() {
+        let p = tmp("v1.ckpt");
+        {
+            let f = BufWriter::new(File::create(&p).unwrap());
+            let mut w = SectionWriter::new(f);
+            w.write_str("BBCKPT1").unwrap();
+            w.write_str("vgg7").unwrap();
+            w.write_f32s(&[42.0]).unwrap();
+            w.write_f32s(&[1.0, 2.0]).unwrap();
+            w.write_f32s(&[0.0, 0.0]).unwrap();
+            w.write_f32s(&[0.0, 0.0]).unwrap();
+        }
+        let (model, got) = load(&p).unwrap();
+        assert_eq!(model, "vgg7");
+        assert_eq!(got.step, 42);
+        assert_eq!(got.params, vec![1.0, 2.0]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic_with_clear_message() {
+        let p = tmp("bad.ckpt");
         std::fs::write(&p, b"not a checkpoint").unwrap();
-        assert!(load(&p).is_err());
+        let err = format!("{:#}", load(&p).unwrap_err());
+        assert!(err.contains("not a bbits checkpoint"), "{err}");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn rejects_future_versions() {
+        let p = tmp("future.ckpt");
+        {
+            let f = BufWriter::new(File::create(&p).unwrap());
+            let mut w = SectionWriter::new(f);
+            w.write_str("BBCKPT9").unwrap();
+        }
+        let err = format!("{:#}", load(&p).unwrap_err());
+        assert!(err.contains("v9"), "{err}");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn truncated_file_reports_corruption() {
+        let p = tmp("trunc.ckpt");
+        save(&p, "lenet5", &state()).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+        let err = format!("{:#}", load(&p).unwrap_err());
+        assert!(err.contains("truncated or corrupt"), "{err}");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn mismatched_moment_lengths_rejected() {
+        let p = tmp("moments.ckpt");
+        {
+            let f = BufWriter::new(File::create(&p).unwrap());
+            let mut w = SectionWriter::new(f);
+            w.write_str("BBCKPT2").unwrap();
+            w.write_str("lenet5").unwrap();
+            w.write_str("3").unwrap();
+            w.write_f32s(&[1.0, 2.0]).unwrap();
+            w.write_f32s(&[0.0]).unwrap(); // short m
+            w.write_f32s(&[0.0, 0.0]).unwrap();
+        }
+        let err = format!("{:#}", load(&p).unwrap_err());
+        assert!(err.contains("Adam moment"), "{err}");
         std::fs::remove_file(&p).unwrap();
     }
 }

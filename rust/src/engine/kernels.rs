@@ -1,0 +1,185 @@
+//! Integer GEMM kernels over packed weights, plus the f32 reference
+//! fallback — the arithmetic core of the inference engine.
+//!
+//! The integer path computes `y = W x` on raw grid codes with exact
+//! integer accumulation and a single requantize multiply at the end:
+//!
+//! ```text
+//! y[r] = (s_w * s_a) * sum_c q_w[r,c] * q_a[c]
+//! ```
+//!
+//! For widths up to 8x8 bits the inner loop accumulates in `i32`
+//! (blocked so the partial sum cannot overflow), spilling each block
+//! into an `i64` total; 16-bit operands go straight to `i64` because a
+//! single product can exceed `i32`. The f32 fallback multiplies the
+//! *simulated-quantized* dense rows (`codes * step`), so the two paths
+//! agree up to f32 accumulation error — the invariant
+//! `tests/engine_parity.rs` pins down.
+
+use super::pack::PackedMatrix;
+use crate::quant::grid::quantize_codes_host;
+
+/// i32 accumulation block: with |w| <= 127 and |a| <= 255, a block sum
+/// is bounded by 127 * 255 * 4096 < 2^27 — far from i32 overflow.
+const I32_BLOCK: usize = 4096;
+
+/// Exact dot product of two code vectors. `low_bit` selects the
+/// blocked-i32 fast path (safe when both operands are <= 8 bits).
+#[inline]
+pub fn dot_codes(w: &[i32], a: &[i32], low_bit: bool) -> i64 {
+    debug_assert_eq!(w.len(), a.len());
+    if low_bit {
+        let mut total = 0i64;
+        for (wb, ab) in w.chunks(I32_BLOCK).zip(a.chunks(I32_BLOCK)) {
+            let mut acc = 0i32;
+            for (x, y) in wb.iter().zip(ab) {
+                acc += *x * *y;
+            }
+            total += acc as i64;
+        }
+        total
+    } else {
+        w.iter().zip(a).map(|(x, y)| *x as i64 * *y as i64).sum()
+    }
+}
+
+/// Whether a (weight bits, activation bits) pair may use the blocked
+/// i32 accumulator.
+#[inline]
+pub fn low_bit_pair(w_bits: u32, a_bits: u32) -> bool {
+    w_bits <= 8 && a_bits <= 8
+}
+
+/// Packed matrix times a batch of code vectors.
+///
+/// * `acts` — `n` activation-code vectors, flat `[n, cols]`;
+/// * `y` — flat `[n, rows]` accumulator outputs;
+/// * `row_scratch` — caller-provided buffer of at least `cols` slots.
+///
+/// Rows are decoded once and reused across the whole batch, so the
+/// unpack cost amortizes with the serving micro-batch size.
+pub fn matmul_packed(w: &PackedMatrix, acts: &[i32], n: usize,
+                     act_bits: u32, row_scratch: &mut [i32],
+                     y: &mut [i64]) {
+    let cols = w.cols;
+    let rows = w.rows;
+    debug_assert_eq!(acts.len(), n * cols);
+    debug_assert_eq!(y.len(), n * rows);
+    let low = low_bit_pair(w.bits, act_bits);
+    for r in 0..rows {
+        w.unpack_row_into(r, row_scratch);
+        let row = &row_scratch[..cols];
+        for s in 0..n {
+            y[s * rows + r] =
+                dot_codes(row, &acts[s * cols..(s + 1) * cols], low);
+        }
+    }
+}
+
+/// Dense f32 matrix (`rows x cols`, row-major) times a batch of f32
+/// vectors — the reference/fallback path.
+pub fn matmul_f32(w: &[f32], rows: usize, cols: usize, xs: &[f32],
+                  n: usize, y: &mut [f32]) {
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(xs.len(), n * cols);
+    debug_assert_eq!(y.len(), n * rows);
+    for r in 0..rows {
+        let row = &w[r * cols..(r + 1) * cols];
+        for s in 0..n {
+            let x = &xs[s * cols..(s + 1) * cols];
+            let mut acc = 0.0f32;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            y[s * rows + r] = acc;
+        }
+    }
+}
+
+/// Quantize a flat activation tensor to integer codes in `out`;
+/// returns the grid step. Numerics are exactly
+/// `quant::grid::quantize_codes_host` (one clip + banker's rounding),
+/// so the engine's activation grid is the host oracle's grid.
+pub fn quantize_acts(x: &[f32], beta: f32, bits: u32, signed: bool,
+                     out: &mut Vec<i32>) -> f32 {
+    let (step, codes) = quantize_codes_host(x, beta, bits, signed);
+    out.clear();
+    out.extend(codes.iter().map(|q| *q as i32));
+    step
+}
+
+/// Dequantize codes back to f32 (`step * code`) — the simulated-quant
+/// activation the f32 reference path consumes.
+pub fn dequantize(codes: &[i32], step: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(codes.iter().map(|q| step * *q as f32));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_codes_paths_agree() {
+        let mut rng = crate::rng::Pcg64::new(7);
+        let n = 2 * I32_BLOCK + 123; // spans multiple blocks
+        let w: Vec<i32> =
+            (0..n).map(|_| (rng.next_u64() % 255) as i32 - 127).collect();
+        let a: Vec<i32> =
+            (0..n).map(|_| (rng.next_u64() % 256) as i32).collect();
+        let want: i64 =
+            w.iter().zip(&a).map(|(x, y)| *x as i64 * *y as i64).sum();
+        assert_eq!(dot_codes(&w, &a, true), want);
+        assert_eq!(dot_codes(&w, &a, false), want);
+    }
+
+    #[test]
+    fn matmul_packed_matches_naive() {
+        let mut rng = crate::rng::Pcg64::new(9);
+        for (bits, a_bits) in [(2u32, 8u32), (4, 4), (8, 8), (16, 16)] {
+            let rows = 5;
+            let cols = 33;
+            let n = 3;
+            let hi = (1i64 << (bits - 1)) - 1;
+            let codes: Vec<i64> = (0..rows * cols)
+                .map(|_| {
+                    (rng.next_u64() % (2 * hi + 1) as u64) as i64 - hi
+                })
+                .collect();
+            let w = PackedMatrix::pack(&codes, rows, cols, bits, true)
+                .unwrap();
+            let amax = (1i64 << a_bits) - 1;
+            let acts: Vec<i32> = (0..n * cols)
+                .map(|_| (rng.next_u64() % (amax + 1) as u64) as i32)
+                .collect();
+            let mut scratch = vec![0i32; cols];
+            let mut y = vec![0i64; n * rows];
+            matmul_packed(&w, &acts, n, a_bits, &mut scratch, &mut y);
+            for s in 0..n {
+                for r in 0..rows {
+                    let want: i64 = (0..cols)
+                        .map(|c| {
+                            codes[r * cols + c]
+                                * acts[s * cols + c] as i64
+                        })
+                        .sum();
+                    assert_eq!(y[s * rows + r], want,
+                               "bits={bits} s={s} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_dequantize_acts_on_grid() {
+        let x = vec![0.0f32, 0.3, 1.4, -0.7, 9.0];
+        let mut codes = Vec::new();
+        let step = quantize_acts(&x, 2.0, 8, true, &mut codes);
+        let mut back = Vec::new();
+        dequantize(&codes, step, &mut back);
+        for (orig, b) in x.iter().zip(&back) {
+            assert!((b - orig.clamp(-2.0, 2.0)).abs() < step * 0.51,
+                    "{orig} -> {b}");
+        }
+    }
+}

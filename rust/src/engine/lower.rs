@@ -1,0 +1,359 @@
+//! Lowering: trained checkpoint + thresholded gates -> executable
+//! integer plan.
+//!
+//! For every layer in the manifest descriptor the lowering
+//!
+//! 1. thresholds the checkpoint's phi logits through the Eq. 22 gate
+//!    chain (`GateManager::test_gates` under the Bayesian-Bits lock
+//!    pattern) to obtain the layer's learned weight/activation bit
+//!    widths and its per-channel pruning mask;
+//! 2. folds the learned clip range beta into a per-tensor grid step
+//!    (the closed form of `quant::grid::step_sizes` at the selected
+//!    width) with zero-point 0 — the decomposition's grids are
+//!    symmetric (signed) or one-sided (unsigned), never affine;
+//! 3. physically elides pruned output channels: only surviving rows
+//!    are quantized, packed, and stored;
+//! 4. emits bit-packed codes for widths < 32 and the simulated-quant
+//!    dense rows that the f32 fallback and parity tests consume.
+
+use anyhow::{bail, Context, Result};
+
+use super::pack::PackedMatrix;
+use super::{ActSpec, EnginePlan, PlanLayer};
+use crate::config::Mode;
+use crate::coordinator::gate_manager::GateManager;
+use crate::quant::grid::quantize_codes_host;
+use crate::rng::Pcg64;
+use crate::runtime::Manifest;
+
+/// Lower one dense weight matrix (`out_dim x in_dim`, row-major) into
+/// a [`PlanLayer`]. Shared by the manifest path and the synthetic
+/// builder; weights are signed (the paper's weight grids always are).
+pub fn build_layer(name: &str, dense_w: &[f32], in_dim: usize,
+                   out_dim: usize, z2: &[f32], w_bits: u32, w_beta: f32,
+                   act: ActSpec, bias: Option<Vec<f32>>, relu: bool)
+                   -> Result<PlanLayer> {
+    if dense_w.len() != in_dim * out_dim {
+        bail!("layer {name}: weight len {} != {out_dim}x{in_dim}",
+              dense_w.len());
+    }
+    if z2.len() != out_dim {
+        bail!("layer {name}: {} channel gates for {out_dim} channels",
+              z2.len());
+    }
+    let kept: Vec<u32> = if w_bits == 0 {
+        Vec::new()
+    } else {
+        (0..out_dim as u32).filter(|c| z2[*c as usize] > 0.5).collect()
+    };
+    let w_bits = if kept.is_empty() { 0 } else { w_bits };
+    let mut rows_f32 = Vec::with_capacity(kept.len() * in_dim);
+    for c in &kept {
+        let r = *c as usize;
+        rows_f32.extend_from_slice(&dense_w[r * in_dim..(r + 1) * in_dim]);
+    }
+    let (packed, w_scale, f32_rows) = if w_bits == 0 {
+        (None, 1.0, Vec::new())
+    } else if w_bits >= 32 {
+        (None, 1.0, rows_f32)
+    } else {
+        let (step, codes) =
+            quantize_codes_host(&rows_f32, w_beta, w_bits, true);
+        let packed =
+            PackedMatrix::pack(&codes, kept.len(), in_dim, w_bits, true)
+                .with_context(|| format!("packing layer {name}"))?;
+        let deq: Vec<f32> =
+            codes.iter().map(|q| step * *q as f32).collect();
+        (Some(packed), step, deq)
+    };
+    Ok(PlanLayer {
+        name: name.to_string(),
+        in_dim,
+        out_dim,
+        w_bits,
+        kept,
+        packed,
+        w_scale,
+        f32_rows,
+        act,
+        bias,
+        relu,
+    })
+}
+
+/// Single-layer plan around [`build_layer`] (tests, micro-benches).
+#[allow(clippy::too_many_arguments)]
+pub fn build_plan_single(name: &str, dense_w: &[f32], in_dim: usize,
+                         out_dim: usize, z2: &[f32], w_bits: u32,
+                         w_beta: f32, act: ActSpec,
+                         bias: Option<Vec<f32>>, relu: bool)
+                         -> Result<EnginePlan> {
+    let layer = build_layer(name, dense_w, in_dim, out_dim, z2, w_bits,
+                            w_beta, act, bias, relu)?;
+    let plan = EnginePlan {
+        model: name.to_string(),
+        input_dim: in_dim,
+        output_dim: out_dim,
+        layers: vec![layer],
+    };
+    plan.validate()?;
+    Ok(plan)
+}
+
+/// Lower a trained Bayesian-Bits checkpoint into an executable plan,
+/// thresholding gates under the full `Mode::BayesianBits` lock
+/// pattern. For checkpoints trained in another mode (whose phi slots
+/// were locked rather than learned) use [`lower_with_mode`] so the
+/// lock values — not the untrained logits — decide the bit widths.
+pub fn lower(man: &Manifest, params: &[f32]) -> Result<EnginePlan> {
+    lower_with_mode(man, params, &Mode::BayesianBits)
+}
+
+/// [`lower`] with an explicit training mode selecting the gate-lock
+/// pattern (`bbits serve --mode fixed:w8a8 ...` for an LSQ-style
+/// baseline checkpoint, etc.).
+pub fn lower_with_mode(man: &Manifest, params: &[f32], mode: &Mode)
+                       -> Result<EnginePlan> {
+    if man.engine != "bb" {
+        bail!("engine lowering needs a Bayesian-Bits manifest, got {:?}",
+              man.engine);
+    }
+    if matches!(mode, Mode::Dq) {
+        bail!("DQ checkpoints have no gate chain to lower");
+    }
+    if params.len() != man.n_params {
+        bail!("checkpoint has {} params, manifest {} wants {}",
+              params.len(), man.name, man.n_params);
+    }
+    let gm = GateManager::new(man);
+    let (lock_mask, lock_val) = gm.locks(mode);
+    let phi: Vec<f64> = man
+        .phi_index()
+        .iter()
+        .map(|i| params[*i] as f64)
+        .collect();
+    let gates = gm.test_gates(&phi, &lock_mask, &lock_val);
+
+    let n_layers = man.layers.len();
+    let mut layers = Vec::with_capacity(n_layers);
+    let mut warned_spatial = false;
+    for (li, l) in man.layers.iter().enumerate() {
+        if l.kind != "dense" && !warned_spatial {
+            crate::util::logging::warn(format!(
+                "layer {}: {} layers are lowered as flattened GEMMs \
+                 (spatial conv on the integer datapath is an open \
+                 item; see DESIGN.md §engine)",
+                l.name, l.kind
+            ));
+            warned_spatial = true;
+        }
+        let wq = man.quantizer(&l.weight_q)?;
+        let aq = man.quantizer(&l.act_q)?;
+        if !wq.signed {
+            bail!("layer {}: unsigned weight quantizer unsupported",
+                  l.name);
+        }
+        if wq.channels != l.cout {
+            bail!("layer {}: quantizer has {} channel gates, layer has \
+                   {} outputs", l.name, wq.channels, l.cout);
+        }
+        let wz = &gates[wq.offset..wq.offset + wq.n_slots];
+        let az = &gates[aq.offset..aq.offset + aq.n_slots];
+        let w_bits = wq.view().effective_bits(wz);
+        let a_bits = aq.view().effective_bits(az);
+        let wp = man.param(&l.weight_q)?;
+        if wp.size % l.cout != 0 {
+            bail!("layer {}: weight size {} not divisible by cout {}",
+                  l.name, wp.size, l.cout);
+        }
+        let in_dim = wp.size / l.cout;
+        let dense = orient_rows(&params[wp.offset..wp.offset + wp.size],
+                                &wp.shape, l.cout)
+            .with_context(|| format!("layer {}", l.name))?;
+        let w_beta =
+            param_scalar(man, params, &format!("{}.beta", l.weight_q))?;
+        let a_beta =
+            param_scalar(man, params, &format!("{}.beta", l.act_q))?;
+        let act = if a_bits >= 32 {
+            ActSpec::F32
+        } else {
+            ActSpec::Int { bits: a_bits, beta: a_beta, signed: aq.signed }
+        };
+        let bias = man
+            .param(&format!("{}.b", l.name))
+            .ok()
+            .filter(|p| p.size == l.cout)
+            .map(|p| params[p.offset..p.offset + p.size].to_vec());
+        let z2: Vec<f32> = wz[..wq.channels].to_vec();
+        layers.push(build_layer(&l.name, &dense, in_dim, l.cout, &z2,
+                                w_bits, w_beta, act, bias,
+                                li + 1 < n_layers)?);
+    }
+    let plan = EnginePlan {
+        model: man.name.clone(),
+        input_dim: man.input_shape.iter().product::<usize>().max(1),
+        output_dim: layers.last().map(|l| l.out_dim).unwrap_or(0),
+        layers,
+    };
+    plan.validate()?;
+    Ok(plan)
+}
+
+/// A deterministic random plan for demos, benches, and serve smoke
+/// runs when no checkpoint is available. `dims` is the layer width
+/// chain (`[in, hidden..., out]`); `prune` is the per-channel pruning
+/// probability on hidden layers (the output layer keeps every class).
+pub fn synthetic_plan(name: &str, dims: &[usize], w_bits: u32,
+                      a_bits: u32, prune: f64, seed: u64)
+                      -> Result<EnginePlan> {
+    if dims.len() < 2 {
+        bail!("synthetic plan needs at least [in, out] dims, got {dims:?}");
+    }
+    if dims.iter().any(|d| *d == 0) {
+        bail!("synthetic plan dims must be positive, got {dims:?}");
+    }
+    let mut rng = Pcg64::new(seed);
+    let n_layers = dims.len() - 1;
+    let mut layers = Vec::with_capacity(n_layers);
+    for i in 0..n_layers {
+        let (din, dout) = (dims[i], dims[i + 1]);
+        let w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() * 0.5).collect();
+        let last = i + 1 == n_layers;
+        let mut z2 = vec![1.0f32; dout];
+        if !last && prune > 0.0 {
+            for z in z2.iter_mut() {
+                if rng.next_f64() < prune {
+                    *z = 0.0;
+                }
+            }
+            if z2.iter().all(|z| *z == 0.0) {
+                z2[0] = 1.0;
+            }
+        }
+        let act = if a_bits >= 32 {
+            ActSpec::F32
+        } else {
+            // raw features are signed; post-ReLU activations are not
+            ActSpec::Int {
+                bits: a_bits,
+                beta: if i == 0 { 3.0 } else { 6.0 },
+                signed: i == 0,
+            }
+        };
+        let bias: Vec<f32> =
+            (0..dout).map(|_| rng.normal() * 0.1).collect();
+        layers.push(build_layer(&format!("fc{}", i + 1), &w, din, dout,
+                                &z2, w_bits, 1.5, act, Some(bias),
+                                !last)?);
+    }
+    let plan = EnginePlan {
+        model: name.to_string(),
+        input_dim: dims[0],
+        output_dim: *dims.last().unwrap(),
+        layers,
+    };
+    plan.validate()?;
+    Ok(plan)
+}
+
+/// Reorient a flat weight tensor to row-major `[cout, rest]` rows.
+///
+/// The exporter's convention is channel-*last* (JAX: HWIO conv
+/// kernels, `[din, dout]` dense kernels — see python/compile/layers.py),
+/// so channel-last wins when both ends match (square dense layers);
+/// channel-first (OIHW-style) is accepted as a fallback.
+fn orient_rows(w: &[f32], shape: &[usize], cout: usize)
+               -> Result<Vec<f32>> {
+    if shape.last() == Some(&cout) {
+        let rest = w.len() / cout;
+        let mut out = vec![0.0f32; w.len()];
+        for i in 0..rest {
+            for o in 0..cout {
+                out[o * rest + i] = w[i * cout + o];
+            }
+        }
+        return Ok(out);
+    }
+    if shape.first() == Some(&cout) {
+        return Ok(w.to_vec());
+    }
+    bail!("weight shape {shape:?} has no {cout}-channel axis at either \
+           end")
+}
+
+fn param_scalar(man: &Manifest, params: &[f32], name: &str)
+                -> Result<f32> {
+    let p = man
+        .param(name)
+        .with_context(|| format!("engine lowering needs {name}"))?;
+    Ok(params[p.offset])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orient_accepts_both_layouts() {
+        // channel-first [2, 3]: rows already contiguous
+        let w = vec![1., 2., 3., 10., 20., 30.];
+        assert_eq!(orient_rows(&w, &[2, 3], 2).unwrap(), w);
+        // channel-last [3, 2]: transpose into 2 rows of 3
+        let wt = vec![1., 10., 2., 20., 3., 30.];
+        assert_eq!(orient_rows(&wt, &[3, 2], 2).unwrap(), w);
+        assert!(orient_rows(&w, &[3, 2], 5).is_err());
+        // square dense [2, 2] is ambiguous; the exporter convention is
+        // channel-last ([din, dout]), so it must transpose
+        let sq = vec![1., 10., 2., 20.];
+        assert_eq!(orient_rows(&sq, &[2, 2], 2).unwrap(),
+                   vec![1., 2., 10., 20.]);
+    }
+
+    #[test]
+    fn build_layer_elides_pruned_rows() {
+        let w = vec![0.5f32; 8]; // 4 out x 2 in
+        let l = build_layer("t", &w, 2, 4, &[1., 0., 1., 0.], 4, 1.0,
+                            ActSpec::F32, None, false)
+            .unwrap();
+        assert_eq!(l.kept, vec![0, 2]);
+        assert_eq!(l.f32_rows.len(), 4);
+        let p = l.packed.as_ref().unwrap();
+        assert_eq!((p.rows, p.cols, p.bits), (2, 2, 4));
+        // dequantized rows reconstruct code * step exactly
+        for (v, q) in l.f32_rows.iter().zip(p.unpack()) {
+            assert_eq!(*v, l.w_scale * q as f32);
+        }
+    }
+
+    #[test]
+    fn build_layer_zero_bits_means_empty() {
+        let w = vec![1.0f32; 6];
+        let l = build_layer("t", &w, 3, 2, &[1., 1.], 0, 1.0,
+                            ActSpec::F32, None, false)
+            .unwrap();
+        assert!(l.kept.is_empty());
+        assert!(l.packed.is_none());
+        assert!(l.f32_rows.is_empty());
+    }
+
+    #[test]
+    fn build_layer_32_bits_keeps_raw_weights() {
+        let w = vec![0.123f32, -4.5, 0.0, 7.7, 1.0, -1.0];
+        let l = build_layer("t", &w, 3, 2, &[1., 1.], 32, 1.0,
+                            ActSpec::F32, None, false)
+            .unwrap();
+        assert!(l.packed.is_none());
+        assert_eq!(l.f32_rows, w);
+        assert_eq!(l.w_scale, 1.0);
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let a = synthetic_plan("s", &[8, 16, 4], 4, 8, 0.3, 42).unwrap();
+        let b = synthetic_plan("s", &[8, 16, 4], 4, 8, 0.3, 42).unwrap();
+        assert_eq!(a.layers[0].f32_rows, b.layers[0].f32_rows);
+        assert_eq!(a.layers[0].kept, b.layers[0].kept);
+        assert!(synthetic_plan("s", &[8], 4, 8, 0.0, 1).is_err());
+    }
+}

@@ -1,0 +1,512 @@
+//! Integer inference engine: executes a trained, thresholded Bayesian
+//! Bits configuration with real fixed-point weight arithmetic.
+//!
+//! The training stack only ever *simulates* quantization in f32
+//! (`quant::grid::bb_quantize_host`, the AOT executables). This
+//! subsystem closes the loop to the hardware story the paper argues
+//! for: a checkpoint plus its Eq. 22 gate configuration is lowered
+//! into an [`EnginePlan`] of per-layer integer GEMMs —
+//!
+//! * [`lower`] — fold learned clip ranges into grid steps, assign each
+//!   tensor its learned bit width from the gate chain, physically
+//!   elide pruned output channels from the weight blobs;
+//! * [`pack`] — bit-packed weight storage for the 2/4/8/16/32 chain;
+//! * [`kernels`] — packed-weight integer GEMM (i32/i64 accumulate,
+//!   one requantize multiply) plus the f32 simulated-quant fallback;
+//! * [`serve`] — a multi-threaded batched request server over
+//!   per-worker [`Engine`] instances.
+//!
+//! The executor treats every layer as a GEMM over its flattened
+//! weight matrix (`[cout, size/cout]`); feature vectors are adapted
+//! between mismatched layer widths by deterministic pooling /
+//! replication (`adapt_features`). Both the integer and the f32 path
+//! share one activation grid and one weight grid, so they agree up to
+//! f32 accumulation error — `tests/engine_parity.rs` pins the integer
+//! path to the `bb_quantize_host` oracle.
+
+pub mod kernels;
+pub mod lower;
+pub mod pack;
+pub mod serve;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::report::TableBuilder;
+use crate::util::bench::{Bench, Summary};
+use crate::util::json::{num, s as jstr, Json};
+use pack::PackedMatrix;
+
+pub use lower::{lower, lower_with_mode, synthetic_plan};
+pub use serve::{ServeConfig, ServeStats, Server};
+
+/// Input-activation quantization of one layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ActSpec {
+    /// 32-bit chain end: activations stay f32.
+    F32,
+    /// Quantize inputs to `bits` on the learned `[alpha, beta]` grid.
+    Int { bits: u32, beta: f32, signed: bool },
+}
+
+impl ActSpec {
+    pub fn bits(&self) -> u32 {
+        match self {
+            ActSpec::F32 => 32,
+            ActSpec::Int { bits, .. } => *bits,
+        }
+    }
+}
+
+/// One lowered layer: a (possibly packed) GEMM over kept channels.
+#[derive(Debug, Clone)]
+pub struct PlanLayer {
+    pub name: String,
+    /// GEMM input width (weight elements per output channel).
+    pub in_dim: usize,
+    /// Dense output width, including pruned channel positions.
+    pub out_dim: usize,
+    /// Learned weight width (0 = every channel pruned).
+    pub w_bits: u32,
+    /// Surviving output channels, ascending; the packed/dense rows
+    /// below hold exactly these.
+    pub kept: Vec<u32>,
+    /// Packed integer codes (`kept.len() x in_dim`) for widths < 32.
+    pub packed: Option<PackedMatrix>,
+    /// Weight grid step (1.0 on the f32 fallback).
+    pub w_scale: f32,
+    /// Simulated-quant dense rows (`kept.len() x in_dim`): exactly
+    /// `w_scale * code` where packed, raw weights at 32 bits.
+    pub f32_rows: Vec<f32>,
+    pub act: ActSpec,
+    /// Dense per-channel bias (applied to pruned channels too — their
+    /// weights are gated off, their bias survives).
+    pub bias: Option<Vec<f32>>,
+    pub relu: bool,
+}
+
+impl PlanLayer {
+    pub fn packed_bytes(&self) -> usize {
+        self.packed
+            .as_ref()
+            .map(|p| p.packed_bytes())
+            .unwrap_or(self.f32_rows.len() * 4)
+    }
+
+    pub fn dense_bytes(&self) -> usize {
+        self.in_dim * self.out_dim * 4
+    }
+}
+
+/// An executable lowered model.
+#[derive(Debug, Clone)]
+pub struct EnginePlan {
+    pub model: String,
+    /// Width of raw request vectors (flattened model input).
+    pub input_dim: usize,
+    /// Width of responses (logits).
+    pub output_dim: usize,
+    pub layers: Vec<PlanLayer>,
+}
+
+impl EnginePlan {
+    /// Structural consistency — fail fast on a buggy lowering.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            bail!("plan {:?} has no layers", self.model);
+        }
+        for l in &self.layers {
+            if l.f32_rows.len() != l.kept.len() * l.in_dim {
+                bail!("layer {}: f32 rows {} != kept {} x in {}",
+                      l.name, l.f32_rows.len(), l.kept.len(), l.in_dim);
+            }
+            if let Some(p) = &l.packed {
+                if p.rows != l.kept.len() || p.cols != l.in_dim {
+                    bail!("layer {}: packed {}x{} vs kept {} x in {}",
+                          l.name, p.rows, p.cols, l.kept.len(), l.in_dim);
+                }
+                if p.bits != l.w_bits {
+                    bail!("layer {}: packed bits {} != w_bits {}",
+                          l.name, p.bits, l.w_bits);
+                }
+            }
+            if let Some(b) = &l.bias {
+                if b.len() != l.out_dim {
+                    bail!("layer {}: bias len {} != out {}", l.name,
+                          b.len(), l.out_dim);
+                }
+            }
+            if l.kept.iter().any(|c| *c as usize >= l.out_dim) {
+                bail!("layer {}: kept channel out of range", l.name);
+            }
+        }
+        if self.output_dim != self.layers.last().unwrap().out_dim {
+            bail!("output_dim {} != last layer out {}", self.output_dim,
+                  self.layers.last().unwrap().out_dim);
+        }
+        Ok(())
+    }
+
+    pub fn packed_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.packed_bytes()).sum()
+    }
+
+    pub fn dense_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.dense_bytes()).sum()
+    }
+
+    /// Human-readable lowering report (the serve CLI prints this).
+    pub fn report(&self) -> String {
+        let mut t = TableBuilder::new(
+            &format!("Engine plan — {} ({} -> {})", self.model,
+                     self.input_dim, self.output_dim),
+            &["Layer", "W bits", "A bits", "Kept", "In", "Packed KiB",
+              "Dense KiB"],
+        );
+        for l in &self.layers {
+            t.row(&[
+                l.name.clone(),
+                if l.w_bits == 0 {
+                    "pruned".into()
+                } else if l.packed.is_some() {
+                    format!("{}", l.w_bits)
+                } else {
+                    "f32".into()
+                },
+                match l.act {
+                    ActSpec::F32 => "f32".into(),
+                    ActSpec::Int { bits, .. } => format!("{bits}"),
+                },
+                format!("{}/{}", l.kept.len(), l.out_dim),
+                format!("{}", l.in_dim),
+                format!("{:.1}", l.packed_bytes() as f64 / 1024.0),
+                format!("{:.1}", l.dense_bytes() as f64 / 1024.0),
+            ]);
+        }
+        t.row(&[
+            "total".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+            format!("{:.1}", self.packed_bytes() as f64 / 1024.0),
+            format!("{:.1}", self.dense_bytes() as f64 / 1024.0),
+        ]);
+        t.render()
+    }
+}
+
+/// One measurement from [`throughput_sweep`].
+pub struct SweepRecord {
+    pub summary: Summary,
+    pub int_path: bool,
+    pub w_bits: u32,
+    pub batch: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub images_per_sec: f64,
+}
+
+impl SweepRecord {
+    pub fn line(&self) -> String {
+        self.summary.line(Some((self.batch as f64, "img")))
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.summary.to_json(vec![
+            ("path", jstr(if self.int_path { "int" } else { "f32" })),
+            ("w_bits", num(self.w_bits as f64)),
+            ("a_bits", num(8.0)),
+            ("batch", num(self.batch as f64)),
+            ("rows", num(self.rows as f64)),
+            ("cols", num(self.cols as f64)),
+            ("images_per_sec", num(self.images_per_sec)),
+        ])
+    }
+}
+
+/// Int-vs-f32 throughput sweep on one synthetic `rows x cols` layer
+/// across weight widths and batch sizes — the single implementation
+/// behind `bbits engine-bench` and `benches/bench_engine.rs`.
+pub fn throughput_sweep(rows: usize, cols: usize, batches: &[usize],
+                        wbits: &[u32], b: &Bench)
+                        -> Result<Vec<SweepRecord>> {
+    let mut rng = crate::rng::Pcg64::new(3);
+    let mut out = Vec::new();
+    for &batch in batches {
+        let xs: Vec<f32> =
+            (0..batch * cols).map(|_| rng.normal()).collect();
+        for &wb in wbits {
+            let plan = Arc::new(synthetic_plan(
+                &format!("bench_w{wb}"), &[cols, rows], wb, 8, 0.0,
+                11)?);
+            for int_path in [true, false] {
+                let mut eng = Engine::new(plan.clone());
+                eng.set_int_enabled(int_path);
+                let label = format!(
+                    "{} w{wb}a8 batch={batch} ({rows}x{cols})",
+                    if int_path { "int" } else { "f32" }
+                );
+                let summary = b.run(&label, || {
+                    let y = eng.infer_batch(&xs, batch).unwrap();
+                    std::hint::black_box(y);
+                });
+                let images_per_sec =
+                    batch as f64 / (summary.median_ns * 1e-9);
+                out.push(SweepRecord {
+                    summary,
+                    int_path,
+                    w_bits: wb,
+                    batch,
+                    rows,
+                    cols,
+                    images_per_sec,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Deterministic width adapter between mismatched feature widths:
+/// bucket-mean when shrinking, index replication when growing. Both
+/// execution paths share it, so it never perturbs parity.
+pub fn adapt_features(x: &[f32], want: usize, out: &mut Vec<f32>) {
+    let m = x.len();
+    if m == want {
+        out.extend_from_slice(x);
+        return;
+    }
+    if m > want {
+        for i in 0..want {
+            let lo = i * m / want;
+            let hi = ((i + 1) * m / want).max(lo + 1);
+            let sum: f32 = x[lo..hi].iter().sum();
+            out.push(sum / (hi - lo) as f32);
+        }
+    } else {
+        for i in 0..want {
+            out.push(x[i * m / want]);
+        }
+    }
+}
+
+/// One inference executor: a shared read-only plan plus per-instance
+/// scratch. Each serving worker owns an `Engine`; they share the plan
+/// through the `Arc`.
+pub struct Engine {
+    plan: Arc<EnginePlan>,
+    int_enabled: bool,
+    cur: Vec<f32>,
+    nxt: Vec<f32>,
+    adapted: Vec<f32>,
+    qa: Vec<i32>,
+    deq: Vec<f32>,
+    row: Vec<i32>,
+    acc: Vec<i64>,
+    accf: Vec<f32>,
+}
+
+impl Engine {
+    pub fn new(plan: Arc<EnginePlan>) -> Engine {
+        Engine {
+            plan,
+            int_enabled: true,
+            cur: Vec::new(),
+            nxt: Vec::new(),
+            adapted: Vec::new(),
+            qa: Vec::new(),
+            deq: Vec::new(),
+            row: Vec::new(),
+            acc: Vec::new(),
+            accf: Vec::new(),
+        }
+    }
+
+    pub fn plan(&self) -> &EnginePlan {
+        &self.plan
+    }
+
+    /// Disable the integer path (f32 simulated-quant fallback only) —
+    /// the A/B lever behind `bbits serve --no-int` and the benches.
+    pub fn set_int_enabled(&mut self, on: bool) {
+        self.int_enabled = on;
+    }
+
+    /// Run one request; returns the logits.
+    pub fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        self.infer_batch(x, 1)
+    }
+
+    /// Run a micro-batch: `xs` is flat `[n, input_dim]`, the result is
+    /// flat `[n, output_dim]`. Weight rows are decoded once per layer
+    /// and reused across the batch.
+    pub fn infer_batch(&mut self, xs: &[f32], n: usize) -> Result<Vec<f32>> {
+        let plan = self.plan.clone();
+        if xs.len() != n * plan.input_dim {
+            bail!("batch of {} inputs must be {} x {} values, got {}",
+                  n, n, plan.input_dim, xs.len());
+        }
+        self.cur.clear();
+        self.cur.extend_from_slice(xs);
+        let mut cur_dim = plan.input_dim;
+        for layer in &plan.layers {
+            if cur_dim != layer.in_dim {
+                self.adapted.clear();
+                for s in 0..n {
+                    let x = &self.cur[s * cur_dim..(s + 1) * cur_dim];
+                    adapt_features(x, layer.in_dim, &mut self.adapted);
+                }
+                std::mem::swap(&mut self.cur, &mut self.adapted);
+                cur_dim = layer.in_dim;
+            }
+            let out_dim = layer.out_dim;
+            self.nxt.clear();
+            match &layer.bias {
+                Some(b) => {
+                    for _ in 0..n {
+                        self.nxt.extend_from_slice(b);
+                    }
+                }
+                None => self.nxt.resize(n * out_dim, 0.0),
+            }
+            let rows = layer.kept.len();
+            if rows > 0 {
+                let int_path = self.int_enabled
+                    && layer.packed.is_some()
+                    && matches!(layer.act, ActSpec::Int { .. });
+                if int_path {
+                    let ActSpec::Int { bits, beta, signed } = layer.act
+                    else {
+                        unreachable!()
+                    };
+                    let s_a = kernels::quantize_acts(
+                        &self.cur[..n * cur_dim], beta, bits, signed,
+                        &mut self.qa);
+                    let packed = layer.packed.as_ref().unwrap();
+                    self.row.resize(cur_dim, 0);
+                    self.acc.clear();
+                    self.acc.resize(n * rows, 0);
+                    kernels::matmul_packed(packed, &self.qa, n, bits,
+                                           &mut self.row, &mut self.acc);
+                    let scale = layer.w_scale as f64 * s_a as f64;
+                    for s in 0..n {
+                        for (k, ch) in layer.kept.iter().enumerate() {
+                            self.nxt[s * out_dim + *ch as usize] +=
+                                (self.acc[s * rows + k] as f64 * scale)
+                                    as f32;
+                        }
+                    }
+                } else {
+                    // f32 fallback on the simulated-quant weights; the
+                    // activation grid is still applied so both paths
+                    // see identical quantization error.
+                    let acts: &[f32] = match layer.act {
+                        ActSpec::F32 => &self.cur[..n * cur_dim],
+                        ActSpec::Int { bits, beta, signed } => {
+                            let s_a = kernels::quantize_acts(
+                                &self.cur[..n * cur_dim], beta, bits,
+                                signed, &mut self.qa);
+                            kernels::dequantize(&self.qa, s_a,
+                                                &mut self.deq);
+                            &self.deq
+                        }
+                    };
+                    self.accf.clear();
+                    self.accf.resize(n * rows, 0.0);
+                    kernels::matmul_f32(&layer.f32_rows, rows, cur_dim,
+                                        acts, n, &mut self.accf);
+                    for s in 0..n {
+                        for (k, ch) in layer.kept.iter().enumerate() {
+                            self.nxt[s * out_dim + *ch as usize] +=
+                                self.accf[s * rows + k];
+                        }
+                    }
+                }
+            }
+            if layer.relu {
+                for v in self.nxt.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            std::mem::swap(&mut self.cur, &mut self.nxt);
+            cur_dim = out_dim;
+        }
+        Ok(self.cur[..n * plan.output_dim].to_vec())
+    }
+
+    /// The f32 simulated-quant reference for the same plan (parity
+    /// oracle and `--no-int` baseline).
+    pub fn infer_reference(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let was = self.int_enabled;
+        self.int_enabled = false;
+        let out = self.infer(x);
+        self.int_enabled = was;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adapt_identity_pool_and_replicate() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut out = Vec::new();
+        adapt_features(&x, 4, &mut out);
+        assert_eq!(out, x);
+        out.clear();
+        adapt_features(&x, 2, &mut out);
+        assert_eq!(out, vec![1.5, 3.5]);
+        out.clear();
+        adapt_features(&x, 8, &mut out);
+        assert_eq!(out.len(), 8);
+        assert_eq!(out[0], 1.0);
+        assert_eq!(out[7], 4.0);
+        // non-divisible pooling still covers every element once
+        out.clear();
+        adapt_features(&x, 3, &mut out);
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn synthetic_plan_validates_and_runs() {
+        let plan =
+            synthetic_plan("demo", &[16, 32, 10], 4, 8, 0.25, 3).unwrap();
+        plan.validate().unwrap();
+        let mut eng = Engine::new(Arc::new(plan));
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) / 4.0).collect();
+        let y = eng.infer(&x).unwrap();
+        assert_eq!(y.len(), 10);
+        assert!(y.iter().all(|v| v.is_finite()));
+        // batch of identical inputs reproduces the single result
+        let mut xs = x.clone();
+        xs.extend_from_slice(&x);
+        let yy = eng.infer_batch(&xs, 2).unwrap();
+        assert_eq!(&yy[..10], &y[..]);
+        assert_eq!(&yy[10..], &y[..]);
+    }
+
+    #[test]
+    fn fully_pruned_layer_passes_bias_only() {
+        let plan = lower::build_plan_single(
+            "p", &[0.5f32; 12], 4, 3, &[0.0, 0.0, 0.0], 4, 1.0,
+            ActSpec::Int { bits: 8, beta: 2.0, signed: true },
+            Some(vec![0.5, -1.0, 2.0]), false).unwrap();
+        let mut eng = Engine::new(Arc::new(plan));
+        let y = eng.infer(&[1.0, 1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(y, vec![0.5, -1.0, 2.0]);
+    }
+
+    #[test]
+    fn rejects_wrong_input_width() {
+        let plan =
+            synthetic_plan("demo", &[8, 4], 8, 8, 0.0, 1).unwrap();
+        let mut eng = Engine::new(Arc::new(plan));
+        assert!(eng.infer(&[0.0; 7]).is_err());
+    }
+}

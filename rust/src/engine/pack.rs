@@ -1,0 +1,189 @@
+//! Bit-packed integer weight storage for the power-of-two chain.
+//!
+//! Codes are stored little-endian inside 64-bit words, `64 / bits`
+//! codes per word. Every supported width (2/4/8/16/32) divides 64, so
+//! a code never straddles a word boundary; rows are padded up to a
+//! whole word so one row is always an aligned `&[u64]` slice — the
+//! unit the GEMM kernels decode and the unit pruned-channel elision
+//! removes. Signed codes are two's complement within their field and
+//! sign-extended on decode.
+
+use anyhow::{bail, Result};
+
+/// Widths the packer accepts — `quant::LEVELS`, the paper's chain.
+pub const PACK_BITS: [u32; 5] = [2, 4, 8, 16, 32];
+
+/// Inclusive code range for a width: the symmetric signed grid
+/// `[-(2^(b-1) - 1), 2^(b-1) - 1]` or the unsigned `[0, 2^b - 1]`
+/// (matching `quant::grid::quantize_codes_host`).
+pub fn code_range(bits: u32, signed: bool) -> (i64, i64) {
+    if signed {
+        let hi = (1i64 << (bits - 1)) - 1;
+        (-hi, hi)
+    } else {
+        (0, (1i64 << bits) - 1)
+    }
+}
+
+/// A dense `rows x cols` matrix of bit-packed integer codes.
+#[derive(Debug, Clone)]
+pub struct PackedMatrix {
+    pub bits: u32,
+    pub signed: bool,
+    pub rows: usize,
+    pub cols: usize,
+    words_per_row: usize,
+    data: Vec<u64>,
+}
+
+impl PackedMatrix {
+    /// Pack row-major codes; rejects out-of-range codes and widths
+    /// outside the chain.
+    pub fn pack(codes: &[i64], rows: usize, cols: usize, bits: u32,
+                signed: bool) -> Result<PackedMatrix> {
+        if !PACK_BITS.contains(&bits) {
+            bail!("unsupported pack width {bits} (chain: {PACK_BITS:?})");
+        }
+        if codes.len() != rows * cols {
+            bail!("code count {} != {rows}x{cols}", codes.len());
+        }
+        let (lo, hi) = code_range(bits, signed);
+        let per = (64 / bits) as usize;
+        let words_per_row = cols.div_ceil(per);
+        let mask = field_mask(bits);
+        let mut data = vec![0u64; words_per_row * rows];
+        for r in 0..rows {
+            for c in 0..cols {
+                let q = codes[r * cols + c];
+                if q < lo || q > hi {
+                    bail!(
+                        "code {q} at ({r},{c}) outside {}-bit {} range \
+                         [{lo}, {hi}]",
+                        bits,
+                        if signed { "signed" } else { "unsigned" }
+                    );
+                }
+                let word = r * words_per_row + c / per;
+                let shift = (c % per) as u32 * bits;
+                data[word] |= ((q as u64) & mask) << shift;
+            }
+        }
+        Ok(PackedMatrix { bits, signed, rows, cols, words_per_row, data })
+    }
+
+    /// Decode row `r` into `out[..cols]` for the GEMM kernels. `i32`
+    /// holds every signed chain width; unsigned fields are limited to
+    /// 16 bits here (the integer GEMM path never packs wider).
+    pub fn unpack_row_into(&self, r: usize, out: &mut [i32]) {
+        debug_assert!(self.signed || self.bits <= 16,
+                      "unsigned {}-bit codes overflow i32", self.bits);
+        assert!(out.len() >= self.cols);
+        let per = (64 / self.bits) as usize;
+        let mask = field_mask(self.bits);
+        let ext = 64 - self.bits;
+        let words =
+            &self.data[r * self.words_per_row..(r + 1) * self.words_per_row];
+        for c in 0..self.cols {
+            let raw = (words[c / per] >> ((c % per) as u32 * self.bits))
+                & mask;
+            out[c] = if self.signed {
+                (((raw << ext) as i64) >> ext) as i32
+            } else {
+                raw as i32
+            };
+        }
+    }
+
+    /// Decode the full matrix back to row-major codes (tests, report).
+    pub fn unpack(&self) -> Vec<i64> {
+        let per = (64 / self.bits) as usize;
+        let mask = field_mask(self.bits);
+        let ext = 64 - self.bits;
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            let words = &self.data
+                [r * self.words_per_row..(r + 1) * self.words_per_row];
+            for c in 0..self.cols {
+                let raw = (words[c / per]
+                    >> ((c % per) as u32 * self.bits))
+                    & mask;
+                out.push(if self.signed {
+                    ((raw << ext) as i64) >> ext
+                } else {
+                    raw as i64
+                });
+            }
+        }
+        out
+    }
+
+    /// Bytes of packed storage (the dense f32 equivalent is
+    /// `rows * cols * 4`).
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+fn field_mask(bits: u32) -> u64 {
+    if bits == 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_widths_signed_and_unsigned() {
+        let mut rng = crate::rng::Pcg64::new(5);
+        for bits in PACK_BITS {
+            for signed in [true, false] {
+                let (lo, hi) = code_range(bits, signed);
+                let rows = 3;
+                let cols = 17; // forces row padding for every width
+                let codes: Vec<i64> = (0..rows * cols)
+                    .map(|_| {
+                        lo + (rng.next_u64()
+                            % ((hi - lo + 1) as u64)) as i64
+                    })
+                    .collect();
+                let p = PackedMatrix::pack(&codes, rows, cols, bits,
+                                           signed)
+                    .unwrap();
+                assert_eq!(p.unpack(), codes, "bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn storage_shrinks_with_width() {
+        let codes = vec![0i64; 8 * 64];
+        let b2 = PackedMatrix::pack(&codes, 8, 64, 2, true).unwrap();
+        let b16 = PackedMatrix::pack(&codes, 8, 64, 16, true).unwrap();
+        assert_eq!(b2.packed_bytes(), 8 * 64 / 4);
+        assert_eq!(b16.packed_bytes(), 8 * 64 * 2);
+        // 2-bit is 16x smaller than the dense f32 blob
+        assert_eq!(b2.packed_bytes() * 16, 8 * 64 * 4);
+    }
+
+    #[test]
+    fn rejects_out_of_range_and_bad_width() {
+        assert!(PackedMatrix::pack(&[2], 1, 1, 2, true).is_err());
+        assert!(PackedMatrix::pack(&[-1], 1, 1, 2, false).is_err());
+        assert!(PackedMatrix::pack(&[0], 1, 1, 3, true).is_err());
+        assert!(PackedMatrix::pack(&[0, 0], 1, 1, 2, true).is_err());
+    }
+
+    #[test]
+    fn extreme_codes_survive_sign_extension() {
+        for bits in PACK_BITS {
+            let (lo, hi) = code_range(bits, true);
+            let codes = vec![lo, -1, 0, 1, hi];
+            let p = PackedMatrix::pack(&codes, 1, 5, bits, true).unwrap();
+            assert_eq!(p.unpack(), codes, "bits={bits}");
+        }
+    }
+}

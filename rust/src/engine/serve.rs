@@ -1,0 +1,514 @@
+//! Batched request serving over the integer engine.
+//!
+//! Architecture: a bounded request queue (Mutex + two Condvars for
+//! backpressure) feeding `workers` threads, each owning its own
+//! [`Engine`] instance over the shared read-only plan. A worker drains
+//! up to `max_batch` requests, then holds the partial batch open for
+//! at most `deadline` waiting for stragglers — the classic
+//! micro-batching latency/throughput trade — and runs the whole batch
+//! through one `infer_batch` call so packed weight rows are decoded
+//! once per batch. Per-request latency (submit -> response) feeds the
+//! percentile stats behind `bbits serve`.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{Engine, EnginePlan};
+use crate::rng::Pcg64;
+use crate::util::json::{num, obj, Json};
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads (each with its own engine instance).
+    pub workers: usize,
+    /// Bounded queue capacity; submitters block when full.
+    pub queue_cap: usize,
+    /// Micro-batch size cap.
+    pub max_batch: usize,
+    /// How long a partial batch waits for stragglers.
+    pub deadline: Duration,
+    /// Run the f32 fallback instead of the integer path (A/B lever).
+    pub force_f32: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(2)
+                .min(8),
+            queue_cap: 256,
+            max_batch: 16,
+            deadline: Duration::from_millis(2),
+            force_f32: false,
+        }
+    }
+}
+
+struct Request {
+    input: Vec<f32>,
+    submitted: Instant,
+    tx: mpsc::Sender<std::result::Result<Vec<f32>, String>>,
+}
+
+#[derive(Default)]
+struct QueueState {
+    q: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Latency sample cap: ~2 MiB of u64s. Beyond it, reservoir sampling
+/// keeps a uniform sample of the full history at O(1) memory — this
+/// server is meant to run indefinitely.
+const LATENCY_SAMPLE_CAP: usize = 1 << 18;
+
+#[derive(Default)]
+struct StatsInner {
+    latencies_ns: Vec<u64>,
+    /// Total latencies observed (>= latencies_ns.len()).
+    seen: u64,
+    /// Cheap LCG state for reservoir replacement.
+    lcg: u64,
+    requests: u64,
+    batches: u64,
+    errors: u64,
+}
+
+impl StatsInner {
+    fn record_latency(&mut self, ns: u64) {
+        self.seen += 1;
+        if self.latencies_ns.len() < LATENCY_SAMPLE_CAP {
+            self.latencies_ns.push(ns);
+            return;
+        }
+        // classic reservoir: keep with probability cap/seen
+        self.lcg = self
+            .lcg
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let j = (self.lcg >> 11) % self.seen;
+        if (j as usize) < LATENCY_SAMPLE_CAP {
+            self.latencies_ns[j as usize] = ns;
+        }
+    }
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cfg: ServeConfig,
+    stats: Mutex<StatsInner>,
+}
+
+/// Handle for one in-flight request.
+pub struct Ticket {
+    rx: mpsc::Receiver<std::result::Result<Vec<f32>, String>>,
+}
+
+impl Ticket {
+    /// Block until the response (logits) arrives.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        match self.rx.recv() {
+            Ok(Ok(y)) => Ok(y),
+            Ok(Err(e)) => Err(anyhow!("inference failed: {e}")),
+            Err(_) => Err(anyhow!("server dropped the request")),
+        }
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    /// Wall-clock seconds of the measured window (filled by the load
+    /// driver; 0 when only queue stats were sampled).
+    pub elapsed_s: f64,
+    pub throughput_rps: f64,
+}
+
+impl ServeStats {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("requests", num(self.requests as f64)),
+            ("batches", num(self.batches as f64)),
+            ("errors", num(self.errors as f64)),
+            ("mean_batch", num(self.mean_batch)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p90_ms", num(self.p90_ms)),
+            ("p99_ms", num(self.p99_ms)),
+            ("max_ms", num(self.max_ms)),
+            ("elapsed_s", num(self.elapsed_s)),
+            ("throughput_rps", num(self.throughput_rps)),
+        ])
+    }
+}
+
+impl fmt::Display for ServeStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} requests in {} batches (mean batch {:.2}, {} errors) \
+             | latency p50={:.3}ms p90={:.3}ms p99={:.3}ms max={:.3}ms \
+             | {:.1} req/s over {:.2}s",
+            self.requests, self.batches, self.mean_batch, self.errors,
+            self.p50_ms, self.p90_ms, self.p99_ms, self.max_ms,
+            self.throughput_rps, self.elapsed_s
+        )
+    }
+}
+
+/// Value at quantile `q` of an ascending-sorted sample (nearest rank).
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize)
+        .clamp(1, sorted.len())
+        - 1;
+    sorted[idx]
+}
+
+/// The batched inference server.
+pub struct Server {
+    shared: Arc<Shared>,
+    plan: Arc<EnginePlan>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the worker pool; the server accepts requests immediately.
+    pub fn start(plan: Arc<EnginePlan>, cfg: ServeConfig)
+                 -> Result<Server> {
+        if cfg.workers == 0 || cfg.max_batch == 0 || cfg.queue_cap == 0 {
+            bail!("serve config needs workers, max_batch and queue_cap \
+                   >= 1, got {cfg:?}");
+        }
+        plan.validate()?;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState::default()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cfg,
+            stats: Mutex::new(StatsInner::default()),
+        });
+        let workers = (0..shared.cfg.workers)
+            .map(|_| {
+                let shared = shared.clone();
+                let plan = plan.clone();
+                std::thread::spawn(move || worker_loop(shared, plan))
+            })
+            .collect();
+        Ok(Server { shared, plan, workers })
+    }
+
+    pub fn plan(&self) -> &EnginePlan {
+        &self.plan
+    }
+
+    /// Enqueue one request, blocking while the queue is at capacity
+    /// (backpressure), and return a [`Ticket`] for the response.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Ticket> {
+        if input.len() != self.plan.input_dim {
+            bail!("request has {} values, model {:?} wants {}",
+                  input.len(), self.plan.model, self.plan.input_dim);
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = Request { input, submitted: Instant::now(), tx };
+        let mut st = self.shared.state.lock().unwrap();
+        while st.q.len() >= self.shared.cfg.queue_cap && !st.closed {
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            bail!("server is shut down");
+        }
+        st.q.push_back(req);
+        drop(st);
+        self.shared.not_empty.notify_one();
+        Ok(Ticket { rx })
+    }
+
+    /// Snapshot of the latency/batch statistics so far. The (possibly
+    /// reservoir-sampled) latency buffer is copied out under the lock
+    /// and sorted outside it, so workers never stall on a snapshot.
+    pub fn stats(&self) -> ServeStats {
+        let (mut lat, requests, batches, errors) = {
+            let inner = self.shared.stats.lock().unwrap();
+            (inner.latencies_ns.clone(), inner.requests, inner.batches,
+             inner.errors)
+        };
+        lat.sort_unstable();
+        let ms = |ns: u64| ns as f64 / 1e6;
+        ServeStats {
+            requests,
+            batches,
+            errors,
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                requests as f64 / batches as f64
+            },
+            p50_ms: ms(percentile(&lat, 0.50)),
+            p90_ms: ms(percentile(&lat, 0.90)),
+            p99_ms: ms(percentile(&lat, 0.99)),
+            max_ms: ms(lat.last().copied().unwrap_or(0)),
+            elapsed_s: 0.0,
+            throughput_rps: 0.0,
+        }
+    }
+
+    /// Stop accepting requests, drain the queue, join the workers, and
+    /// return the final stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+        }
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if self.workers.is_empty() {
+            return; // already shut down
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+        }
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>) {
+    let mut engine = Engine::new(plan.clone());
+    engine.set_int_enabled(!shared.cfg.force_f32);
+    let dim = plan.input_dim;
+    let od = plan.output_dim;
+    loop {
+        let batch = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if !st.q.is_empty() {
+                    break;
+                }
+                if st.closed {
+                    return;
+                }
+                st = shared.not_empty.wait(st).unwrap();
+            }
+            let mut batch = Vec::with_capacity(shared.cfg.max_batch);
+            while batch.len() < shared.cfg.max_batch {
+                match st.q.pop_front() {
+                    Some(r) => batch.push(r),
+                    None => break,
+                }
+            }
+            // micro-batch window: hold a partial batch open briefly
+            if batch.len() < shared.cfg.max_batch
+                && !shared.cfg.deadline.is_zero()
+            {
+                let until = Instant::now() + shared.cfg.deadline;
+                while batch.len() < shared.cfg.max_batch && !st.closed {
+                    let now = Instant::now();
+                    if now >= until {
+                        break;
+                    }
+                    let (guard, timeout) = shared
+                        .not_empty
+                        .wait_timeout(st, until - now)
+                        .unwrap();
+                    st = guard;
+                    while batch.len() < shared.cfg.max_batch {
+                        match st.q.pop_front() {
+                            Some(r) => batch.push(r),
+                            None => break,
+                        }
+                    }
+                    if timeout.timed_out() {
+                        break;
+                    }
+                }
+            }
+            batch
+        };
+        shared.not_full.notify_all();
+
+        let n = batch.len();
+        let mut flat = Vec::with_capacity(n * dim);
+        for r in &batch {
+            flat.extend_from_slice(&r.input);
+        }
+        let result = engine.infer_batch(&flat, n);
+        let done = Instant::now();
+        let mut stats = shared.stats.lock().unwrap();
+        stats.batches += 1;
+        stats.requests += n as u64;
+        match result {
+            Ok(out) => {
+                for (i, r) in batch.into_iter().enumerate() {
+                    let lat =
+                        done.duration_since(r.submitted).as_nanos() as u64;
+                    stats.record_latency(lat);
+                    let _ =
+                        r.tx.send(Ok(out[i * od..(i + 1) * od].to_vec()));
+                }
+            }
+            Err(e) => {
+                stats.errors += n as u64;
+                let msg = format!("{e:#}");
+                for r in batch {
+                    let _ = r.tx.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Closed-loop load driver: `clients` threads each submit
+/// `per_client` random requests back-to-back and wait for every
+/// response. Returns the server stats with throughput over the
+/// measured wall-clock window — what `bbits serve` reports.
+pub fn closed_loop(server: &Server, clients: usize, per_client: usize,
+                   seed: u64) -> Result<ServeStats> {
+    let dim = server.plan().input_dim;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || -> Result<()> {
+                    let mut rng = Pcg64::with_stream(seed, c as u64);
+                    for _ in 0..per_client {
+                        let x: Vec<f32> =
+                            (0..dim).map(|_| rng.normal()).collect();
+                        server.submit(x)?.wait()?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().map_err(|_| anyhow!("load client panicked"))??;
+        }
+        Ok(())
+    })?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut stats = server.stats();
+    stats.elapsed_s = elapsed;
+    stats.throughput_rps = if elapsed > 0.0 {
+        (clients * per_client) as f64 / elapsed
+    } else {
+        0.0
+    };
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::synthetic_plan;
+
+    fn tiny_plan() -> Arc<EnginePlan> {
+        Arc::new(synthetic_plan("t", &[8, 16, 4], 4, 8, 0.2, 9).unwrap())
+    }
+
+    #[test]
+    fn serves_and_matches_direct_inference() {
+        let plan = tiny_plan();
+        let server = Server::start(
+            plan.clone(),
+            ServeConfig {
+                workers: 2,
+                queue_cap: 32,
+                max_batch: 4,
+                deadline: Duration::from_millis(1),
+                force_f32: false,
+            },
+        )
+        .unwrap();
+        let mut eng = Engine::new(plan.clone());
+        let mut tickets = Vec::new();
+        let mut want = Vec::new();
+        for i in 0..10 {
+            let x: Vec<f32> =
+                (0..8).map(|j| ((i * 8 + j) as f32).sin()).collect();
+            want.push(eng.infer(&x).unwrap());
+            tickets.push(server.submit(x).unwrap());
+        }
+        for (t, w) in tickets.into_iter().zip(&want) {
+            assert_eq!(&t.wait().unwrap(), w);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 10);
+        assert!(stats.batches >= 1 && stats.batches <= 10);
+        assert_eq!(stats.errors, 0);
+        assert!(stats.p99_ms >= stats.p50_ms);
+    }
+
+    #[test]
+    fn rejects_bad_request_width_and_bad_config() {
+        let server =
+            Server::start(tiny_plan(), ServeConfig::default()).unwrap();
+        assert!(server.submit(vec![0.0; 3]).is_err());
+        let plan = tiny_plan();
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 0);
+        // a fresh server with zero workers is rejected outright
+        let bad =
+            ServeConfig { workers: 0, ..ServeConfig::default() };
+        assert!(Server::start(plan, bad).is_err());
+    }
+
+    #[test]
+    fn closed_loop_counts_every_request() {
+        let server = Server::start(
+            tiny_plan(),
+            ServeConfig {
+                workers: 3,
+                max_batch: 8,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let stats = closed_loop(&server, 4, 25, 7).unwrap();
+        assert_eq!(stats.requests, 100);
+        assert_eq!(stats.errors, 0);
+        assert!(stats.throughput_rps > 0.0);
+        assert!(stats.mean_batch >= 1.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.50), 50);
+        assert_eq!(percentile(&v, 0.99), 99);
+        assert_eq!(percentile(&v, 1.0), 100);
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[42], 0.5), 42);
+    }
+}

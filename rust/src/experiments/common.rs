@@ -25,12 +25,15 @@ pub struct ExpOptions {
 
 impl ExpOptions {
     pub fn from_args(args: &crate::cli::Args) -> Result<ExpOptions> {
+        // `--threads` is the global worker-count flag (serve workers,
+        // sweep parallelism); `--jobs` stays as the sweep-era alias.
+        let jobs_alias = args.usize_flag("jobs", 1)?;
         Ok(ExpOptions {
             artifacts_dir: args.str_flag("artifacts", "artifacts"),
             out_dir: args.str_flag("out", "runs"),
             seeds: args.usize_flag("seeds", 1)?,
             quick: args.bool_flag("quick"),
-            jobs: args.usize_flag("jobs", 1)?,
+            jobs: args.usize_flag("threads", jobs_alias)?,
             steps_override: args.opt_flag("steps")
                 .map(|v| v.parse()).transpose()
                 .map_err(|_| anyhow::anyhow!("--steps expects integer"))?,

@@ -27,6 +27,10 @@
 //!   cache, train state marshalling.
 //! * [`coordinator`] — trainer, gate manager, sweeps, post-training
 //!   quantization, checkpoints, metrics.
+//! * [`engine`] — integer inference engine: lowers a checkpoint + its
+//!   Eq. 22 gate configuration into bit-packed fixed-point GEMMs
+//!   (pruned channels physically elided) and serves batched requests
+//!   (`bbits serve`); parity-tested against the host oracle.
 //! * [`baselines`] — fixed-width / LSQ-like / DQ-restricted / sensitivity
 //!   baselines.
 //! * [`experiments`] — one harness per paper table/figure.
@@ -39,6 +43,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod experiments;
 pub mod models;
 pub mod quant;

@@ -12,14 +12,17 @@ use anyhow::{bail, Context, Result};
 
 use bayesian_bits::cli::{self, Args};
 use bayesian_bits::config::{presets, Mode};
+use bayesian_bits::coordinator::checkpoint;
 use bayesian_bits::coordinator::sweep::{run_sweep, Job};
 use bayesian_bits::coordinator::trainer::Trainer;
+use bayesian_bits::engine::{self, serve};
 use bayesian_bits::experiments::{self, common::ExpOptions};
 use bayesian_bits::models::{descriptor, Preset};
 use bayesian_bits::bops::BopCounter;
 use bayesian_bits::quant::grid::{bb_quantize_host, QuantConfig};
 use bayesian_bits::report::{arch_viz, TableBuilder};
-use bayesian_bits::runtime::{Manifest, Runtime};
+use bayesian_bits::runtime::{Manifest, Runtime, TrainState};
+use bayesian_bits::util::bench::Bench;
 use bayesian_bits::util::json::Json;
 use bayesian_bits::util::logging;
 
@@ -94,11 +97,103 @@ fn run(argv: &[String]) -> Result<()> {
                                        args.bool_flag("curves"))?;
             Ok(())
         }
+        "serve" => cmd_serve(&args, &opt),
+        "engine-bench" => cmd_engine_bench(&args),
         "parity" => cmd_parity(&opt),
         "bops" => cmd_bops(),
         "report" => cmd_report(&args, &opt),
         other => bail!("unknown command {other:?}\n\n{}", cli::usage()),
     }
+}
+
+/// `bbits serve` — lower a checkpoint (or a synthetic plan) into the
+/// integer engine and drive it with a closed-loop batched load.
+fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
+    let plan = if let Some(ckpt) = args.opt_flag("checkpoint") {
+        let model = args.str_flag("model", "lenet5");
+        // the mode the checkpoint was trained in decides which gate
+        // slots were learned vs locked (printed by `bbits train`)
+        let mode = Mode::parse(&args.str_flag("mode", "bb"))?;
+        let man =
+            Manifest::load(Path::new(&opt.artifacts_dir), &model)?;
+        let (ck_model, state) = checkpoint::load(Path::new(ckpt))?;
+        if ck_model != man.name {
+            bail!("checkpoint is for {ck_model:?}, manifest is {:?}",
+                  man.name);
+        }
+        engine::lower_with_mode(&man, &state.params, &mode)?
+    } else {
+        let dims =
+            args.usize_list_flag("dims", &[128, 256, 256, 10])?;
+        let wbits = args.usize_flag("wbits", 4)? as u32;
+        let abits = args.usize_flag("abits", 8)? as u32;
+        let prune = args.f64_flag("prune", 0.25)?;
+        let seed = args.usize_flag("seed", 1)? as u64;
+        logging::info(format!(
+            "no --checkpoint given: serving a synthetic w{wbits}a{abits} \
+             plan over dims {dims:?}"
+        ));
+        engine::synthetic_plan("synthetic", &dims, wbits, abits, prune,
+                               seed)?
+    };
+    println!("{}", plan.report());
+
+    let workers = args.usize_flag(
+        "threads",
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .min(8),
+    )?;
+    let cfg = serve::ServeConfig {
+        workers,
+        queue_cap: args.usize_flag("queue-cap", 256)?,
+        max_batch: args.usize_flag("max-batch", 16)?,
+        deadline: std::time::Duration::from_secs_f64(
+            args.f64_flag("deadline-ms", 2.0)?.max(0.0) / 1e3,
+        ),
+        force_f32: args.bool_flag("no-int"),
+    };
+    let clients = args.usize_flag("clients", 8)?;
+    let requests = args.usize_flag("requests", 200)?;
+    logging::info(format!(
+        "serving with {} workers (max batch {}, deadline {:?}, int \
+         path {}); {} clients x {} requests",
+        cfg.workers, cfg.max_batch, cfg.deadline,
+        if cfg.force_f32 { "OFF" } else { "on" }, clients, requests
+    ));
+    let server = serve::Server::start(Arc::new(plan), cfg)?;
+    let stats = serve::closed_loop(&server, clients, requests, 7)?;
+    println!("{stats}");
+    let out = opt.out_path("serve_stats.json");
+    std::fs::write(&out, stats.to_json().to_string())?;
+    logging::info(format!("serve stats written to {out:?}"));
+    server.shutdown();
+    Ok(())
+}
+
+/// `bbits engine-bench` — packed integer GEMM vs the f32 fallback at
+/// every chain width on one synthetic layer (shared sweep with
+/// `benches/bench_engine.rs`).
+fn cmd_engine_bench(args: &Args) -> Result<()> {
+    let rows = args.usize_flag("rows", 1024)?;
+    let cols = args.usize_flag("cols", 1024)?;
+    let batch = args.usize_flag("batch", 16)?;
+    let b = if args.bool_flag("quick") {
+        Bench::quick()
+    } else {
+        Bench::default()
+    };
+    bayesian_bits::util::bench::header(&format!(
+        "integer engine — {rows}x{cols} GEMM, batch {batch}"
+    ));
+    for rec in
+        engine::throughput_sweep(rows, cols, &[batch], &[2, 4, 8, 16],
+                                 &b)?
+    {
+        println!("{}", rec.line());
+    }
+    Ok(())
 }
 
 fn cmd_train(args: &Args, opt: &ExpOptions) -> Result<()> {
@@ -121,7 +216,8 @@ fn cmd_train(args: &Args, opt: &ExpOptions) -> Result<()> {
     let rt = Arc::new(Runtime::cpu()?);
     let man = Manifest::load(Path::new(&cfg.artifacts_dir), &cfg.model)?;
     let mut trainer = Trainer::new(rt, man.clone(), cfg.clone())?;
-    let result = trainer.run()?;
+    let init = TrainState::init(&man)?;
+    let (final_state, result) = trainer.run_keeping_state(init)?;
     println!(
         "\nresult: model={} mode={} mu={} acc={:.4} (pre-FT {:.4}) \
          relBOPs={:.2}% loss={:.4}",
@@ -130,14 +226,25 @@ fn cmd_train(args: &Args, opt: &ExpOptions) -> Result<()> {
     );
     println!("{}", arch_viz::architecture_report(&man, &result.states));
     println!("{}", arch_viz::summary_line(&man, &result.states));
-    let out = opt.out_path(&format!(
-        "train_{}_{}_mu{}.metrics.json",
+    let stem = format!(
+        "train_{}_{}_mu{}",
         cfg.model,
         cfg.mode.label().replace(':', "_"),
         cfg.mu
-    ));
+    );
+    let out = opt.out_path(&format!("{stem}.metrics.json"));
     result.history.save(&out)?;
     logging::info(format!("metrics written to {out:?}"));
+    // final trained state, servable via `bbits serve --checkpoint`
+    let ckpt = opt.out_path(&format!("{stem}.ckpt"));
+    checkpoint::save(&ckpt, &cfg.model, &final_state)?;
+    logging::info(format!(
+        "checkpoint written to {ckpt:?} (serve it: bbits serve --model \
+         {} --checkpoint {} --mode {})",
+        cfg.model,
+        ckpt.display(),
+        cfg.mode.label()
+    ));
     Ok(())
 }
 

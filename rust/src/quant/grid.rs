@@ -107,17 +107,38 @@ fn round_half_even(v: f32) -> f32 {
 /// Plain uniform quantizer at one bit width (tests/fixed baselines).
 pub fn quantize_fixed_host(x: &[f32], beta: f32, bit: u32,
                            signed: bool) -> Vec<f32> {
+    let (s, codes) = quantize_codes_host(x, beta, bit, signed);
+    codes.iter().map(|q| s * *q as f32).collect()
+}
+
+/// Integer grid codes for the fixed-width quantizer — the lowering
+/// contract of the integer engine (`engine::pack`).
+///
+/// Returns `(step, codes)` such that `quantize_fixed_host` is exactly
+/// `step * codes[i] as f32` element-wise (same clip, same banker's
+/// rounding). Signed codes land in `[-(2^(b-1) - 1), 2^(b-1) - 1]` and
+/// unsigned codes in `[0, 2^b - 1]`, so every width in
+/// [`crate::quant::LEVELS`] fits a `b`-bit word.
+pub fn quantize_codes_host(x: &[f32], beta: f32, bit: u32,
+                           signed: bool) -> (f32, Vec<i64>) {
     let beta_grid = beta.abs();
     let beta_clip = beta_grid * (1.0 - BETA_EPS);
     let alpha = if signed { -beta_grid } else { 0.0 };
     let alpha_clip = alpha * (1.0 - BETA_EPS);
     let s = (beta_grid - alpha) / ((2.0f64.powi(bit as i32) - 1.0) as f32);
-    x.iter()
+    // At 32 bits the BETA_EPS clip margin is below one f32 ulp of the
+    // max ratio, so rounding in `xc / s` can overshoot the nominal
+    // grid end by one ulp; clamp to keep the b-bit contract exact.
+    let hi = if signed { (1i64 << (bit - 1)) - 1 } else { (1i64 << bit) - 1 };
+    let lo = if signed { -hi } else { 0 };
+    let codes = x
+        .iter()
         .map(|v| {
             let xc = pact_clip(*v, alpha_clip, beta_clip);
-            s * round_half_even(xc / s)
+            (round_half_even(xc / s) as i64).clamp(lo, hi)
         })
-        .collect()
+        .collect();
+    (s, codes)
 }
 
 #[cfg(test)]
@@ -164,6 +185,35 @@ mod tests {
                                    &[1., 1., 1., 1.], &cfg());
         assert!(out[..4].iter().all(|v| *v == 0.0));
         assert!(out[4..].iter().all(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn codes_reconstruct_fixed_quantizer_exactly() {
+        let mut rng = crate::rng::Pcg64::new(11);
+        for bit in crate::quant::LEVELS {
+            for signed in [true, false] {
+                let x: Vec<f32> = (0..128)
+                    .map(|_| {
+                        let v = rng.normal() * 2.0;
+                        if signed { v } else { v.abs() }
+                    })
+                    .collect();
+                let (s, codes) = quantize_codes_host(&x, 1.7, bit, signed);
+                let want = quantize_fixed_host(&x, 1.7, bit, signed);
+                let lim = if signed {
+                    (1i64 << (bit - 1)) - 1
+                } else {
+                    (1i64 << bit) - 1
+                };
+                for (q, w) in codes.iter().zip(&want) {
+                    // bit-exact by construction (same ops)
+                    assert_eq!(s * *q as f32, *w, "bit={bit}");
+                    assert!(*q <= lim && *q >= if signed { -lim } else { 0 },
+                            "bit={bit} code {q} exceeds [{}, {lim}]",
+                            if signed { -lim } else { 0 });
+                }
+            }
+        }
     }
 
     #[test]

@@ -5,7 +5,12 @@
 //! user-supplied throughput unit, in a criterion-like one-line format
 //! that `EXPERIMENTS.md §Perf` quotes directly.
 
+use std::path::Path;
 use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{num, obj, s, Json};
 
 /// One benchmark's timing summary (nanoseconds per iteration).
 #[derive(Debug, Clone)]
@@ -35,6 +40,35 @@ impl Summary {
         }
         s
     }
+
+    /// JSON record for machine-readable bench artifacts
+    /// (`BENCH_*.json`); `extra` carries bench-specific columns such
+    /// as batch size or bit width.
+    pub fn to_json(&self, extra: Vec<(&str, Json)>) -> Json {
+        let mut fields = vec![
+            ("name", s(&self.name)),
+            ("iters", num(self.iters as f64)),
+            ("min_ns", num(self.min_ns)),
+            ("median_ns", num(self.median_ns)),
+            ("mean_ns", num(self.mean_ns)),
+            ("p95_ns", num(self.p95_ns)),
+        ];
+        fields.extend(extra);
+        obj(fields)
+    }
+}
+
+/// Write a `BENCH_<name>.json` artifact: `{"bench": title,
+/// "results": [...]}` — the contract the perf tracking scripts read.
+pub fn save_json(path: &Path, title: &str, results: Vec<Json>)
+                 -> Result<()> {
+    let doc = obj(vec![
+        ("bench", s(title)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(path, doc.to_string())
+        .with_context(|| format!("write bench artifact {path:?}"))?;
+    Ok(())
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -131,5 +165,30 @@ mod tests {
         assert!(fmt_ns(12_000.0).ends_with("µs"));
         assert!(fmt_ns(12_000_000.0).ends_with("ms"));
         assert!(fmt_ns(2e9).ends_with('s'));
+    }
+
+    #[test]
+    fn json_artifact_roundtrips() {
+        let s = Summary {
+            name: "k".into(),
+            iters: 10,
+            min_ns: 1.0,
+            median_ns: 2.0,
+            mean_ns: 2.5,
+            p95_ns: 3.0,
+        };
+        let dir = std::env::temp_dir().join("bbits_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("BENCH_x.json");
+        save_json(&p, "x", vec![s.to_json(vec![("batch", num(4.0))])])
+            .unwrap();
+        let doc =
+            Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "x");
+        let rows = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("batch").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(rows[0].get("median_ns").unwrap().as_f64().unwrap(),
+                   2.0);
+        std::fs::remove_file(&p).unwrap();
     }
 }

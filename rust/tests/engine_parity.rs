@@ -1,0 +1,267 @@
+//! Integer-engine parity: the fixed-point datapath vs the f32
+//! simulated-quant reference and the `bb_quantize_host` oracle, plus
+//! the checkpoint -> lower -> serve end-to-end path.
+//!
+//! These run without AOT artifacts: the engine is a pure host
+//! subsystem, so CI always exercises it.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use bayesian_bits::coordinator::checkpoint;
+use bayesian_bits::engine::lower::{build_plan_single, lower};
+use bayesian_bits::engine::serve::{closed_loop, ServeConfig, Server};
+use bayesian_bits::engine::{ActSpec, Engine};
+use bayesian_bits::quant::grid::{bb_quantize_host, QuantConfig};
+use bayesian_bits::runtime::{Manifest, TrainState};
+use bayesian_bits::util::json::Json;
+use bayesian_bits::util::prop::{check, Gen, PropResult};
+
+#[test]
+fn prop_int_path_matches_simulated_f32() {
+    check("engine_int_vs_f32", 60, |g: &mut Gen| {
+        let in_dim = g.usize_in(1, 96);
+        let out_dim = g.usize_in(1, 32);
+        let w_bits = *g.choose(&[2u32, 4, 8, 16]);
+        let a_bits = *g.choose(&[4u32, 8, 16]);
+        let signed_a = g.bool();
+        let beta_w = g.f32_in(0.5, 2.0);
+        let beta_a = g.f32_in(0.5, 4.0);
+        let w: Vec<f32> = (0..in_dim * out_dim)
+            .map(|_| g.f32_in(-1.5 * beta_w, 1.5 * beta_w))
+            .collect();
+        let z2: Vec<f32> = (0..out_dim)
+            .map(|_| if g.bool() { 1.0 } else { 0.0 })
+            .collect();
+        let bias: Vec<f32> =
+            (0..out_dim).map(|_| g.f32_in(-0.5, 0.5)).collect();
+        let plan = build_plan_single(
+            "l", &w, in_dim, out_dim, &z2, w_bits, beta_w,
+            ActSpec::Int { bits: a_bits, beta: beta_a, signed: signed_a },
+            Some(bias), g.bool(),
+        )
+        .unwrap();
+        assert!(plan.layers[0].packed.is_some()
+                || plan.layers[0].kept.is_empty());
+        let mut eng = Engine::new(Arc::new(plan));
+        let x: Vec<f32> = (0..in_dim)
+            .map(|_| {
+                let v = g.f32_in(-beta_a, beta_a);
+                if signed_a { v } else { v.abs() }
+            })
+            .collect();
+        let yi = eng.infer(&x).unwrap();
+        let yf = eng.infer_reference(&x).unwrap();
+        for (a, b) in yi.iter().zip(&yf) {
+            let tol = 1e-4 * (1.0 + b.abs());
+            if (a - b).abs() > tol {
+                return PropResult::Fail(format!(
+                    "w{w_bits}a{a_bits} {in_dim}x{out_dim}: int {a} \
+                     vs f32 {b}"));
+            }
+        }
+        PropResult::Pass
+    });
+}
+
+#[test]
+fn int8_layer_matches_bb_quantize_host_oracle() {
+    // A fully-open 8-bit configuration cross-checked against the host
+    // oracle that the runtime parity suite itself is pinned to.
+    let in_dim = 24;
+    let out_dim = 6;
+    let beta_w = 1.0f32;
+    let beta_a = 2.0f32;
+    let mut rng = bayesian_bits::rng::Pcg64::new(17);
+    let w: Vec<f32> =
+        (0..in_dim * out_dim).map(|_| rng.normal() * 0.6).collect();
+    let x: Vec<f32> =
+        (0..in_dim).map(|_| (rng.normal() * 0.8).abs()).collect();
+    let z2 = vec![1.0f32, 1.0, 1.0, 1.0, 1.0, 0.0]; // last channel pruned
+
+    let plan = build_plan_single(
+        "oracle", &w, in_dim, out_dim, &z2, 8, beta_w,
+        ActSpec::Int { bits: 8, beta: beta_a, signed: false }, None,
+        false,
+    )
+    .unwrap();
+    let mut eng = Engine::new(Arc::new(plan));
+    let y = eng.infer(&x).unwrap();
+
+    // oracle: simulated-quant weights (8 bits = z4, z8 open) and
+    // activations, f32 GEMM
+    let wcfg = QuantConfig::new(true, &[2, 4, 8, 16, 32]);
+    let acfg = QuantConfig::new(false, &[2, 4, 8, 16, 32]);
+    let zh8 = [1.0f32, 1.0, 0.0, 0.0];
+    let w_sim =
+        bb_quantize_host(&w, out_dim, beta_w, &z2, &zh8, &wcfg);
+    let a_sim =
+        bb_quantize_host(&x, 1, beta_a, &[1.0], &zh8, &acfg);
+    for r in 0..out_dim {
+        let want: f32 = (0..in_dim)
+            .map(|c| w_sim[r * in_dim + c] * a_sim[c])
+            .sum();
+        let tol = 1e-4 * (1.0 + want.abs());
+        assert!((y[r] - want).abs() < tol,
+                "row {r}: engine {} vs oracle {want}", y[r]);
+    }
+    // the pruned channel is exactly zero on both paths
+    assert_eq!(y[out_dim - 1], 0.0);
+}
+
+/// A hand-built single-dense-layer Bayesian-Bits manifest whose phi
+/// logits threshold to: weights 8-bit with channel 3 pruned,
+/// activations 8-bit. Weight shape is channel-last `[6, 4]` to
+/// exercise the lowering transpose.
+fn tiny_manifest() -> Manifest {
+    let text = r#"{
+    "name":"tiny","engine":"bb","preset":"small","batch":2,
+    "n_params":43,"n_slots":13,"input_shape":[6],"num_classes":4,
+    "dataset":{"name":"mnist_like","input":[6,1,1],"classes":4,
+               "train":8,"test":4},
+    "params":[
+     {"name":"a.w","shape":[6,4],"group":"w","offset":0,"size":24},
+     {"name":"a.w.phi","shape":[8],"group":"g","offset":24,"size":8},
+     {"name":"a.w.beta","shape":[1],"group":"s","offset":32,"size":1},
+     {"name":"a.in.phi","shape":[5],"group":"g","offset":33,"size":5},
+     {"name":"a.in.beta","shape":[1],"group":"s","offset":38,"size":1},
+     {"name":"a.b","shape":[4],"group":"w","offset":39,"size":4}],
+    "quantizers":[
+     {"name":"a.w","kind":"w","signed":true,"channels":4,
+      "levels":[2,4,8,16,32],"offset":0,"n_slots":8,
+      "consumer_macs":24},
+     {"name":"a.in","kind":"a","signed":false,"channels":1,
+      "levels":[2,4,8,16,32],"offset":8,"n_slots":5,
+      "consumer_macs":24}],
+    "layers":[
+     {"name":"a","kind":"dense","macs":24,"cin":6,"cout":4,
+      "weight_q":"a.w","act_q":"a.in","residual_input":false}],
+    "lam_base":[1,1,1,1,1,1,1,1,1,1,1,1,1],
+    "hlo_train":"t.hlo.txt","hlo_eval":"e.hlo.txt",
+    "init_file":"i.bin"}"#;
+    Manifest::from_json(&Json::parse(text).unwrap(), Path::new("/tmp"))
+        .unwrap()
+}
+
+fn tiny_params() -> Vec<f32> {
+    let mut params = vec![0.0f32; 43];
+    // a.w, stored [din=6, dout=4] (channel-last): w[i*4 + o]
+    let mut rng = bayesian_bits::rng::Pcg64::new(23);
+    for v in params[..24].iter_mut() {
+        *v = rng.normal() * 0.5;
+    }
+    // a.w.phi: channels [open, open, open, pruned], chain z4,z8 open,
+    // z16,z32 shut -> 8-bit weights, channel 3 elided
+    let w_phi = [6.0, 6.0, 6.0, -6.0, 6.0, 6.0, -6.0, -6.0];
+    params[24..32].copy_from_slice(&w_phi.map(|v| v as f32));
+    params[32] = 1.0; // a.w.beta
+    // a.in.phi: channel slot is mode-locked open; chain -> 8 bits
+    let a_phi = [-6.0, 6.0, 6.0, -6.0, -6.0];
+    params[33..38].copy_from_slice(&a_phi.map(|v| v as f32));
+    params[38] = 2.0; // a.in.beta
+    params[39..43].copy_from_slice(&[0.1, -0.2, 0.3, 0.5]); // a.b
+    params
+}
+
+#[test]
+fn lowering_reads_gates_weights_and_clip_ranges() {
+    let man = tiny_manifest();
+    let params = tiny_params();
+    let plan = lower(&man, &params).unwrap();
+    assert_eq!(plan.model, "tiny");
+    assert_eq!(plan.input_dim, 6);
+    assert_eq!(plan.output_dim, 4);
+    let l = &plan.layers[0];
+    assert_eq!(l.w_bits, 8);
+    assert_eq!(l.kept, vec![0, 1, 2]); // channel 3 physically elided
+    assert_eq!(l.in_dim, 6);
+    let p = l.packed.as_ref().unwrap();
+    assert_eq!((p.rows, p.cols, p.bits), (3, 6, 8));
+    assert_eq!(l.act,
+               ActSpec::Int { bits: 8, beta: 2.0, signed: false });
+    assert_eq!(l.bias.as_deref(), Some(&[0.1, -0.2, 0.3, 0.5][..]));
+    assert!(!l.relu); // single (= last) layer emits raw logits
+    // packed codes store 3 of 4 rows at one byte per weight
+    assert!(l.packed_bytes() < l.dense_bytes());
+
+    // transpose check: row 0 of the plan is column 0 of the stored
+    // [6, 4] tensor, quantized on the learned grid
+    let eng_w = &l.f32_rows[..6];
+    let (step, codes) =
+        bayesian_bits::quant::grid::quantize_codes_host(
+            &(0..6).map(|i| params[i * 4]).collect::<Vec<f32>>(),
+            1.0, 8, true);
+    for (got, q) in eng_w.iter().zip(&codes) {
+        assert_eq!(*got, step * *q as f32);
+    }
+
+    // a parameter vector that does not match the manifest is rejected
+    assert!(lower(&man, &params[..40]).is_err());
+}
+
+#[test]
+fn checkpoint_to_serve_end_to_end_uses_integer_path() {
+    let man = tiny_manifest();
+    let params = tiny_params();
+
+    // round-trip the trained state through the v2 checkpoint format
+    let dir = std::env::temp_dir().join("bbits_engine_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("tiny.ckpt");
+    let state = TrainState::from_params(params.clone());
+    checkpoint::save(&ckpt, "tiny", &state).unwrap();
+    let (model, restored) = checkpoint::load(&ckpt).unwrap();
+    assert_eq!(model, "tiny");
+    assert_eq!(restored.params, params);
+
+    let plan = lower(&man, &restored.params).unwrap();
+    // gated layer executes on packed integer weights
+    assert!(plan.layers[0].packed.is_some());
+    let plan = Arc::new(plan);
+
+    let mut eng = Engine::new(plan.clone());
+    let server = Server::start(
+        plan.clone(),
+        ServeConfig {
+            workers: 2,
+            queue_cap: 16,
+            max_batch: 4,
+            deadline: std::time::Duration::from_millis(1),
+            force_f32: false,
+        },
+    )
+    .unwrap();
+
+    // batched responses are bit-identical to direct integer inference
+    let inputs: Vec<Vec<f32>> = (0..9)
+        .map(|i| {
+            (0..6).map(|j| ((i * 6 + j) as f32 * 0.37).sin().abs())
+                .collect()
+        })
+        .collect();
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| server.submit(x.clone()).unwrap())
+        .collect();
+    for (t, x) in tickets.into_iter().zip(&inputs) {
+        let got = t.wait().unwrap();
+        let want = eng.infer(x).unwrap();
+        assert_eq!(got, want);
+        // pruned channel 3 carries only its bias on every request
+        assert_eq!(got[3], 0.5);
+        // integer path agrees with the f32 simulated-quant reference
+        let reference = eng.infer_reference(x).unwrap();
+        for (a, b) in got.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                    "int {a} vs ref {b}");
+        }
+    }
+
+    // a concurrent closed-loop load completes without errors
+    let stats = closed_loop(&server, 4, 10, 99).unwrap();
+    assert_eq!(stats.errors, 0);
+    assert!(stats.requests >= 40 + 9);
+    let final_stats = server.shutdown();
+    assert_eq!(final_stats.errors, 0);
+    std::fs::remove_file(&ckpt).unwrap();
+}

@@ -7,13 +7,17 @@ use std::collections::BTreeMap;
 
 use bayesian_bits::bops::{BopCounter, QuantState};
 use bayesian_bits::data::synth::{generate, DatasetSpec};
+use bayesian_bits::engine::kernels::{dot_codes, low_bit_pair};
+use bayesian_bits::engine::pack::{code_range, PackedMatrix};
 use bayesian_bits::models::{descriptor, Preset};
 use bayesian_bits::quant::gates::{
     prob_active, test_time_gate, GateView, HardConcrete,
 };
 use bayesian_bits::quant::grid::{
-    bb_quantize_host, quantize_fixed_host, step_sizes, QuantConfig,
+    bb_quantize_host, quantize_codes_host, quantize_fixed_host,
+    step_sizes, QuantConfig,
 };
+use bayesian_bits::quant::LEVELS;
 use bayesian_bits::util::json::Json;
 use bayesian_bits::util::prop::{check, Gen, PropResult};
 
@@ -227,6 +231,75 @@ fn prop_json_roundtrip_arbitrary_numbers_and_strings() {
             Ok(_) => PropResult::Fail(format!("mismatch: {text}")),
             Err(e) => PropResult::Fail(format!("parse error {e}: {text}")),
         }
+    });
+}
+
+#[test]
+fn prop_quantize_pack_unpack_exact_for_every_level() {
+    // The engine's storage contract: quantizing to grid codes, bit-
+    // packing, and unpacking is lossless at every width in the chain,
+    // and `step * code` reproduces `quantize_fixed_host` bit-exactly.
+    check("quantize_pack_unpack", 120, |g: &mut Gen| {
+        let bits = *g.choose(&LEVELS);
+        let signed = g.bool();
+        let beta = g.f32_in(0.1, 8.0);
+        let rows = g.usize_in(1, 6);
+        let cols = g.usize_in(1, 40);
+        let x: Vec<f32> = (0..rows * cols)
+            .map(|_| {
+                let v = g.f32_in(-2.0 * beta, 2.0 * beta);
+                if signed { v } else { v.abs() }
+            })
+            .collect();
+        let (step, codes) = quantize_codes_host(&x, beta, bits, signed);
+        let (lo, hi) = code_range(bits, signed);
+        if codes.iter().any(|q| *q < lo || *q > hi) {
+            return PropResult::Fail(format!(
+                "bits={bits} signed={signed}: code outside [{lo},{hi}]"));
+        }
+        let packed = match PackedMatrix::pack(&codes, rows, cols, bits,
+                                              signed) {
+            Ok(p) => p,
+            Err(e) => return PropResult::Fail(format!("pack: {e}")),
+        };
+        if packed.unpack() != codes {
+            return PropResult::Fail(format!(
+                "bits={bits} signed={signed}: pack/unpack not lossless"));
+        }
+        let fixed = quantize_fixed_host(&x, beta, bits, signed);
+        for (q, w) in codes.iter().zip(&fixed) {
+            if step * *q as f32 != *w {
+                return PropResult::Fail(format!(
+                    "bits={bits}: step*{q} != {w}"));
+            }
+        }
+        PropResult::Pass
+    });
+}
+
+#[test]
+fn prop_packed_dot_matches_exact_i64() {
+    // Both accumulator paths (blocked i32 and direct i64) agree with
+    // exact integer arithmetic on in-range code vectors.
+    check("packed_dot_exact", 150, |g: &mut Gen| {
+        let w_bits = *g.choose(&[2u32, 4, 8, 16]);
+        let a_bits = *g.choose(&[2u32, 4, 8, 16]);
+        let n = g.usize_in(1, 300);
+        let (wlo, whi) = code_range(w_bits, true);
+        let w: Vec<i32> = (0..n)
+            .map(|_| g.usize_in(0, (whi - wlo) as usize) as i32
+                + wlo as i32)
+            .collect();
+        let amax = (1u32 << a_bits) - 1;
+        let a: Vec<i32> = (0..n)
+            .map(|_| g.usize_in(0, amax as usize) as i32)
+            .collect();
+        let want: i64 =
+            w.iter().zip(&a).map(|(x, y)| *x as i64 * *y as i64).sum();
+        let got = dot_codes(&w, &a, low_bit_pair(w_bits, a_bits));
+        PropResult::check(got == want,
+                          || format!("w{w_bits}a{a_bits} n={n}: \
+                                      {got} vs {want}"))
     });
 }
 

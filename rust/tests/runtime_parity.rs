@@ -1,6 +1,7 @@
 //! Three-layer parity: python goldens vs Rust host oracle vs the
 //! PJRT-executed Pallas kernel, plus manifest <-> descriptor
-//! cross-checks. Requires `make artifacts`.
+//! cross-checks. Requires `make artifacts`; each test self-skips when
+//! the artifacts have not been built (CI runs host-only).
 
 use std::path::{Path, PathBuf};
 
@@ -13,8 +14,37 @@ fn artifacts_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// AOT artifacts are an optional build product; without them the
+/// device-parity suite has nothing to check against.
+fn artifacts_built() -> bool {
+    let ok = artifacts_dir().join("lenet5_manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: AOT artifacts not built \
+                   (run `make artifacts`)");
+    }
+    ok
+}
+
+/// Device tests additionally need a real PJRT plugin — absent in
+/// builds linked against the vendored `xla` stub.
+fn runtime_ready() -> bool {
+    if !artifacts_built() {
+        return false;
+    }
+    match Runtime::cpu() {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("skipping: PJRT runtime unavailable ({e:#})");
+            false
+        }
+    }
+}
+
 #[test]
 fn goldens_match_host_and_device() {
+    if !runtime_ready() {
+        return;
+    }
     let dir = artifacts_dir();
     let text =
         std::fs::read_to_string(dir.join("goldens.json")).unwrap();
@@ -47,6 +77,9 @@ fn goldens_match_host_and_device() {
 
 #[test]
 fn manifests_parse_and_validate_for_all_models() {
+    if !artifacts_built() {
+        return;
+    }
     let dir = artifacts_dir();
     for model in ["lenet5", "vgg7", "resnet18", "mobilenetv2",
                   "lenet5_dq", "vgg7_dq", "resnet18_dq"] {
@@ -62,6 +95,9 @@ fn manifests_parse_and_validate_for_all_models() {
 
 #[test]
 fn manifest_layers_match_rust_descriptors() {
+    if !artifacts_built() {
+        return;
+    }
     // The Rust-side model descriptors must agree with the python-built
     // manifests on MACs, channel counts and quantizer wiring.
     let dir = artifacts_dir();
@@ -82,6 +118,9 @@ fn manifest_layers_match_rust_descriptors() {
 
 #[test]
 fn weight_quantizer_channels_match_layer_cout() {
+    if !artifacts_built() {
+        return;
+    }
     let dir = artifacts_dir();
     let man = Manifest::load(&dir, "resnet18").unwrap();
     for l in &man.layers {
@@ -94,6 +133,9 @@ fn weight_quantizer_channels_match_layer_cout() {
 
 #[test]
 fn lam_base_is_bop_proportional() {
+    if !artifacts_built() {
+        return;
+    }
     let dir = artifacts_dir();
     let man = Manifest::load(&dir, "lenet5").unwrap();
     let max_macs =
@@ -116,6 +158,9 @@ fn lam_base_is_bop_proportional() {
 
 #[test]
 fn eval_is_deterministic_and_gate_sensitive() {
+    if !runtime_ready() {
+        return;
+    }
     let dir = artifacts_dir();
     let man = Manifest::load(&dir, "lenet5").unwrap();
     let rt = Runtime::cpu().unwrap();

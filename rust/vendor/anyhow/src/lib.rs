@@ -1,0 +1,255 @@
+//! Minimal in-tree re-implementation of the `anyhow` error-handling API.
+//!
+//! The build environment has no registry access, so this vendored crate
+//! provides the exact subset the repository uses: [`Error`], the
+//! [`Result`] alias, [`Context`] on `Result`/`Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Semantics follow upstream
+//! anyhow: `Error` deliberately does *not* implement
+//! `std::error::Error` so the blanket `From<E: std::error::Error>`
+//! conversion can exist, and `{:#}` formatting prints the full context
+//! chain, outermost first.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: a chain of context messages over an optional typed
+/// root cause.
+pub struct Error {
+    /// Messages, outermost context first; the last entry is the root.
+    chain: Vec<String>,
+    /// The typed root cause, when built from a `std::error::Error`.
+    root: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from a plain message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()], root: None }
+    }
+
+    fn from_std<E>(err: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { chain: vec![err.to_string()], root: Some(Box::new(err)) }
+    }
+
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The typed root cause, if this error wraps one.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.root.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — full chain, "outer: inner: root".
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        Error::from_std(err)
+    }
+}
+
+// Same coherence trick as upstream anyhow: a private conversion trait
+// with a blanket impl over std errors plus a concrete impl for `Error`
+// (legal because `Error` is local and does not implement
+// `std::error::Error`).
+mod ext {
+    use super::*;
+
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        fn into_error(self) -> Error {
+            Error::from_std(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Attach context to a fallible value (`Result` or `Option`).
+pub trait Context<T> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().wrap(context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().wrap(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "gone");
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r
+            .context("reading config")
+            .map_err(|e| e.wrap("starting up"))
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "starting up");
+        assert_eq!(format!("{e:#}"), "starting up: reading config: gone");
+    }
+
+    #[test]
+    fn context_on_option_and_anyhow_result() {
+        let none: Option<u8> = None;
+        assert_eq!(format!("{}", none.context("empty").unwrap_err()),
+                   "empty");
+        let r: Result<u8> = Err(Error::msg("root"));
+        let e = r.with_context(|| format!("layer {}", 1)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "layer 1: root");
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(format!("{e}"), "bad value 3");
+        let e = anyhow!("bad {} of {}", "kind", 7);
+        assert_eq!(format!("{e}"), "bad kind of 7");
+        fn f(flag: bool) -> Result<u8> {
+            ensure!(flag, "flag was {flag}");
+            bail!("always fails")
+        }
+        assert_eq!(format!("{}", f(false).unwrap_err()),
+                   "flag was false");
+        assert_eq!(format!("{}", f(true).unwrap_err()), "always fails");
+    }
+}
