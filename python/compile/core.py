@@ -81,10 +81,18 @@ class QuantizerSpec:
 
 
 class LayerSpec:
-    """Compute-layer metadata for MAC/BOP accounting (App. B.2)."""
+    """Compute-layer metadata for MAC/BOP accounting (App. B.2).
+
+    ``spatial`` (conv/dwconv only) carries the layer's execution
+    geometry for the integer engine's spatial datapath:
+    ``{ksize, stride, padding, groups, in_h, in_w}``. Dense layers omit
+    it, and manifests written before the schema addition simply lack
+    the keys — the Rust loader defaults those layers to the legacy
+    flattened lowering.
+    """
 
     def __init__(self, name, kind, macs, cin, cout, weight_q, act_q,
-                 residual_input=False):
+                 residual_input=False, spatial=None, pre_ops=None):
         self.name = name
         self.kind = kind  # 'conv' | 'dwconv' | 'dense'
         self.macs = macs
@@ -93,9 +101,15 @@ class LayerSpec:
         self.weight_q = weight_q  # quantizer name
         self.act_q = act_q  # input-activation quantizer name
         self.residual_input = residual_input  # B.2.3: input not prunable
+        self.spatial = spatial
+        # interstitial ops between the previous layer and this one
+        # ("maxpool2" | "gap" | "flatten"), recorded by the layer
+        # library so the engine replays them instead of guessing from
+        # shapes
+        self.pre_ops = list(pre_ops or [])
 
     def to_json(self):
-        return {
+        d = {
             "name": self.name,
             "kind": self.kind,
             "macs": self.macs,
@@ -105,6 +119,11 @@ class LayerSpec:
             "act_q": self.act_q,
             "residual_input": self.residual_input,
         }
+        if self.spatial is not None:
+            d.update(self.spatial)
+        if self.pre_ops:
+            d["pre"] = list(self.pre_ops)
+        return d
 
 
 class ModelSpec:
@@ -192,6 +211,7 @@ class Context:
         self.layers = []
         self._offset = 0
         self._slot_offset = 0
+        self._pending_ops = []
         # apply-mode state
         self.flat = None  # flat parameter vector
         self.gates = None  # flat gate-slot vector
@@ -233,12 +253,19 @@ class Context:
         return seg[:q.channels], seg[q.channels:]
 
     # -- layers ---------------------------------------------------------------
-    def record_layer(self, name, kind, macs, cin, cout, weight_q, act_q,
-                     residual_input=False):
+    def note_op(self, name):
+        """Record an interstitial op (max_pool2 / global_avg_pool /
+        flatten); it attaches to the next recorded layer's ``pre``."""
         if self.mode == "build":
+            self._pending_ops.append(name)
+
+    def record_layer(self, name, kind, macs, cin, cout, weight_q, act_q,
+                     residual_input=False, spatial=None):
+        if self.mode == "build":
+            pre, self._pending_ops = self._pending_ops, []
             self.layers.append(LayerSpec(
                 name, kind, int(macs), int(cin), int(cout), weight_q, act_q,
-                residual_input))
+                residual_input, spatial, pre))
 
 
 # -- initializers ------------------------------------------------------------

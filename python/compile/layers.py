@@ -61,7 +61,10 @@ def conv2d(ctx, name, x, cout, ksize, stride=1, padding="SAME",
         b = ctx.param(f"{name}.b", (cout,), "w", zeros_init)
         y = y + b
     ctx.record_layer(name, kind, macs, cin, cout, f"{name}.w", in_q,
-                     residual_input)
+                     residual_input,
+                     spatial={"ksize": int(ksize), "stride": int(stride),
+                              "padding": padding, "groups": int(groups),
+                              "in_h": int(h), "in_w": int(w)})
     return y
 
 
@@ -91,8 +94,12 @@ def relu(x):
     return jax.nn.relu(x)
 
 
-def max_pool2(x):
-    """2x2 max pooling, stride 2."""
+def max_pool2(x, ctx=None):
+    """2x2 max pooling, stride 2. Pass ``ctx`` so the op is recorded
+    into the next layer's manifest ``pre`` list (the integer engine
+    replays it between layers)."""
+    if ctx is not None:
+        ctx.note_op("maxpool2")
     return jax.lax.reduce_window(
         x, -jnp.inf, jax.lax.max,
         window_dimensions=(1, 2, 2, 1),
@@ -101,11 +108,15 @@ def max_pool2(x):
     )
 
 
-def global_avg_pool(x):
+def global_avg_pool(x, ctx=None):
+    if ctx is not None:
+        ctx.note_op("gap")
     return jnp.mean(x, axis=(1, 2))
 
 
-def flatten(x):
+def flatten(x, ctx=None):
+    if ctx is not None:
+        ctx.note_op("flatten")
     return x.reshape(x.shape[0], -1)
 
 

@@ -25,9 +25,9 @@ PRESETS = {
 
 def model_fn(ctx, x, cfg):
     x = L.conv2d(ctx, "conv1", x, cfg["c1"], cfg["k"], in_signed=True)
-    x = L.max_pool2(L.relu(x))
+    x = L.max_pool2(L.relu(x), ctx)
     x = L.conv2d(ctx, "conv2", x, cfg["c2"], cfg["k"])
-    x = L.max_pool2(L.relu(x))
-    x = L.flatten(x)
+    x = L.max_pool2(L.relu(x), ctx)
+    x = L.flatten(x, ctx)
     x = L.relu(L.dense(ctx, "fc1", x, cfg["fc"]))
     return L.dense(ctx, "fc2", x, cfg["classes"])

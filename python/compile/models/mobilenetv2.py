@@ -63,5 +63,5 @@ def model_fn(ctx, x, cfg):
                                   stride if r == 0 else 1, expand)
     x = L.conv2d(ctx, "head", x, cfg["head"], 1, in_signed=True)
     x = L.relu(L.affine(ctx, "head.bn", x))
-    x = L.global_avg_pool(x)
+    x = L.global_avg_pool(x, ctx)
     return L.dense(ctx, "fc", x, cfg["classes"], in_signed=False)

@@ -60,10 +60,10 @@ def model_fn(ctx, x, cfg):
                  stride=cfg["stem_stride"], in_signed=True)
     x = L.relu(L.affine(ctx, "stem.bn", x))
     if cfg["stem_pool"]:
-        x = L.max_pool2(x)
+        x = L.max_pool2(x, ctx)
     for stage, (wdt, nblocks) in enumerate(zip(cfg["widths"], cfg["blocks"])):
         for b in range(nblocks):
             stride = 2 if (stage > 0 and b == 0) else 1
             x = basic_block(ctx, f"s{stage + 1}b{b + 1}", x, wdt, stride)
-    x = L.global_avg_pool(x)
+    x = L.global_avg_pool(x, ctx)
     return L.dense(ctx, "fc", x, cfg["classes"])

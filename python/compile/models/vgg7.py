@@ -30,7 +30,7 @@ def model_fn(ctx, x, cfg):
             x = L.conv2d(ctx, name, x, w, 3, in_signed=first)
             first = False
             x = L.relu(L.affine(ctx, name + ".bn", x))
-        x = L.max_pool2(x)
-    x = L.flatten(x)
+        x = L.max_pool2(x, ctx)
+    x = L.flatten(x, ctx)
     x = L.relu(L.dense(ctx, "fc1", x, cfg["fc"]))
     return L.dense(ctx, "fc2", x, cfg["classes"])

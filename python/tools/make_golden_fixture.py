@@ -1,0 +1,288 @@
+"""Regenerate the committed golden end-to-end fixture under
+rust/tests/fixtures/ (checked by rust/tests/golden_e2e.rs).
+
+The fixture is a tiny conv -> maxpool -> dwconv -> flatten -> dense
+Bayesian-Bits model whose numerics are *exact by construction*, so the
+expected serve outputs are computed here with plain integer arithmetic,
+independent of the Rust implementation:
+
+* weight grids use beta = 127.5 (signed 8-bit step = 255/255 = 1.0
+  exactly in f32) and integer-valued weights, so quantization is the
+  identity;
+* activation grids use beta = 255.0 (unsigned 8-bit step = 1.0) and all
+  intermediate activations are integers, so quantization is
+  ``min(v, 255)``;
+* every accumulator stays far below 2^24, so each f32 the engine
+  produces is the exact integer computed here.
+
+Any refactor of lowering/kernels/serving that perturbs a single code
+path shows up as a bit-exact mismatch, not a tolerance drift.
+
+Run from the repo root:  python3 python/tools/make_golden_fixture.py
+"""
+
+import json
+import os
+import random
+import struct
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "rust",
+                   "tests", "fixtures")
+
+MODEL = "golden_conv"
+IN_H, IN_W, IN_C = 6, 6, 2
+C1 = 4          # conv1 output channels (channel 2 pruned)
+C1_KEPT = [0, 1, 3]
+K = 3
+FC_IN = 2 * 2 * C1
+CLASSES = 3
+W_BETA = 127.5  # signed 8-bit step = 2*127.5/255 = 1.0
+A_BETA = 255.0  # unsigned 8-bit step = 255/255 = 1.0
+
+OPEN, SHUT = 6.0, -6.0
+CHAIN_8BIT = [OPEN, OPEN, SHUT, SHUT]  # z4, z8 open -> 8 bits
+
+
+def conv_out_same(n, stride):
+    return -(-n // stride)
+
+
+def same_pads(n, k, stride):
+    out = conv_out_same(n, stride)
+    total = max((out - 1) * stride + k - n, 0)
+    return total // 2
+
+
+def act_codes(v):
+    """Unsigned 8-bit activation grid at beta=255 on integer inputs."""
+    assert v == int(v) and v >= 0, v
+    return min(int(v), 255)
+
+
+def conv2d(x, w, bias, in_h, in_w, in_c, cout, k, stride, groups,
+           kept):
+    """Integer conv, NHWC x, HWIO w, SAME padding; pruned channels get
+    only their bias."""
+    out_h, out_w = conv_out_same(in_h, stride), conv_out_same(in_w, stride)
+    ph, pw = same_pads(in_h, k, stride), same_pads(in_w, k, stride)
+    cg = in_c // groups
+    cpg = cout // groups
+    y = [[[bias[c] for c in range(cout)] for _ in range(out_w)]
+         for _ in range(out_h)]
+    for oh in range(out_h):
+        for ow in range(out_w):
+            for co in range(cout):
+                if co not in kept:
+                    continue
+                g = co // cpg
+                acc = 0
+                for kh in range(k):
+                    for kw in range(k):
+                        ih = oh * stride + kh - ph
+                        iw = ow * stride + kw - pw
+                        if ih < 0 or iw < 0 or ih >= in_h or iw >= in_w:
+                            continue
+                        for ci in range(cg):
+                            acc += (w[kh][kw][ci][co]
+                                    * x[ih][iw][g * cg + ci])
+                assert abs(acc) < 1 << 24
+                y[oh][ow][co] += acc
+    return y
+
+
+def maxpool2(x, h, w, c):
+    return [[[max(x[2 * oh][2 * ow][ch], x[2 * oh][2 * ow + 1][ch],
+                  x[2 * oh + 1][2 * ow][ch], x[2 * oh + 1][2 * ow + 1][ch])
+              for ch in range(c)]
+             for ow in range(w // 2)]
+            for oh in range(h // 2)]
+
+
+def relu3(x):
+    return [[[max(v, 0) for v in col] for col in row] for row in x]
+
+
+def forward(flat_x, p):
+    """flat_x: 72 ints NHWC. Returns the 3 integer logits."""
+    x = [[[flat_x[(h * IN_W + w) * IN_C + c] for c in range(IN_C)]
+          for w in range(IN_W)]
+         for h in range(IN_H)]
+    # conv1: quantize input, 3x3 SAME stride 1, relu
+    q = [[[act_codes(v) for v in col] for col in row] for row in x]
+    y = conv2d(q, p["conv1.w"], p["conv1.b"], IN_H, IN_W, IN_C, C1, K,
+               1, 1, C1_KEPT)
+    y = relu3(y)
+    # maxpool 6x6 -> 3x3, then dwconv 3x3 SAME stride 2 -> 2x2, relu
+    y = maxpool2(y, IN_H, IN_W, C1)
+    q = [[[act_codes(v) for v in col] for col in row] for row in y]
+    y = conv2d(q, p["dw.w"], p["dw.b"], 3, 3, C1, C1, K, 2, C1,
+               list(range(C1)))
+    y = relu3(y)
+    # flatten NHWC (2x2x4 -> 16), dense to logits
+    flat = [y[oh][ow][c]
+            for oh in range(2) for ow in range(2) for c in range(C1)]
+    q = [act_codes(v) for v in flat]
+    logits = []
+    for o in range(CLASSES):
+        acc = sum(p["fc.w"][i][o] * q[i] for i in range(FC_IN))
+        assert abs(acc) < 1 << 24
+        logits.append(acc + p["fc.b"][o])
+    return logits
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+    rng = random.Random(1234)
+
+    def ints(n, lo, hi):
+        return [rng.randint(lo, hi) for _ in range(n)]
+
+    # -- parameters (all integer-valued) ------------------------------
+    conv1_w_flat = ints(K * K * IN_C * C1, -3, 3)
+    conv1_w = [[[[conv1_w_flat[((kh * K + kw) * IN_C + ci) * C1 + co]
+                  for co in range(C1)]
+                 for ci in range(IN_C)]
+                for kw in range(K)]
+               for kh in range(K)]
+    dw_w_flat = ints(K * K * 1 * C1, -3, 3)
+    dw_w = [[[[dw_w_flat[((kh * K + kw) * 1 + ci) * C1 + co]
+               for co in range(C1)]
+              for ci in range(1)]
+             for kw in range(K)]
+            for kh in range(K)]
+    fc_w_flat = ints(FC_IN * CLASSES, -3, 3)
+    fc_w = [[fc_w_flat[i * CLASSES + o] for o in range(CLASSES)]
+            for i in range(FC_IN)]
+    conv1_b = ints(C1, -2, 2)
+    dw_b = ints(C1, -2, 2)
+    fc_b = ints(CLASSES, -2, 2)
+
+    model = {
+        "conv1.w": conv1_w, "conv1.b": conv1_b,
+        "dw.w": dw_w, "dw.b": dw_b,
+        "fc.w": fc_w, "fc.b": fc_b,
+    }
+
+    # -- flat parameter vector + manifest params table ----------------
+    params = []
+    params_json = []
+
+    def param(name, shape, group, values):
+        size = 1
+        for d in shape:
+            size *= d
+        assert len(values) == size, name
+        params_json.append({"name": name, "shape": list(shape),
+                            "group": group, "offset": len(params),
+                            "size": size})
+        params.extend(float(v) for v in values)
+
+    quant_json = []
+    slot_off = [0]
+
+    def quantizer(name, kind, signed, channels, macs, ch_phi):
+        n_slots = channels + 4
+        quant_json.append({
+            "name": name, "kind": kind, "signed": signed,
+            "channels": channels, "levels": [2, 4, 8, 16, 32],
+            "offset": slot_off[0], "n_slots": n_slots,
+            "consumer_macs": macs,
+        })
+        slot_off[0] += n_slots
+        param(f"{name}.phi", [n_slots], "g", list(ch_phi) + CHAIN_8BIT)
+        param(f"{name}.beta", [1], "s",
+              [W_BETA if kind == "w" else A_BETA])
+
+    conv1_macs = 6 * 6 * C1 * IN_C * K * K
+    dw_macs = 2 * 2 * C1 * 1 * K * K
+    fc_macs = FC_IN * CLASSES
+
+    param("conv1.w", [K, K, IN_C, C1], "w", conv1_w_flat)
+    quantizer("conv1.w", "w", True, C1, conv1_macs,
+              [OPEN if c in C1_KEPT else SHUT for c in range(C1)])
+    quantizer("conv1.in", "a", False, 1, conv1_macs, [SHUT])
+    param("conv1.b", [C1], "w", conv1_b)
+    param("dw.w", [K, K, 1, C1], "w", dw_w_flat)
+    quantizer("dw.w", "w", True, C1, dw_macs, [OPEN] * C1)
+    quantizer("dw.in", "a", False, 1, dw_macs, [SHUT])
+    param("dw.b", [C1], "w", dw_b)
+    param("fc.w", [FC_IN, CLASSES], "w", fc_w_flat)
+    quantizer("fc.w", "w", True, CLASSES, fc_macs, [OPEN] * CLASSES)
+    quantizer("fc.in", "a", False, 1, fc_macs, [SHUT])
+    param("fc.b", [CLASSES], "w", fc_b)
+
+    layers = [
+        {"name": "conv1", "kind": "conv", "macs": conv1_macs,
+         "cin": IN_C, "cout": C1, "weight_q": "conv1.w",
+         "act_q": "conv1.in", "residual_input": False,
+         "ksize": K, "stride": 1, "padding": "SAME", "groups": 1,
+         "in_h": IN_H, "in_w": IN_W},
+        {"name": "dw", "kind": "dwconv", "macs": dw_macs,
+         "cin": C1, "cout": C1, "weight_q": "dw.w", "act_q": "dw.in",
+         "residual_input": False,
+         "ksize": K, "stride": 2, "padding": "SAME", "groups": C1,
+         "in_h": 3, "in_w": 3},
+        {"name": "fc", "kind": "dense", "macs": fc_macs,
+         "cin": FC_IN, "cout": CLASSES, "weight_q": "fc.w",
+         "act_q": "fc.in", "residual_input": False},
+    ]
+
+    manifest = {
+        "name": MODEL, "engine": "bb", "preset": "small", "batch": 2,
+        "n_params": len(params), "n_slots": slot_off[0],
+        "input_shape": [IN_H, IN_W, IN_C], "num_classes": CLASSES,
+        "levels": [2, 4, 8, 16, 32],
+        "dataset": {"name": "mnist_like", "input": [IN_H, IN_W, IN_C],
+                    "classes": CLASSES, "train": 8, "test": 4},
+        "params": params_json, "quantizers": quant_json,
+        "layers": layers, "lam_base": [1.0] * slot_off[0],
+        "hlo_train": "t.hlo.txt", "hlo_eval": "e.hlo.txt",
+        "init_file": "i.bin",
+    }
+    with open(os.path.join(OUT, f"{MODEL}_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    # -- v2 checkpoint (coordinator::checkpoint format) ---------------
+    def section(b):
+        return struct.pack("<Q", len(b)) + b
+
+    zeros = [0.0] * len(params)
+    blob = b"".join([
+        section(b"BBCKPT2"),
+        section(MODEL.encode()),
+        section(b"0"),
+        section(struct.pack(f"<{len(params)}f", *params)),
+        section(struct.pack(f"<{len(zeros)}f", *zeros)),
+        section(struct.pack(f"<{len(zeros)}f", *zeros)),
+    ])
+    with open(os.path.join(OUT, f"{MODEL}.ckpt"), "wb") as f:
+        f.write(blob)
+
+    # -- expected serve outputs ---------------------------------------
+    inputs, logits = [], []
+    for s in range(4):
+        x = [(i * 7 + 3 * s + (i * i) % 5) % 13
+             for i in range(IN_H * IN_W * IN_C)]
+        inputs.append(x)
+        logits.append(forward(x, model))
+    expected = {
+        "model": MODEL,
+        "layers": [
+            {"name": "conv1", "w_bits": 8, "kept": C1_KEPT},
+            {"name": "dw", "w_bits": 8, "kept": list(range(C1))},
+            {"name": "fc", "w_bits": 8, "kept": list(range(CLASSES))},
+        ],
+        "inputs": inputs,
+        "logits": logits,
+    }
+    with open(os.path.join(OUT, f"{MODEL}_expected.json"), "w") as f:
+        json.dump(expected, f, indent=1)
+    print(f"wrote {OUT}: manifest ({len(params)} params, "
+          f"{slot_off[0]} slots), ckpt ({len(blob)} bytes), "
+          f"{len(inputs)} golden cases")
+    for s, l in enumerate(logits):
+        print(f"  case {s}: logits {l}")
+
+
+if __name__ == "__main__":
+    main()

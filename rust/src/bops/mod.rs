@@ -158,11 +158,13 @@ mod tests {
                 name: "conv1".into(), kind: "conv".into(), macs: 1000,
                 cin: 3, cout: 8, weight_q: "conv1.w".into(),
                 act_q: "conv1.in".into(), residual_input: false,
+                conv: None, pre_ops: Vec::new(),
             },
             LayerDesc {
                 name: "conv2".into(), kind: "conv".into(), macs: 2000,
                 cin: 8, cout: 16, weight_q: "conv2.w".into(),
                 act_q: "conv2.in".into(), residual_input: false,
+                conv: None, pre_ops: Vec::new(),
             },
         ])
     }

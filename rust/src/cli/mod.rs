@@ -24,7 +24,7 @@ pub struct Args {
 /// Flags that are boolean switches (present => "true").
 const SWITCHES: &[&str] = &[
     "help", "det-gates", "show-preft", "curves", "quick", "paper-scale",
-    "skip-baselines", "no-finetune", "no-int",
+    "skip-baselines", "no-finetune", "no-int", "conv-only",
 ];
 
 /// Flags that take a value (`--flag v` or `--flag=v`). Anything not
@@ -37,7 +37,7 @@ const VALUE_FLAGS: &[&str] = &[
     // engine / serving flags
     "checkpoint", "dims", "wbits", "abits", "prune", "max-batch",
     "deadline-ms", "queue-cap", "clients", "requests", "rows", "cols",
-    "batch",
+    "batch", "hw", "cin", "cout", "ksize",
 ];
 
 impl Args {
@@ -176,8 +176,10 @@ Integer inference engine (rust/src/engine)
                   --wbits N --abits N --prune F)
                   --threads N --max-batch B --deadline-ms F
                   --queue-cap N --clients C --requests N [--no-int]
-  engine-bench    packed integer GEMM vs f32 fallback throughput
-                  --rows N --cols N --batch B
+  engine-bench    packed integer GEMM + spatial conv vs f32 fallback
+                  throughput; writes BENCH_conv.json
+                  --rows N --cols N --batch B (GEMM; skip: --conv-only)
+                  --hw N --cin N --cout N --ksize K (conv layer)
 
 Utilities
   parity          check Rust runtime vs golden quantizer vectors
@@ -255,6 +257,14 @@ mod tests {
         assert_eq!(a.usize_flag("threads", 1).unwrap(), 4);
         assert_eq!(a.usize_list_flag("dims", &[]).unwrap(),
                    vec![8, 16, 4]);
+        // conv bench flags are registered
+        let c = parse(
+            "engine-bench --conv-only --hw 8 --cin 4 --cout 4 --ksize 3");
+        assert!(c.bool_flag("conv-only"));
+        assert_eq!(c.usize_flag("hw", 1).unwrap(), 8);
+        assert_eq!(c.usize_flag("cin", 1).unwrap(), 4);
+        assert_eq!(c.usize_flag("cout", 1).unwrap(), 4);
+        assert_eq!(c.usize_flag("ksize", 1).unwrap(), 3);
     }
 
     #[test]

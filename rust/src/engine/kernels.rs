@@ -1,5 +1,6 @@
-//! Integer GEMM kernels over packed weights, plus the f32 reference
-//! fallback — the arithmetic core of the inference engine.
+//! Integer GEMM and spatial convolution kernels over packed weights,
+//! plus the f32 reference fallbacks — the arithmetic core of the
+//! inference engine.
 //!
 //! The integer path computes `y = W x` on raw grid codes with exact
 //! integer accumulation and a single requantize multiply at the end:
@@ -11,12 +12,23 @@
 //! For widths up to 8x8 bits the inner loop accumulates in `i32`
 //! (blocked so the partial sum cannot overflow), spilling each block
 //! into an `i64` total; 16-bit operands go straight to `i64` because a
-//! single product can exceed `i32`. The f32 fallback multiplies the
-//! *simulated-quantized* dense rows (`codes * step`), so the two paths
-//! agree up to f32 accumulation error — the invariant
-//! `tests/engine_parity.rs` pins down.
+//! single product can exceed `i32`.
+//!
+//! Spatial conv ([`conv2d_codes`]) is im2col-over-codes: for each
+//! output pixel an `(k, k, cin/groups)` patch of activation codes is
+//! gathered (zero outside the image) and dotted against every kept
+//! channel's decoded row via the same [`dot_codes`] accumulators; the
+//! caller decodes packed rows once per batch. Depthwise layers take
+//! [`dwconv2d_codes`], which reads its single input channel strided
+//! and skips the patch buffer entirely.
+//!
+//! The f32 fallbacks multiply the *simulated-quantized* dense rows
+//! (`codes * step`), so int and f32 paths agree up to f32 accumulation
+//! error — the invariants `tests/engine_parity.rs` and
+//! `tests/conv_parity.rs` pin down.
 
 use super::pack::PackedMatrix;
+use super::SpatialPlan;
 use crate::quant::grid::quantize_codes_host;
 
 /// i32 accumulation block: with |w| <= 127 and |a| <= 255, a block sum
@@ -96,6 +108,179 @@ pub fn matmul_f32(w: &[f32], rows: usize, cols: usize, xs: &[f32],
     }
 }
 
+/// Gather the `(k, k, cin/groups)` input patch feeding output pixel
+/// `(oh, ow)` of group `g` into `out[..patch_len]`, in the weight
+/// rows' `(kh, kw, ci)` order (HWIO channel-last, matching the
+/// lowering's `[cout, cin/groups * k * k]` rows). Taps outside the
+/// image read zero (padding). `x` is one sample's NHWC tensor.
+pub fn extract_patch<T: Copy + Default>(x: &[T], sp: &SpatialPlan,
+                                        g: usize, oh: usize, ow: usize,
+                                        out: &mut [T]) {
+    let cg = sp.in_c / sp.groups;
+    debug_assert_eq!(x.len(), sp.in_len());
+    debug_assert!(out.len() >= sp.k * sp.k * cg);
+    let c0 = g * cg;
+    let ih0 = (oh * sp.stride) as isize - sp.pad_top as isize;
+    let iw0 = (ow * sp.stride) as isize - sp.pad_left as isize;
+    let mut o = 0;
+    for kh in 0..sp.k {
+        let ih = ih0 + kh as isize;
+        let row_ok = ih >= 0 && (ih as usize) < sp.in_h;
+        for kw in 0..sp.k {
+            let iw = iw0 + kw as isize;
+            if row_ok && iw >= 0 && (iw as usize) < sp.in_w {
+                let base =
+                    (ih as usize * sp.in_w + iw as usize) * sp.in_c + c0;
+                out[o..o + cg].copy_from_slice(&x[base..base + cg]);
+            } else {
+                out[o..o + cg].fill(T::default());
+            }
+            o += cg;
+        }
+    }
+}
+
+/// Spatial integer convolution over decoded weight codes (im2col over
+/// codes).
+///
+/// * `w_rows` — `[rows, patch_len]` codes, decoded once per batch;
+/// * `kept` — dense output channel of each row, ascending (so rows of
+///   one group are contiguous and a patch is gathered once per
+///   (pixel, group));
+/// * `cout_per_group` — dense output channels per group;
+/// * `acts` — `n` NHWC activation-code tensors, flat `[n, in_len]`;
+/// * `low` — both operands <= 8 bits: blocked-i32 accumulation;
+/// * `patch` — caller scratch of at least `patch_len` slots;
+/// * `y` — flat `[n, out_pixels, rows]` exact accumulators.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_codes(w_rows: &[i32], kept: &[u32], cout_per_group: usize,
+                    sp: &SpatialPlan, acts: &[i32], n: usize, low: bool,
+                    patch: &mut [i32], y: &mut [i64]) {
+    let rows = kept.len();
+    let plen = sp.patch_len();
+    let in_len = sp.in_len();
+    let opix = sp.out_pixels();
+    debug_assert_eq!(w_rows.len(), rows * plen);
+    debug_assert_eq!(acts.len(), n * in_len);
+    debug_assert_eq!(y.len(), n * opix * rows);
+    for s in 0..n {
+        let x = &acts[s * in_len..(s + 1) * in_len];
+        for oh in 0..sp.out_h {
+            for ow in 0..sp.out_w {
+                let ybase = (s * opix + oh * sp.out_w + ow) * rows;
+                let mut cur_g = usize::MAX;
+                for r in 0..rows {
+                    let g = kept[r] as usize / cout_per_group;
+                    if g != cur_g {
+                        extract_patch(x, sp, g, oh, ow, patch);
+                        cur_g = g;
+                    }
+                    y[ybase + r] = dot_codes(
+                        &w_rows[r * plen..(r + 1) * plen],
+                        &patch[..plen], low);
+                }
+            }
+        }
+    }
+}
+
+/// Depthwise fast path (`groups == in_c`): each kept output channel
+/// reads exactly one input channel, so taps are gathered strided from
+/// the NHWC tensor without the im2col patch buffer. Same contract as
+/// [`conv2d_codes`] otherwise.
+pub fn dwconv2d_codes(w_rows: &[i32], kept: &[u32],
+                      cout_per_group: usize, sp: &SpatialPlan,
+                      acts: &[i32], n: usize, low: bool, y: &mut [i64]) {
+    debug_assert_eq!(sp.groups, sp.in_c);
+    let rows = kept.len();
+    let plen = sp.k * sp.k;
+    let in_len = sp.in_len();
+    let opix = sp.out_pixels();
+    debug_assert_eq!(w_rows.len(), rows * plen);
+    debug_assert_eq!(acts.len(), n * in_len);
+    debug_assert_eq!(y.len(), n * opix * rows);
+    // the whole k*k window fits one i32 block at low widths
+    let low = low && plen <= I32_BLOCK;
+    for s in 0..n {
+        let x = &acts[s * in_len..(s + 1) * in_len];
+        for oh in 0..sp.out_h {
+            let ih0 = (oh * sp.stride) as isize - sp.pad_top as isize;
+            for ow in 0..sp.out_w {
+                let iw0 =
+                    (ow * sp.stride) as isize - sp.pad_left as isize;
+                let ybase = (s * opix + oh * sp.out_w + ow) * rows;
+                for r in 0..rows {
+                    let ci = kept[r] as usize / cout_per_group;
+                    let rbase = r * plen;
+                    let mut acc32 = 0i32;
+                    let mut acc = 0i64;
+                    for kh in 0..sp.k {
+                        let ih = ih0 + kh as isize;
+                        if ih < 0 || ih as usize >= sp.in_h {
+                            continue;
+                        }
+                        let xrow = ih as usize * sp.in_w;
+                        for kw in 0..sp.k {
+                            let iw = iw0 + kw as isize;
+                            if iw < 0 || iw as usize >= sp.in_w {
+                                continue;
+                            }
+                            let wv = w_rows[rbase + kh * sp.k + kw];
+                            let av = x
+                                [(xrow + iw as usize) * sp.in_c + ci];
+                            if low {
+                                acc32 += wv * av;
+                            } else {
+                                acc += wv as i64 * av as i64;
+                            }
+                        }
+                    }
+                    y[ybase + r] =
+                        if low { acc32 as i64 } else { acc };
+                }
+            }
+        }
+    }
+}
+
+/// f32 reference spatial convolution over the simulated-quant dense
+/// rows — same im2col structure as [`conv2d_codes`], scalar f32
+/// accumulation.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_f32(w_rows: &[f32], kept: &[u32], cout_per_group: usize,
+                  sp: &SpatialPlan, xs: &[f32], n: usize,
+                  patch: &mut [f32], y: &mut [f32]) {
+    let rows = kept.len();
+    let plen = sp.patch_len();
+    let in_len = sp.in_len();
+    let opix = sp.out_pixels();
+    debug_assert_eq!(w_rows.len(), rows * plen);
+    debug_assert_eq!(xs.len(), n * in_len);
+    debug_assert_eq!(y.len(), n * opix * rows);
+    for s in 0..n {
+        let x = &xs[s * in_len..(s + 1) * in_len];
+        for oh in 0..sp.out_h {
+            for ow in 0..sp.out_w {
+                let ybase = (s * opix + oh * sp.out_w + ow) * rows;
+                let mut cur_g = usize::MAX;
+                for r in 0..rows {
+                    let g = kept[r] as usize / cout_per_group;
+                    if g != cur_g {
+                        extract_patch(x, sp, g, oh, ow, patch);
+                        cur_g = g;
+                    }
+                    let row = &w_rows[r * plen..(r + 1) * plen];
+                    let mut acc = 0.0f32;
+                    for (a, b) in row.iter().zip(&patch[..plen]) {
+                        acc += a * b;
+                    }
+                    y[ybase + r] = acc;
+                }
+            }
+        }
+    }
+}
+
 /// Quantize a flat activation tensor to integer codes in `out`;
 /// returns the grid step. Numerics are exactly
 /// `quant::grid::quantize_codes_host` (one clip + banker's rounding),
@@ -167,6 +352,132 @@ mod tests {
                                "bits={bits} s={s} r={r}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn extract_patch_handles_padding_and_groups() {
+        use crate::models::Padding;
+        // 3x3x2 input, k=2, stride 1, SAME (pad bottom/right), 2 groups
+        let sp = SpatialPlan::new(3, 3, 2, 2, 1, Padding::Same, 2)
+            .unwrap();
+        assert_eq!((sp.out_h, sp.out_w), (3, 3));
+        assert_eq!((sp.pad_top, sp.pad_left), (0, 0));
+        let x: Vec<i32> = (0..18).collect(); // x[(h*3+w)*2+c] = idx
+        let mut p = vec![0i32; sp.patch_len()];
+        // pixel (0,0), group 0: taps (0,0),(0,1),(1,0),(1,1) channel 0
+        extract_patch(&x, &sp, 0, 0, 0, &mut p);
+        assert_eq!(p, vec![0, 2, 6, 8]);
+        // group 1 reads channel 1
+        extract_patch(&x, &sp, 1, 0, 0, &mut p);
+        assert_eq!(p, vec![1, 3, 7, 9]);
+        // bottom-right pixel: bottom/right taps are zero padding
+        extract_patch(&x, &sp, 0, 2, 2, &mut p);
+        assert_eq!(p, vec![16, 0, 0, 0]);
+    }
+
+    #[test]
+    fn conv2d_codes_matches_direct_convolution() {
+        use crate::models::Padding;
+        let mut rng = crate::rng::Pcg64::new(21);
+        for (stride, padding, groups) in
+            [(1usize, Padding::Same, 1usize), (2, Padding::Valid, 1),
+             (1, Padding::Same, 2), (2, Padding::Same, 2)]
+        {
+            let (in_h, in_w, in_c, cout, k) = (5, 4, 4, 6, 3);
+            let sp = SpatialPlan::new(in_h, in_w, in_c, k, stride,
+                                      padding, groups)
+                .unwrap();
+            let plen = sp.patch_len();
+            let kept: Vec<u32> = (0..cout as u32).collect();
+            let w: Vec<i32> = (0..cout * plen)
+                .map(|_| (rng.next_u64() % 15) as i32 - 7)
+                .collect();
+            let n = 2;
+            let x: Vec<i32> = (0..n * sp.in_len())
+                .map(|_| (rng.next_u64() % 16) as i32)
+                .collect();
+            let mut patch = vec![0i32; plen];
+            let mut y = vec![0i64; n * sp.out_pixels() * cout];
+            conv2d_codes(&w, &kept, cout / groups, &sp, &x, n, true,
+                         &mut patch, &mut y);
+            // brute-force direct convolution, independent indexing
+            let cg = in_c / groups;
+            for s in 0..n {
+                let xs = &x[s * sp.in_len()..(s + 1) * sp.in_len()];
+                for oh in 0..sp.out_h {
+                    for ow in 0..sp.out_w {
+                        for (r, ch) in kept.iter().enumerate() {
+                            let g = *ch as usize / (cout / groups);
+                            let mut want = 0i64;
+                            for kh in 0..k {
+                                for kw in 0..k {
+                                    let ih = (oh * stride + kh) as isize
+                                        - sp.pad_top as isize;
+                                    let iw = (ow * stride + kw) as isize
+                                        - sp.pad_left as isize;
+                                    if ih < 0 || iw < 0
+                                        || ih as usize >= in_h
+                                        || iw as usize >= in_w
+                                    {
+                                        continue;
+                                    }
+                                    for ci in 0..cg {
+                                        let wv = w[r * plen
+                                            + (kh * k + kw) * cg + ci]
+                                            as i64;
+                                        let av = xs[(ih as usize * in_w
+                                            + iw as usize)
+                                            * in_c + g * cg + ci]
+                                            as i64;
+                                        want += wv * av;
+                                    }
+                                }
+                            }
+                            let got = y[(s * sp.out_pixels()
+                                + oh * sp.out_w + ow)
+                                * cout + r];
+                            assert_eq!(got, want,
+                                       "s={s} oh={oh} ow={ow} r={r} \
+                                        stride={stride} g={groups}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dwconv_fast_path_matches_generic_kernel() {
+        use crate::models::Padding;
+        let mut rng = crate::rng::Pcg64::new(33);
+        for stride in [1usize, 2] {
+            let (hw, c, k) = (5, 6, 3);
+            let sp = SpatialPlan::new(hw, hw, c, k, stride,
+                                      Padding::Same, c)
+                .unwrap();
+            let plen = sp.patch_len();
+            assert_eq!(plen, k * k);
+            // prune channels 1 and 4
+            let kept: Vec<u32> = vec![0, 2, 3, 5];
+            let w: Vec<i32> = (0..kept.len() * plen)
+                .map(|_| (rng.next_u64() % 7) as i32 - 3)
+                .collect();
+            let n = 2;
+            let x: Vec<i32> = (0..n * sp.in_len())
+                .map(|_| (rng.next_u64() % 16) as i32)
+                .collect();
+            let mut patch = vec![0i32; plen];
+            let mut ya = vec![0i64; n * sp.out_pixels() * kept.len()];
+            let mut yb = ya.clone();
+            conv2d_codes(&w, &kept, 1, &sp, &x, n, true, &mut patch,
+                         &mut ya);
+            dwconv2d_codes(&w, &kept, 1, &sp, &x, n, true, &mut yb);
+            assert_eq!(ya, yb, "stride={stride}");
+            // i64 accumulation path agrees too
+            let mut yc = vec![0i64; yb.len()];
+            dwconv2d_codes(&w, &kept, 1, &sp, &x, n, false, &mut yc);
+            assert_eq!(ya, yc);
         }
     }
 

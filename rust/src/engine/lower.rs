@@ -13,15 +13,23 @@
 //!    symmetric (signed) or one-sided (unsigned), never affine;
 //! 3. physically elides pruned output channels: only surviving rows
 //!    are quantized, packed, and stored;
-//! 4. emits bit-packed codes for widths < 32 and the simulated-quant
+//! 4. keeps conv/dwconv rows in `[cout, cin/groups * k * k]` layout
+//!    and attaches a [`SpatialPlan`] (from the manifest's spatial
+//!    metadata) plus the inferred inter-layer [`PreOp`] (max pool,
+//!    flatten, global average pool), so image-shaped inputs flow
+//!    train -> lower -> serve on the real spatial datapath; manifests
+//!    from pre-spatial exporters fall back to the legacy flattened
+//!    GEMM behind the flat feature adapter;
+//! 5. emits bit-packed codes for widths < 32 and the simulated-quant
 //!    dense rows that the f32 fallback and parity tests consume.
 
 use anyhow::{bail, Context, Result};
 
 use super::pack::PackedMatrix;
-use super::{ActSpec, EnginePlan, PlanLayer};
+use super::{ActSpec, EnginePlan, PlanLayer, PreOp, SpatialPlan};
 use crate::config::Mode;
 use crate::coordinator::gate_manager::GateManager;
+use crate::models::Padding;
 use crate::quant::grid::quantize_codes_host;
 use crate::rng::Pcg64;
 use crate::runtime::Manifest;
@@ -78,7 +86,29 @@ pub fn build_layer(name: &str, dense_w: &[f32], in_dim: usize,
         act,
         bias,
         relu,
+        spatial: None,
+        pre: PreOp::Direct,
     })
+}
+
+/// Lower one conv/dwconv weight tensor already oriented to
+/// `[cout, cin/groups * k * k]` rows into a spatial [`PlanLayer`]
+/// executing over `sp`, fed through `pre`.
+#[allow(clippy::too_many_arguments)]
+pub fn build_conv_layer(name: &str, dense_w: &[f32], sp: SpatialPlan,
+                        out_dim: usize, z2: &[f32], w_bits: u32,
+                        w_beta: f32, act: ActSpec,
+                        bias: Option<Vec<f32>>, relu: bool, pre: PreOp)
+                        -> Result<PlanLayer> {
+    if out_dim % sp.groups != 0 {
+        bail!("layer {name}: {out_dim} outputs not divisible into {} \
+               groups", sp.groups);
+    }
+    let mut layer = build_layer(name, dense_w, sp.patch_len(), out_dim,
+                                z2, w_bits, w_beta, act, bias, relu)?;
+    layer.spatial = Some(sp);
+    layer.pre = pre;
+    Ok(layer)
 }
 
 /// Single-layer plan around [`build_layer`] (tests, micro-benches).
@@ -136,17 +166,16 @@ pub fn lower_with_mode(man: &Manifest, params: &[f32], mode: &Mode)
 
     let n_layers = man.layers.len();
     let mut layers = Vec::with_capacity(n_layers);
-    let mut warned_spatial = false;
+    let mut warned_legacy = false;
+    // NHWC shape of the feature map entering the next layer, tracked
+    // to infer each layer's PreOp; None once the map is flattened (or
+    // unknown, on the legacy path).
+    let mut shape: Option<(usize, usize, usize)> =
+        match man.input_shape[..] {
+            [h, w, c] => Some((h, w, c)),
+            _ => None,
+        };
     for (li, l) in man.layers.iter().enumerate() {
-        if l.kind != "dense" && !warned_spatial {
-            crate::util::logging::warn(format!(
-                "layer {}: {} layers are lowered as flattened GEMMs \
-                 (spatial conv on the integer datapath is an open \
-                 item; see DESIGN.md §engine)",
-                l.name, l.kind
-            ));
-            warned_spatial = true;
-        }
         let wq = man.quantizer(&l.weight_q)?;
         let aq = man.quantizer(&l.act_q)?;
         if !wq.signed {
@@ -185,14 +214,89 @@ pub fn lower_with_mode(man: &Manifest, params: &[f32], mode: &Mode)
             .filter(|p| p.size == l.cout)
             .map(|p| params[p.offset..p.offset + p.size].to_vec());
         let z2: Vec<f32> = wz[..wq.channels].to_vec();
-        layers.push(build_layer(&l.name, &dense, in_dim, l.cout, &z2,
-                                w_bits, w_beta, act, bias,
-                                li + 1 < n_layers)?);
+        let relu = li + 1 < n_layers;
+        let layer = match &l.conv {
+            Some(m) if l.kind != "dense" => {
+                let sp = SpatialPlan::new(m.in_h, m.in_w, l.cin,
+                                          m.ksize, m.stride, m.padding,
+                                          m.groups)
+                    .with_context(|| format!("layer {}", l.name))?;
+                if in_dim != sp.patch_len() {
+                    bail!("layer {}: weight fan-in {} != \
+                           cin/groups*k*k = {}", l.name, in_dim,
+                          sp.patch_len());
+                }
+                // manifest-recorded interstitial op, else infer it
+                // from the previous output map and this input map
+                let target = (m.in_h, m.in_w, l.cin);
+                let pre = pre_from_ops(&l.pre_ops, shape)
+                    .unwrap_or(match shape {
+                        Some(s) if s == target => PreOp::Direct,
+                        // max_pool2 is VALID 2x2/stride-2: floor, so an
+                        // odd map drops its last row/column
+                        Some((h, w, c))
+                            if c == l.cin && h / 2 == m.in_h
+                                && w / 2 == m.in_w && h > m.in_h
+                                && w > m.in_w =>
+                        {
+                            PreOp::MaxPool2 { h, w, c }
+                        }
+                        Some(s) => {
+                            PreOp::AdaptSpatial { from: s, to: target }
+                        }
+                        None => PreOp::Direct,
+                    });
+                shape = Some((sp.out_h, sp.out_w, l.cout));
+                build_conv_layer(&l.name, &dense, sp, l.cout, &z2,
+                                 w_bits, w_beta, act, bias, relu, pre)?
+            }
+            _ => {
+                if l.kind != "dense" && !warned_legacy {
+                    crate::util::logging::warn(format!(
+                        "layer {}: manifest carries no spatial \
+                         metadata (pre-spatial exporter); lowering {} \
+                         layers as flattened GEMMs behind the legacy \
+                         feature adapter",
+                        l.name, l.kind
+                    ));
+                    warned_legacy = true;
+                }
+                // manifest-recorded op wins; the shape fallback cannot
+                // distinguish maxpool->flatten from global_avg_pool on
+                // a 2x2 map (both leave c features), so pre-schema
+                // manifests with a 2x2 head resolve to the pool arm
+                let pre = pre_from_ops(&l.pre_ops, shape)
+                    .unwrap_or(match shape {
+                        // NHWC flatten is a memory no-op
+                        Some((h, w, c)) if h * w * c == in_dim => {
+                            PreOp::Direct
+                        }
+                        // max_pool2 -> flatten (LeNet/VGG head)
+                        Some((h, w, c))
+                            if (h / 2) * (w / 2) * c == in_dim =>
+                        {
+                            PreOp::MaxPool2 { h, w, c }
+                        }
+                        // global_avg_pool (ResNet/MobileNet head)
+                        Some((h, w, c)) if c == in_dim => {
+                            PreOp::GlobalAvgPool { h, w, c }
+                        }
+                        _ => PreOp::Direct,
+                    });
+                shape = None;
+                let mut layer =
+                    build_layer(&l.name, &dense, in_dim, l.cout, &z2,
+                                w_bits, w_beta, act, bias, relu)?;
+                layer.pre = pre;
+                layer
+            }
+        };
+        layers.push(layer);
     }
     let plan = EnginePlan {
         model: man.name.clone(),
         input_dim: man.input_shape.iter().product::<usize>().max(1),
-        output_dim: layers.last().map(|l| l.out_dim).unwrap_or(0),
+        output_dim: layers.last().map(|l| l.output_len()).unwrap_or(0),
         layers,
     };
     plan.validate()?;
@@ -255,6 +359,84 @@ pub fn synthetic_plan(name: &str, dims: &[usize], w_bits: u32,
     };
     plan.validate()?;
     Ok(plan)
+}
+
+/// A deterministic random single-conv-layer plan (benches, parity
+/// tests, serve smoke runs): `hw x hw x cin` NHWC input, `cout`
+/// output channels, `k x k` kernel. `groups == cin` builds a
+/// depthwise layer; `prune` is the per-channel pruning probability
+/// (at least one channel always survives).
+#[allow(clippy::too_many_arguments)]
+pub fn synthetic_conv_plan(name: &str, hw: usize, cin: usize,
+                           cout: usize, k: usize, stride: usize,
+                           padding: Padding, groups: usize, w_bits: u32,
+                           a_bits: u32, prune: f64, seed: u64)
+                           -> Result<EnginePlan> {
+    let sp = SpatialPlan::new(hw, hw, cin, k, stride, padding, groups)?;
+    let mut rng = Pcg64::new(seed);
+    let plen = sp.patch_len();
+    let w: Vec<f32> =
+        (0..cout * plen).map(|_| rng.normal() * 0.4).collect();
+    let mut z2 = vec![1.0f32; cout];
+    if prune > 0.0 {
+        for z in z2.iter_mut() {
+            if rng.next_f64() < prune {
+                *z = 0.0;
+            }
+        }
+        if z2.iter().all(|z| *z == 0.0) {
+            z2[0] = 1.0;
+        }
+    }
+    let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+    let act = if a_bits >= 32 {
+        ActSpec::F32
+    } else {
+        ActSpec::Int { bits: a_bits, beta: 3.0, signed: true }
+    };
+    let out_len = sp.out_pixels() * cout;
+    let layer = build_conv_layer(name, &w, sp, cout, &z2, w_bits, 1.5,
+                                 act, Some(bias), false,
+                                 PreOp::Direct)?;
+    let plan = EnginePlan {
+        model: name.to_string(),
+        input_dim: hw * hw * cin,
+        output_dim: out_len,
+        layers: vec![layer],
+    };
+    plan.validate()?;
+    Ok(plan)
+}
+
+/// Map a manifest-recorded interstitial op list (`pre` field) onto a
+/// [`PreOp`], given the tracked NHWC shape of the previous layer's
+/// output. `None` means nothing usable was recorded — pre-schema
+/// manifests, an unknown op sequence, or an untracked shape — and the
+/// caller falls back to the shape heuristic.
+fn pre_from_ops(ops: &[String], shape: Option<(usize, usize, usize)>)
+                -> Option<PreOp> {
+    if ops.is_empty() {
+        return None;
+    }
+    if ops.iter().any(|o| o != "maxpool2" && o != "gap" && o != "flatten")
+    {
+        return None;
+    }
+    let (h, w, c) = shape?;
+    let pools = ops.iter().filter(|o| *o == "maxpool2").count();
+    let gaps = ops.iter().filter(|o| *o == "gap").count();
+    match (pools, gaps) {
+        // flatten alone is a memory no-op on NHWC buffers
+        (0, 0) => Some(PreOp::Direct),
+        // pooling a 1-pixel axis would leave an empty map; defer such
+        // malformed geometry to the shape heuristic / runtime bridge
+        (1, 0) if h >= 2 && w >= 2 => {
+            Some(PreOp::MaxPool2 { h, w, c })
+        }
+        (0, 1) => Some(PreOp::GlobalAvgPool { h, w, c }),
+        // stacked pools etc. are not modelled as a single PreOp
+        _ => None,
+    }
 }
 
 /// Reorient a flat weight tensor to row-major `[cout, rest]` rows.
@@ -346,6 +528,59 @@ mod tests {
         assert!(l.packed.is_none());
         assert_eq!(l.f32_rows, w);
         assert_eq!(l.w_scale, 1.0);
+    }
+
+    #[test]
+    fn synthetic_conv_plan_builds_spatial_layer() {
+        let p = synthetic_conv_plan("c", 6, 3, 5, 3, 2, Padding::Same,
+                                    1, 4, 8, 0.3, 7)
+            .unwrap();
+        let l = &p.layers[0];
+        let sp = l.spatial.as_ref().unwrap();
+        assert_eq!((sp.out_h, sp.out_w), (3, 3));
+        assert_eq!(l.in_dim, 27);
+        assert!(!l.kept.is_empty());
+        assert_eq!(p.input_dim, 6 * 6 * 3);
+        assert_eq!(p.output_dim, 9 * 5);
+        assert!(l.packed.is_some());
+        // groups must divide the input channels
+        assert!(synthetic_conv_plan("c", 6, 3, 5, 3, 1, Padding::Same,
+                                    2, 4, 8, 0.0, 1)
+            .is_err());
+        // depthwise: cout must divide into groups
+        assert!(synthetic_conv_plan("c", 6, 4, 6, 3, 1, Padding::Same,
+                                    4, 4, 8, 0.0, 1)
+            .is_err());
+        let dw = synthetic_conv_plan("dw", 6, 4, 4, 3, 1, Padding::Same,
+                                     4, 4, 8, 0.0, 1)
+            .unwrap();
+        assert_eq!(dw.layers[0].in_dim, 9);
+    }
+
+    #[test]
+    fn pre_from_ops_maps_recorded_sequences() {
+        let sh = Some((6, 6, 4));
+        let ops = |v: &[&str]| -> Vec<String> {
+            v.iter().map(|s| s.to_string()).collect()
+        };
+        assert_eq!(pre_from_ops(&ops(&[]), sh), None);
+        assert_eq!(pre_from_ops(&ops(&["flatten"]), sh),
+                   Some(PreOp::Direct));
+        assert_eq!(pre_from_ops(&ops(&["maxpool2"]), sh),
+                   Some(PreOp::MaxPool2 { h: 6, w: 6, c: 4 }));
+        assert_eq!(pre_from_ops(&ops(&["maxpool2", "flatten"]), sh),
+                   Some(PreOp::MaxPool2 { h: 6, w: 6, c: 4 }));
+        assert_eq!(pre_from_ops(&ops(&["gap"]), sh),
+                   Some(PreOp::GlobalAvgPool { h: 6, w: 6, c: 4 }));
+        // unknown ops and stacked pools defer to the shape heuristic
+        assert_eq!(pre_from_ops(&ops(&["upsample"]), sh), None);
+        assert_eq!(pre_from_ops(&ops(&["maxpool2", "maxpool2"]), sh),
+                   None);
+        // pooling a 1-pixel axis would leave an empty map: rejected
+        assert_eq!(pre_from_ops(&ops(&["maxpool2"]), Some((1, 8, 4))),
+                   None);
+        // recorded ops without a tracked shape cannot be applied
+        assert_eq!(pre_from_ops(&ops(&["maxpool2"]), None), None);
     }
 
     #[test]

@@ -11,18 +11,24 @@
 //!   tensor its learned bit width from the gate chain, physically
 //!   elide pruned output channels from the weight blobs;
 //! * [`pack`] — bit-packed weight storage for the 2/4/8/16/32 chain;
-//! * [`kernels`] — packed-weight integer GEMM (i32/i64 accumulate,
-//!   one requantize multiply) plus the f32 simulated-quant fallback;
+//! * [`kernels`] — packed-weight integer GEMM and im2col-over-codes
+//!   spatial convolution (i32/i64 accumulate, one requantize
+//!   multiply) plus the f32 simulated-quant fallbacks;
 //! * [`serve`] — a multi-threaded batched request server over
 //!   per-worker [`Engine`] instances.
 //!
-//! The executor treats every layer as a GEMM over its flattened
-//! weight matrix (`[cout, size/cout]`); feature vectors are adapted
-//! between mismatched layer widths by deterministic pooling /
-//! replication (`adapt_features`). Both the integer and the f32 path
+//! Dense layers execute as GEMMs over `[cout, in]` weight rows.
+//! Conv/dwconv layers keep their `[cout, cin/groups * k * k]` row
+//! layout and execute as real spatial convolutions over a per-layer
+//! [`SpatialPlan`] (kernel size, stride, resolved padding, groups),
+//! with the train graph's interstitial ops (2x2 max pool, NHWC
+//! flatten, global average pool) replayed as [`PreOp`]s between
+//! layers. The flat pool/replicate width adapter (`adapt_features`)
+//! survives only as the explicit legacy fallback for manifests that
+//! predate the spatial schema. Both the integer and the f32 path
 //! share one activation grid and one weight grid, so they agree up to
-//! f32 accumulation error — `tests/engine_parity.rs` pins the integer
-//! path to the `bb_quantize_host` oracle.
+//! f32 accumulation error — `tests/engine_parity.rs` and
+//! `tests/conv_parity.rs` pin the integer paths to host oracles.
 
 pub mod kernels;
 pub mod lower;
@@ -33,13 +39,110 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::models::Padding;
 use crate::report::TableBuilder;
 use crate::util::bench::{Bench, Summary};
 use crate::util::json::{num, s as jstr, Json};
 use pack::PackedMatrix;
 
-pub use lower::{lower, lower_with_mode, synthetic_plan};
+pub use lower::{lower, lower_with_mode, synthetic_conv_plan,
+                synthetic_plan};
 pub use serve::{ServeConfig, ServeStats, Server};
+
+/// Spatial execution geometry of one conv/dwconv layer: input feature
+/// map, kernel/stride/groups, and the padding resolved to explicit
+/// top/left offsets (TF/XLA SAME convention: `total = max((out-1) *
+/// stride + k - in, 0)`, low side gets `total / 2`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpatialPlan {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub groups: usize,
+    pub pad_top: usize,
+    pub pad_left: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+}
+
+impl SpatialPlan {
+    pub fn new(in_h: usize, in_w: usize, in_c: usize, k: usize,
+               stride: usize, padding: Padding, groups: usize)
+               -> Result<SpatialPlan> {
+        if in_h == 0 || in_w == 0 || in_c == 0 {
+            bail!("spatial plan needs a non-empty input map, got \
+                   {in_h}x{in_w}x{in_c}");
+        }
+        if k == 0 || stride == 0 || groups == 0 {
+            bail!("spatial plan needs k, stride, groups >= 1, got \
+                   k={k} stride={stride} groups={groups}");
+        }
+        if in_c % groups != 0 {
+            bail!("{in_c} input channels not divisible into {groups} \
+                   groups");
+        }
+        let (out_h, out_w, pad_top, pad_left) = match padding {
+            Padding::Same => {
+                let out_h = in_h.div_ceil(stride);
+                let out_w = in_w.div_ceil(stride);
+                let ph = ((out_h - 1) * stride + k).saturating_sub(in_h);
+                let pw = ((out_w - 1) * stride + k).saturating_sub(in_w);
+                (out_h, out_w, ph / 2, pw / 2)
+            }
+            Padding::Valid => {
+                if in_h < k || in_w < k {
+                    bail!("VALID conv: {k}x{k} kernel does not fit a \
+                           {in_h}x{in_w} map");
+                }
+                ((in_h - k) / stride + 1, (in_w - k) / stride + 1, 0, 0)
+            }
+        };
+        Ok(SpatialPlan { in_h, in_w, in_c, k, stride, groups, pad_top,
+                         pad_left, out_h, out_w })
+    }
+
+    /// Flat NHWC input length.
+    pub fn in_len(&self) -> usize {
+        self.in_h * self.in_w * self.in_c
+    }
+
+    pub fn out_pixels(&self) -> usize {
+        self.out_h * self.out_w
+    }
+
+    /// Weight elements per output channel (the GEMM row width).
+    pub fn patch_len(&self) -> usize {
+        (self.in_c / self.groups) * self.k * self.k
+    }
+}
+
+/// Deterministic feature transform replayed before a layer consumes
+/// the previous layer's output — the train graph's ops between weight
+/// layers, inferred at lowering time from the manifest's spatial
+/// metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PreOp {
+    /// Shapes line up (NHWC flatten is a memory no-op). A residual
+    /// width mismatch at run time falls back to the legacy flat
+    /// pool/replicate adapter (`adapt_features`).
+    Direct,
+    /// 2x2 max pooling, stride 2, over the previous `h x w x c` map
+    /// (the models' `max_pool2`).
+    MaxPool2 { h: usize, w: usize, c: usize },
+    /// Per-channel mean over all pixels (the models' `global_avg_pool`
+    /// ahead of the classifier head).
+    GlobalAvgPool { h: usize, w: usize, c: usize },
+    /// Shape-aware bucket-mean / replicate bridge for branch layers
+    /// (ResNet downsample) whose input is not the previous layer's
+    /// output; each NHWC axis pools when shrinking and replicates when
+    /// growing, independently.
+    AdaptSpatial {
+        from: (usize, usize, usize),
+        to: (usize, usize, usize),
+    },
+}
 
 /// Input-activation quantization of one layer.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -59,13 +162,15 @@ impl ActSpec {
     }
 }
 
-/// One lowered layer: a (possibly packed) GEMM over kept channels.
+/// One lowered layer: a (possibly packed) GEMM or spatial conv over
+/// kept channels.
 #[derive(Debug, Clone)]
 pub struct PlanLayer {
     pub name: String,
-    /// GEMM input width (weight elements per output channel).
+    /// Weight elements per output channel — the GEMM row width
+    /// (`cin/groups * k * k` for spatial layers).
     pub in_dim: usize,
-    /// Dense output width, including pruned channel positions.
+    /// Dense output channel count, including pruned channel positions.
     pub out_dim: usize,
     /// Learned weight width (0 = every channel pruned).
     pub w_bits: u32,
@@ -81,9 +186,14 @@ pub struct PlanLayer {
     pub f32_rows: Vec<f32>,
     pub act: ActSpec,
     /// Dense per-channel bias (applied to pruned channels too — their
-    /// weights are gated off, their bias survives).
+    /// weights are gated off, their bias survives). Spatial layers
+    /// broadcast it over every output pixel.
     pub bias: Option<Vec<f32>>,
     pub relu: bool,
+    /// Spatial conv geometry; `None` executes as a flat GEMM.
+    pub spatial: Option<SpatialPlan>,
+    /// How this layer's input is produced from the previous output.
+    pub pre: PreOp,
 }
 
 impl PlanLayer {
@@ -96,6 +206,19 @@ impl PlanLayer {
 
     pub fn dense_bytes(&self) -> usize {
         self.in_dim * self.out_dim * 4
+    }
+
+    /// Flat feature count this layer consumes (NHWC for spatial).
+    pub fn input_len(&self) -> usize {
+        self.spatial.as_ref().map(|sp| sp.in_len()).unwrap_or(self.in_dim)
+    }
+
+    /// Flat feature count this layer produces (NHWC for spatial).
+    pub fn output_len(&self) -> usize {
+        self.spatial
+            .as_ref()
+            .map(|sp| sp.out_pixels() * self.out_dim)
+            .unwrap_or(self.out_dim)
     }
 }
 
@@ -140,10 +263,21 @@ impl EnginePlan {
             if l.kept.iter().any(|c| *c as usize >= l.out_dim) {
                 bail!("layer {}: kept channel out of range", l.name);
             }
+            if let Some(sp) = &l.spatial {
+                if l.in_dim != sp.patch_len() {
+                    bail!("layer {}: row width {} != cin/groups*k*k {}",
+                          l.name, l.in_dim, sp.patch_len());
+                }
+                if l.out_dim % sp.groups != 0 {
+                    bail!("layer {}: {} outputs not divisible into {} \
+                           groups", l.name, l.out_dim, sp.groups);
+                }
+            }
         }
-        if self.output_dim != self.layers.last().unwrap().out_dim {
+        let last = self.layers.last().unwrap();
+        if self.output_dim != last.output_len() {
             bail!("output_dim {} != last layer out {}", self.output_dim,
-                  self.layers.last().unwrap().out_dim);
+                  last.output_len());
         }
         Ok(())
     }
@@ -161,8 +295,8 @@ impl EnginePlan {
         let mut t = TableBuilder::new(
             &format!("Engine plan — {} ({} -> {})", self.model,
                      self.input_dim, self.output_dim),
-            &["Layer", "W bits", "A bits", "Kept", "In", "Packed KiB",
-              "Dense KiB"],
+            &["Layer", "W bits", "A bits", "Kept", "In", "Spatial",
+              "Packed KiB", "Dense KiB"],
         );
         for l in &self.layers {
             t.row(&[
@@ -180,12 +314,24 @@ impl EnginePlan {
                 },
                 format!("{}/{}", l.kept.len(), l.out_dim),
                 format!("{}", l.in_dim),
+                match &l.spatial {
+                    Some(sp) => format!(
+                        "{}x{}->{}x{} k{}s{}{}", sp.in_h, sp.in_w,
+                        sp.out_h, sp.out_w, sp.k, sp.stride,
+                        if sp.groups > 1 {
+                            format!("g{}", sp.groups)
+                        } else {
+                            String::new()
+                        }),
+                    None => "-".into(),
+                },
                 format!("{:.1}", l.packed_bytes() as f64 / 1024.0),
                 format!("{:.1}", l.dense_bytes() as f64 / 1024.0),
             ]);
         }
         t.row(&[
             "total".into(),
+            "".into(),
             "".into(),
             "".into(),
             "".into(),
@@ -269,6 +415,88 @@ pub fn throughput_sweep(rows: usize, cols: usize, batches: &[usize],
     Ok(out)
 }
 
+/// One measurement from [`conv_throughput_sweep`].
+pub struct ConvSweepRecord {
+    pub summary: Summary,
+    pub int_path: bool,
+    pub w_bits: u32,
+    pub batch: usize,
+    pub hw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub ksize: usize,
+    pub images_per_sec: f64,
+}
+
+impl ConvSweepRecord {
+    pub fn line(&self) -> String {
+        self.summary.line(Some((self.batch as f64, "img")))
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.summary.to_json(vec![
+            ("path", jstr(if self.int_path { "int" } else { "f32" })),
+            ("w_bits", num(self.w_bits as f64)),
+            ("a_bits", num(8.0)),
+            ("batch", num(self.batch as f64)),
+            ("hw", num(self.hw as f64)),
+            ("cin", num(self.cin as f64)),
+            ("cout", num(self.cout as f64)),
+            ("ksize", num(self.ksize as f64)),
+            ("images_per_sec", num(self.images_per_sec)),
+        ])
+    }
+}
+
+/// Int-vs-f32 throughput sweep on one synthetic spatial conv layer
+/// (`hw x hw x cin -> cout`, SAME padding, stride 1) across weight
+/// widths and batch sizes — the measurement behind `BENCH_conv.json`
+/// (`bbits engine-bench`).
+pub fn conv_throughput_sweep(hw: usize, cin: usize, cout: usize,
+                             ksize: usize, batches: &[usize],
+                             wbits: &[u32], b: &Bench)
+                             -> Result<Vec<ConvSweepRecord>> {
+    let mut rng = crate::rng::Pcg64::new(5);
+    let in_len = hw * hw * cin;
+    let mut out = Vec::new();
+    for &batch in batches {
+        let xs: Vec<f32> =
+            (0..batch * in_len).map(|_| rng.normal()).collect();
+        for &wb in wbits {
+            let plan = Arc::new(synthetic_conv_plan(
+                &format!("bench_conv_w{wb}"), hw, cin, cout, ksize, 1,
+                Padding::Same, 1, wb, 8, 0.0, 13)?);
+            for int_path in [true, false] {
+                let mut eng = Engine::new(plan.clone());
+                eng.set_int_enabled(int_path);
+                let label = format!(
+                    "{} conv w{wb}a8 batch={batch} \
+                     ({hw}x{hw}x{cin}->{cout} k{ksize})",
+                    if int_path { "int" } else { "f32" }
+                );
+                let summary = b.run(&label, || {
+                    let y = eng.infer_batch(&xs, batch).unwrap();
+                    std::hint::black_box(y);
+                });
+                let images_per_sec =
+                    batch as f64 / (summary.median_ns * 1e-9);
+                out.push(ConvSweepRecord {
+                    summary,
+                    int_path,
+                    w_bits: wb,
+                    batch,
+                    hw,
+                    cin,
+                    cout,
+                    ksize,
+                    images_per_sec,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
 /// Deterministic width adapter between mismatched feature widths:
 /// bucket-mean when shrinking, index replication when growing. Both
 /// execution paths share it, so it never perturbs parity.
@@ -276,6 +504,12 @@ pub fn adapt_features(x: &[f32], want: usize, out: &mut Vec<f32>) {
     let m = x.len();
     if m == want {
         out.extend_from_slice(x);
+        return;
+    }
+    if m == 0 {
+        // nothing to pool or replicate from — bridge with zeros
+        // rather than indexing an empty slice
+        out.resize(out.len() + want, 0.0);
         return;
     }
     if m > want {
@@ -288,6 +522,50 @@ pub fn adapt_features(x: &[f32], want: usize, out: &mut Vec<f32>) {
     } else {
         for i in 0..want {
             out.push(x[i * m / want]);
+        }
+    }
+}
+
+/// Source index range feeding target index `i` on one adapted axis:
+/// a bucket of >= 1 indices when shrinking (mean), a single replicated
+/// index when growing — the per-axis form of [`adapt_features`].
+fn axis_bucket(m: usize, want: usize, i: usize) -> (usize, usize) {
+    if m >= want {
+        let lo = i * m / want;
+        (lo, ((i + 1) * m / want).max(lo + 1))
+    } else {
+        let j = i * m / want;
+        (j, j + 1)
+    }
+}
+
+/// Shape-aware deterministic bridge between NHWC feature maps: each
+/// axis pools (bucket mean) when shrinking and replicates when
+/// growing, independently — the spatial analogue of [`adapt_features`]
+/// used for branch layers (ResNet downsample) whose input is not the
+/// previous layer's output. Shared by both execution paths.
+pub fn adapt_spatial(x: &[f32], from: (usize, usize, usize),
+                     to: (usize, usize, usize), out: &mut Vec<f32>) {
+    let (fh, fw, fc) = from;
+    let (th, tw, tc) = to;
+    debug_assert_eq!(x.len(), fh * fw * fc);
+    for i in 0..th {
+        let (h0, h1) = axis_bucket(fh, th, i);
+        for j in 0..tw {
+            let (w0, w1) = axis_bucket(fw, tw, j);
+            for ch in 0..tc {
+                let (c0, c1) = axis_bucket(fc, tc, ch);
+                let mut sum = 0.0f32;
+                for a in h0..h1 {
+                    for b in w0..w1 {
+                        for cc in c0..c1 {
+                            sum += x[(a * fw + b) * fc + cc];
+                        }
+                    }
+                }
+                let cnt = (h1 - h0) * (w1 - w0) * (c1 - c0);
+                out.push(sum / cnt as f32);
+            }
         }
     }
 }
@@ -306,6 +584,11 @@ pub struct Engine {
     row: Vec<i32>,
     acc: Vec<i64>,
     accf: Vec<f32>,
+    /// Weight codes decoded once per batch (spatial layers).
+    wrows: Vec<i32>,
+    /// im2col patch scratch (integer / f32 path).
+    patch: Vec<i32>,
+    patchf: Vec<f32>,
 }
 
 impl Engine {
@@ -321,6 +604,9 @@ impl Engine {
             row: Vec::new(),
             acc: Vec::new(),
             accf: Vec::new(),
+            wrows: Vec::new(),
+            patch: Vec::new(),
+            patchf: Vec::new(),
         }
     }
 
@@ -352,78 +638,22 @@ impl Engine {
         self.cur.extend_from_slice(xs);
         let mut cur_dim = plan.input_dim;
         for layer in &plan.layers {
-            if cur_dim != layer.in_dim {
+            cur_dim = self.apply_pre(layer, n, cur_dim);
+            let in_len = layer.input_len();
+            if cur_dim != in_len {
+                // legacy flat pool/replicate adapter — pre-spatial
+                // plans and residual width drift only
                 self.adapted.clear();
                 for s in 0..n {
                     let x = &self.cur[s * cur_dim..(s + 1) * cur_dim];
-                    adapt_features(x, layer.in_dim, &mut self.adapted);
+                    adapt_features(x, in_len, &mut self.adapted);
                 }
                 std::mem::swap(&mut self.cur, &mut self.adapted);
-                cur_dim = layer.in_dim;
+                cur_dim = in_len;
             }
-            let out_dim = layer.out_dim;
-            self.nxt.clear();
-            match &layer.bias {
-                Some(b) => {
-                    for _ in 0..n {
-                        self.nxt.extend_from_slice(b);
-                    }
-                }
-                None => self.nxt.resize(n * out_dim, 0.0),
-            }
-            let rows = layer.kept.len();
-            if rows > 0 {
-                let int_path = self.int_enabled
-                    && layer.packed.is_some()
-                    && matches!(layer.act, ActSpec::Int { .. });
-                if int_path {
-                    let ActSpec::Int { bits, beta, signed } = layer.act
-                    else {
-                        unreachable!()
-                    };
-                    let s_a = kernels::quantize_acts(
-                        &self.cur[..n * cur_dim], beta, bits, signed,
-                        &mut self.qa);
-                    let packed = layer.packed.as_ref().unwrap();
-                    self.row.resize(cur_dim, 0);
-                    self.acc.clear();
-                    self.acc.resize(n * rows, 0);
-                    kernels::matmul_packed(packed, &self.qa, n, bits,
-                                           &mut self.row, &mut self.acc);
-                    let scale = layer.w_scale as f64 * s_a as f64;
-                    for s in 0..n {
-                        for (k, ch) in layer.kept.iter().enumerate() {
-                            self.nxt[s * out_dim + *ch as usize] +=
-                                (self.acc[s * rows + k] as f64 * scale)
-                                    as f32;
-                        }
-                    }
-                } else {
-                    // f32 fallback on the simulated-quant weights; the
-                    // activation grid is still applied so both paths
-                    // see identical quantization error.
-                    let acts: &[f32] = match layer.act {
-                        ActSpec::F32 => &self.cur[..n * cur_dim],
-                        ActSpec::Int { bits, beta, signed } => {
-                            let s_a = kernels::quantize_acts(
-                                &self.cur[..n * cur_dim], beta, bits,
-                                signed, &mut self.qa);
-                            kernels::dequantize(&self.qa, s_a,
-                                                &mut self.deq);
-                            &self.deq
-                        }
-                    };
-                    self.accf.clear();
-                    self.accf.resize(n * rows, 0.0);
-                    kernels::matmul_f32(&layer.f32_rows, rows, cur_dim,
-                                        acts, n, &mut self.accf);
-                    for s in 0..n {
-                        for (k, ch) in layer.kept.iter().enumerate() {
-                            self.nxt[s * out_dim + *ch as usize] +=
-                                self.accf[s * rows + k];
-                        }
-                    }
-                }
+            match &layer.spatial {
+                Some(sp) => self.run_conv(layer, sp, n),
+                None => self.run_dense(layer, n),
             }
             if layer.relu {
                 for v in self.nxt.iter_mut() {
@@ -433,9 +663,245 @@ impl Engine {
                 }
             }
             std::mem::swap(&mut self.cur, &mut self.nxt);
-            cur_dim = out_dim;
+            cur_dim = layer.output_len();
         }
         Ok(self.cur[..n * plan.output_dim].to_vec())
+    }
+
+    /// Replay the layer's [`PreOp`] on `self.cur`; returns the new
+    /// per-sample width. A pre-op whose recorded input shape does not
+    /// match the live width is skipped (the flat adapter then bridges).
+    fn apply_pre(&mut self, layer: &PlanLayer, n: usize, cur_dim: usize)
+                 -> usize {
+        match &layer.pre {
+            PreOp::Direct => cur_dim,
+            PreOp::MaxPool2 { h, w, c } => {
+                let (h, w, c) = (*h, *w, *c);
+                if cur_dim != h * w * c {
+                    return cur_dim;
+                }
+                let (ho, wo) = (h / 2, w / 2);
+                self.adapted.clear();
+                self.adapted.reserve(n * ho * wo * c);
+                for s in 0..n {
+                    let x = &self.cur[s * cur_dim..(s + 1) * cur_dim];
+                    for oh in 0..ho {
+                        for ow in 0..wo {
+                            let i00 = (2 * oh * w + 2 * ow) * c;
+                            let i10 = i00 + w * c;
+                            for ch in 0..c {
+                                let m = x[i00 + ch]
+                                    .max(x[i00 + c + ch])
+                                    .max(x[i10 + ch])
+                                    .max(x[i10 + c + ch]);
+                                self.adapted.push(m);
+                            }
+                        }
+                    }
+                }
+                std::mem::swap(&mut self.cur, &mut self.adapted);
+                ho * wo * c
+            }
+            PreOp::GlobalAvgPool { h, w, c } => {
+                let (h, w, c) = (*h, *w, *c);
+                if cur_dim != h * w * c {
+                    return cur_dim;
+                }
+                let pixels = h * w;
+                self.adapted.clear();
+                self.adapted.reserve(n * c);
+                for s in 0..n {
+                    let x = &self.cur[s * cur_dim..(s + 1) * cur_dim];
+                    for ch in 0..c {
+                        let mut sum = 0.0f32;
+                        for p in 0..pixels {
+                            sum += x[p * c + ch];
+                        }
+                        self.adapted.push(sum / pixels as f32);
+                    }
+                }
+                std::mem::swap(&mut self.cur, &mut self.adapted);
+                c
+            }
+            PreOp::AdaptSpatial { from, to } => {
+                if cur_dim != from.0 * from.1 * from.2 {
+                    return cur_dim;
+                }
+                self.adapted.clear();
+                for s in 0..n {
+                    let x = &self.cur[s * cur_dim..(s + 1) * cur_dim];
+                    adapt_spatial(x, *from, *to, &mut self.adapted);
+                }
+                std::mem::swap(&mut self.cur, &mut self.adapted);
+                to.0 * to.1 * to.2
+            }
+        }
+    }
+
+    /// Flat GEMM layer over `self.cur` (`[n, in_dim]`) into `self.nxt`.
+    fn run_dense(&mut self, layer: &PlanLayer, n: usize) {
+        let cur_dim = layer.in_dim;
+        let out_dim = layer.out_dim;
+        self.nxt.clear();
+        match &layer.bias {
+            Some(b) => {
+                for _ in 0..n {
+                    self.nxt.extend_from_slice(b);
+                }
+            }
+            None => self.nxt.resize(n * out_dim, 0.0),
+        }
+        let rows = layer.kept.len();
+        if rows == 0 {
+            return;
+        }
+        let int_path = self.int_enabled
+            && layer.packed.is_some()
+            && matches!(layer.act, ActSpec::Int { .. });
+        if int_path {
+            let ActSpec::Int { bits, beta, signed } = layer.act else {
+                unreachable!()
+            };
+            let s_a = kernels::quantize_acts(
+                &self.cur[..n * cur_dim], beta, bits, signed,
+                &mut self.qa);
+            let packed = layer.packed.as_ref().unwrap();
+            self.row.resize(cur_dim, 0);
+            self.acc.clear();
+            self.acc.resize(n * rows, 0);
+            kernels::matmul_packed(packed, &self.qa, n, bits,
+                                   &mut self.row, &mut self.acc);
+            let scale = layer.w_scale as f64 * s_a as f64;
+            for s in 0..n {
+                for (k, ch) in layer.kept.iter().enumerate() {
+                    self.nxt[s * out_dim + *ch as usize] +=
+                        (self.acc[s * rows + k] as f64 * scale) as f32;
+                }
+            }
+        } else {
+            // f32 fallback on the simulated-quant weights; the
+            // activation grid is still applied so both paths see
+            // identical quantization error.
+            let acts: &[f32] = match layer.act {
+                ActSpec::F32 => &self.cur[..n * cur_dim],
+                ActSpec::Int { bits, beta, signed } => {
+                    let s_a = kernels::quantize_acts(
+                        &self.cur[..n * cur_dim], beta, bits, signed,
+                        &mut self.qa);
+                    kernels::dequantize(&self.qa, s_a, &mut self.deq);
+                    &self.deq
+                }
+            };
+            self.accf.clear();
+            self.accf.resize(n * rows, 0.0);
+            kernels::matmul_f32(&layer.f32_rows, rows, cur_dim, acts, n,
+                                &mut self.accf);
+            for s in 0..n {
+                for (k, ch) in layer.kept.iter().enumerate() {
+                    self.nxt[s * out_dim + *ch as usize] +=
+                        self.accf[s * rows + k];
+                }
+            }
+        }
+    }
+
+    /// Spatial conv/dwconv layer over `self.cur` (`[n, in_h*in_w*in_c]`
+    /// NHWC) into `self.nxt` (`[n, out_h*out_w*out_dim]` NHWC). Packed
+    /// weight rows are decoded once per batch; each output pixel is an
+    /// im2col patch dotted against every kept channel's codes.
+    fn run_conv(&mut self, layer: &PlanLayer, sp: &SpatialPlan,
+                n: usize) {
+        let out_dim = layer.out_dim;
+        let opix = sp.out_pixels();
+        let out_len = opix * out_dim;
+        self.nxt.clear();
+        match &layer.bias {
+            Some(b) => {
+                self.nxt.reserve(n * out_len);
+                for _ in 0..n * opix {
+                    self.nxt.extend_from_slice(b);
+                }
+            }
+            None => self.nxt.resize(n * out_len, 0.0),
+        }
+        let rows = layer.kept.len();
+        if rows == 0 {
+            return;
+        }
+        let in_len = sp.in_len();
+        let plen = sp.patch_len();
+        let cpg = out_dim / sp.groups;
+        let int_path = self.int_enabled
+            && layer.packed.is_some()
+            && matches!(layer.act, ActSpec::Int { .. });
+        if int_path {
+            let ActSpec::Int { bits, beta, signed } = layer.act else {
+                unreachable!()
+            };
+            let s_a = kernels::quantize_acts(
+                &self.cur[..n * in_len], beta, bits, signed,
+                &mut self.qa);
+            let packed = layer.packed.as_ref().unwrap();
+            self.wrows.clear();
+            self.wrows.resize(rows * plen, 0);
+            for r in 0..rows {
+                packed.unpack_row_into(
+                    r, &mut self.wrows[r * plen..(r + 1) * plen]);
+            }
+            self.acc.clear();
+            self.acc.resize(n * opix * rows, 0);
+            let low = kernels::low_bit_pair(packed.bits, bits);
+            if sp.in_c == sp.groups {
+                kernels::dwconv2d_codes(&self.wrows, &layer.kept, cpg,
+                                        sp, &self.qa, n, low,
+                                        &mut self.acc);
+            } else {
+                self.patch.clear();
+                self.patch.resize(plen, 0);
+                kernels::conv2d_codes(&self.wrows, &layer.kept, cpg, sp,
+                                      &self.qa, n, low, &mut self.patch,
+                                      &mut self.acc);
+            }
+            let scale = layer.w_scale as f64 * s_a as f64;
+            for s in 0..n {
+                for p in 0..opix {
+                    let ybase = (s * opix + p) * rows;
+                    let obase = s * out_len + p * out_dim;
+                    for (k, ch) in layer.kept.iter().enumerate() {
+                        self.nxt[obase + *ch as usize] +=
+                            (self.acc[ybase + k] as f64 * scale) as f32;
+                    }
+                }
+            }
+        } else {
+            let acts: &[f32] = match layer.act {
+                ActSpec::F32 => &self.cur[..n * in_len],
+                ActSpec::Int { bits, beta, signed } => {
+                    let s_a = kernels::quantize_acts(
+                        &self.cur[..n * in_len], beta, bits, signed,
+                        &mut self.qa);
+                    kernels::dequantize(&self.qa, s_a, &mut self.deq);
+                    &self.deq
+                }
+            };
+            self.accf.clear();
+            self.accf.resize(n * opix * rows, 0.0);
+            self.patchf.clear();
+            self.patchf.resize(plen, 0.0);
+            kernels::conv2d_f32(&layer.f32_rows, &layer.kept, cpg, sp,
+                                acts, n, &mut self.patchf,
+                                &mut self.accf);
+            for s in 0..n {
+                for p in 0..opix {
+                    let ybase = (s * opix + p) * rows;
+                    let obase = s * out_len + p * out_dim;
+                    for (k, ch) in layer.kept.iter().enumerate() {
+                        self.nxt[obase + *ch as usize] +=
+                            self.accf[ybase + k];
+                    }
+                }
+            }
+        }
     }
 
     /// The f32 simulated-quant reference for the same plan (parity
@@ -471,6 +937,96 @@ mod tests {
         out.clear();
         adapt_features(&x, 3, &mut out);
         assert_eq!(out.len(), 3);
+        // an empty source bridges with zeros instead of panicking
+        out.clear();
+        adapt_features(&[], 4, &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn spatial_plan_resolves_same_and_valid_padding() {
+        // SAME, stride 1: output keeps the map size, pad (k-1)/2 low
+        let sp = SpatialPlan::new(16, 16, 8, 5, 1, Padding::Same, 1)
+            .unwrap();
+        assert_eq!((sp.out_h, sp.out_w), (16, 16));
+        assert_eq!((sp.pad_top, sp.pad_left), (2, 2));
+        assert_eq!(sp.patch_len(), 8 * 25);
+        // SAME, stride 2 on an odd map: ceil, asymmetric pad
+        let sp = SpatialPlan::new(3, 3, 4, 3, 2, Padding::Same, 4)
+            .unwrap();
+        assert_eq!((sp.out_h, sp.out_w), (2, 2));
+        assert_eq!((sp.pad_top, sp.pad_left), (1, 1));
+        assert_eq!(sp.patch_len(), 9);
+        // VALID shrinks by k-1
+        let sp = SpatialPlan::new(6, 5, 2, 3, 1, Padding::Valid, 1)
+            .unwrap();
+        assert_eq!((sp.out_h, sp.out_w), (4, 3));
+        assert_eq!((sp.pad_top, sp.pad_left), (0, 0));
+        // rejections
+        assert!(SpatialPlan::new(2, 2, 2, 3, 1, Padding::Valid, 1)
+            .is_err());
+        assert!(SpatialPlan::new(4, 4, 3, 3, 1, Padding::Same, 2)
+            .is_err());
+        assert!(SpatialPlan::new(4, 4, 2, 0, 1, Padding::Same, 1)
+            .is_err());
+    }
+
+    #[test]
+    fn adapt_spatial_pools_and_replicates_per_axis() {
+        // identity
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let mut out = Vec::new();
+        adapt_spatial(&x, (2, 2, 3), (2, 2, 3), &mut out);
+        assert_eq!(out, x);
+        // channel pool 4 -> 2 (pairs averaged), spatial identity
+        let x = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        out.clear();
+        adapt_spatial(&x, (1, 2, 4), (1, 2, 2), &mut out);
+        assert_eq!(out, vec![1.5, 3.5, 5.5, 7.5]);
+        // spatial replicate 1x1 -> 2x2
+        let x = vec![9.0f32, -1.0];
+        out.clear();
+        adapt_spatial(&x, (1, 1, 2), (2, 2, 2), &mut out);
+        assert_eq!(out, vec![9.0, -1.0, 9.0, -1.0, 9.0, -1.0, 9.0,
+                             -1.0]);
+        // resnet-ds shape bridge: replicate h/w, pool c
+        let x: Vec<f32> = (0..2 * 2 * 4).map(|i| i as f32).collect();
+        out.clear();
+        adapt_spatial(&x, (2, 2, 4), (4, 4, 2), &mut out);
+        assert_eq!(out.len(), 4 * 4 * 2);
+        assert_eq!(out[0], 0.5); // mean of channels 0,1 at pixel (0,0)
+    }
+
+    #[test]
+    fn conv_plan_runs_and_batches_consistently() {
+        let plan = Arc::new(
+            lower::synthetic_conv_plan("c", 6, 3, 5, 3, 1,
+                                       Padding::Same, 1, 4, 8, 0.3, 11)
+                .unwrap(),
+        );
+        let mut eng = Engine::new(plan.clone());
+        let x: Vec<f32> = (0..plan.input_dim)
+            .map(|i| ((i as f32) * 0.37).sin())
+            .collect();
+        let y = eng.infer(&x).unwrap();
+        assert_eq!(y.len(), 6 * 6 * 5);
+        assert!(y.iter().all(|v| v.is_finite()));
+        let mut xs = x.clone();
+        xs.extend_from_slice(&x);
+        let yy = eng.infer_batch(&xs, 2).unwrap();
+        assert_eq!(&yy[..y.len()], &y[..]);
+        assert_eq!(&yy[y.len()..], &y[..]);
+        // every pixel of a pruned channel carries exactly its bias
+        let l = &plan.layers[0];
+        let bias = l.bias.as_ref().unwrap();
+        for ch in 0..l.out_dim as u32 {
+            if !l.kept.contains(&ch) {
+                for p in 0..36 {
+                    assert_eq!(y[p * 5 + ch as usize],
+                               bias[ch as usize]);
+                }
+            }
+        }
     }
 
     #[test]

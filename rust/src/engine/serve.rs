@@ -511,4 +511,39 @@ mod tests {
         assert_eq!(percentile(&[], 0.5), 0);
         assert_eq!(percentile(&[42], 0.5), 42);
     }
+
+    #[test]
+    fn percentile_extreme_quantiles_and_degenerate_samples() {
+        // empty sample: every quantile is 0, including the extremes
+        assert_eq!(percentile(&[], 0.0), 0);
+        assert_eq!(percentile(&[], 1.0), 0);
+        // single element: every quantile is that element
+        assert_eq!(percentile(&[7], 0.0), 7);
+        assert_eq!(percentile(&[7], 1.0), 7);
+        // q = 0 clamps to the first rank, q = 1 to the last
+        let v = [10u64, 20, 30];
+        assert_eq!(percentile(&v, 0.0), 10);
+        assert_eq!(percentile(&v, 1.0), 30);
+        // nearest-rank stays within bounds just inside the extremes
+        assert_eq!(percentile(&v, 1e-9), 10);
+        assert_eq!(percentile(&v, 1.0 - 1e-9), 30);
+    }
+
+    #[test]
+    fn idle_server_stats_snapshot_is_all_zero() {
+        let server =
+            Server::start(tiny_plan(), ServeConfig::default()).unwrap();
+        // snapshot before any request: counters and latency quantiles
+        // must all read zero, not garbage from an empty reservoir
+        let st = server.stats();
+        assert_eq!((st.requests, st.batches, st.errors), (0, 0, 0));
+        assert_eq!(st.mean_batch, 0.0);
+        assert_eq!((st.p50_ms, st.p90_ms, st.p99_ms, st.max_ms),
+                   (0.0, 0.0, 0.0, 0.0));
+        assert_eq!((st.elapsed_s, st.throughput_rps), (0.0, 0.0));
+        // shutting down an idle server yields the same zero stats
+        let fin = server.shutdown();
+        assert_eq!((fin.requests, fin.batches, fin.errors), (0, 0, 0));
+        assert_eq!(fin.max_ms, 0.0);
+    }
 }

@@ -172,9 +172,10 @@ fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
     Ok(())
 }
 
-/// `bbits engine-bench` — packed integer GEMM vs the f32 fallback at
-/// every chain width on one synthetic layer (shared sweep with
-/// `benches/bench_engine.rs`).
+/// `bbits engine-bench` — packed integer GEMM and spatial conv vs the
+/// f32 fallbacks at every chain width on synthetic layers (GEMM sweep
+/// shared with `benches/bench_engine.rs`). The conv sweep writes the
+/// machine-readable `BENCH_conv.json` artifact.
 fn cmd_engine_bench(args: &Args) -> Result<()> {
     let rows = args.usize_flag("rows", 1024)?;
     let cols = args.usize_flag("cols", 1024)?;
@@ -184,15 +185,39 @@ fn cmd_engine_bench(args: &Args) -> Result<()> {
     } else {
         Bench::default()
     };
+    if !args.bool_flag("conv-only") {
+        bayesian_bits::util::bench::header(&format!(
+            "integer engine — {rows}x{cols} GEMM, batch {batch}"
+        ));
+        for rec in engine::throughput_sweep(rows, cols, &[batch],
+                                            &[2, 4, 8, 16], &b)?
+        {
+            println!("{}", rec.line());
+        }
+    }
+
+    let hw = args.usize_flag("hw", 14)?;
+    let cin = args.usize_flag("cin", 32)?;
+    let cout = args.usize_flag("cout", 32)?;
+    let ksize = args.usize_flag("ksize", 3)?;
     bayesian_bits::util::bench::header(&format!(
-        "integer engine — {rows}x{cols} GEMM, batch {batch}"
+        "integer engine — {hw}x{hw}x{cin}->{cout} k{ksize} spatial \
+         conv, batch {batch}"
     ));
-    for rec in
-        engine::throughput_sweep(rows, cols, &[batch], &[2, 4, 8, 16],
-                                 &b)?
-    {
+    let conv = engine::conv_throughput_sweep(hw, cin, cout, ksize,
+                                             &[batch], &[2, 4, 8, 16],
+                                             &b)?;
+    for rec in &conv {
         println!("{}", rec.line());
     }
+    let out = Path::new("BENCH_conv.json");
+    bayesian_bits::util::bench::save_json(
+        out,
+        "spatial conv images/sec per bit-width config, int vs f32 \
+         fallback",
+        conv.iter().map(|r| r.to_json()).collect(),
+    )?;
+    println!("wrote {}", out.display());
     Ok(())
 }
 

@@ -9,6 +9,50 @@
 
 use anyhow::{bail, Result};
 
+/// Conv padding convention (the exporter's JAX string padding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    /// `ceil(in/stride)` output pixels, zero padding split low/high
+    /// (TF/XLA convention: the extra pad goes bottom/right).
+    Same,
+    /// No padding: `(in - k)/stride + 1` output pixels.
+    Valid,
+}
+
+impl Padding {
+    pub fn parse(s: &str) -> Result<Padding> {
+        match s {
+            "SAME" => Ok(Padding::Same),
+            "VALID" => Ok(Padding::Valid),
+            other => bail!("unknown padding {other:?} (SAME | VALID)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Padding::Same => "SAME",
+            Padding::Valid => "VALID",
+        }
+    }
+}
+
+/// Spatial metadata of a conv/dwconv layer — what the integer engine
+/// needs to run the layer as a real convolution instead of a flattened
+/// GEMM. Mirrors the optional `ksize`/`stride`/`padding`/`groups`/
+/// `in_h`/`in_w` manifest fields (absent for dense layers and for
+/// manifests from pre-spatial exporters).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvMeta {
+    pub ksize: usize,
+    pub stride: usize,
+    pub padding: Padding,
+    /// Feature groups (== cin for depthwise).
+    pub groups: usize,
+    /// Input feature-map height/width (NHWC).
+    pub in_h: usize,
+    pub in_w: usize,
+}
+
 /// One compute layer — mirrors `LayerSpec.to_json()` in python/compile/core.py.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerDesc {
@@ -24,6 +68,15 @@ pub struct LayerDesc {
     pub act_q: String,
     /// B.2.3: input feeds from a residual join — not input-prunable.
     pub residual_input: bool,
+    /// Spatial metadata for conv/dwconv layers; `None` for dense
+    /// layers and for manifests written before the schema gained
+    /// spatial fields (those lower onto the legacy flattened path).
+    pub conv: Option<ConvMeta>,
+    /// Interstitial train-graph ops between the previous layer and
+    /// this one (`"maxpool2"` | `"gap"` | `"flatten"`), recorded by
+    /// the exporter (manifest `pre` field). Empty for pre-schema
+    /// manifests — the engine then infers the op from shapes.
+    pub pre_ops: Vec<String>,
 }
 
 /// Model preset selector.
@@ -50,11 +103,14 @@ struct Builder {
     w: usize,
     c: usize,
     layers: Vec<LayerDesc>,
+    /// Interstitial ops recorded since the last layer (mirrors
+    /// `Context.note_op`); drained into the next layer's `pre_ops`.
+    pending: Vec<String>,
 }
 
 impl Builder {
     fn new(h: usize, w: usize, c: usize) -> Self {
-        Self { h, w, c, layers: Vec::new() }
+        Self { h, w, c, layers: Vec::new(), pending: Vec::new() }
     }
 
     fn out_hw(&self, stride: usize) -> (usize, usize) {
@@ -82,6 +138,15 @@ impl Builder {
             weight_q: format!("{name}.w"),
             act_q,
             residual_input,
+            conv: Some(ConvMeta {
+                ksize: k,
+                stride,
+                padding: Padding::Same,
+                groups,
+                in_h: self.h,
+                in_w: self.w,
+            }),
+            pre_ops: std::mem::take(&mut self.pending),
         });
         self.h = ho;
         self.w = wo;
@@ -91,6 +156,15 @@ impl Builder {
     fn pool2(&mut self) {
         self.h /= 2;
         self.w /= 2;
+        self.pending.push("maxpool2".into());
+    }
+
+    fn gap(&mut self) {
+        self.pending.push("gap".into());
+    }
+
+    fn flatten(&mut self) {
+        self.pending.push("flatten".into());
     }
 
     fn dense(&mut self, name: &str, din: usize, dout: usize) {
@@ -103,6 +177,8 @@ impl Builder {
             weight_q: format!("{name}.w"),
             act_q: format!("{name}.in"),
             residual_input: false,
+            conv: None,
+            pre_ops: std::mem::take(&mut self.pending),
         });
     }
 
@@ -121,6 +197,7 @@ fn lenet5(preset: Preset) -> Vec<LayerDesc> {
     b.pool2();
     b.conv("conv2", c2, k, 1, 1, true, None, false);
     b.pool2();
+    b.flatten();
     let din = b.spatial() * b.c;
     b.dense("fc1", din, fc);
     b.dense("fc2", fc, classes);
@@ -141,6 +218,7 @@ fn vgg7(preset: Preset) -> Vec<LayerDesc> {
         }
         b.pool2();
     }
+    b.flatten();
     let din = b.spatial() * b.c;
     b.dense("fc1", din, fc);
     b.dense("fc2", fc, classes);
@@ -183,10 +261,21 @@ fn resnet18(preset: Preset) -> Vec<LayerDesc> {
                     weight_q: format!("{name}.ds.w"),
                     act_q: format!("{name}.conv1.in"),
                     residual_input: true,
+                    conv: Some(ConvMeta {
+                        ksize: 1,
+                        stride,
+                        padding: Padding::Same,
+                        groups: 1,
+                        in_h: h0,
+                        in_w: w0,
+                    }),
+                    // branch input: no interstitial op of its own
+                    pre_ops: Vec::new(),
                 });
             }
         }
     }
+    b.gap();
     b.dense("fc", widths[3], classes);
     b.layers
 }
@@ -231,6 +320,7 @@ fn mobilenetv2(preset: Preset) -> Vec<LayerDesc> {
         }
     }
     b.conv("head", head, 1, 1, 1, true, None, false);
+    b.gap();
     b.dense("fc", head, classes);
     b.layers
 }
@@ -282,6 +372,60 @@ mod tests {
     fn dwconv_marked() {
         let l = mobilenetv2(Preset::Small);
         assert!(l.iter().any(|x| x.kind == "dwconv"));
+    }
+
+    #[test]
+    fn conv_meta_tracks_shapes_and_groups() {
+        let l = lenet5(Preset::Small);
+        let c1 = l[0].conv.as_ref().unwrap();
+        assert_eq!((c1.in_h, c1.in_w, c1.ksize, c1.stride, c1.groups),
+                   (16, 16, 5, 1, 1));
+        // conv2 sees the post-pool feature map
+        let c2 = l[1].conv.as_ref().unwrap();
+        assert_eq!((c2.in_h, c2.in_w), (8, 8));
+        assert!(l[2].conv.is_none() && l[3].conv.is_none());
+        // depthwise layers carry groups == cin
+        for d in mobilenetv2(Preset::Small) {
+            if d.kind == "dwconv" {
+                let m = d.conv.as_ref().unwrap();
+                assert_eq!(m.groups, d.cin, "{}", d.name);
+            }
+        }
+        // resnet downsample is a 1x1 conv over the block input map
+        let r = resnet18(Preset::Small);
+        let ds = r.iter().find(|x| x.name == "s2b1.ds").unwrap();
+        let m = ds.conv.as_ref().unwrap();
+        assert_eq!((m.ksize, m.stride, m.in_h, m.in_w), (1, 2, 24, 24));
+    }
+
+    #[test]
+    fn interstitial_ops_recorded_per_layer() {
+        let l = lenet5(Preset::Small);
+        assert!(l[0].pre_ops.is_empty());
+        assert_eq!(l[1].pre_ops, vec!["maxpool2"]);
+        assert_eq!(l[2].pre_ops, vec!["maxpool2", "flatten"]);
+        assert!(l[3].pre_ops.is_empty());
+        // resnet/mobilenet classifier heads record the global pool
+        let r = resnet18(Preset::Small);
+        assert_eq!(r.last().unwrap().pre_ops, vec!["gap"]);
+        // paper stem pool lands on the first block conv
+        let rp = resnet18(Preset::Paper);
+        let s1 = rp.iter().find(|x| x.name == "s1b1.conv1").unwrap();
+        assert_eq!(s1.pre_ops, vec!["maxpool2"]);
+        let m = mobilenetv2(Preset::Small);
+        assert_eq!(m.last().unwrap().pre_ops, vec!["gap"]);
+        // branch convs carry no interstitial op of their own
+        let ds = r.iter().find(|x| x.name == "s2b1.ds").unwrap();
+        assert!(ds.pre_ops.is_empty());
+    }
+
+    #[test]
+    fn padding_parses_and_labels() {
+        assert_eq!(Padding::parse("SAME").unwrap(), Padding::Same);
+        assert_eq!(Padding::parse("VALID").unwrap(), Padding::Valid);
+        assert!(Padding::parse("same").is_err());
+        assert_eq!(Padding::Same.label(), "SAME");
+        assert_eq!(Padding::Valid.label(), "VALID");
     }
 
     #[test]

@@ -12,7 +12,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::data::synth::DatasetSpec;
-use crate::models::LayerDesc;
+use crate::models::{ConvMeta, LayerDesc, Padding};
 use crate::quant::gates::GateView;
 use crate::util::json::Json;
 
@@ -123,6 +123,34 @@ impl Manifest {
             .as_arr()?
             .iter()
             .map(|l| -> Result<LayerDesc> {
+                // Spatial metadata is a schema addition: layers written
+                // by pre-spatial exporters (and dense layers) have no
+                // `ksize`, and default to `conv: None` — the engine
+                // lowers those onto the legacy flattened-GEMM path.
+                let conv = match l.get("ksize") {
+                    Ok(k) => Some(ConvMeta {
+                        ksize: k.as_usize()?,
+                        stride: l.get("stride")?.as_usize()?,
+                        padding: Padding::parse(
+                            l.get("padding")?.as_str()?)?,
+                        groups: l.get("groups")?.as_usize()?,
+                        in_h: l.get("in_h")?.as_usize()?,
+                        in_w: l.get("in_w")?.as_usize()?,
+                    }),
+                    Err(_) => None,
+                };
+                // `pre` is part of the same schema addition: the
+                // interstitial ops recorded by the exporter; absent on
+                // pre-spatial manifests (the engine then infers from
+                // shapes).
+                let pre_ops = match l.get("pre") {
+                    Ok(v) => v
+                        .as_arr()?
+                        .iter()
+                        .map(|o| Ok(o.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?,
+                    Err(_) => Vec::new(),
+                };
                 Ok(LayerDesc {
                     name: l.get("name")?.as_str()?.into(),
                     kind: l.get("kind")?.as_str()?.into(),
@@ -132,6 +160,8 @@ impl Manifest {
                     weight_q: l.get("weight_q")?.as_str()?.into(),
                     act_q: l.get("act_q")?.as_str()?.into(),
                     residual_input: l.get("residual_input")?.as_bool()?,
+                    conv,
+                    pre_ops,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -301,6 +331,31 @@ mod tests {
         assert_eq!(idx.len(), 6);
         assert_eq!(&idx[..4], &[4, 5, 6, 7]);
         // a.in has no phi param in this tiny manifest -> stays 0
+    }
+
+    #[test]
+    fn spatial_fields_default_to_none_and_parse_when_present() {
+        // the tiny manifest's conv layer predates the spatial schema
+        let v = Json::parse(&tiny_manifest_json()).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp")).unwrap();
+        assert!(m.layers[0].conv.is_none());
+        // the same layer with the spatial schema addition
+        let with = tiny_manifest_json().replace(
+            "\"weight_q\":\"a.w\"",
+            "\"ksize\":3,\"stride\":2,\"padding\":\"SAME\",\"groups\":1,\
+             \"in_h\":2,\"in_w\":2,\"pre\":[\"maxpool2\"],\
+             \"weight_q\":\"a.w\"");
+        let v = Json::parse(&with).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp")).unwrap();
+        let c = m.layers[0].conv.as_ref().unwrap();
+        assert_eq!((c.ksize, c.stride, c.groups, c.in_h, c.in_w),
+                   (3, 2, 1, 2, 2));
+        assert_eq!(c.padding, crate::models::Padding::Same);
+        assert_eq!(m.layers[0].pre_ops, vec!["maxpool2"]);
+        // a bad padding string is rejected, not defaulted
+        let bad = with.replace("\"SAME\"", "\"DIAGONAL\"");
+        let v = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&v, Path::new("/tmp")).is_err());
     }
 
     #[test]

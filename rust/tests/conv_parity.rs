@@ -1,0 +1,451 @@
+//! Spatial conv parity battery: the integer im2col datapath vs a
+//! naive f32 spatial reference (independent indexing, no shared
+//! kernel code), across the 2/4/8/16 x 4/8/16 width grid, stride 1/2,
+//! SAME/VALID padding, and depthwise groups — with pruned output
+//! channels elided. Also proves the model-preset descriptor tables
+//! lower their conv/dwconv layers onto the spatial datapath end to
+//! end.
+//!
+//! Pure host subsystem: always runs; CI additionally runs it in
+//! `--release` (the full width grid is integer-kernel heavy in debug).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use bayesian_bits::engine::{lower, synthetic_conv_plan, ActSpec,
+                            Engine, EnginePlan, PreOp};
+use bayesian_bits::models::{descriptor, Padding, Preset};
+use bayesian_bits::quant::grid::quantize_codes_host;
+use bayesian_bits::rng::Pcg64;
+use bayesian_bits::runtime::Manifest;
+use bayesian_bits::util::json::Json;
+
+/// Naive f32 spatial convolution over the plan's simulated-quant
+/// weights and activation grid — direct nested loops, indexing derived
+/// from first principles rather than the engine's patch extractor.
+fn naive_reference(plan: &EnginePlan, x: &[f32]) -> Vec<f32> {
+    let l = &plan.layers[0];
+    let sp = l.spatial.as_ref().expect("reference needs a spatial layer");
+    let deq: Vec<f32> = match l.act {
+        ActSpec::F32 => x.to_vec(),
+        ActSpec::Int { bits, beta, signed } => {
+            let (s, codes) = quantize_codes_host(x, beta, bits, signed);
+            codes.iter().map(|q| s * *q as f32).collect()
+        }
+    };
+    let (k, stride) = (sp.k, sp.stride);
+    let cg = sp.in_c / sp.groups;
+    let cpg = l.out_dim / sp.groups;
+    let plen = l.in_dim;
+    let mut out = vec![0.0f32; sp.out_pixels() * l.out_dim];
+    if let Some(b) = &l.bias {
+        for p in 0..sp.out_pixels() {
+            out[p * l.out_dim..(p + 1) * l.out_dim]
+                .copy_from_slice(b);
+        }
+    }
+    for (r, ch) in l.kept.iter().enumerate() {
+        let g = *ch as usize / cpg;
+        for oh in 0..sp.out_h {
+            for ow in 0..sp.out_w {
+                let mut acc = 0.0f32;
+                for kh in 0..k {
+                    for kw in 0..k {
+                        let ih = (oh * stride + kh) as isize
+                            - sp.pad_top as isize;
+                        let iw = (ow * stride + kw) as isize
+                            - sp.pad_left as isize;
+                        if ih < 0
+                            || iw < 0
+                            || ih as usize >= sp.in_h
+                            || iw as usize >= sp.in_w
+                        {
+                            continue; // zero padding
+                        }
+                        for ci in 0..cg {
+                            let wv = l.f32_rows
+                                [r * plen + (kh * k + kw) * cg + ci];
+                            let av = deq[(ih as usize * sp.in_w
+                                + iw as usize)
+                                * sp.in_c
+                                + g * cg
+                                + ci];
+                            acc += wv * av;
+                        }
+                    }
+                }
+                out[(oh * sp.out_w + ow) * l.out_dim + *ch as usize] +=
+                    acc;
+            }
+        }
+    }
+    out
+}
+
+/// Run `trials` random inputs through the plan; the integer path and
+/// the engine's f32 fallback must both sit within
+/// `1e-4 * (1 + |y|)` of the naive reference, and pruned channels
+/// must answer exactly their bias at every pixel.
+fn check_case(plan: EnginePlan, label: &str, trials: usize, seed: u64) {
+    let l0 = &plan.layers[0];
+    let pruned: Vec<usize> = (0..l0.out_dim)
+        .filter(|c| !l0.kept.contains(&(*c as u32)))
+        .collect();
+    let bias = l0.bias.clone();
+    let out_dim = l0.out_dim;
+    let opix = l0.spatial.as_ref().unwrap().out_pixels();
+    let plan = Arc::new(plan);
+    let mut eng = Engine::new(plan.clone());
+    let mut rng = Pcg64::new(seed);
+    for t in 0..trials {
+        let x: Vec<f32> = (0..plan.input_dim)
+            .map(|_| rng.normal() * 1.2)
+            .collect();
+        let want = naive_reference(&plan, &x);
+        let got = eng.infer(&x).unwrap();
+        assert_eq!(got.len(), want.len(), "{label}");
+        let reference = eng.infer_reference(&x).unwrap();
+        for (i, w) in want.iter().enumerate() {
+            let tol = 1e-4 * (1.0 + w.abs());
+            assert!((got[i] - w).abs() <= tol,
+                    "{label} t={t} [{i}]: int {} vs naive {w}", got[i]);
+            assert!((reference[i] - w).abs() <= tol,
+                    "{label} t={t} [{i}]: f32 {} vs naive {w}",
+                    reference[i]);
+        }
+        // pruned-output-channel elision: exactly the bias, every pixel
+        for c in &pruned {
+            let b = bias.as_ref().map(|b| b[*c]).unwrap_or(0.0);
+            for p in 0..opix {
+                assert_eq!(got[p * out_dim + c], b,
+                           "{label}: pruned channel {c} pixel {p}");
+            }
+        }
+    }
+}
+
+#[test]
+fn conv_parity_across_width_stride_padding_grid() {
+    let mut seed = 100;
+    for &w_bits in &[2u32, 4, 8, 16] {
+        for &a_bits in &[4u32, 8, 16] {
+            for &stride in &[1usize, 2] {
+                for padding in [Padding::Same, Padding::Valid] {
+                    seed += 1;
+                    let label = format!(
+                        "conv w{w_bits}a{a_bits} s{stride} {}",
+                        padding.label());
+                    let plan = synthetic_conv_plan(
+                        &label, 7, 3, 6, 3, stride, padding, 1, w_bits,
+                        a_bits, 0.34, seed)
+                        .unwrap();
+                    assert!(plan.layers[0].packed.is_some()
+                            || plan.layers[0].w_bits >= 32);
+                    check_case(plan, &label, 2, seed * 7 + 1);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dwconv_parity_across_width_stride_padding_grid() {
+    let mut seed = 900;
+    for &w_bits in &[2u32, 4, 8, 16] {
+        for &a_bits in &[4u32, 8, 16] {
+            for &stride in &[1usize, 2] {
+                for padding in [Padding::Same, Padding::Valid] {
+                    seed += 1;
+                    let label = format!(
+                        "dwconv w{w_bits}a{a_bits} s{stride} {}",
+                        padding.label());
+                    let plan = synthetic_conv_plan(
+                        &label, 7, 6, 6, 3, stride, padding, 6, w_bits,
+                        a_bits, 0.3, seed)
+                        .unwrap();
+                    check_case(plan, &label, 2, seed * 11 + 3);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn grouped_conv_parity() {
+    // 2 groups, 3 channels per group in, 3 out per group
+    for (stride, padding) in
+        [(1usize, Padding::Same), (2, Padding::Valid)]
+    {
+        let label = format!("gconv s{stride} {}", padding.label());
+        let plan = synthetic_conv_plan(&label, 6, 6, 6, 3, stride,
+                                       padding, 2, 4, 8, 0.25, 77)
+            .unwrap();
+        check_case(plan, &label, 2, 78);
+    }
+}
+
+#[test]
+fn fully_pruned_conv_layer_answers_bias_per_pixel() {
+    // prune probability 1.0 leaves a single surviving channel by
+    // construction; force full pruning via the layer's z2 instead
+    let plan = synthetic_conv_plan("p", 5, 2, 3, 3, 1, Padding::Same, 1,
+                                   4, 8, 0.0, 3)
+        .unwrap();
+    let l = &plan.layers[0];
+    let z2 = vec![0.0f32; l.out_dim];
+    let sp = l.spatial.clone().unwrap();
+    let w = vec![0.5f32; l.out_dim * l.in_dim];
+    let layer = lower::build_conv_layer(
+        "p", &w, sp, l.out_dim, &z2, 4, 1.0,
+        ActSpec::Int { bits: 8, beta: 2.0, signed: true },
+        Some(vec![0.25, -1.5, 2.0]), false, PreOp::Direct)
+        .unwrap();
+    assert!(layer.kept.is_empty());
+    let plan = EnginePlan {
+        model: "p".into(),
+        input_dim: 5 * 5 * 2,
+        output_dim: layer.output_len(),
+        layers: vec![layer],
+    };
+    plan.validate().unwrap();
+    let mut eng = Engine::new(Arc::new(plan));
+    let y = eng.infer(&vec![1.0f32; 50]).unwrap();
+    for p in 0..25 {
+        assert_eq!(&y[p * 3..(p + 1) * 3], &[0.25, -1.5, 2.0]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Model presets: build a full Bayesian-Bits manifest from each Rust
+// descriptor table (the same shapes the python exporter emits, spatial
+// fields included), lower it, and check every conv/dwconv layer landed
+// on the spatial datapath with the expected inter-layer ops.
+// ---------------------------------------------------------------------
+
+struct ManifestBuilder {
+    params_json: Vec<String>,
+    quant_json: Vec<String>,
+    layers_json: Vec<String>,
+    params: Vec<f32>,
+    slot_offset: usize,
+    rng: Pcg64,
+}
+
+impl ManifestBuilder {
+    fn new(seed: u64) -> Self {
+        Self {
+            params_json: Vec::new(),
+            quant_json: Vec::new(),
+            layers_json: Vec::new(),
+            params: Vec::new(),
+            slot_offset: 0,
+            rng: Pcg64::new(seed),
+        }
+    }
+
+    fn param(&mut self, name: &str, shape: &[usize], group: char,
+             values: Vec<f32>) {
+        let size: usize = shape.iter().product();
+        assert_eq!(values.len(), size, "{name}");
+        let shape_s: Vec<String> =
+            shape.iter().map(|d| d.to_string()).collect();
+        self.params_json.push(format!(
+            "{{\"name\":\"{name}\",\"shape\":[{}],\"group\":\"{group}\",\
+             \"offset\":{},\"size\":{size}}}",
+            shape_s.join(","),
+            self.params.len()
+        ));
+        self.params.extend(values);
+    }
+
+    fn quantizer(&mut self, name: &str, kind: char, signed: bool,
+                 channels: usize, macs: u64) {
+        let n_slots = channels + 4;
+        self.quant_json.push(format!(
+            "{{\"name\":\"{name}\",\"kind\":\"{kind}\",\
+             \"signed\":{signed},\"channels\":{channels},\
+             \"levels\":[2,4,8,16,32],\"offset\":{},\
+             \"n_slots\":{n_slots},\"consumer_macs\":{macs}}}",
+            self.slot_offset
+        ));
+        self.slot_offset += n_slots;
+        // phi: channel slots open, chain -> 8 bit (z4, z8 open)
+        let mut phi = vec![6.0f32; channels];
+        phi.extend_from_slice(&[6.0, 6.0, -6.0, -6.0]);
+        self.param(&format!("{name}.phi"), &[n_slots], 'g', phi);
+        let beta = if kind == 'w' { 1.0 } else { 2.0 };
+        self.param(&format!("{name}.beta"), &[1], 's', vec![beta]);
+    }
+
+    fn normals(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal() * scale).collect()
+    }
+}
+
+/// `legacy` emits the pre-spatial schema (no `ksize`/.../`pre` layer
+/// fields), as a pre-schema exporter would have written it.
+fn preset_manifest(model: &str, legacy: bool) -> (Manifest, Vec<f32>) {
+    let desc = descriptor(model, Preset::Small).unwrap();
+    let input = match model {
+        "lenet5" => (16usize, 16usize, 1usize),
+        "vgg7" => (16, 16, 3),
+        _ => (24, 24, 3),
+    };
+    let classes = desc.last().unwrap().cout;
+    let mut b = ManifestBuilder::new(42);
+    for l in &desc {
+        if l.act_q == format!("{}.in", l.name) {
+            b.quantizer(&l.act_q, 'a', false, 1, l.macs);
+        }
+        let (wshape, fan) = match &l.conv {
+            Some(m) => {
+                let cg = l.cin / m.groups;
+                (vec![m.ksize, m.ksize, cg, l.cout],
+                 m.ksize * m.ksize * cg)
+            }
+            None => (vec![l.cin, l.cout], l.cin),
+        };
+        let scale = (2.0 / fan as f32).sqrt();
+        let w = b.normals(fan * l.cout, scale);
+        b.param(&format!("{}.w", l.name), &wshape, 'w', w);
+        b.quantizer(&l.weight_q, 'w', true, l.cout, l.macs);
+        let bias = b.normals(l.cout, 0.05);
+        b.param(&format!("{}.b", l.name), &[l.cout], 'w', bias);
+    }
+    for l in &desc {
+        let spatial = match &l.conv {
+            Some(m) if !legacy => format!(
+                ",\"ksize\":{},\"stride\":{},\"padding\":\"{}\",\
+                 \"groups\":{},\"in_h\":{},\"in_w\":{}",
+                m.ksize, m.stride, m.padding.label(), m.groups, m.in_h,
+                m.in_w),
+            _ => String::new(),
+        };
+        let pre = if legacy || l.pre_ops.is_empty() {
+            String::new()
+        } else {
+            let ops: Vec<String> =
+                l.pre_ops.iter().map(|o| format!("\"{o}\"")).collect();
+            format!(",\"pre\":[{}]", ops.join(","))
+        };
+        b.layers_json.push(format!(
+            "{{\"name\":\"{}\",\"kind\":\"{}\",\"macs\":{},\
+             \"cin\":{},\"cout\":{},\"weight_q\":\"{}\",\
+             \"act_q\":\"{}\",\"residual_input\":{}{spatial}{pre}}}",
+            l.name, l.kind, l.macs, l.cin, l.cout, l.weight_q, l.act_q,
+            l.residual_input));
+    }
+    let lam: Vec<String> =
+        (0..b.slot_offset).map(|_| "1".to_string()).collect();
+    let text = format!(
+        "{{\"name\":\"{model}\",\"engine\":\"bb\",\"preset\":\"small\",\
+         \"batch\":4,\"n_params\":{},\"n_slots\":{},\
+         \"input_shape\":[{},{},{}],\"num_classes\":{classes},\
+         \"dataset\":{{\"name\":\"mnist_like\",\"input\":[{},{},{}],\
+         \"classes\":{classes},\"train\":8,\"test\":4}},\
+         \"params\":[{}],\"quantizers\":[{}],\"layers\":[{}],\
+         \"lam_base\":[{}],\"hlo_train\":\"t.hlo.txt\",\
+         \"hlo_eval\":\"e.hlo.txt\",\"init_file\":\"i.bin\"}}",
+        b.params.len(),
+        b.slot_offset,
+        input.0, input.1, input.2,
+        input.0, input.1, input.2,
+        b.params_json.join(","),
+        b.quant_json.join(","),
+        b.layers_json.join(","),
+        lam.join(","));
+    let man =
+        Manifest::from_json(&Json::parse(&text).unwrap(), Path::new("/tmp"))
+            .unwrap();
+    (man, b.params)
+}
+
+#[test]
+fn model_preset_conv_layers_lower_onto_spatial_path() {
+    for model in ["lenet5", "vgg7", "resnet18", "mobilenetv2"] {
+        let (man, params) = preset_manifest(model, false);
+        let plan = lower::lower(&man, &params).unwrap();
+        assert_eq!(plan.layers.len(), man.layers.len(), "{model}");
+        for (pl, ml) in plan.layers.iter().zip(&man.layers) {
+            if ml.kind == "dense" {
+                assert!(pl.spatial.is_none(), "{model}/{}", pl.name);
+            } else {
+                // the tentpole invariant: every conv/dwconv preset
+                // layer executes on the spatial integer datapath
+                let sp = pl.spatial.as_ref().unwrap_or_else(|| {
+                    panic!("{model}/{}: not spatial", pl.name)
+                });
+                assert_eq!(pl.in_dim, sp.patch_len(), "{model}");
+                assert_eq!(pl.w_bits, 8, "{model}/{}", pl.name);
+                assert!(pl.packed.is_some(), "{model}/{}", pl.name);
+                // non-branch layers never need the shape bridge
+                if !pl.name.ends_with(".ds") {
+                    assert!(!matches!(pl.pre,
+                                      PreOp::AdaptSpatial { .. }),
+                            "{model}/{}: {:?}", pl.name, pl.pre);
+                }
+            }
+        }
+        // the recorded train-graph ops were replayed
+        match model {
+            "lenet5" => {
+                assert_eq!(plan.layers[1].pre,
+                           PreOp::MaxPool2 { h: 16, w: 16, c: 8 });
+                // maxpool2 + flatten head, from the manifest `pre`
+                assert_eq!(plan.layers[2].pre,
+                           PreOp::MaxPool2 { h: 8, w: 8, c: 16 });
+            }
+            "vgg7" => {
+                assert!(matches!(plan.layers[2].pre,
+                                 PreOp::MaxPool2 { .. }));
+            }
+            "resnet18" => {
+                let ds = plan
+                    .layers
+                    .iter()
+                    .find(|l| l.name == "s2b1.ds")
+                    .unwrap();
+                assert!(matches!(ds.pre, PreOp::AdaptSpatial { .. }));
+            }
+            _ => {
+                let fc = plan.layers.last().unwrap();
+                assert!(matches!(fc.pre,
+                                 PreOp::GlobalAvgPool { .. }));
+            }
+        }
+        // end to end: an image-shaped batch flows through the plan
+        let mut eng = Engine::new(Arc::new(plan));
+        let mut rng = Pcg64::new(7);
+        let n = 2;
+        let xs: Vec<f32> = (0..n * man.input_shape.iter()
+            .product::<usize>())
+            .map(|_| rng.normal())
+            .collect();
+        let y = eng.infer_batch(&xs, n).unwrap();
+        assert_eq!(y.len(), n * man.num_classes, "{model}");
+        assert!(y.iter().all(|v| v.is_finite()), "{model}");
+    }
+}
+
+#[test]
+fn legacy_manifest_without_spatial_fields_still_loads_and_serves() {
+    // backward compatibility: the same model written by a pre-spatial
+    // exporter (no ksize/stride/padding/groups/in_h/in_w/pre fields)
+    // lowers onto the legacy flattened-GEMM path and still serves
+    let (man, params) = preset_manifest("lenet5", true);
+    assert!(man.layers.iter().all(|l| l.conv.is_none()));
+    assert!(man.layers.iter().all(|l| l.pre_ops.is_empty()));
+    let plan = lower::lower(&man, &params).unwrap();
+    for l in &plan.layers {
+        assert!(l.spatial.is_none(), "{}: legacy must stay flat",
+                l.name);
+    }
+    let mut eng = Engine::new(Arc::new(plan));
+    let mut rng = Pcg64::new(9);
+    let x: Vec<f32> = (0..man.input_shape.iter().product::<usize>())
+        .map(|_| rng.normal())
+        .collect();
+    let y = eng.infer(&x).unwrap();
+    assert_eq!(y.len(), man.num_classes);
+    assert!(y.iter().all(|v| v.is_finite()));
+}

@@ -7,9 +7,11 @@ use std::collections::BTreeMap;
 
 use bayesian_bits::bops::{BopCounter, QuantState};
 use bayesian_bits::data::synth::{generate, DatasetSpec};
-use bayesian_bits::engine::kernels::{dot_codes, low_bit_pair};
+use bayesian_bits::engine::kernels::{dot_codes, extract_patch,
+                                     low_bit_pair};
 use bayesian_bits::engine::pack::{code_range, PackedMatrix};
-use bayesian_bits::models::{descriptor, Preset};
+use bayesian_bits::engine::SpatialPlan;
+use bayesian_bits::models::{descriptor, Padding, Preset};
 use bayesian_bits::quant::gates::{
     prob_active, test_time_gate, GateView, HardConcrete,
 };
@@ -300,6 +302,129 @@ fn prop_packed_dot_matches_exact_i64() {
         PropResult::check(got == want,
                           || format!("w{w_bits}a{a_bits} n={n}: \
                                       {got} vs {want}"))
+    });
+}
+
+#[test]
+fn prop_im2col_patch_touch_counts_match_window_coverage() {
+    // Every input element must be read exactly as many times as the
+    // number of (output pixel, tap) windows covering it — the count
+    // implied by kernel size, stride, and padding. Padding taps read
+    // zero and touch nothing.
+    check("im2col_touch_counts", 120, |g: &mut Gen| {
+        let in_h = g.usize_in(1, 8);
+        let in_w = g.usize_in(1, 8);
+        let groups = *g.choose(&[1usize, 2]);
+        let cg = g.usize_in(1, 3);
+        let in_c = groups * cg;
+        let k = g.usize_in(1, 3);
+        let stride = g.usize_in(1, 2);
+        let padding =
+            if g.bool() { Padding::Same } else { Padding::Valid };
+        let sp = match SpatialPlan::new(in_h, in_w, in_c, k, stride,
+                                        padding, groups) {
+            Ok(sp) => sp,
+            // VALID kernel larger than the map: nothing to check
+            Err(_) => return PropResult::Pass,
+        };
+        // x[i] = i + 1 so padding zeros are distinguishable
+        let x: Vec<i32> =
+            (0..sp.in_len() as i32).map(|i| i + 1).collect();
+        let mut got = vec![0u32; sp.in_len()];
+        let mut patch = vec![0i32; sp.patch_len()];
+        for gi in 0..groups {
+            for oh in 0..sp.out_h {
+                for ow in 0..sp.out_w {
+                    extract_patch(&x, &sp, gi, oh, ow, &mut patch);
+                    for v in &patch[..sp.patch_len()] {
+                        if *v > 0 {
+                            got[(*v - 1) as usize] += 1;
+                        }
+                    }
+                }
+            }
+        }
+        // expected coverage from enumerating the windows directly
+        let mut want = vec![0u32; sp.in_len()];
+        for oh in 0..sp.out_h {
+            for ow in 0..sp.out_w {
+                for kh in 0..k {
+                    for kw in 0..k {
+                        let ih = (oh * stride + kh) as isize
+                            - sp.pad_top as isize;
+                        let iw = (ow * stride + kw) as isize
+                            - sp.pad_left as isize;
+                        if ih < 0 || iw < 0 || ih as usize >= in_h
+                            || iw as usize >= in_w
+                        {
+                            continue;
+                        }
+                        for c in 0..in_c {
+                            want[(ih as usize * in_w + iw as usize)
+                                * in_c + c] += 1;
+                        }
+                    }
+                }
+            }
+        }
+        PropResult::check(got == want, || {
+            format!("{sp:?}: got {got:?} want {want:?}")
+        })
+    });
+}
+
+#[test]
+fn prop_packed_roundtrip_odd_rows_and_lanes_after_pruning() {
+    // The engine's pruned-row storage: packing an arbitrary surviving
+    // subset of channels at odd `cout` and non-lane-multiple row
+    // lengths is lossless, both wholesale and row by row.
+    check("packed_odd_shapes", 150, |g: &mut Gen| {
+        let bits = *g.choose(&[2u32, 4, 8, 16, 32]);
+        let signed = g.bool();
+        let cout = g.usize_in(1, 9);
+        // odd, so never a multiple of the 64/bits lane count
+        let cols = 2 * g.usize_in(0, 36) + 1;
+        let (lo, hi) = code_range(bits, signed);
+        let span = (hi - lo) as u64 + 1;
+        let dense: Vec<i64> = (0..cout * cols)
+            .map(|_| lo + (g.rng.next_u64() % span) as i64)
+            .collect();
+        // prune a random channel subset (>= 1 survivor)
+        let mut kept: Vec<usize> =
+            (0..cout).filter(|_| g.bool()).collect();
+        if kept.is_empty() {
+            kept.push(g.usize_in(0, cout - 1));
+        }
+        let codes: Vec<i64> = kept
+            .iter()
+            .flat_map(|r| dense[r * cols..(r + 1) * cols].iter().copied())
+            .collect();
+        let p = match PackedMatrix::pack(&codes, kept.len(), cols, bits,
+                                         signed) {
+            Ok(p) => p,
+            Err(e) => return PropResult::Fail(format!("pack: {e}")),
+        };
+        if p.unpack() != codes {
+            return PropResult::Fail(format!(
+                "bits={bits} signed={signed} rows={} cols={cols}: \
+                 unpack not lossless", kept.len()));
+        }
+        // per-row decode (the GEMM/conv decode unit); i32 decode only
+        // covers signed or <= 16-bit unsigned fields
+        if signed || bits <= 16 {
+            let mut row = vec![0i32; cols];
+            for (ri, r) in kept.iter().enumerate() {
+                p.unpack_row_into(ri, &mut row);
+                for c in 0..cols {
+                    if row[c] as i64 != dense[r * cols + c] {
+                        return PropResult::Fail(format!(
+                            "bits={bits} row {ri} col {c}: {} vs {}",
+                            row[c], dense[r * cols + c]));
+                    }
+                }
+            }
+        }
+        PropResult::Pass
     });
 }
 

@@ -112,6 +112,11 @@ fn manifest_layers_match_rust_descriptors() {
             assert_eq!(a.cout, b.cout, "{model}/{}", a.name);
             assert_eq!(a.weight_q, b.weight_q);
             assert_eq!(a.act_q, b.act_q);
+            // spatial metadata (ksize/stride/padding/groups/in map)
+            // and recorded interstitial ops must agree so the
+            // engine's spatial lowering matches the exporter's graph
+            assert_eq!(a.conv, b.conv, "{model}/{}", a.name);
+            assert_eq!(a.pre_ops, b.pre_ops, "{model}/{}", a.name);
         }
     }
 }
