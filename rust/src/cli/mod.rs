@@ -24,7 +24,7 @@ pub struct Args {
 /// Flags that are boolean switches (present => "true").
 const SWITCHES: &[&str] = &[
     "help", "det-gates", "show-preft", "curves", "quick", "paper-scale",
-    "skip-baselines", "no-finetune", "no-int", "conv-only",
+    "skip-baselines", "no-finetune", "no-int", "conv-only", "dump-ir",
 ];
 
 /// Flags that take a value (`--flag v` or `--flag=v`). Anything not
@@ -176,8 +176,13 @@ Integer inference engine (rust/src/engine)
                   --wbits N --abits N --prune F)
                   --threads N --max-batch B --deadline-ms F
                   --queue-cap N --clients C --requests N [--no-int]
+  plan            lower a checkpoint (or synthetic spec, same flags as
+                  serve) and print the plan report; --dump-ir prints
+                  the compiled execution graphs (typed node list +
+                  scratch-arena map) for the int and f32 paths
   engine-bench    packed integer GEMM + spatial conv vs f32 fallback
-                  throughput; writes BENCH_conv.json
+                  throughput; writes BENCH_conv.json (records now
+                  include arena_bytes / peak_scratch_bytes)
                   --rows N --cols N --batch B (GEMM; skip: --conv-only)
                   --hw N --cin N --cout N --ksize K (conv layer)
 
@@ -265,6 +270,10 @@ mod tests {
         assert_eq!(c.usize_flag("cin", 1).unwrap(), 4);
         assert_eq!(c.usize_flag("cout", 1).unwrap(), 4);
         assert_eq!(c.usize_flag("ksize", 1).unwrap(), 3);
+        // the IR dump switch is registered
+        let p = parse("plan --dims 8,4 --dump-ir");
+        assert_eq!(p.command, "plan");
+        assert!(p.bool_flag("dump-ir"));
     }
 
     #[test]

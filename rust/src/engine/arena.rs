@@ -1,0 +1,115 @@
+//! Static buffer liveness + scratch-arena assignment — the final
+//! compile pass.
+//!
+//! Every virtual buffer of a program gets a live interval over the
+//! node list (defined by its single writer, killed after its last
+//! reader; the input is live from before node 0, the output survives
+//! the whole program so callers can read it afterwards). Buffers of
+//! one dtype whose intervals are disjoint share arena space: a
+//! first-fit scan over the currently-live allocations produces the
+//! classic ping-pong pattern for a layer chain (activations bounce
+//! between two slots) while long-lived buffers stay put. Offsets are
+//! in per-sample element units — a batch of `n` scales every slice by
+//! `n`, so one solution is valid for every batch size.
+//!
+//! `tests/ir.rs` re-derives liveness independently and asserts that no
+//! two live buffers ever alias.
+
+use super::graph::{BufId, BufSpec, DType, Node};
+
+/// Arena footprints produced by [`assign`] (per-sample element units;
+/// `peak_live_bytes` is the fragmentation-free lower bound).
+pub(crate) struct ArenaLayout {
+    pub f32_len: usize,
+    pub i32_len: usize,
+    pub i64_len: usize,
+    pub peak_live_bytes: usize,
+}
+
+fn dt_index(dt: DType) -> usize {
+    match dt {
+        DType::F32 => 0,
+        DType::I32 => 1,
+        DType::I64 => 2,
+    }
+}
+
+/// Assign an arena offset to every reachable buffer. Orphaned buffers
+/// (never written nor read — e.g. eliminated by fusion) keep
+/// `offset = None` and cost nothing.
+pub(crate) fn assign(bufs: &mut [BufSpec], nodes: &[Node], input: BufId,
+                     output: BufId) -> ArenaLayout {
+    let nb = bufs.len();
+    // def/last in event time: the input is defined at 0, node i runs
+    // at i + 1. A node's src dies no earlier than its dst is born, so
+    // operands of one node never share a slot.
+    let mut def = vec![usize::MAX; nb];
+    let mut last = vec![0usize; nb];
+    def[input] = 0;
+    for (i, node) in nodes.iter().enumerate() {
+        let t = i + 1;
+        let w = node.writes();
+        if def[w] == usize::MAX {
+            def[w] = t;
+        }
+        if last[w] < t {
+            last[w] = t;
+        }
+        if let Some(r) = node.reads() {
+            debug_assert_ne!(def[r], usize::MAX,
+                             "node {i} reads undefined buffer {r}");
+            if last[r] < t {
+                last[r] = t;
+            }
+        }
+    }
+    // the caller reads the output after the last node
+    if def[output] != usize::MAX {
+        last[output] = nodes.len() + 1;
+    }
+
+    let mut order: Vec<BufId> =
+        (0..nb).filter(|b| def[*b] != usize::MAX).collect();
+    order.sort_by_key(|b| def[*b]);
+
+    let mut lens = [0usize; 3];
+    // live allocations per dtype: (offset, len, last)
+    let mut active: [Vec<(usize, usize, usize)>; 3] =
+        [Vec::new(), Vec::new(), Vec::new()];
+    for &b in &order {
+        let k = dt_index(bufs[b].dtype);
+        // expire allocations dead before this buffer is born
+        active[k].retain(|(_, _, l)| *l >= def[b]);
+        active[k].sort_unstable_by_key(|(o, _, _)| *o);
+        let need = bufs[b].len;
+        let mut off = 0usize;
+        for (o, l, _) in &active[k] {
+            if off + need <= *o {
+                break; // fits in the hole before this allocation
+            }
+            off = off.max(o + l);
+        }
+        bufs[b].offset = Some(off);
+        lens[k] = lens[k].max(off + need);
+        active[k].push((off, need, last[b]));
+    }
+
+    // fragmentation-free peak: max over program points of live bytes
+    let mut peak = 0usize;
+    for t in 0..=nodes.len() + 1 {
+        let mut cur = 0usize;
+        for b in 0..nb {
+            if def[b] != usize::MAX && def[b] <= t && last[b] >= t {
+                cur += bufs[b].len * bufs[b].dtype.bytes();
+            }
+        }
+        peak = peak.max(cur);
+    }
+
+    ArenaLayout {
+        f32_len: lens[0],
+        i32_len: lens[1],
+        i64_len: lens[2],
+        peak_live_bytes: peak,
+    }
+}

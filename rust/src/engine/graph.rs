@@ -1,0 +1,740 @@
+//! Typed execution-graph IR: the compiled form of an [`EnginePlan`].
+//!
+//! A [`Program`] is a flat, topologically ordered list of [`Node`]s
+//! over virtual buffers ([`BufSpec`]) whose arena slots were assigned
+//! ahead of time by the pass pipeline (`engine::passes` — graph build,
+//! pruned-channel elision, pre-op materialization, quantize/requant
+//! fusion, then liveness + arena assignment in `engine::arena`).
+//! Executing a program is a single interpreter loop: each node reads
+//! and writes pre-assigned slices of three typed scratch arenas (f32
+//! activations, i32 activation codes, i64 accumulators) sized once per
+//! batch — no per-request `Vec` allocation and no shape re-derivation
+//! on the hot path.
+//!
+//! Both execution paths run the same IR: `Program::compile(plan,
+//! true)` emits integer kernels (`Quantize` -> `Gemm`/`Conv2d`/
+//! `DwConv2d` -> `Requant`) where a layer has packed weights and an
+//! integer activation grid, while `compile(plan, false)` emits the
+//! simulated-quant reference (`Quantize` -> `Dequantize` -> f32 kernel
+//! -> `Epilogue`) — so int/f32 parity is structural, not two hand-kept
+//! code paths. Buffer offsets are recorded in per-sample element
+//! units; a batch of `n` samples addresses `offset * n ..
+//! (offset + len) * n`, so one liveness solution serves every batch
+//! size.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::{adapt_features_into, adapt_spatial_into, kernels,
+            EnginePlan};
+use crate::quant::grid::CodeGrid;
+
+/// Element type of a virtual buffer — selects its backing arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I64,
+}
+
+impl DType {
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I64 => 8,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+        }
+    }
+}
+
+/// Virtual buffer id (index into [`Program::bufs`]).
+pub type BufId = usize;
+
+/// One virtual buffer: per-sample element count plus the arena slot
+/// the assignment pass picked. A batch of `n` samples occupies
+/// `offset * n .. (offset + len) * n` of the `dtype` arena. `offset`
+/// is `None` for buffers the passes orphaned (e.g. the intermediate
+/// f32 activations a fused requantize+quantize eliminated).
+#[derive(Debug, Clone)]
+pub struct BufSpec {
+    pub dtype: DType,
+    /// Elements per sample.
+    pub len: usize,
+    /// Per-sample element offset into the dtype's arena.
+    pub offset: Option<usize>,
+}
+
+/// One resolved inter-layer transform inside a [`Node::Pre`]
+/// placeholder — the unit the pre-op materialization pass expands
+/// into concrete nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PreStep {
+    MaxPool2 { h: usize, w: usize, c: usize },
+    GlobalAvgPool { h: usize, w: usize, c: usize },
+    AdaptSpatial { from: (usize, usize, usize), to: (usize, usize, usize) },
+    AdaptFeatures { want: usize },
+}
+
+impl PreStep {
+    /// Per-sample output width of this step.
+    pub fn out_len(&self) -> usize {
+        match self {
+            PreStep::MaxPool2 { h, w, c } => (h / 2) * (w / 2) * c,
+            PreStep::GlobalAvgPool { c, .. } => *c,
+            PreStep::AdaptSpatial { to, .. } => to.0 * to.1 * to.2,
+            PreStep::AdaptFeatures { want } => *want,
+        }
+    }
+}
+
+/// One executable operation over arena buffers. Kernel nodes index
+/// the plan's layer table for weights/bias/geometry; everything else
+/// the interpreter needs (grids, requantize scales, shapes) is folded
+/// into the node at compile time.
+#[derive(Debug, Clone)]
+pub enum Node {
+    /// Transient macro-node emitted by the graph-build pass and fully
+    /// expanded by the pre-op materialization pass; never survives
+    /// `Program::compile`.
+    Pre { layer: usize, src: BufId, dst: BufId, steps: Vec<PreStep> },
+    /// 2x2/stride-2 max pool over an NHWC map (floor semantics: an odd
+    /// trailing row/column is dropped, matching the train graph).
+    MaxPool2 { src: BufId, dst: BufId, h: usize, w: usize, c: usize },
+    /// Per-channel mean over all pixels (classifier heads).
+    GlobalAvgPool { src: BufId, dst: BufId, h: usize, w: usize, c: usize },
+    /// Per-axis pool/replicate bridge between NHWC maps (ResNet
+    /// downsample branches).
+    AdaptSpatial {
+        src: BufId,
+        dst: BufId,
+        from: (usize, usize, usize),
+        to: (usize, usize, usize),
+    },
+    /// Legacy flat pool/replicate width adapter (pre-spatial manifests
+    /// and residual width drift only).
+    AdaptFeatures { src: BufId, dst: BufId, want: usize },
+    /// f32 activations -> integer grid codes.
+    Quantize { src: BufId, dst: BufId, grid: CodeGrid },
+    /// Codes -> f32 (`step * code`) — the simulated-quant activations
+    /// the reference path consumes.
+    Dequantize { src: BufId, dst: BufId, step: f32 },
+    /// Dense GEMM over the layer's kept rows. `int` selects packed
+    /// integer codes (i64 accumulators) vs simulated-quant f32 rows.
+    Gemm { layer: usize, src: BufId, dst: BufId, int: bool },
+    /// Spatial im2col convolution over kept rows (same `int` split).
+    Conv2d { layer: usize, src: BufId, dst: BufId, int: bool },
+    /// Depthwise integer fast path (`groups == in_c`); the f32
+    /// reference runs depthwise layers through [`Node::Conv2d`].
+    DwConv2d { layer: usize, src: BufId, dst: BufId },
+    /// i64 accumulators -> dense f32 channels: bias broadcast,
+    /// kept-row scatter through the folded `s_w * s_a` requantize
+    /// scale, optional ReLU. Pruned channel positions carry bias only.
+    Requant { layer: usize, src: BufId, dst: BufId, scale: f64, relu: bool },
+    /// f32 accumulators -> dense f32 channels (bias + scatter + ReLU,
+    /// no scale) — the reference-path epilogue.
+    Epilogue { layer: usize, src: BufId, dst: BufId, relu: bool },
+    /// Fused [`Node::Requant`] + the next integer layer's
+    /// [`Node::Quantize`]: accumulators go straight to the consumer's
+    /// activation codes without materializing the f32 buffer between
+    /// two adjacent integer layers.
+    RequantQuantize {
+        layer: usize,
+        src: BufId,
+        dst: BufId,
+        scale: f64,
+        relu: bool,
+        grid: CodeGrid,
+    },
+    /// Fully-pruned layer (pruned-channel elision): the output is its
+    /// (ReLU'd) bias broadcast over every pixel; no kernel runs.
+    BiasFill { layer: usize, dst: BufId, relu: bool },
+}
+
+impl Node {
+    /// The buffer this node reads, if any.
+    pub fn reads(&self) -> Option<BufId> {
+        match self {
+            Node::Pre { src, .. }
+            | Node::MaxPool2 { src, .. }
+            | Node::GlobalAvgPool { src, .. }
+            | Node::AdaptSpatial { src, .. }
+            | Node::AdaptFeatures { src, .. }
+            | Node::Quantize { src, .. }
+            | Node::Dequantize { src, .. }
+            | Node::Gemm { src, .. }
+            | Node::Conv2d { src, .. }
+            | Node::DwConv2d { src, .. }
+            | Node::Requant { src, .. }
+            | Node::Epilogue { src, .. }
+            | Node::RequantQuantize { src, .. } => Some(*src),
+            Node::BiasFill { .. } => None,
+        }
+    }
+
+    /// The buffer this node writes.
+    pub fn writes(&self) -> BufId {
+        match self {
+            Node::Pre { dst, .. }
+            | Node::MaxPool2 { dst, .. }
+            | Node::GlobalAvgPool { dst, .. }
+            | Node::AdaptSpatial { dst, .. }
+            | Node::AdaptFeatures { dst, .. }
+            | Node::Quantize { dst, .. }
+            | Node::Dequantize { dst, .. }
+            | Node::Gemm { dst, .. }
+            | Node::Conv2d { dst, .. }
+            | Node::DwConv2d { dst, .. }
+            | Node::Requant { dst, .. }
+            | Node::Epilogue { dst, .. }
+            | Node::RequantQuantize { dst, .. }
+            | Node::BiasFill { dst, .. } => *dst,
+        }
+    }
+
+    /// Layer index for kernel/epilogue nodes.
+    pub fn layer(&self) -> Option<usize> {
+        match self {
+            Node::Pre { layer, .. }
+            | Node::Gemm { layer, .. }
+            | Node::Conv2d { layer, .. }
+            | Node::DwConv2d { layer, .. }
+            | Node::Requant { layer, .. }
+            | Node::Epilogue { layer, .. }
+            | Node::RequantQuantize { layer, .. }
+            | Node::BiasFill { layer, .. } => Some(*layer),
+            _ => None,
+        }
+    }
+
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Node::Pre { .. } => "pre",
+            Node::MaxPool2 { .. } => "maxpool2",
+            Node::GlobalAvgPool { .. } => "gap",
+            Node::AdaptSpatial { .. } => "adapt_spatial",
+            Node::AdaptFeatures { .. } => "adapt_features",
+            Node::Quantize { .. } => "quantize",
+            Node::Dequantize { .. } => "dequantize",
+            Node::Gemm { int: true, .. } => "gemm",
+            Node::Gemm { int: false, .. } => "gemm.f32",
+            Node::Conv2d { int: true, .. } => "conv2d",
+            Node::Conv2d { int: false, .. } => "conv2d.f32",
+            Node::DwConv2d { .. } => "dwconv2d",
+            Node::Requant { .. } => "requant",
+            Node::Epilogue { .. } => "epilogue",
+            Node::RequantQuantize { .. } => "requant_quantize",
+            Node::BiasFill { .. } => "bias_fill",
+        }
+    }
+}
+
+/// Per-engine mutable execution state: the three typed arenas plus
+/// the weight-side scratch the kernels need (decoded rows, im2col
+/// patches). Reused across batches — buffers only ever grow.
+#[derive(Default)]
+pub struct ExecState {
+    f32a: Vec<f32>,
+    i32a: Vec<i32>,
+    i64a: Vec<i64>,
+    /// Packed-row decode scratch for dense GEMMs (one row).
+    row: Vec<i32>,
+    /// Whole-layer decoded weight codes for spatial kernels.
+    wrows: Vec<i32>,
+    /// im2col patch scratch (integer / f32 path).
+    patch: Vec<i32>,
+    patchf: Vec<f32>,
+    /// Dense per-channel staging for the fused requantize+quantize.
+    dense: Vec<f32>,
+}
+
+/// A compiled, arena-assigned execution graph for one plan and one
+/// path (integer or f32 reference). Shares the plan through the `Arc`;
+/// all mutable state lives in the caller's [`ExecState`].
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub(crate) plan: Arc<EnginePlan>,
+    pub(crate) int_path: bool,
+    pub(crate) nodes: Vec<Node>,
+    /// Owning layer index per node (dump labeling).
+    pub(crate) node_layer: Vec<usize>,
+    pub(crate) bufs: Vec<BufSpec>,
+    pub(crate) input: BufId,
+    pub(crate) output: BufId,
+    /// Arena footprints in per-sample elements.
+    pub(crate) f32_len: usize,
+    pub(crate) i32_len: usize,
+    pub(crate) i64_len: usize,
+    /// Max simultaneously-live per-sample bytes (the fragmentation-free
+    /// lower bound on `arena_bytes`).
+    pub(crate) peak_live: usize,
+}
+
+impl Program {
+    /// Compile a plan through the ordered pass pipeline (graph build
+    /// -> pruned-channel elision -> pre-op materialization ->
+    /// quantize/requant fusion -> liveness + arena assignment).
+    pub fn compile(plan: Arc<EnginePlan>, int_path: bool) -> Program {
+        super::passes::compile(plan, int_path)
+    }
+
+    pub fn plan(&self) -> &EnginePlan {
+        &self.plan
+    }
+
+    pub fn int_path(&self) -> bool {
+        self.int_path
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn bufs(&self) -> &[BufSpec] {
+        &self.bufs
+    }
+
+    pub fn input(&self) -> BufId {
+        self.input
+    }
+
+    pub fn output(&self) -> BufId {
+        self.output
+    }
+
+    /// Total per-sample scratch-arena footprint in bytes (all three
+    /// typed arenas, after liveness packing).
+    pub fn arena_bytes(&self) -> usize {
+        self.f32_len * 4 + self.i32_len * 4 + self.i64_len * 8
+    }
+
+    /// Max simultaneously-live per-sample bytes across the program —
+    /// the packing-independent peak the arena cannot go below.
+    pub fn peak_live_bytes(&self) -> usize {
+        self.peak_live
+    }
+
+    /// Number of fused requantize+quantize nodes (adjacent integer
+    /// layers whose intermediate f32 activations were eliminated).
+    pub fn fused_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::RequantQuantize { .. }))
+            .count()
+    }
+
+    /// Element range of buffer `b` for an `n`-sample batch.
+    #[inline]
+    fn range(&self, b: BufId, n: usize) -> (usize, usize) {
+        let s = &self.bufs[b];
+        let o = s.offset.expect("executing an unassigned buffer") * n;
+        (o, o + s.len * n)
+    }
+
+    /// Run the program over a flat `[n, input_dim]` batch. The result
+    /// lands in the output buffer — read it with [`Self::output_slice`].
+    pub fn execute(&self, xs: &[f32], n: usize, st: &mut ExecState)
+                   -> Result<()> {
+        if xs.len() != n * self.plan.input_dim {
+            bail!("batch of {} inputs must be {} x {} values, got {}",
+                  n, n, self.plan.input_dim, xs.len());
+        }
+        st.f32a.resize(self.f32_len * n, 0.0);
+        st.i32a.resize(self.i32_len * n, 0);
+        st.i64a.resize(self.i64_len * n, 0);
+        let (i0, i1) = self.range(self.input, n);
+        st.f32a[i0..i1].copy_from_slice(xs);
+        for node in &self.nodes {
+            self.exec_node(node, n, st);
+        }
+        Ok(())
+    }
+
+    /// The output logits of the last [`Self::execute`] call: flat
+    /// `[n, output_dim]`, borrowed straight from the arena.
+    pub fn output_slice<'a>(&self, st: &'a ExecState, n: usize)
+                            -> &'a [f32] {
+        let (o0, o1) = self.range(self.output, n);
+        &st.f32a[o0..o1]
+    }
+
+    /// Disjoint (src, dst) slice pair inside one f32 arena — the
+    /// liveness pass guarantees a node's operands never alias.
+    fn f32_pair<'a>(bufs: &[BufSpec], arena: &'a mut [f32], src: BufId,
+                    dst: BufId, n: usize) -> (&'a [f32], &'a mut [f32]) {
+        let (s, d) = (&bufs[src], &bufs[dst]);
+        let s0 = s.offset.expect("unassigned src buffer") * n;
+        let s1 = s0 + s.len * n;
+        let d0 = d.offset.expect("unassigned dst buffer") * n;
+        let d1 = d0 + d.len * n;
+        debug_assert!(s1 <= d0 || d1 <= s0,
+                      "aliasing arena slices {s0}..{s1} vs {d0}..{d1}");
+        if s1 <= d0 {
+            let (lo, hi) = arena.split_at_mut(d0);
+            (&lo[s0..s1], &mut hi[..d1 - d0])
+        } else {
+            let (lo, hi) = arena.split_at_mut(s0);
+            (&hi[..s1 - s0], &mut lo[d0..d1])
+        }
+    }
+
+    fn exec_node(&self, node: &Node, n: usize, st: &mut ExecState) {
+        let layers = &self.plan.layers;
+        match node {
+            Node::Pre { .. } => {
+                unreachable!("Pre placeholder survived compile")
+            }
+            Node::MaxPool2 { src, dst, h, w, c } => {
+                let (h, w, c) = (*h, *w, *c);
+                let (x, y) = Self::f32_pair(&self.bufs, &mut st.f32a,
+                                            *src, *dst, n);
+                let (ho, wo) = (h / 2, w / 2);
+                let (il, ol) = (h * w * c, ho * wo * c);
+                for s in 0..n {
+                    let xs = &x[s * il..(s + 1) * il];
+                    let out = &mut y[s * ol..(s + 1) * ol];
+                    let mut idx = 0;
+                    for oh in 0..ho {
+                        for ow in 0..wo {
+                            let i00 = (2 * oh * w + 2 * ow) * c;
+                            let i10 = i00 + w * c;
+                            for ch in 0..c {
+                                out[idx] = xs[i00 + ch]
+                                    .max(xs[i00 + c + ch])
+                                    .max(xs[i10 + ch])
+                                    .max(xs[i10 + c + ch]);
+                                idx += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            Node::GlobalAvgPool { src, dst, h, w, c } => {
+                let (h, w, c) = (*h, *w, *c);
+                let pixels = h * w;
+                let il = pixels * c;
+                let (x, y) = Self::f32_pair(&self.bufs, &mut st.f32a,
+                                            *src, *dst, n);
+                for s in 0..n {
+                    let xs = &x[s * il..(s + 1) * il];
+                    let out = &mut y[s * c..(s + 1) * c];
+                    for (ch, o) in out.iter_mut().enumerate() {
+                        let mut sum = 0.0f32;
+                        for p in 0..pixels {
+                            sum += xs[p * c + ch];
+                        }
+                        *o = sum / pixels as f32;
+                    }
+                }
+            }
+            Node::AdaptSpatial { src, dst, from, to } => {
+                let il = from.0 * from.1 * from.2;
+                let ol = to.0 * to.1 * to.2;
+                let (x, y) = Self::f32_pair(&self.bufs, &mut st.f32a,
+                                            *src, *dst, n);
+                for s in 0..n {
+                    adapt_spatial_into(&x[s * il..(s + 1) * il], *from,
+                                       *to, &mut y[s * ol..(s + 1) * ol]);
+                }
+            }
+            Node::AdaptFeatures { src, dst, want } => {
+                let il = self.bufs[*src].len;
+                let ol = *want;
+                let (x, y) = Self::f32_pair(&self.bufs, &mut st.f32a,
+                                            *src, *dst, n);
+                for s in 0..n {
+                    adapt_features_into(&x[s * il..(s + 1) * il],
+                                        &mut y[s * ol..(s + 1) * ol]);
+                }
+            }
+            Node::Quantize { src, dst, grid } => {
+                let (s0, s1) = self.range(*src, n);
+                let (d0, d1) = self.range(*dst, n);
+                let x = &st.f32a[s0..s1];
+                let q = &mut st.i32a[d0..d1];
+                for (o, v) in q.iter_mut().zip(x) {
+                    *o = grid.code(*v) as i32;
+                }
+            }
+            Node::Dequantize { src, dst, step } => {
+                let (s0, s1) = self.range(*src, n);
+                let (d0, d1) = self.range(*dst, n);
+                let q = &st.i32a[s0..s1];
+                let x = &mut st.f32a[d0..d1];
+                let step = *step;
+                for (o, v) in x.iter_mut().zip(q) {
+                    *o = step * *v as f32;
+                }
+            }
+            Node::Gemm { layer, src, dst, int } => {
+                let l = &layers[*layer];
+                let cols = l.in_dim;
+                if *int {
+                    let packed = l
+                        .packed
+                        .as_ref()
+                        .expect("integer GEMM without packed rows");
+                    st.row.resize(cols, 0);
+                    let (s0, s1) = self.range(*src, n);
+                    let (d0, d1) = self.range(*dst, n);
+                    kernels::matmul_packed(packed, &st.i32a[s0..s1], n,
+                                           l.act.bits(), &mut st.row,
+                                           &mut st.i64a[d0..d1]);
+                } else {
+                    let (x, y) = Self::f32_pair(&self.bufs, &mut st.f32a,
+                                                *src, *dst, n);
+                    kernels::matmul_f32(&l.f32_rows, l.kept.len(), cols,
+                                        x, n, y);
+                }
+            }
+            Node::Conv2d { layer, src, dst, int } => {
+                let l = &layers[*layer];
+                let sp = l.spatial.as_ref().expect("conv without spatial");
+                let rows = l.kept.len();
+                let plen = sp.patch_len();
+                let cpg = l.out_dim / sp.groups;
+                if *int {
+                    let packed = l
+                        .packed
+                        .as_ref()
+                        .expect("integer conv without packed rows");
+                    st.wrows.resize(rows * plen, 0);
+                    for r in 0..rows {
+                        packed.unpack_row_into(
+                            r, &mut st.wrows[r * plen..(r + 1) * plen]);
+                    }
+                    st.patch.resize(plen, 0);
+                    let low =
+                        kernels::low_bit_pair(packed.bits, l.act.bits());
+                    let (s0, s1) = self.range(*src, n);
+                    let (d0, d1) = self.range(*dst, n);
+                    kernels::conv2d_codes(&st.wrows, &l.kept, cpg, sp,
+                                          &st.i32a[s0..s1], n, low,
+                                          &mut st.patch,
+                                          &mut st.i64a[d0..d1]);
+                } else {
+                    st.patchf.resize(plen, 0.0);
+                    let (x, y) = Self::f32_pair(&self.bufs, &mut st.f32a,
+                                                *src, *dst, n);
+                    kernels::conv2d_f32(&l.f32_rows, &l.kept, cpg, sp, x,
+                                        n, &mut st.patchf, y);
+                }
+            }
+            Node::DwConv2d { layer, src, dst } => {
+                let l = &layers[*layer];
+                let sp = l.spatial.as_ref().expect("dwconv without spatial");
+                let rows = l.kept.len();
+                let plen = sp.patch_len();
+                let cpg = l.out_dim / sp.groups;
+                let packed = l
+                    .packed
+                    .as_ref()
+                    .expect("integer dwconv without packed rows");
+                st.wrows.resize(rows * plen, 0);
+                for r in 0..rows {
+                    packed.unpack_row_into(
+                        r, &mut st.wrows[r * plen..(r + 1) * plen]);
+                }
+                let low = kernels::low_bit_pair(packed.bits, l.act.bits());
+                let (s0, s1) = self.range(*src, n);
+                let (d0, d1) = self.range(*dst, n);
+                kernels::dwconv2d_codes(&st.wrows, &l.kept, cpg, sp,
+                                        &st.i32a[s0..s1], n, low,
+                                        &mut st.i64a[d0..d1]);
+            }
+            Node::Requant { layer, src, dst, scale, relu } => {
+                let l = &layers[*layer];
+                let rows = l.kept.len();
+                let out_dim = l.out_dim;
+                let opix = l
+                    .spatial
+                    .as_ref()
+                    .map(|sp| sp.out_pixels())
+                    .unwrap_or(1);
+                let out_len = opix * out_dim;
+                let (s0, s1) = self.range(*src, n);
+                let (d0, d1) = self.range(*dst, n);
+                let acc = &st.i64a[s0..s1];
+                let out = &mut st.f32a[d0..d1];
+                fill_bias(out, l.bias.as_deref(), out_dim, n * opix);
+                let scale = *scale;
+                for s in 0..n {
+                    for p in 0..opix {
+                        let ybase = (s * opix + p) * rows;
+                        let obase = s * out_len + p * out_dim;
+                        for (k, ch) in l.kept.iter().enumerate() {
+                            out[obase + *ch as usize] +=
+                                (acc[ybase + k] as f64 * scale) as f32;
+                        }
+                    }
+                }
+                if *relu {
+                    relu_slice(out);
+                }
+            }
+            Node::Epilogue { layer, src, dst, relu } => {
+                let l = &layers[*layer];
+                let rows = l.kept.len();
+                let out_dim = l.out_dim;
+                let opix = l
+                    .spatial
+                    .as_ref()
+                    .map(|sp| sp.out_pixels())
+                    .unwrap_or(1);
+                let out_len = opix * out_dim;
+                let (x, y) = Self::f32_pair(&self.bufs, &mut st.f32a,
+                                            *src, *dst, n);
+                fill_bias(y, l.bias.as_deref(), out_dim, n * opix);
+                for s in 0..n {
+                    for p in 0..opix {
+                        let ybase = (s * opix + p) * rows;
+                        let obase = s * out_len + p * out_dim;
+                        for (k, ch) in l.kept.iter().enumerate() {
+                            y[obase + *ch as usize] += x[ybase + k];
+                        }
+                    }
+                }
+                if *relu {
+                    relu_slice(y);
+                }
+            }
+            Node::RequantQuantize { layer, src, dst, scale, relu, grid } => {
+                let l = &layers[*layer];
+                let rows = l.kept.len();
+                let out_dim = l.out_dim;
+                let opix = l
+                    .spatial
+                    .as_ref()
+                    .map(|sp| sp.out_pixels())
+                    .unwrap_or(1);
+                st.dense.resize(out_dim, 0.0);
+                let (s0, s1) = self.range(*src, n);
+                let (d0, d1) = self.range(*dst, n);
+                let acc = &st.i64a[s0..s1];
+                let out = &mut st.i32a[d0..d1];
+                let scale = *scale;
+                for s in 0..n {
+                    for p in 0..opix {
+                        let ybase = (s * opix + p) * rows;
+                        let obase = (s * opix + p) * out_dim;
+                        match &l.bias {
+                            Some(b) => st.dense.copy_from_slice(b),
+                            None => st.dense.fill(0.0),
+                        }
+                        for (k, ch) in l.kept.iter().enumerate() {
+                            st.dense[*ch as usize] +=
+                                (acc[ybase + k] as f64 * scale) as f32;
+                        }
+                        for (ch, o) in
+                            out[obase..obase + out_dim].iter_mut()
+                                                       .enumerate()
+                        {
+                            let mut v = st.dense[ch];
+                            if *relu && v < 0.0 {
+                                v = 0.0;
+                            }
+                            *o = grid.code(v) as i32;
+                        }
+                    }
+                }
+            }
+            Node::BiasFill { layer, dst, relu } => {
+                let l = &layers[*layer];
+                let opix = l
+                    .spatial
+                    .as_ref()
+                    .map(|sp| sp.out_pixels())
+                    .unwrap_or(1);
+                let (d0, d1) = self.range(*dst, n);
+                let out = &mut st.f32a[d0..d1];
+                fill_bias(out, l.bias.as_deref(), l.out_dim, n * opix);
+                if *relu {
+                    relu_slice(out);
+                }
+            }
+        }
+    }
+
+    /// Human-readable node list + arena map (`bbits plan --dump-ir`).
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "execution graph — {} ({} path): {} nodes, {} fused",
+            self.plan.model,
+            if self.int_path { "int" } else { "f32" },
+            self.nodes.len(),
+            self.fused_count(),
+        );
+        let _ = writeln!(
+            s,
+            "arena (per sample): f32[{}] i32[{}] i64[{}] = {} B \
+             (peak live {} B)",
+            self.f32_len, self.i32_len, self.i64_len,
+            self.arena_bytes(), self.peak_live,
+        );
+        let buf = |b: BufId| -> String {
+            let sp = &self.bufs[b];
+            match sp.offset {
+                Some(o) => format!("@{b} {}[{}..{}]", sp.dtype.label(),
+                                   o, o + sp.len),
+                None => format!("@{b} {}[-]", sp.dtype.label()),
+            }
+        };
+        for (i, node) in self.nodes.iter().enumerate() {
+            let layer = self
+                .node_layer
+                .get(i)
+                .map(|l| self.plan.layers[*l].name.as_str())
+                .unwrap_or("-");
+            let src = node
+                .reads()
+                .map(&buf)
+                .unwrap_or_else(|| "-".into());
+            let _ = writeln!(
+                s,
+                "{i:>3}. {:<18} {:<14} {src} -> {}",
+                node.op_name(), layer, buf(node.writes()),
+            );
+        }
+        let _ = writeln!(
+            s,
+            "input {} | output {}",
+            buf(self.input), buf(self.output),
+        );
+        s
+    }
+}
+
+/// Broadcast the dense per-channel bias (or zeros) over `reps`
+/// pixel-rows of `out` — exactly the pre-kernel fill the interpreter's
+/// epilogues start from.
+fn fill_bias(out: &mut [f32], bias: Option<&[f32]>, out_dim: usize,
+             reps: usize) {
+    debug_assert_eq!(out.len(), reps * out_dim);
+    match bias {
+        Some(b) => {
+            for r in 0..reps {
+                out[r * out_dim..(r + 1) * out_dim].copy_from_slice(b);
+            }
+        }
+        None => out.fill(0.0),
+    }
+}
+
+#[inline]
+fn relu_slice(out: &mut [f32]) {
+    for v in out.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}

@@ -1,6 +1,8 @@
 //! Integer GEMM and spatial convolution kernels over packed weights,
 //! plus the f32 reference fallbacks — the arithmetic core of the
-//! inference engine.
+//! inference engine. Every kernel writes into a caller-owned output
+//! slice; the IR executor (`engine::graph`) hands in pre-assigned
+//! scratch-arena slices, so the hot path never allocates.
 //!
 //! The integer path computes `y = W x` on raw grid codes with exact
 //! integer accumulation and a single requantize multiply at the end:
@@ -284,7 +286,10 @@ pub fn conv2d_f32(w_rows: &[f32], kept: &[u32], cout_per_group: usize,
 /// Quantize a flat activation tensor to integer codes in `out`;
 /// returns the grid step. Numerics are exactly
 /// `quant::grid::quantize_codes_host` (one clip + banker's rounding),
-/// so the engine's activation grid is the host oracle's grid.
+/// so the engine's activation grid is the host oracle's grid. The IR
+/// executor quantizes through a precomputed `CodeGrid` instead — same
+/// numerics, no per-batch code `Vec`; this form remains for tests and
+/// host-side tools.
 pub fn quantize_acts(x: &[f32], beta: f32, bits: u32, signed: bool,
                      out: &mut Vec<i32>) -> f32 {
     let (step, codes) = quantize_codes_host(x, beta, bits, signed);

@@ -22,6 +22,11 @@
 //!    GEMM behind the flat feature adapter;
 //! 5. emits bit-packed codes for widths < 32 and the simulated-quant
 //!    dense rows that the f32 fallback and parity tests consume.
+//!
+//! The resulting [`EnginePlan`] is the engine's stable lowering
+//! contract; execution compiles it further into the typed graph IR
+//! (`engine::graph::Program::compile` runs the `engine::passes`
+//! pipeline over the plan — `bbits plan --dump-ir` shows the result).
 
 use anyhow::{bail, Context, Result};
 

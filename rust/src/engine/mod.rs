@@ -25,14 +25,29 @@
 //! flatten, global average pool) replayed as [`PreOp`]s between
 //! layers. The flat pool/replicate width adapter (`adapt_features`)
 //! survives only as the explicit legacy fallback for manifests that
-//! predate the spatial schema. Both the integer and the f32 path
-//! share one activation grid and one weight grid, so they agree up to
-//! f32 accumulation error — `tests/engine_parity.rs` and
-//! `tests/conv_parity.rs` pin the integer paths to host oracles.
+//! predate the spatial schema.
+//!
+//! Execution is compiled, not interpreted per layer: an [`EnginePlan`]
+//! lowers further into a typed execution-graph IR ([`graph::Program`])
+//! through an ordered pass pipeline ([`passes`]: graph build ->
+//! pruned-channel elision -> pre-op materialization -> quantize/
+//! requant fusion -> buffer liveness + scratch-arena assignment in
+//! [`arena`]). [`Engine::infer_batch`] is then a flat interpreter loop
+//! over nodes reading/writing pre-assigned arena slices — no
+//! per-request allocation and no shape re-derivation. The f32
+//! reference path runs the *same* IR compiled with f32 kernels, so
+//! int/f32 parity is structural. Both paths share one activation grid
+//! and one weight grid and agree up to f32 accumulation error —
+//! `tests/engine_parity.rs`, `tests/conv_parity.rs`, and `tests/ir.rs`
+//! pin the integer paths and the IR invariants; `tests/golden_e2e.rs`
+//! pins the whole pipeline bit-exactly.
 
+mod arena;
+pub mod graph;
 pub mod kernels;
 pub mod lower;
 pub mod pack;
+mod passes;
 pub mod serve;
 
 use std::sync::Arc;
@@ -45,6 +60,7 @@ use crate::util::bench::{Bench, Summary};
 use crate::util::json::{num, s as jstr, Json};
 use pack::PackedMatrix;
 
+pub use graph::{ExecState, Program};
 pub use lower::{lower, lower_with_mode, synthetic_conv_plan,
                 synthetic_plan};
 pub use serve::{ServeConfig, ServeStats, Server};
@@ -352,6 +368,11 @@ pub struct SweepRecord {
     pub rows: usize,
     pub cols: usize,
     pub images_per_sec: f64,
+    /// Per-sample scratch-arena footprint of the executed program
+    /// (all typed arenas, after liveness packing).
+    pub arena_bytes: usize,
+    /// Max simultaneously-live per-sample bytes (packing lower bound).
+    pub peak_scratch_bytes: usize,
 }
 
 impl SweepRecord {
@@ -368,6 +389,8 @@ impl SweepRecord {
             ("rows", num(self.rows as f64)),
             ("cols", num(self.cols as f64)),
             ("images_per_sec", num(self.images_per_sec)),
+            ("arena_bytes", num(self.arena_bytes as f64)),
+            ("peak_scratch_bytes", num(self.peak_scratch_bytes as f64)),
         ])
     }
 }
@@ -390,6 +413,10 @@ pub fn throughput_sweep(rows: usize, cols: usize, batches: &[usize],
             for int_path in [true, false] {
                 let mut eng = Engine::new(plan.clone());
                 eng.set_int_enabled(int_path);
+                let (arena_bytes, peak_scratch_bytes) = {
+                    let p = eng.program(int_path);
+                    (p.arena_bytes(), p.peak_live_bytes())
+                };
                 let label = format!(
                     "{} w{wb}a8 batch={batch} ({rows}x{cols})",
                     if int_path { "int" } else { "f32" }
@@ -408,6 +435,8 @@ pub fn throughput_sweep(rows: usize, cols: usize, batches: &[usize],
                     rows,
                     cols,
                     images_per_sec,
+                    arena_bytes,
+                    peak_scratch_bytes,
                 });
             }
         }
@@ -426,6 +455,10 @@ pub struct ConvSweepRecord {
     pub cout: usize,
     pub ksize: usize,
     pub images_per_sec: f64,
+    /// Per-sample scratch-arena footprint of the executed program.
+    pub arena_bytes: usize,
+    /// Max simultaneously-live per-sample bytes (packing lower bound).
+    pub peak_scratch_bytes: usize,
 }
 
 impl ConvSweepRecord {
@@ -444,6 +477,8 @@ impl ConvSweepRecord {
             ("cout", num(self.cout as f64)),
             ("ksize", num(self.ksize as f64)),
             ("images_per_sec", num(self.images_per_sec)),
+            ("arena_bytes", num(self.arena_bytes as f64)),
+            ("peak_scratch_bytes", num(self.peak_scratch_bytes as f64)),
         ])
     }
 }
@@ -469,6 +504,10 @@ pub fn conv_throughput_sweep(hw: usize, cin: usize, cout: usize,
             for int_path in [true, false] {
                 let mut eng = Engine::new(plan.clone());
                 eng.set_int_enabled(int_path);
+                let (arena_bytes, peak_scratch_bytes) = {
+                    let p = eng.program(int_path);
+                    (p.arena_bytes(), p.peak_live_bytes())
+                };
                 let label = format!(
                     "{} conv w{wb}a8 batch={batch} \
                      ({hw}x{hw}x{cin}->{cout} k{ksize})",
@@ -490,6 +529,8 @@ pub fn conv_throughput_sweep(hw: usize, cin: usize, cout: usize,
                     cout,
                     ksize,
                     images_per_sec,
+                    arena_bytes,
+                    peak_scratch_bytes,
                 });
             }
         }
@@ -499,31 +540,41 @@ pub fn conv_throughput_sweep(hw: usize, cin: usize, cout: usize,
 
 /// Deterministic width adapter between mismatched feature widths:
 /// bucket-mean when shrinking, index replication when growing. Both
-/// execution paths share it, so it never perturbs parity.
-pub fn adapt_features(x: &[f32], want: usize, out: &mut Vec<f32>) {
+/// execution paths share it, so it never perturbs parity. The target
+/// width is `out.len()` — the IR executor hands in one sample's
+/// pre-assigned arena slice.
+pub(crate) fn adapt_features_into(x: &[f32], out: &mut [f32]) {
     let m = x.len();
+    let want = out.len();
     if m == want {
-        out.extend_from_slice(x);
+        out.copy_from_slice(x);
         return;
     }
     if m == 0 {
         // nothing to pool or replicate from — bridge with zeros
         // rather than indexing an empty slice
-        out.resize(out.len() + want, 0.0);
+        out.fill(0.0);
         return;
     }
     if m > want {
-        for i in 0..want {
+        for (i, o) in out.iter_mut().enumerate() {
             let lo = i * m / want;
             let hi = ((i + 1) * m / want).max(lo + 1);
             let sum: f32 = x[lo..hi].iter().sum();
-            out.push(sum / (hi - lo) as f32);
+            *o = sum / (hi - lo) as f32;
         }
     } else {
-        for i in 0..want {
-            out.push(x[i * m / want]);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = x[i * m / want];
         }
     }
+}
+
+/// Appending form of [`adapt_features_into`] (tests, legacy callers).
+pub fn adapt_features(x: &[f32], want: usize, out: &mut Vec<f32>) {
+    let base = out.len();
+    out.resize(base + want, 0.0);
+    adapt_features_into(x, &mut out[base..]);
 }
 
 /// Source index range feeding target index `i` on one adapted axis:
@@ -543,12 +594,16 @@ fn axis_bucket(m: usize, want: usize, i: usize) -> (usize, usize) {
 /// axis pools (bucket mean) when shrinking and replicates when
 /// growing, independently — the spatial analogue of [`adapt_features`]
 /// used for branch layers (ResNet downsample) whose input is not the
-/// previous layer's output. Shared by both execution paths.
-pub fn adapt_spatial(x: &[f32], from: (usize, usize, usize),
-                     to: (usize, usize, usize), out: &mut Vec<f32>) {
+/// previous layer's output. Shared by both execution paths; `out` is
+/// one sample's pre-assigned `th * tw * tc` arena slice.
+pub(crate) fn adapt_spatial_into(x: &[f32], from: (usize, usize, usize),
+                                 to: (usize, usize, usize),
+                                 out: &mut [f32]) {
     let (fh, fw, fc) = from;
     let (th, tw, tc) = to;
     debug_assert_eq!(x.len(), fh * fw * fc);
+    debug_assert_eq!(out.len(), th * tw * tc);
+    let mut idx = 0;
     for i in 0..th {
         let (h0, h1) = axis_bucket(fh, th, i);
         for j in 0..tw {
@@ -564,54 +619,59 @@ pub fn adapt_spatial(x: &[f32], from: (usize, usize, usize),
                     }
                 }
                 let cnt = (h1 - h0) * (w1 - w0) * (c1 - c0);
-                out.push(sum / cnt as f32);
+                out[idx] = sum / cnt as f32;
+                idx += 1;
             }
         }
     }
 }
 
-/// One inference executor: a shared read-only plan plus per-instance
-/// scratch. Each serving worker owns an `Engine`; they share the plan
-/// through the `Arc`.
+/// Appending form of [`adapt_spatial_into`] (tests, legacy callers).
+pub fn adapt_spatial(x: &[f32], from: (usize, usize, usize),
+                     to: (usize, usize, usize), out: &mut Vec<f32>) {
+    let base = out.len();
+    out.resize(base + to.0 * to.1 * to.2, 0.0);
+    adapt_spatial_into(x, from, to, &mut out[base..]);
+}
+
+/// One inference executor: a shared read-only plan compiled once into
+/// its two execution graphs (integer path and f32 simulated-quant
+/// reference), plus the per-instance [`ExecState`] arenas. Each
+/// serving worker owns an `Engine`; they share the plan through the
+/// `Arc`.
 pub struct Engine {
     plan: Arc<EnginePlan>,
+    int_prog: Program,
+    f32_prog: Program,
     int_enabled: bool,
-    cur: Vec<f32>,
-    nxt: Vec<f32>,
-    adapted: Vec<f32>,
-    qa: Vec<i32>,
-    deq: Vec<f32>,
-    row: Vec<i32>,
-    acc: Vec<i64>,
-    accf: Vec<f32>,
-    /// Weight codes decoded once per batch (spatial layers).
-    wrows: Vec<i32>,
-    /// im2col patch scratch (integer / f32 path).
-    patch: Vec<i32>,
-    patchf: Vec<f32>,
+    st: ExecState,
 }
 
 impl Engine {
     pub fn new(plan: Arc<EnginePlan>) -> Engine {
+        let int_prog = Program::compile(plan.clone(), true);
+        let f32_prog = Program::compile(plan.clone(), false);
         Engine {
             plan,
+            int_prog,
+            f32_prog,
             int_enabled: true,
-            cur: Vec::new(),
-            nxt: Vec::new(),
-            adapted: Vec::new(),
-            qa: Vec::new(),
-            deq: Vec::new(),
-            row: Vec::new(),
-            acc: Vec::new(),
-            accf: Vec::new(),
-            wrows: Vec::new(),
-            patch: Vec::new(),
-            patchf: Vec::new(),
+            st: ExecState::default(),
         }
     }
 
     pub fn plan(&self) -> &EnginePlan {
         &self.plan
+    }
+
+    /// The compiled execution graph for one path (IR dump, arena
+    /// accounting in the benches).
+    pub fn program(&self, int_path: bool) -> &Program {
+        if int_path {
+            &self.int_prog
+        } else {
+            &self.f32_prog
+        }
     }
 
     /// Disable the integer path (f32 simulated-quant fallback only) —
@@ -625,283 +685,35 @@ impl Engine {
         self.infer_batch(x, 1)
     }
 
+    /// Run a micro-batch through the compiled graph and borrow the
+    /// flat `[n, output_dim]` logits straight out of the arena — the
+    /// zero-copy primitive the serving workers use. Weight rows are
+    /// decoded once per layer and reused across the batch.
+    pub fn run_batch(&mut self, xs: &[f32], n: usize) -> Result<&[f32]> {
+        let prog = if self.int_enabled {
+            &self.int_prog
+        } else {
+            &self.f32_prog
+        };
+        prog.execute(xs, n, &mut self.st)?;
+        Ok(prog.output_slice(&self.st, n))
+    }
+
+    /// [`Self::run_batch`] into a caller-owned buffer (cleared first);
+    /// steady-state callers reuse the buffer's capacity across batches.
+    pub fn infer_batch_into(&mut self, xs: &[f32], n: usize,
+                            out: &mut Vec<f32>) -> Result<()> {
+        out.clear();
+        let y = self.run_batch(xs, n)?;
+        out.extend_from_slice(y);
+        Ok(())
+    }
+
     /// Run a micro-batch: `xs` is flat `[n, input_dim]`, the result is
-    /// flat `[n, output_dim]`. Weight rows are decoded once per layer
-    /// and reused across the batch.
-    pub fn infer_batch(&mut self, xs: &[f32], n: usize) -> Result<Vec<f32>> {
-        let plan = self.plan.clone();
-        if xs.len() != n * plan.input_dim {
-            bail!("batch of {} inputs must be {} x {} values, got {}",
-                  n, n, plan.input_dim, xs.len());
-        }
-        self.cur.clear();
-        self.cur.extend_from_slice(xs);
-        let mut cur_dim = plan.input_dim;
-        for layer in &plan.layers {
-            cur_dim = self.apply_pre(layer, n, cur_dim);
-            let in_len = layer.input_len();
-            if cur_dim != in_len {
-                // legacy flat pool/replicate adapter — pre-spatial
-                // plans and residual width drift only
-                self.adapted.clear();
-                for s in 0..n {
-                    let x = &self.cur[s * cur_dim..(s + 1) * cur_dim];
-                    adapt_features(x, in_len, &mut self.adapted);
-                }
-                std::mem::swap(&mut self.cur, &mut self.adapted);
-                cur_dim = in_len;
-            }
-            match &layer.spatial {
-                Some(sp) => self.run_conv(layer, sp, n),
-                None => self.run_dense(layer, n),
-            }
-            if layer.relu {
-                for v in self.nxt.iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
-            }
-            std::mem::swap(&mut self.cur, &mut self.nxt);
-            cur_dim = layer.output_len();
-        }
-        Ok(self.cur[..n * plan.output_dim].to_vec())
-    }
-
-    /// Replay the layer's [`PreOp`] on `self.cur`; returns the new
-    /// per-sample width. A pre-op whose recorded input shape does not
-    /// match the live width is skipped (the flat adapter then bridges).
-    fn apply_pre(&mut self, layer: &PlanLayer, n: usize, cur_dim: usize)
-                 -> usize {
-        match &layer.pre {
-            PreOp::Direct => cur_dim,
-            PreOp::MaxPool2 { h, w, c } => {
-                let (h, w, c) = (*h, *w, *c);
-                if cur_dim != h * w * c {
-                    return cur_dim;
-                }
-                let (ho, wo) = (h / 2, w / 2);
-                self.adapted.clear();
-                self.adapted.reserve(n * ho * wo * c);
-                for s in 0..n {
-                    let x = &self.cur[s * cur_dim..(s + 1) * cur_dim];
-                    for oh in 0..ho {
-                        for ow in 0..wo {
-                            let i00 = (2 * oh * w + 2 * ow) * c;
-                            let i10 = i00 + w * c;
-                            for ch in 0..c {
-                                let m = x[i00 + ch]
-                                    .max(x[i00 + c + ch])
-                                    .max(x[i10 + ch])
-                                    .max(x[i10 + c + ch]);
-                                self.adapted.push(m);
-                            }
-                        }
-                    }
-                }
-                std::mem::swap(&mut self.cur, &mut self.adapted);
-                ho * wo * c
-            }
-            PreOp::GlobalAvgPool { h, w, c } => {
-                let (h, w, c) = (*h, *w, *c);
-                if cur_dim != h * w * c {
-                    return cur_dim;
-                }
-                let pixels = h * w;
-                self.adapted.clear();
-                self.adapted.reserve(n * c);
-                for s in 0..n {
-                    let x = &self.cur[s * cur_dim..(s + 1) * cur_dim];
-                    for ch in 0..c {
-                        let mut sum = 0.0f32;
-                        for p in 0..pixels {
-                            sum += x[p * c + ch];
-                        }
-                        self.adapted.push(sum / pixels as f32);
-                    }
-                }
-                std::mem::swap(&mut self.cur, &mut self.adapted);
-                c
-            }
-            PreOp::AdaptSpatial { from, to } => {
-                if cur_dim != from.0 * from.1 * from.2 {
-                    return cur_dim;
-                }
-                self.adapted.clear();
-                for s in 0..n {
-                    let x = &self.cur[s * cur_dim..(s + 1) * cur_dim];
-                    adapt_spatial(x, *from, *to, &mut self.adapted);
-                }
-                std::mem::swap(&mut self.cur, &mut self.adapted);
-                to.0 * to.1 * to.2
-            }
-        }
-    }
-
-    /// Flat GEMM layer over `self.cur` (`[n, in_dim]`) into `self.nxt`.
-    fn run_dense(&mut self, layer: &PlanLayer, n: usize) {
-        let cur_dim = layer.in_dim;
-        let out_dim = layer.out_dim;
-        self.nxt.clear();
-        match &layer.bias {
-            Some(b) => {
-                for _ in 0..n {
-                    self.nxt.extend_from_slice(b);
-                }
-            }
-            None => self.nxt.resize(n * out_dim, 0.0),
-        }
-        let rows = layer.kept.len();
-        if rows == 0 {
-            return;
-        }
-        let int_path = self.int_enabled
-            && layer.packed.is_some()
-            && matches!(layer.act, ActSpec::Int { .. });
-        if int_path {
-            let ActSpec::Int { bits, beta, signed } = layer.act else {
-                unreachable!()
-            };
-            let s_a = kernels::quantize_acts(
-                &self.cur[..n * cur_dim], beta, bits, signed,
-                &mut self.qa);
-            let packed = layer.packed.as_ref().unwrap();
-            self.row.resize(cur_dim, 0);
-            self.acc.clear();
-            self.acc.resize(n * rows, 0);
-            kernels::matmul_packed(packed, &self.qa, n, bits,
-                                   &mut self.row, &mut self.acc);
-            let scale = layer.w_scale as f64 * s_a as f64;
-            for s in 0..n {
-                for (k, ch) in layer.kept.iter().enumerate() {
-                    self.nxt[s * out_dim + *ch as usize] +=
-                        (self.acc[s * rows + k] as f64 * scale) as f32;
-                }
-            }
-        } else {
-            // f32 fallback on the simulated-quant weights; the
-            // activation grid is still applied so both paths see
-            // identical quantization error.
-            let acts: &[f32] = match layer.act {
-                ActSpec::F32 => &self.cur[..n * cur_dim],
-                ActSpec::Int { bits, beta, signed } => {
-                    let s_a = kernels::quantize_acts(
-                        &self.cur[..n * cur_dim], beta, bits, signed,
-                        &mut self.qa);
-                    kernels::dequantize(&self.qa, s_a, &mut self.deq);
-                    &self.deq
-                }
-            };
-            self.accf.clear();
-            self.accf.resize(n * rows, 0.0);
-            kernels::matmul_f32(&layer.f32_rows, rows, cur_dim, acts, n,
-                                &mut self.accf);
-            for s in 0..n {
-                for (k, ch) in layer.kept.iter().enumerate() {
-                    self.nxt[s * out_dim + *ch as usize] +=
-                        self.accf[s * rows + k];
-                }
-            }
-        }
-    }
-
-    /// Spatial conv/dwconv layer over `self.cur` (`[n, in_h*in_w*in_c]`
-    /// NHWC) into `self.nxt` (`[n, out_h*out_w*out_dim]` NHWC). Packed
-    /// weight rows are decoded once per batch; each output pixel is an
-    /// im2col patch dotted against every kept channel's codes.
-    fn run_conv(&mut self, layer: &PlanLayer, sp: &SpatialPlan,
-                n: usize) {
-        let out_dim = layer.out_dim;
-        let opix = sp.out_pixels();
-        let out_len = opix * out_dim;
-        self.nxt.clear();
-        match &layer.bias {
-            Some(b) => {
-                self.nxt.reserve(n * out_len);
-                for _ in 0..n * opix {
-                    self.nxt.extend_from_slice(b);
-                }
-            }
-            None => self.nxt.resize(n * out_len, 0.0),
-        }
-        let rows = layer.kept.len();
-        if rows == 0 {
-            return;
-        }
-        let in_len = sp.in_len();
-        let plen = sp.patch_len();
-        let cpg = out_dim / sp.groups;
-        let int_path = self.int_enabled
-            && layer.packed.is_some()
-            && matches!(layer.act, ActSpec::Int { .. });
-        if int_path {
-            let ActSpec::Int { bits, beta, signed } = layer.act else {
-                unreachable!()
-            };
-            let s_a = kernels::quantize_acts(
-                &self.cur[..n * in_len], beta, bits, signed,
-                &mut self.qa);
-            let packed = layer.packed.as_ref().unwrap();
-            self.wrows.clear();
-            self.wrows.resize(rows * plen, 0);
-            for r in 0..rows {
-                packed.unpack_row_into(
-                    r, &mut self.wrows[r * plen..(r + 1) * plen]);
-            }
-            self.acc.clear();
-            self.acc.resize(n * opix * rows, 0);
-            let low = kernels::low_bit_pair(packed.bits, bits);
-            if sp.in_c == sp.groups {
-                kernels::dwconv2d_codes(&self.wrows, &layer.kept, cpg,
-                                        sp, &self.qa, n, low,
-                                        &mut self.acc);
-            } else {
-                self.patch.clear();
-                self.patch.resize(plen, 0);
-                kernels::conv2d_codes(&self.wrows, &layer.kept, cpg, sp,
-                                      &self.qa, n, low, &mut self.patch,
-                                      &mut self.acc);
-            }
-            let scale = layer.w_scale as f64 * s_a as f64;
-            for s in 0..n {
-                for p in 0..opix {
-                    let ybase = (s * opix + p) * rows;
-                    let obase = s * out_len + p * out_dim;
-                    for (k, ch) in layer.kept.iter().enumerate() {
-                        self.nxt[obase + *ch as usize] +=
-                            (self.acc[ybase + k] as f64 * scale) as f32;
-                    }
-                }
-            }
-        } else {
-            let acts: &[f32] = match layer.act {
-                ActSpec::F32 => &self.cur[..n * in_len],
-                ActSpec::Int { bits, beta, signed } => {
-                    let s_a = kernels::quantize_acts(
-                        &self.cur[..n * in_len], beta, bits, signed,
-                        &mut self.qa);
-                    kernels::dequantize(&self.qa, s_a, &mut self.deq);
-                    &self.deq
-                }
-            };
-            self.accf.clear();
-            self.accf.resize(n * opix * rows, 0.0);
-            self.patchf.clear();
-            self.patchf.resize(plen, 0.0);
-            kernels::conv2d_f32(&layer.f32_rows, &layer.kept, cpg, sp,
-                                acts, n, &mut self.patchf,
-                                &mut self.accf);
-            for s in 0..n {
-                for p in 0..opix {
-                    let ybase = (s * opix + p) * rows;
-                    let obase = s * out_len + p * out_dim;
-                    for (k, ch) in layer.kept.iter().enumerate() {
-                        self.nxt[obase + *ch as usize] +=
-                            self.accf[ybase + k];
-                    }
-                }
-            }
-        }
+    /// flat `[n, output_dim]` (allocating convenience form).
+    pub fn infer_batch(&mut self, xs: &[f32], n: usize)
+                       -> Result<Vec<f32>> {
+        Ok(self.run_batch(xs, n)?.to_vec())
     }
 
     /// The f32 simulated-quant reference for the same plan (parity
@@ -941,6 +753,59 @@ mod tests {
         out.clear();
         adapt_features(&[], 4, &mut out);
         assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn adapt_features_edge_cases_pinned() {
+        // want == 0: nothing is produced (and no division by zero)
+        let mut out = Vec::new();
+        adapt_features(&[1.0, 2.0], 0, &mut out);
+        assert!(out.is_empty());
+        adapt_features(&[], 0, &mut out);
+        assert!(out.is_empty());
+        // non-divisible pooling: 5 -> 3 covers every element once
+        out.clear();
+        adapt_features(&[1.0, 2.0, 3.0, 4.0, 5.0], 3, &mut out);
+        assert_eq!(out, vec![1.0, 2.5, 4.5]);
+        // non-divisible replication: 3 -> 5
+        out.clear();
+        adapt_features(&[1.0, 2.0, 3.0], 5, &mut out);
+        assert_eq!(out, vec![1.0, 1.0, 2.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn adapt_spatial_edge_geometries_pinned() {
+        // source larger than target on both spatial axes with
+        // non-divisible pooling factors: (3,3,1) -> (2,2,1)
+        let x: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let mut out = Vec::new();
+        adapt_spatial(&x, (3, 3, 1), (2, 2, 1), &mut out);
+        assert_eq!(out, vec![0.0, 1.5, 4.5, 6.0]);
+        // whole-map collapse: (2,2,2) -> (1,1,1) pools everything
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        out.clear();
+        adapt_spatial(&x, (2, 2, 2), (1, 1, 1), &mut out);
+        assert_eq!(out, vec![3.5]);
+        // a zero-sized target axis produces an empty bridge (and no
+        // division by zero on the untouched axes)
+        out.clear();
+        adapt_spatial(&x, (2, 2, 2), (0, 2, 2), &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn run_batch_and_into_match_infer_batch() {
+        let plan = Arc::new(
+            synthetic_plan("demo", &[8, 12, 4], 4, 8, 0.2, 7).unwrap());
+        let mut eng = Engine::new(plan.clone());
+        let xs: Vec<f32> =
+            (0..16).map(|i| (i as f32 * 0.3).sin()).collect();
+        let want = eng.infer_batch(&xs, 2).unwrap();
+        assert_eq!(want.len(), 2 * plan.output_dim);
+        let mut buf = vec![99.0f32; 3]; // stale content is cleared
+        eng.infer_batch_into(&xs, 2, &mut buf).unwrap();
+        assert_eq!(buf, want);
+        assert_eq!(eng.run_batch(&xs, 2).unwrap(), &want[..]);
     }
 
     #[test]

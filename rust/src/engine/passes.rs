@@ -1,0 +1,304 @@
+//! The ordered pass pipeline that compiles an [`EnginePlan`] into an
+//! executable [`Program`]:
+//!
+//! 1. **graph build** — one `Pre` placeholder plus a
+//!    quantize/kernel/epilogue node chain per layer, with every buffer
+//!    width resolved statically from the plan (the interpreter never
+//!    re-derives a shape);
+//! 2. **pruned-channel elision** — a fully-pruned layer's quantize +
+//!    kernel + accumulator drop out entirely; a `BiasFill` answers its
+//!    (ReLU'd) bias, and the pre-op feeding the dead kernel goes with
+//!    it;
+//! 3. **pre-op materialization** — each `Pre` placeholder expands into
+//!    its concrete `MaxPool2`/`GlobalAvgPool`/`AdaptSpatial` node,
+//!    with the legacy `AdaptFeatures` bridge appended only where the
+//!    statically-tracked width still mismatches (pre-spatial
+//!    manifests);
+//! 4. **quantize/requant fusion** — a `Requant` whose f32 output is
+//!    consumed only by the next integer layer's `Quantize` becomes one
+//!    `RequantQuantize`, eliminating the intermediate activation
+//!    buffer between adjacent integer layers;
+//! 5. **liveness + arena assignment** (`engine::arena`) — disjoint
+//!    live ranges share scratch space (ping-pong reuse).
+//!
+//! Numerics are untouched by every pass: each rewrite replays exactly
+//! the f32/integer operation sequence of the unfused graph, which is
+//! why `tests/golden_e2e.rs` stays bit-exact across the pipeline.
+
+use std::sync::Arc;
+
+use super::arena;
+use super::graph::{BufId, BufSpec, DType, Node, PreStep, Program};
+use super::{ActSpec, EnginePlan, PlanLayer, PreOp};
+use crate::quant::grid::CodeGrid;
+
+/// Mutable program under construction: the pass pipeline's working
+/// form of a [`Program`] before arena assignment.
+struct Draft {
+    plan: Arc<EnginePlan>,
+    int_path: bool,
+    nodes: Vec<Node>,
+    node_layer: Vec<usize>,
+    bufs: Vec<BufSpec>,
+    input: BufId,
+    output: BufId,
+}
+
+impl Draft {
+    fn buf(&mut self, dtype: DType, len: usize) -> BufId {
+        self.bufs.push(BufSpec { dtype, len, offset: None });
+        self.bufs.len() - 1
+    }
+
+    fn push(&mut self, node: Node, layer: usize) {
+        self.nodes.push(node);
+        self.node_layer.push(layer);
+    }
+}
+
+pub(crate) fn compile(plan: Arc<EnginePlan>, int_path: bool) -> Program {
+    let mut d = build(plan, int_path);
+    elide_pruned(&mut d);
+    materialize_pre(&mut d);
+    fuse_requant_quantize(&mut d);
+    let layout = arena::assign(&mut d.bufs, &d.nodes, d.input, d.output);
+    Program {
+        plan: d.plan,
+        int_path: d.int_path,
+        nodes: d.nodes,
+        node_layer: d.node_layer,
+        bufs: d.bufs,
+        input: d.input,
+        output: d.output,
+        f32_len: layout.f32_len,
+        i32_len: layout.i32_len,
+        i64_len: layout.i64_len,
+        peak_live: layout.peak_live_bytes,
+    }
+}
+
+/// Resolve a layer's [`PreOp`] (plus the legacy width bridge) against
+/// the statically-tracked width of the previous output — the
+/// compile-time form of the old executor's runtime shape checks: a
+/// recorded pre-op whose input shape does not match the live width is
+/// skipped, and any residual mismatch falls back to the flat adapter.
+fn resolve_pre(layer: &PlanLayer, width: usize) -> Vec<PreStep> {
+    let mut steps = Vec::new();
+    let mut cur = width;
+    match &layer.pre {
+        PreOp::Direct => {}
+        PreOp::MaxPool2 { h, w, c } => {
+            if cur == h * w * c {
+                steps.push(PreStep::MaxPool2 { h: *h, w: *w, c: *c });
+                cur = (h / 2) * (w / 2) * c;
+            }
+        }
+        PreOp::GlobalAvgPool { h, w, c } => {
+            if cur == h * w * c {
+                steps.push(PreStep::GlobalAvgPool { h: *h, w: *w, c: *c });
+                cur = *c;
+            }
+        }
+        PreOp::AdaptSpatial { from, to } => {
+            if cur == from.0 * from.1 * from.2 {
+                steps.push(PreStep::AdaptSpatial { from: *from, to: *to });
+                cur = to.0 * to.1 * to.2;
+            }
+        }
+    }
+    let need = layer.input_len();
+    if cur != need {
+        steps.push(PreStep::AdaptFeatures { want: need });
+    }
+    steps
+}
+
+/// Pass 1: emit the per-layer node chains with statically resolved
+/// buffer widths.
+fn build(plan: Arc<EnginePlan>, int_path: bool) -> Draft {
+    let mut d = Draft {
+        plan: plan.clone(),
+        int_path,
+        nodes: Vec::new(),
+        node_layer: Vec::new(),
+        bufs: Vec::new(),
+        input: 0,
+        output: 0,
+    };
+    d.input = d.buf(DType::F32, plan.input_dim);
+    let mut cur = d.input;
+    for (li, layer) in plan.layers.iter().enumerate() {
+        let steps = resolve_pre(layer, d.bufs[cur].len);
+        if !steps.is_empty() {
+            // final step always lands on the layer's input width
+            let dst = d.buf(DType::F32, layer.input_len());
+            d.push(Node::Pre { layer: li, src: cur, dst, steps }, li);
+            cur = dst;
+        }
+        cur = emit_layer(&mut d, li, layer, cur);
+    }
+    d.output = cur;
+    d
+}
+
+fn emit_layer(d: &mut Draft, li: usize, l: &PlanLayer, cur: BufId)
+              -> BufId {
+    let in_len = l.input_len();
+    let rows = l.kept.len();
+    let opix = l.spatial.as_ref().map(|sp| sp.out_pixels()).unwrap_or(1);
+    let out = d.buf(DType::F32, l.output_len());
+    let use_int = d.int_path
+        && l.packed.is_some()
+        && matches!(l.act, ActSpec::Int { .. });
+    if use_int {
+        let ActSpec::Int { bits, beta, signed } = l.act else {
+            unreachable!()
+        };
+        let grid = CodeGrid::new(beta, bits, signed);
+        let q = d.buf(DType::I32, in_len);
+        d.push(Node::Quantize { src: cur, dst: q, grid }, li);
+        let acc = d.buf(DType::I64, opix * rows);
+        let kernel = match &l.spatial {
+            Some(sp) if sp.in_c == sp.groups => {
+                Node::DwConv2d { layer: li, src: q, dst: acc }
+            }
+            Some(_) => Node::Conv2d { layer: li, src: q, dst: acc,
+                                      int: true },
+            None => Node::Gemm { layer: li, src: q, dst: acc, int: true },
+        };
+        d.push(kernel, li);
+        let scale = l.w_scale as f64 * grid.step as f64;
+        d.push(Node::Requant { layer: li, src: acc, dst: out, scale,
+                               relu: l.relu }, li);
+    } else {
+        // f32 fallback on the simulated-quant rows; the activation
+        // grid is still applied (quantize + dequantize) so both paths
+        // see identical quantization error.
+        let acts = match l.act {
+            ActSpec::F32 => cur,
+            ActSpec::Int { bits, beta, signed } => {
+                let grid = CodeGrid::new(beta, bits, signed);
+                let q = d.buf(DType::I32, in_len);
+                d.push(Node::Quantize { src: cur, dst: q, grid }, li);
+                let deq = d.buf(DType::F32, in_len);
+                d.push(Node::Dequantize { src: q, dst: deq,
+                                          step: grid.step }, li);
+                deq
+            }
+        };
+        let acc = d.buf(DType::F32, opix * rows);
+        let kernel = match &l.spatial {
+            Some(_) => Node::Conv2d { layer: li, src: acts, dst: acc,
+                                      int: false },
+            None => Node::Gemm { layer: li, src: acts, dst: acc,
+                                 int: false },
+        };
+        d.push(kernel, li);
+        d.push(Node::Epilogue { layer: li, src: acc, dst: out,
+                                relu: l.relu }, li);
+    }
+    out
+}
+
+/// Pass 2: fully-pruned layers keep only a `BiasFill`; their quantize,
+/// kernel, accumulator, and feeding pre-op are elided.
+fn elide_pruned(d: &mut Draft) {
+    let plan = d.plan.clone();
+    let old_nodes = std::mem::take(&mut d.nodes);
+    let old_layers = std::mem::take(&mut d.node_layer);
+    for (node, li) in old_nodes.into_iter().zip(old_layers) {
+        if !plan.layers[li].kept.is_empty() {
+            d.push(node, li);
+            continue;
+        }
+        match node {
+            Node::Requant { layer, dst, relu, .. }
+            | Node::Epilogue { layer, dst, relu, .. } => {
+                d.push(Node::BiasFill { layer, dst, relu }, li);
+            }
+            // quantize / kernel / pre feeding a dead kernel: dropped
+            _ => {}
+        }
+    }
+}
+
+/// Pass 3: expand each `Pre` placeholder into its concrete node
+/// sequence, allocating the intermediate buffers between steps.
+fn materialize_pre(d: &mut Draft) {
+    let old_nodes = std::mem::take(&mut d.nodes);
+    let old_layers = std::mem::take(&mut d.node_layer);
+    for (node, li) in old_nodes.into_iter().zip(old_layers) {
+        match node {
+            Node::Pre { src, dst, steps, .. } => {
+                let mut cur = src;
+                let n_steps = steps.len();
+                for (i, step) in steps.into_iter().enumerate() {
+                    let out = if i + 1 == n_steps {
+                        dst
+                    } else {
+                        d.buf(DType::F32, step.out_len())
+                    };
+                    let concrete = match step {
+                        PreStep::MaxPool2 { h, w, c } => {
+                            Node::MaxPool2 { src: cur, dst: out, h, w, c }
+                        }
+                        PreStep::GlobalAvgPool { h, w, c } => {
+                            Node::GlobalAvgPool { src: cur, dst: out,
+                                                  h, w, c }
+                        }
+                        PreStep::AdaptSpatial { from, to } => {
+                            Node::AdaptSpatial { src: cur, dst: out,
+                                                 from, to }
+                        }
+                        PreStep::AdaptFeatures { want } => {
+                            Node::AdaptFeatures { src: cur, dst: out,
+                                                  want }
+                        }
+                    };
+                    d.push(concrete, li);
+                    cur = out;
+                }
+            }
+            other => d.push(other, li),
+        }
+    }
+}
+
+/// Pass 4: fuse `Requant -> Quantize` pairs whose intermediate f32
+/// buffer has exactly one consumer and is not the program output.
+fn fuse_requant_quantize(d: &mut Draft) {
+    let old_nodes = std::mem::take(&mut d.nodes);
+    let old_layers = std::mem::take(&mut d.node_layer);
+    let mut readers = vec![0usize; d.bufs.len()];
+    for node in &old_nodes {
+        if let Some(b) = node.reads() {
+            readers[b] += 1;
+        }
+    }
+    let mut i = 0;
+    while i < old_nodes.len() {
+        if i + 1 < old_nodes.len() {
+            if let (Node::Requant { layer, src, dst, scale, relu },
+                    Node::Quantize { src: qsrc, dst: qdst, grid }) =
+                (&old_nodes[i], &old_nodes[i + 1])
+            {
+                if *dst == *qsrc && readers[*dst] == 1
+                    && *dst != d.output
+                {
+                    d.push(Node::RequantQuantize {
+                        layer: *layer,
+                        src: *src,
+                        dst: *qdst,
+                        scale: *scale,
+                        relu: *relu,
+                        grid: *grid,
+                    }, old_layers[i]);
+                    i += 2;
+                    continue;
+                }
+            }
+        }
+        d.push(old_nodes[i].clone(), old_layers[i]);
+        i += 1;
+    }
+}

@@ -6,9 +6,13 @@
 //! up to `max_batch` requests, then holds the partial batch open for
 //! at most `deadline` waiting for stragglers — the classic
 //! micro-batching latency/throughput trade — and runs the whole batch
-//! through one `infer_batch` call so packed weight rows are decoded
-//! once per batch. Per-request latency (submit -> response) feeds the
-//! percentile stats behind `bbits serve`.
+//! through one `Engine::run_batch` call so packed weight rows are
+//! decoded once per batch. The hot path allocates nothing per
+//! request: the worker's flat staging buffer is reused across
+//! batches, the logits are borrowed straight out of the engine's
+//! scratch arena, and each response recycles its own request's input
+//! `Vec` as the output buffer. Per-request latency (submit ->
+//! response) feeds the percentile stats behind `bbits serve`.
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -309,6 +313,8 @@ fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>) {
     engine.set_int_enabled(!shared.cfg.force_f32);
     let dim = plan.input_dim;
     let od = plan.output_dim;
+    // per-worker flat batch staging, reused across batches
+    let mut flat: Vec<f32> = Vec::new();
     loop {
         let batch = {
             let mut st = shared.state.lock().unwrap();
@@ -359,11 +365,14 @@ fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>) {
         shared.not_full.notify_all();
 
         let n = batch.len();
-        let mut flat = Vec::with_capacity(n * dim);
+        flat.clear();
+        flat.reserve(n * dim);
         for r in &batch {
             flat.extend_from_slice(&r.input);
         }
-        let result = engine.infer_batch(&flat, n);
+        // `run_batch` borrows the logits straight out of the engine's
+        // arena — no per-batch output allocation…
+        let result = engine.run_batch(&flat, n);
         let done = Instant::now();
         let mut stats = shared.stats.lock().unwrap();
         stats.batches += 1;
@@ -371,11 +380,16 @@ fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>) {
         match result {
             Ok(out) => {
                 for (i, r) in batch.into_iter().enumerate() {
+                    let Request { mut input, submitted, tx } = r;
                     let lat =
-                        done.duration_since(r.submitted).as_nanos() as u64;
+                        done.duration_since(submitted).as_nanos() as u64;
                     stats.record_latency(lat);
-                    let _ =
-                        r.tx.send(Ok(out[i * od..(i + 1) * od].to_vec()));
+                    // …and each response recycles its own request's
+                    // input allocation as the output buffer handed
+                    // back through the ticket channel.
+                    input.clear();
+                    input.extend_from_slice(&out[i * od..(i + 1) * od]);
+                    let _ = tx.send(Ok(input));
                 }
             }
             Err(e) => {

@@ -98,6 +98,7 @@ fn run(argv: &[String]) -> Result<()> {
             Ok(())
         }
         "serve" => cmd_serve(&args, &opt),
+        "plan" => cmd_plan(&args, &opt),
         "engine-bench" => cmd_engine_bench(&args),
         "parity" => cmd_parity(&opt),
         "bops" => cmd_bops(),
@@ -106,10 +107,12 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
-/// `bbits serve` — lower a checkpoint (or a synthetic plan) into the
-/// integer engine and drive it with a closed-loop batched load.
-fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
-    let plan = if let Some(ckpt) = args.opt_flag("checkpoint") {
+/// Build an [`engine::EnginePlan`] from the engine-family CLI flags:
+/// a lowered checkpoint when `--checkpoint` is given, a synthetic
+/// plan otherwise. Shared by `bbits serve` and `bbits plan`.
+fn plan_from_args(args: &Args, opt: &ExpOptions)
+                  -> Result<engine::EnginePlan> {
+    if let Some(ckpt) = args.opt_flag("checkpoint") {
         let model = args.str_flag("model", "lenet5");
         // the mode the checkpoint was trained in decides which gate
         // slots were learned vs locked (printed by `bbits train`)
@@ -121,7 +124,7 @@ fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
             bail!("checkpoint is for {ck_model:?}, manifest is {:?}",
                   man.name);
         }
-        engine::lower_with_mode(&man, &state.params, &mode)?
+        engine::lower_with_mode(&man, &state.params, &mode)
     } else {
         let dims =
             args.usize_list_flag("dims", &[128, 256, 256, 10])?;
@@ -130,12 +133,36 @@ fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
         let prune = args.f64_flag("prune", 0.25)?;
         let seed = args.usize_flag("seed", 1)? as u64;
         logging::info(format!(
-            "no --checkpoint given: serving a synthetic w{wbits}a{abits} \
+            "no --checkpoint given: using a synthetic w{wbits}a{abits} \
              plan over dims {dims:?}"
         ));
         engine::synthetic_plan("synthetic", &dims, wbits, abits, prune,
-                               seed)?
-    };
+                               seed)
+    }
+}
+
+/// `bbits plan` — lower a checkpoint (or a synthetic spec) and
+/// inspect the result without serving. `--dump-ir` additionally
+/// prints the compiled execution graphs (node list + arena map) for
+/// the integer path and the f32 reference path.
+fn cmd_plan(args: &Args, opt: &ExpOptions) -> Result<()> {
+    let plan = plan_from_args(args, opt)?;
+    println!("{}", plan.report());
+    if args.bool_flag("dump-ir") {
+        let plan = Arc::new(plan);
+        let int_prog =
+            engine::graph::Program::compile(plan.clone(), true);
+        println!("{}", int_prog.dump());
+        let f32_prog = engine::graph::Program::compile(plan, false);
+        println!("{}", f32_prog.dump());
+    }
+    Ok(())
+}
+
+/// `bbits serve` — lower a checkpoint (or a synthetic plan) into the
+/// integer engine and drive it with a closed-loop batched load.
+fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
+    let plan = plan_from_args(args, opt)?;
     println!("{}", plan.report());
 
     let workers = args.usize_flag(

@@ -111,6 +111,54 @@ pub fn quantize_fixed_host(x: &[f32], beta: f32, bit: u32,
     codes.iter().map(|q| s * *q as f32).collect()
 }
 
+/// Precomputed fixed-width quantization grid: the per-element form of
+/// [`quantize_codes_host`], shareable as a compile-time constant of
+/// the engine's execution graph (`engine::graph::Node::Quantize` and
+/// the fused requantize+quantize node both carry one). Constructing a
+/// `CodeGrid` and calling [`CodeGrid::code`] per element reproduces
+/// `quantize_codes_host` bit-exactly — the function is implemented on
+/// top of it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CodeGrid {
+    /// Grid step: dequantization is `step * code`.
+    pub step: f32,
+    pub bits: u32,
+    pub signed: bool,
+    alpha_clip: f32,
+    beta_clip: f32,
+    lo: i64,
+    hi: i64,
+}
+
+impl CodeGrid {
+    pub fn new(beta: f32, bits: u32, signed: bool) -> CodeGrid {
+        let beta_grid = beta.abs();
+        let beta_clip = beta_grid * (1.0 - BETA_EPS);
+        let alpha = if signed { -beta_grid } else { 0.0 };
+        let alpha_clip = alpha * (1.0 - BETA_EPS);
+        let step =
+            (beta_grid - alpha) / ((2.0f64.powi(bits as i32) - 1.0) as f32);
+        // At 32 bits the BETA_EPS clip margin is below one f32 ulp of
+        // the max ratio, so rounding in `xc / step` can overshoot the
+        // nominal grid end by one ulp; clamp to keep the b-bit
+        // contract exact.
+        let hi = if signed {
+            (1i64 << (bits - 1)) - 1
+        } else {
+            (1i64 << bits) - 1
+        };
+        let lo = if signed { -hi } else { 0 };
+        CodeGrid { step, bits, signed, alpha_clip, beta_clip, lo, hi }
+    }
+
+    /// Integer grid code of one value (clip + banker's rounding).
+    #[inline]
+    pub fn code(&self, v: f32) -> i64 {
+        let xc = pact_clip(v, self.alpha_clip, self.beta_clip);
+        (round_half_even(xc / self.step) as i64).clamp(self.lo, self.hi)
+    }
+}
+
 /// Integer grid codes for the fixed-width quantizer — the lowering
 /// contract of the integer engine (`engine::pack`).
 ///
@@ -121,24 +169,8 @@ pub fn quantize_fixed_host(x: &[f32], beta: f32, bit: u32,
 /// [`crate::quant::LEVELS`] fits a `b`-bit word.
 pub fn quantize_codes_host(x: &[f32], beta: f32, bit: u32,
                            signed: bool) -> (f32, Vec<i64>) {
-    let beta_grid = beta.abs();
-    let beta_clip = beta_grid * (1.0 - BETA_EPS);
-    let alpha = if signed { -beta_grid } else { 0.0 };
-    let alpha_clip = alpha * (1.0 - BETA_EPS);
-    let s = (beta_grid - alpha) / ((2.0f64.powi(bit as i32) - 1.0) as f32);
-    // At 32 bits the BETA_EPS clip margin is below one f32 ulp of the
-    // max ratio, so rounding in `xc / s` can overshoot the nominal
-    // grid end by one ulp; clamp to keep the b-bit contract exact.
-    let hi = if signed { (1i64 << (bit - 1)) - 1 } else { (1i64 << bit) - 1 };
-    let lo = if signed { -hi } else { 0 };
-    let codes = x
-        .iter()
-        .map(|v| {
-            let xc = pact_clip(*v, alpha_clip, beta_clip);
-            (round_half_even(xc / s) as i64).clamp(lo, hi)
-        })
-        .collect();
-    (s, codes)
+    let g = CodeGrid::new(beta, bit, signed);
+    (g.step, x.iter().map(|v| g.code(*v)).collect())
 }
 
 #[cfg(test)]
@@ -211,6 +243,27 @@ mod tests {
                     assert!(*q <= lim && *q >= if signed { -lim } else { 0 },
                             "bit={bit} code {q} exceeds [{}, {lim}]",
                             if signed { -lim } else { 0 });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn code_grid_matches_batch_quantizer_per_element() {
+        let mut rng = crate::rng::Pcg64::new(29);
+        for bit in crate::quant::LEVELS {
+            for signed in [true, false] {
+                let x: Vec<f32> = (0..64)
+                    .map(|_| {
+                        let v = rng.normal() * 3.0;
+                        if signed { v } else { v.abs() }
+                    })
+                    .collect();
+                let g = CodeGrid::new(2.3, bit, signed);
+                let (s, codes) = quantize_codes_host(&x, 2.3, bit, signed);
+                assert_eq!(g.step, s, "bit={bit}");
+                for (v, q) in x.iter().zip(&codes) {
+                    assert_eq!(g.code(*v), *q, "bit={bit} v={v}");
                 }
             }
         }

@@ -1,0 +1,347 @@
+//! Execution-graph IR invariants: pass-pipeline structure (fusion
+//! counts, pruned-channel elision, legacy adapter materialization),
+//! arena-assignment safety (no two live buffers may ever alias), and
+//! bit-exact equivalence of the interpreter against a manually
+//! composed integer pipeline.
+//!
+//! Pure host subsystem — always runs.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use std::sync::Arc;
+
+use bayesian_bits::engine::graph::{Node, Program};
+use bayesian_bits::engine::lower::{self, build_layer};
+use bayesian_bits::engine::{synthetic_conv_plan, synthetic_plan,
+                            ActSpec, Engine, EnginePlan};
+use bayesian_bits::models::Padding;
+use bayesian_bits::quant::grid::quantize_codes_host;
+use support::preset_manifest;
+
+fn fused(prog: &Program) -> usize {
+    prog.nodes()
+        .iter()
+        .filter(|n| matches!(n, Node::RequantQuantize { .. }))
+        .count()
+}
+
+// -------------------------------------------------------------------
+// (a) fused quantize/requant node counts for the four model presets
+// -------------------------------------------------------------------
+
+#[test]
+fn fused_requant_quantize_counts_per_preset() {
+    // Every preset layer is w8a8 integer, so each adjacent layer pair
+    // with no interstitial op (maxpool/gap/adapt) fuses: the count is
+    // (#layers - 1) minus the pairs separated by a pre-op.
+    let expect =
+        [("lenet5", 1usize), ("vgg7", 4), ("resnet18", 16),
+         ("mobilenetv2", 19)];
+    for (model, want) in expect {
+        let (man, params) = preset_manifest(model, false);
+        let plan = Arc::new(lower::lower(&man, &params).unwrap());
+        let int_prog = Program::compile(plan.clone(), true);
+        assert_eq!(fused(&int_prog), want, "{model} int path");
+        assert_eq!(int_prog.fused_count(), want, "{model} accessor");
+        // the f32 reference path never fuses (it has no Requant)
+        let f32_prog = Program::compile(plan.clone(), false);
+        assert_eq!(fused(&f32_prog), 0, "{model} f32 path");
+        // spatial presets never need the legacy flat adapter
+        assert!(
+            int_prog
+                .nodes()
+                .iter()
+                .all(|n| !matches!(n, Node::AdaptFeatures { .. })),
+            "{model}: unexpected adapt_features node"
+        );
+        // with fusion on, the int path carries exactly one standalone
+        // Quantize per layer whose input is raw f32 (first layer or
+        // behind a pre-op)
+        let quantizes = int_prog
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n, Node::Quantize { .. }))
+            .count();
+        assert_eq!(quantizes, plan.layers.len() - want, "{model}");
+    }
+}
+
+// -------------------------------------------------------------------
+// (b) arena slice assignment never aliases two live buffers
+// -------------------------------------------------------------------
+
+/// Independently re-derive buffer liveness from the node list and
+/// assert that same-dtype buffers with overlapping live ranges were
+/// given disjoint arena slices.
+fn check_no_aliasing(label: &str, prog: &Program) {
+    let nodes = prog.nodes();
+    let bufs = prog.bufs();
+    let nb = bufs.len();
+    let mut def = vec![usize::MAX; nb];
+    let mut last = vec![0usize; nb];
+    def[prog.input()] = 0;
+    for (i, node) in nodes.iter().enumerate() {
+        let t = i + 1;
+        let w = node.writes();
+        if def[w] == usize::MAX {
+            def[w] = t;
+        }
+        if last[w] < t {
+            last[w] = t;
+        }
+        if let Some(r) = node.reads() {
+            assert_ne!(def[r], usize::MAX,
+                       "{label}: node {i} reads undefined buffer {r}");
+            assert!(bufs[r].offset.is_some(),
+                    "{label}: node {i} reads unassigned buffer {r}");
+            if last[r] < t {
+                last[r] = t;
+            }
+        }
+        assert!(bufs[w].offset.is_some(),
+                "{label}: node {i} writes unassigned buffer {w}");
+    }
+    // the caller reads the output after the last node
+    last[prog.output()] = nodes.len() + 1;
+    assert!(bufs[prog.output()].offset.is_some(), "{label}: output");
+
+    for a in 0..nb {
+        for b in a + 1..nb {
+            let (ba, bb) = (&bufs[a], &bufs[b]);
+            if ba.dtype != bb.dtype {
+                continue;
+            }
+            let (Some(oa), Some(ob)) = (ba.offset, bb.offset) else {
+                continue;
+            };
+            if def[a] == usize::MAX || def[b] == usize::MAX {
+                continue;
+            }
+            let live_overlap = def[a] <= last[b] && def[b] <= last[a];
+            if !live_overlap {
+                continue;
+            }
+            let disjoint = oa + ba.len <= ob || ob + bb.len <= oa;
+            assert!(
+                disjoint,
+                "{label}: live buffers {a} [{oa}..{}] and {b} \
+                 [{ob}..{}] alias",
+                oa + ba.len,
+                ob + bb.len
+            );
+        }
+    }
+}
+
+#[test]
+fn arena_assignment_never_aliases_live_buffers() {
+    let mut programs: Vec<(String, Program)> = Vec::new();
+    for model in ["lenet5", "vgg7", "resnet18", "mobilenetv2"] {
+        let (man, params) = preset_manifest(model, false);
+        let plan = Arc::new(lower::lower(&man, &params).unwrap());
+        programs.push((format!("{model}/int"),
+                       Program::compile(plan.clone(), true)));
+        programs.push((format!("{model}/f32"),
+                       Program::compile(plan, false)));
+    }
+    // the legacy flattened manifest exercises the AdaptFeatures path
+    let (man, params) = preset_manifest("lenet5", true);
+    let plan = Arc::new(lower::lower(&man, &params).unwrap());
+    let legacy = Program::compile(plan.clone(), true);
+    assert!(
+        legacy
+            .nodes()
+            .iter()
+            .any(|n| matches!(n, Node::AdaptFeatures { .. })),
+        "legacy manifest must materialize the flat adapter"
+    );
+    programs.push(("lenet5-legacy/int".into(), legacy));
+    programs.push(("lenet5-legacy/f32".into(),
+                   Program::compile(plan, false)));
+    // synthetic shapes: pruned dense chain, conv, depthwise
+    let plan = Arc::new(
+        synthetic_plan("chain", &[16, 32, 32, 10], 4, 8, 0.4, 5)
+            .unwrap());
+    programs.push(("chain/int".into(),
+                   Program::compile(plan.clone(), true)));
+    programs.push(("chain/f32".into(), Program::compile(plan, false)));
+    let plan = Arc::new(
+        synthetic_conv_plan("conv", 7, 3, 6, 3, 2, Padding::Same, 1, 4,
+                            8, 0.3, 9)
+            .unwrap());
+    programs.push(("conv/int".into(),
+                   Program::compile(plan.clone(), true)));
+    programs.push(("conv/f32".into(), Program::compile(plan, false)));
+    let plan = Arc::new(
+        synthetic_conv_plan("dw", 6, 4, 4, 3, 1, Padding::Same, 4, 4, 8,
+                            0.25, 13)
+            .unwrap());
+    programs.push(("dw/int".into(), Program::compile(plan, true)));
+
+    for (label, prog) in &programs {
+        check_no_aliasing(label, prog);
+        // the packed arena is never larger than the sum of its live
+        // buffers, and never smaller than the true peak
+        assert!(prog.arena_bytes() >= prog.peak_live_bytes(), "{label}");
+    }
+}
+
+#[test]
+fn arena_reuse_beats_one_slot_per_buffer() {
+    let plan = Arc::new(
+        synthetic_plan("deep", &[32, 64, 64, 64, 10], 4, 8, 0.25, 9)
+            .unwrap());
+    let prog = Program::compile(plan, true);
+    let naive: usize = prog
+        .bufs()
+        .iter()
+        .filter(|b| b.offset.is_some())
+        .map(|b| b.len * b.dtype.bytes())
+        .sum();
+    assert!(
+        prog.arena_bytes() < naive,
+        "no reuse: arena {} vs naive {naive}",
+        prog.arena_bytes()
+    );
+}
+
+// -------------------------------------------------------------------
+// interpreter vs a manually composed integer pipeline (bit-exact)
+// -------------------------------------------------------------------
+
+/// Straight-line reimplementation of the integer datapath for dense
+/// chains: quantize on the layer grid, exact i64 dot over unpacked
+/// codes, one requantize multiply, bias, ReLU. Mirrors the engine's
+/// float-operation order exactly, so results must match bit-for-bit —
+/// fused or not.
+fn manual_int_reference(plan: &EnginePlan, x: &[f32]) -> Vec<f32> {
+    let mut cur = x.to_vec();
+    for l in &plan.layers {
+        let mut next = match &l.bias {
+            Some(b) => b.clone(),
+            None => vec![0.0f32; l.out_dim],
+        };
+        if !l.kept.is_empty() {
+            let ActSpec::Int { bits, beta, signed } = l.act else {
+                panic!("manual reference needs integer activations")
+            };
+            let (step, codes) =
+                quantize_codes_host(&cur, beta, bits, signed);
+            let wcodes = l.packed.as_ref().unwrap().unpack();
+            let scale = l.w_scale as f64 * step as f64;
+            for (k, ch) in l.kept.iter().enumerate() {
+                let mut acc = 0i64;
+                for c in 0..l.in_dim {
+                    acc += wcodes[k * l.in_dim + c] * codes[c];
+                }
+                next[*ch as usize] += (acc as f64 * scale) as f32;
+            }
+        }
+        if l.relu {
+            for v in next.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        cur = next;
+    }
+    cur
+}
+
+fn dense_chain_plan(prune_middle: bool) -> EnginePlan {
+    let mut rng = bayesian_bits::rng::Pcg64::new(31);
+    let mut w = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.normal() * 0.5).collect()
+    };
+    let l1 = build_layer(
+        "fc1", &w(6 * 5), 6, 5, &[1.0, 0.0, 1.0, 1.0, 1.0], 4, 1.5,
+        ActSpec::Int { bits: 8, beta: 3.0, signed: true },
+        Some(vec![0.1, -0.2, 0.3, -0.4, 0.5]), true)
+        .unwrap();
+    let z2 = if prune_middle {
+        vec![0.0f32; 4]
+    } else {
+        vec![1.0, 1.0, 0.0, 1.0]
+    };
+    let l2 = build_layer(
+        "fc2", &w(5 * 4), 5, 4, &z2, 4, 1.5,
+        ActSpec::Int { bits: 8, beta: 6.0, signed: false },
+        Some(vec![0.25, -0.5, 0.75, 1.0]), true)
+        .unwrap();
+    let l3 = build_layer(
+        "fc3", &w(4 * 3), 4, 3, &[1.0, 1.0, 1.0], 8, 1.5,
+        ActSpec::Int { bits: 8, beta: 6.0, signed: false },
+        Some(vec![0.0, 0.1, -0.1]), false)
+        .unwrap();
+    let plan = EnginePlan {
+        model: "manual".into(),
+        input_dim: 6,
+        output_dim: 3,
+        layers: vec![l1, l2, l3],
+    };
+    plan.validate().unwrap();
+    plan
+}
+
+#[test]
+fn ir_executor_matches_manual_integer_pipeline_bit_exactly() {
+    for prune_middle in [false, true] {
+        let plan = Arc::new(dense_chain_plan(prune_middle));
+        let prog = Program::compile(plan.clone(), true);
+        if prune_middle {
+            // pruned-channel elision: the dead layer keeps only its
+            // BiasFill, so neither fusion partner survives around it
+            assert_eq!(fused(&prog), 0);
+            assert!(prog
+                .nodes()
+                .iter()
+                .any(|n| matches!(n, Node::BiasFill { .. })));
+            let gemms = prog
+                .nodes()
+                .iter()
+                .filter(|n| matches!(n, Node::Gemm { .. }))
+                .count();
+            assert_eq!(gemms, 2, "pruned layer's kernel must be elided");
+        } else {
+            // two adjacent integer pairs -> two fused nodes
+            assert_eq!(fused(&prog), 2);
+        }
+        let mut eng = Engine::new(plan.clone());
+        for t in 0..8 {
+            let x: Vec<f32> = (0..6)
+                .map(|i| ((t * 6 + i) as f32 * 0.41).sin() * 2.5)
+                .collect();
+            let got = eng.infer(&x).unwrap();
+            let want = manual_int_reference(&plan, &x);
+            assert_eq!(got, want, "prune_middle={prune_middle} t={t}");
+        }
+        // batching three copies reproduces each row bit-exactly
+        let x: Vec<f32> =
+            (0..6).map(|i| (i as f32 * 0.7).cos()).collect();
+        let one = eng.infer(&x).unwrap();
+        let mut xs = x.clone();
+        xs.extend_from_slice(&x);
+        xs.extend_from_slice(&x);
+        let batch = eng.infer_batch(&xs, 3).unwrap();
+        for r in 0..3 {
+            assert_eq!(&batch[r * 3..(r + 1) * 3], &one[..], "row {r}");
+        }
+    }
+}
+
+#[test]
+fn dump_lists_nodes_and_arena_map() {
+    let (man, params) = preset_manifest("lenet5", false);
+    let plan = Arc::new(lower::lower(&man, &params).unwrap());
+    let prog = Program::compile(plan, true);
+    let dump = prog.dump();
+    assert!(dump.contains("lenet5"), "{dump}");
+    assert!(dump.contains("arena"), "{dump}");
+    assert!(dump.contains("maxpool2"), "{dump}");
+    assert!(dump.contains("requant_quantize"), "{dump}");
+    assert!(dump.contains("conv1"), "{dump}");
+    // one line per node plus header/footer
+    assert!(dump.lines().count() >= prog.nodes().len() + 3, "{dump}");
+}
