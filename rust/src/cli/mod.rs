@@ -18,13 +18,18 @@ use anyhow::{anyhow, Result};
 pub struct Args {
     pub command: String,
     pub positional: Vec<String>,
+    /// Last occurrence per flag (the historical single-value view).
     pub flags: BTreeMap<String, String>,
+    /// Every occurrence per flag, in order — repeatable flags such as
+    /// `serve --model NAME=SPEC --model NAME=SPEC` read this.
+    pub multi: BTreeMap<String, Vec<String>>,
 }
 
 /// Flags that are boolean switches (present => "true").
 const SWITCHES: &[&str] = &[
     "help", "det-gates", "show-preft", "curves", "quick", "paper-scale",
     "skip-baselines", "no-finetune", "no-int", "conv-only", "dump-ir",
+    "serve-only",
 ];
 
 /// Flags that take a value (`--flag v` or `--flag=v`). Anything not
@@ -37,7 +42,7 @@ const VALUE_FLAGS: &[&str] = &[
     // engine / serving flags
     "checkpoint", "dims", "wbits", "abits", "prune", "max-batch",
     "deadline-ms", "queue-cap", "clients", "requests", "rows", "cols",
-    "batch", "hw", "cin", "cout", "ksize",
+    "batch", "hw", "cin", "cout", "ksize", "plan-cache-mb",
 ];
 
 impl Args {
@@ -51,14 +56,14 @@ impl Args {
                     {
                         return Err(unknown_flag(k));
                     }
-                    args.flags.insert(k.to_string(), v.to_string());
+                    args.push_flag(k, v);
                 } else if SWITCHES.contains(&name) {
-                    args.flags.insert(name.to_string(), "true".into());
+                    args.push_flag(name, "true");
                 } else if VALUE_FLAGS.contains(&name) {
                     let v = it.next().ok_or_else(|| {
                         anyhow!("flag --{name} expects a value")
                     })?;
-                    args.flags.insert(name.to_string(), v.clone());
+                    args.push_flag(name, v);
                 } else {
                     return Err(unknown_flag(name));
                 }
@@ -69,6 +74,22 @@ impl Args {
             }
         }
         Ok(args)
+    }
+
+    /// Record one flag occurrence: `flags` keeps the last value (the
+    /// historical single-value view), `multi` keeps them all.
+    fn push_flag(&mut self, name: &str, value: &str) {
+        self.flags.insert(name.to_string(), value.to_string());
+        self.multi
+            .entry(name.to_string())
+            .or_default()
+            .push(value.to_string());
+    }
+
+    /// Every occurrence of a repeatable value flag, in command-line
+    /// order (empty if absent).
+    pub fn repeated_flag(&self, name: &str) -> &[String] {
+        self.multi.get(name).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn str_flag(&self, name: &str, default: &str) -> String {
@@ -174,6 +195,13 @@ Integer inference engine (rust/src/engine)
                   --model M --checkpoint PATH  (or, without a
                   checkpoint, a synthetic plan: --dims 128,256,10
                   --wbits N --abits N --prune F)
+                  multi-model: repeat --model NAME=SPEC where SPEC is
+                  `preset:MODEL` (in-process preset manifest),
+                  `MANIFEST.json` (deterministic init), or
+                  `MANIFEST.json:CKPT`; requests round-robin across
+                  models, stats are per-model. --plan-cache-mb F caps
+                  the compiled-program cache (LRU eviction + lazy
+                  recompile; 0 keeps only the hot model resident)
                   --threads N --max-batch B --deadline-ms F
                   --queue-cap N --clients C --requests N [--no-int]
   plan            lower a checkpoint (or synthetic spec, same flags as
@@ -182,9 +210,12 @@ Integer inference engine (rust/src/engine)
                   scratch-arena map) for the int and f32 paths
   engine-bench    packed integer GEMM + spatial conv vs f32 fallback
                   throughput; writes BENCH_conv.json (records now
-                  include arena_bytes / peak_scratch_bytes)
+                  include arena_bytes / peak_scratch_bytes) and a
+                  multi-model serve sweep to BENCH_serve.json
+                  (per-model p50/p99 + plan-cache eviction counters)
                   --rows N --cols N --batch B (GEMM; skip: --conv-only)
                   --hw N --cin N --cout N --ksize K (conv layer)
+                  --serve-only runs just the serve sweep
 
 Utilities
   parity          check Rust runtime vs golden quantizer vectors
@@ -274,6 +305,28 @@ mod tests {
         let p = parse("plan --dims 8,4 --dump-ir");
         assert_eq!(p.command, "plan");
         assert!(p.bool_flag("dump-ir"));
+    }
+
+    #[test]
+    fn repeated_model_flags_collect_in_order() {
+        let a = parse(
+            "serve --model a=preset:lenet5 --model b=m.json:c.ckpt \
+             --plan-cache-mb 4");
+        assert_eq!(a.repeated_flag("model"),
+                   &["a=preset:lenet5".to_string(),
+                     "b=m.json:c.ckpt".to_string()]);
+        // the single-value view keeps the last occurrence
+        assert_eq!(a.str_flag("model", "x"), "b=m.json:c.ckpt");
+        assert_eq!(a.f64_flag("plan-cache-mb", 0.0).unwrap(), 4.0);
+        // absent repeatable flag reads as empty, not a panic
+        assert!(parse("serve").repeated_flag("model").is_empty());
+        // --flag=value occurrences accumulate too
+        let b = parse("serve --model=a=x.json --model=b=y.json");
+        assert_eq!(b.repeated_flag("model").len(), 2);
+        assert_eq!(b.repeated_flag("model")[0], "a=x.json");
+        // the serve-only bench switch is registered
+        assert!(parse("engine-bench --serve-only")
+            .bool_flag("serve-only"));
     }
 
     #[test]

@@ -14,8 +14,14 @@
 //! * [`kernels`] — packed-weight integer GEMM and im2col-over-codes
 //!   spatial convolution (i32/i64 accumulate, one requantize
 //!   multiply) plus the f32 simulated-quant fallbacks;
-//! * [`serve`] — a multi-threaded batched request server over
-//!   per-worker [`Engine`] instances.
+//! * [`serve`] — the batched worker-pool core (micro-batching queue,
+//!   per-worker [`Engine`] instances over one shared compiled program
+//!   pair) plus the single-model [`Server`] wrapper;
+//! * [`registry`] — the multi-model front-end: a [`ModelRegistry`] of
+//!   named lowered plans with lazy program compilation, a [`Router`]
+//!   that fans requests out to per-model pools, and a byte-budget LRU
+//!   that evicts cold compiled plans (transparently recompiled on the
+//!   next hit).
 //!
 //! Dense layers execute as GEMMs over `[cout, in]` weight rows.
 //! Conv/dwconv layers keep their `[cout, cin/groups * k * k]` row
@@ -48,6 +54,7 @@ pub mod kernels;
 pub mod lower;
 pub mod pack;
 mod passes;
+pub mod registry;
 pub mod serve;
 
 use std::sync::Arc;
@@ -63,7 +70,8 @@ use pack::PackedMatrix;
 pub use graph::{ExecState, Program};
 pub use lower::{lower, lower_with_mode, synthetic_conv_plan,
                 synthetic_plan};
-pub use serve::{ServeConfig, ServeStats, Server};
+pub use registry::{CacheStats, ModelRegistry, Router};
+pub use serve::{ServeConfig, ServeConfigError, ServeStats, Server};
 
 /// Spatial execution geometry of one conv/dwconv layer: input feature
 /// map, kernel/stride/groups, and the padding resolved to explicit
@@ -634,23 +642,41 @@ pub fn adapt_spatial(x: &[f32], from: (usize, usize, usize),
     adapt_spatial_into(x, from, to, &mut out[base..]);
 }
 
+/// Compile a plan into its two shareable execution graphs (integer
+/// path and f32 simulated-quant reference). The registry's serving
+/// workers all execute the *same* compiled pair for one model; only
+/// the [`ExecState`] arenas are per-worker.
+pub fn compile_pair(plan: &Arc<EnginePlan>)
+                    -> (Arc<Program>, Arc<Program>) {
+    (Arc::new(Program::compile(plan.clone(), true)),
+     Arc::new(Program::compile(plan.clone(), false)))
+}
+
 /// One inference executor: a shared read-only plan compiled once into
 /// its two execution graphs (integer path and f32 simulated-quant
 /// reference), plus the per-instance [`ExecState`] arenas. Each
-/// serving worker owns an `Engine`; they share the plan through the
-/// `Arc`.
+/// serving worker owns an `Engine`; they share the plan *and* the
+/// compiled programs through `Arc`s.
 pub struct Engine {
     plan: Arc<EnginePlan>,
-    int_prog: Program,
-    f32_prog: Program,
+    int_prog: Arc<Program>,
+    f32_prog: Arc<Program>,
     int_enabled: bool,
     st: ExecState,
 }
 
 impl Engine {
     pub fn new(plan: Arc<EnginePlan>) -> Engine {
-        let int_prog = Program::compile(plan.clone(), true);
-        let f32_prog = Program::compile(plan.clone(), false);
+        let (int_prog, f32_prog) = compile_pair(&plan);
+        Engine::from_compiled(plan, int_prog, f32_prog)
+    }
+
+    /// Build over pre-compiled programs — the zero-compile constructor
+    /// the registry's pool workers use so N workers share one program
+    /// pair instead of compiling N copies.
+    pub fn from_compiled(plan: Arc<EnginePlan>, int_prog: Arc<Program>,
+                         f32_prog: Arc<Program>) -> Engine {
+        debug_assert!(int_prog.int_path() && !f32_prog.int_path());
         Engine {
             plan,
             int_prog,

@@ -1,0 +1,562 @@
+//! Multi-model serving: a named registry of lowered plans, a router
+//! that fans requests out to per-model worker pools, and a
+//! byte-budget LRU over the *compiled* side of each model.
+//!
+//! ```text
+//!   Router::submit(model_id, x)
+//!        │  (name -> entry, LRU touch, lazy compile)
+//!        v
+//!   ModelRegistry ── entry "a" ── Arc<EnginePlan> (always resident)
+//!        │               └─ Active: {int Program, f32 Program,
+//!        │                           Pool: queue + workers + arenas}
+//!        ├─ entry "b" ── … (cold: plan only, no programs, no pool)
+//!        └─ CacheStats {hits, misses, recompiles, evictions}
+//! ```
+//!
+//! Registration is cheap: an entry owns only the lowered
+//! [`EnginePlan`] (the weights). Both execution
+//! [`Program`](super::graph::Program)s (integer
+//! path + f32 reference) and the worker pool with its scratch arenas
+//! are compiled lazily on the first request and dropped again when the
+//! plan-cache byte budget forces an eviction — the next request to an
+//! evicted model transparently recompiles (a *recompile* miss). The
+//! cost function is the PR-3 arena accounting:
+//! `executed_path.arena_bytes() * max_batch * workers`, i.e. the
+//! scratch the pool pins at full occupancy (each worker's `ExecState`
+//! materializes only the path it runs). The LRU never
+//! evicts the entry being activated, so a single model larger than
+//! the budget still serves (over budget, with a warning left to the
+//! caller via `resident_bytes()`).
+//!
+//! Per-model [`ServeStats`] live in the entry, not the pool, so
+//! counters and latency reservoirs survive eviction/recompile cycles.
+//! An eviction drains the victim's queue before the programs drop —
+//! every queued ticket is answered — and a submitter that raced the
+//! eviction gets its input handed back internally and retried on the
+//! recompiled pool.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::serve::{snapshot_stats, raw_stats, Pool, ServeConfig,
+                   ServeStats, StatsInner, SubmitRejected, Ticket};
+use super::EnginePlan;
+use crate::rng::Pcg64;
+use crate::runtime::Manifest;
+use crate::util::json::{num, obj, Json};
+
+/// Plan-cache counters: every submit is a hit (programs resident) or
+/// a miss (cold compile); recompiles are the subset of misses whose
+/// entry had been compiled before (i.e. evicted in between).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub recompiles: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("hits", num(self.hits as f64)),
+            ("misses", num(self.misses as f64)),
+            ("recompiles", num(self.recompiles as f64)),
+            ("evictions", num(self.evictions as f64)),
+        ])
+    }
+}
+
+/// The compiled (evictable) side of one entry.
+struct Active {
+    pool: Arc<Pool>,
+    cost_bytes: usize,
+}
+
+struct Entry {
+    plan: Arc<EnginePlan>,
+    cfg: ServeConfig,
+    /// Survives eviction — stats are per *model*, not per pool.
+    stats: Arc<Mutex<StatsInner>>,
+    active: Option<Active>,
+    /// LRU tick of the last submit.
+    last_used: u64,
+    /// Whether this entry has ever compiled (recompile accounting).
+    compiled_once: bool,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: BTreeMap<String, Entry>,
+    /// Monotonic LRU clock, bumped per submit.
+    clock: u64,
+    resident_bytes: usize,
+    cache: CacheStats,
+    closed: bool,
+}
+
+/// Named multi-model serving front-end. See the module docs for the
+/// architecture; [`Router`] is the cheap clonable submit handle.
+pub struct ModelRegistry {
+    inner: Mutex<Inner>,
+    /// Plan-cache byte budget; `None` = unbounded (never evict).
+    budget_bytes: Option<usize>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelRegistry {
+    /// Registry with no plan-cache budget: compiled programs stay
+    /// resident until shutdown.
+    pub fn new() -> ModelRegistry {
+        ModelRegistry { inner: Mutex::new(Inner::default()),
+                        budget_bytes: None }
+    }
+
+    /// Registry whose compiled programs + arenas are LRU-evicted once
+    /// their summed cost exceeds `bytes`. A budget of 0 keeps at most
+    /// the single model being served resident.
+    pub fn with_budget(bytes: usize) -> ModelRegistry {
+        ModelRegistry { inner: Mutex::new(Inner::default()),
+                        budget_bytes: Some(bytes) }
+    }
+
+    pub fn budget_bytes(&self) -> Option<usize> {
+        self.budget_bytes
+    }
+
+    /// Register a lowered plan under `id`. Cheap: compilation of the
+    /// execution programs is deferred to the first request.
+    pub fn register(&self, id: &str, plan: Arc<EnginePlan>,
+                    cfg: ServeConfig) -> Result<()> {
+        if id.is_empty() {
+            bail!("model id must be non-empty");
+        }
+        cfg.validate()?;
+        plan.validate()?;
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            bail!("registry is shut down");
+        }
+        if g.entries.contains_key(id) {
+            bail!("model {id:?} is already registered");
+        }
+        g.entries.insert(id.to_string(), Entry {
+            plan,
+            cfg,
+            stats: Arc::new(Mutex::new(StatsInner::default())),
+            active: None,
+            last_used: 0,
+            compiled_once: false,
+        });
+        Ok(())
+    }
+
+    /// Lower a manifest + parameter vector and register the result —
+    /// "loading another model is just compiling another program".
+    pub fn register_manifest(&self, id: &str, man: &Manifest,
+                             params: &[f32], cfg: ServeConfig)
+                             -> Result<()> {
+        let plan = super::lower(man, params)?;
+        self.register(id, Arc::new(plan), cfg)
+    }
+
+    /// Route one request to `id`'s worker pool (compiling the model's
+    /// programs first if it is cold), and return the response ticket.
+    /// Blocks on that model's queue backpressure, never on another
+    /// model's.
+    pub fn submit(&self, id: &str, input: Vec<f32>) -> Result<Ticket> {
+        // Bounded retry: losing the checkout -> enqueue race to an
+        // eviction is rare, but under a tiny budget with adversarial
+        // interleaving one request could otherwise ping-pong compiles
+        // forever. Each retry re-activates the model, so a handful of
+        // attempts is ample in practice.
+        const MAX_EVICTION_RETRIES: usize = 16;
+        let mut input = input;
+        for _ in 0..MAX_EVICTION_RETRIES {
+            let pool = self.checkout(id, input.len())?;
+            match pool.submit(input) {
+                Ok(t) => return Ok(t),
+                // the pool was evicted (or is draining) between
+                // checkout and enqueue: take the input back and
+                // reactivate — requests survive their plan going cold
+                Err(SubmitRejected::Closed(back)) => input = back,
+                // checkout() already validated the width against the
+                // same plan Arc, so this arm is unreachable from here
+                // today — kept as a real error (not a panic) for any
+                // future direct Pool caller path
+                Err(SubmitRejected::BadWidth { got, want }) => {
+                    bail!("request has {got} values, model {id:?} \
+                           wants {want}");
+                }
+            }
+        }
+        bail!("model {id:?}: request lost the eviction race \
+               {MAX_EVICTION_RETRIES} times — plan-cache budget is too \
+               tight for the offered concurrency");
+    }
+
+    /// LRU-touch `id`, lazily compiling + evicting as needed, and
+    /// return its live pool.
+    fn checkout(&self, id: &str, width: usize) -> Result<Arc<Pool>> {
+        // evicted pools collected under the lock, drained after it —
+        // a victim's queue join must not stall other models' submits
+        let mut victims: Vec<Active> = Vec::new();
+        let mut g = self.inner.lock().unwrap();
+        // split the guard once so entries / cache / resident_bytes
+        // borrow as disjoint fields
+        let inner = &mut *g;
+        if inner.closed {
+            bail!("registry is shut down");
+        }
+        if !inner.entries.contains_key(id) {
+            let known: Vec<&str> =
+                inner.entries.keys().map(|k| k.as_str()).collect();
+            bail!("unknown model {id:?} (registered: {known:?})");
+        }
+        inner.clock += 1;
+        let now = inner.clock;
+        let e = inner.entries.get_mut(id).unwrap();
+        if width != e.plan.input_dim {
+            bail!("request has {width} values, model {id:?} wants {}",
+                  e.plan.input_dim);
+        }
+        e.last_used = now;
+        if let Some(a) = &e.active {
+            inner.cache.hits += 1;
+            return Ok(a.pool.clone());
+        }
+        // cold: compile both paths and spawn the pool. Done under the
+        // registry lock — submits to other (warm) models queue behind
+        // this compile; acceptable at current plan sizes, and it keeps
+        // the LRU/byte accounting trivially consistent.
+        inner.cache.misses += 1;
+        if e.compiled_once {
+            inner.cache.recompiles += 1;
+        }
+        e.compiled_once = true;
+        let (plan, cfg, stats) =
+            (e.plan.clone(), e.cfg.clone(), e.stats.clone());
+        let (int_prog, f32_prog) = super::compile_pair(&plan);
+        // each worker's ExecState only ever materializes the arenas
+        // of the path it executes, so the cache cost charges that
+        // path alone (the other program's node list is negligible)
+        let exec_arena = if cfg.force_f32 {
+            f32_prog.arena_bytes()
+        } else {
+            int_prog.arena_bytes()
+        };
+        let cost_bytes = exec_arena * cfg.max_batch * cfg.workers;
+        let pool = Arc::new(
+            Pool::start(plan, int_prog, f32_prog, cfg, stats)
+                .map_err(|e| anyhow!("{e}"))?,
+        );
+        inner.resident_bytes += cost_bytes;
+        if let Some(budget) = self.budget_bytes {
+            while inner.resident_bytes > budget {
+                // evict the least-recently-used *other* resident model
+                let victim = inner
+                    .entries
+                    .iter()
+                    .filter(|(k, e)| {
+                        e.active.is_some() && k.as_str() != id
+                    })
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| k.clone());
+                let Some(victim) = victim else { break };
+                let a = inner
+                    .entries
+                    .get_mut(&victim)
+                    .unwrap()
+                    .active
+                    .take()
+                    .unwrap();
+                inner.resident_bytes -= a.cost_bytes;
+                inner.cache.evictions += 1;
+                victims.push(a);
+            }
+        }
+        inner.entries.get_mut(id).unwrap().active =
+            Some(Active { pool: pool.clone(), cost_bytes });
+        drop(g);
+        // drain each victim's queue (every ticket answered) and join
+        // its workers with the registry unlocked; the programs +
+        // arenas drop with the pool
+        for a in victims {
+            a.pool.shutdown();
+        }
+        Ok(pool)
+    }
+
+    /// Drop `id`'s compiled programs + pool (draining its queue), as
+    /// the budget sweep would. Returns false if unknown or already
+    /// cold. The entry itself stays registered.
+    pub fn evict(&self, id: &str) -> bool {
+        let a = {
+            let mut g = self.inner.lock().unwrap();
+            let inner = &mut *g;
+            let Some(e) = inner.entries.get_mut(id) else {
+                return false;
+            };
+            let Some(a) = e.active.take() else { return false };
+            inner.resident_bytes -= a.cost_bytes;
+            inner.cache.evictions += 1;
+            a
+        };
+        // drain + join with the registry unlocked, as checkout does
+        a.pool.shutdown();
+        true
+    }
+
+    /// Registered model ids, sorted.
+    pub fn model_ids(&self) -> Vec<String> {
+        self.inner.lock().unwrap().entries.keys().cloned().collect()
+    }
+
+    /// The lowered plan behind `id` (always resident, even when the
+    /// compiled programs are evicted).
+    pub fn plan(&self, id: &str) -> Option<Arc<EnginePlan>> {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .get(id)
+            .map(|e| e.plan.clone())
+    }
+
+    /// Whether `id`'s compiled programs are currently resident.
+    pub fn is_resident(&self, id: &str) -> Option<bool> {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .get(id)
+            .map(|e| e.active.is_some())
+    }
+
+    /// Summed cost of every resident compiled model.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().resident_bytes
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().cache
+    }
+
+    /// Per-model stats snapshot; `None` for an unknown id.
+    pub fn stats(&self, id: &str) -> Option<ServeStats> {
+        let cell = self
+            .inner
+            .lock()
+            .unwrap()
+            .entries
+            .get(id)
+            .map(|e| e.stats.clone())?;
+        Some(snapshot_stats(&cell))
+    }
+
+    /// Aggregate stats across every model: counters summed, latency
+    /// percentiles over the merged reservoirs. Each model's reservoir
+    /// is a uniform sample of its own history at rate `len/seen`;
+    /// before concatenating, every sample is truncated to the lowest
+    /// rate present, so a saturated high-traffic reservoir is not
+    /// out-weighted by a small model's complete sample.
+    pub fn aggregate_stats(&self) -> ServeStats {
+        let cells: Vec<Arc<Mutex<StatsInner>>> = {
+            let g = self.inner.lock().unwrap();
+            g.entries.values().map(|e| e.stats.clone()).collect()
+        };
+        let mut parts: Vec<(Vec<u64>, u64)> = Vec::new();
+        let (mut requests, mut batches, mut errors) = (0u64, 0u64, 0u64);
+        for cell in &cells {
+            let (l, seen, r, b, e) = raw_stats(cell);
+            if seen > 0 {
+                parts.push((l, seen));
+            }
+            requests += r;
+            batches += b;
+            errors += e;
+        }
+        let min_rate = parts
+            .iter()
+            .map(|(l, seen)| l.len() as f64 / *seen as f64)
+            .fold(1.0f64, f64::min);
+        let mut lat = Vec::new();
+        for (l, seen) in parts {
+            let keep = ((seen as f64 * min_rate) as usize).min(l.len());
+            if keep == l.len() {
+                lat.extend_from_slice(&l);
+            } else {
+                // an unsaturated buffer is in arrival order, so take
+                // an even stride across it (a systematic sample of
+                // the history), not a warmup-biased prefix
+                for i in 0..keep {
+                    lat.push(l[i * l.len() / keep]);
+                }
+            }
+        }
+        ServeStats::from_parts(lat, requests, batches, errors)
+    }
+
+    /// The full stats surface as one JSON document:
+    /// `{"models": {id: ServeStats…}, "aggregate": ServeStats,
+    ///   "cache": {hits, misses, recompiles, evictions,
+    ///             budget_bytes, resident_bytes, resident_models}}`.
+    pub fn stats_json(&self) -> Json {
+        let ids = self.model_ids();
+        let mut models = BTreeMap::new();
+        for id in &ids {
+            if let Some(st) = self.stats(id) {
+                models.insert(id.clone(), st.to_json());
+            }
+        }
+        let g = self.inner.lock().unwrap();
+        let resident: Vec<Json> = g
+            .entries
+            .iter()
+            .filter(|(_, e)| e.active.is_some())
+            .map(|(k, _)| Json::Str(k.clone()))
+            .collect();
+        // start from the canonical counter serialization so a counter
+        // added to CacheStats can never go missing here
+        let mut cache_map = match g.cache.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("CacheStats::to_json returns an object"),
+        };
+        cache_map.insert("budget_bytes".to_string(),
+                         match self.budget_bytes {
+                             Some(b) => num(b as f64),
+                             None => Json::Null,
+                         });
+        cache_map.insert("resident_bytes".to_string(),
+                         num(g.resident_bytes as f64));
+        cache_map.insert("resident_models".to_string(),
+                         Json::Arr(resident));
+        let cache = Json::Obj(cache_map);
+        drop(g);
+        Json::Obj(BTreeMap::from([
+            ("models".to_string(), Json::Obj(models)),
+            ("aggregate".to_string(), self.aggregate_stats().to_json()),
+            ("cache".to_string(), cache),
+        ]))
+    }
+
+    /// Stop accepting requests and drain + join every resident pool.
+    /// Queued requests are still answered; idempotent.
+    pub fn shutdown(&self) {
+        let actives: Vec<Active> = {
+            let mut g = self.inner.lock().unwrap();
+            let inner = &mut *g;
+            inner.closed = true;
+            let mut v = Vec::new();
+            for e in inner.entries.values_mut() {
+                if let Some(a) = e.active.take() {
+                    inner.resident_bytes -= a.cost_bytes;
+                    v.push(a);
+                }
+            }
+            v
+        };
+        for a in actives {
+            a.pool.shutdown();
+        }
+    }
+}
+
+impl Drop for ModelRegistry {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Cheap clonable submit handle over a shared registry — the routing
+/// layer handed to request producers.
+#[derive(Clone)]
+pub struct Router {
+    registry: Arc<ModelRegistry>,
+}
+
+impl Router {
+    pub fn new(registry: Arc<ModelRegistry>) -> Router {
+        Router { registry }
+    }
+
+    /// Route one request to `model_id` and return its ticket.
+    pub fn submit(&self, model_id: &str, input: Vec<f32>)
+                  -> Result<Ticket> {
+        self.registry.submit(model_id, input)
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+}
+
+/// Closed-loop load driver over a router: `clients` threads each
+/// submit `per_client` random requests, rotating through `ids`
+/// (client `c` starts at offset `c`, so models interleave across
+/// clients). Returns the wall-clock window plus per-model stats with
+/// throughput filled in — what `bbits serve --model NAME=SPEC` and
+/// the `engine-bench` serve sweep report.
+pub fn closed_loop_router(router: &Router, ids: &[String],
+                          clients: usize, per_client: usize, seed: u64)
+                          -> Result<(f64, Vec<(String, ServeStats)>)> {
+    if ids.is_empty() {
+        bail!("closed_loop_router needs at least one model id");
+    }
+    let dims: Vec<usize> = ids
+        .iter()
+        .map(|id| {
+            router
+                .registry()
+                .plan(id)
+                .map(|p| p.input_dim)
+                .ok_or_else(|| anyhow!("unknown model {id:?}"))
+        })
+        .collect::<Result<_>>()?;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let dims = &dims;
+                scope.spawn(move || -> Result<()> {
+                    let mut rng = Pcg64::with_stream(seed, c as u64);
+                    for r in 0..per_client {
+                        let m = (c + r) % ids.len();
+                        let x: Vec<f32> = (0..dims[m])
+                            .map(|_| rng.normal())
+                            .collect();
+                        router.submit(&ids[m], x)?.wait()?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().map_err(|_| anyhow!("load client panicked"))??;
+        }
+        Ok(())
+    })?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let per_model = ids
+        .iter()
+        .map(|id| {
+            let mut st = router.registry().stats(id).unwrap_or_default();
+            st.elapsed_s = elapsed;
+            st.throughput_rps = if elapsed > 0.0 {
+                st.requests as f64 / elapsed
+            } else {
+                0.0
+            };
+            (id.clone(), st)
+        })
+        .collect();
+    Ok((elapsed, per_model))
+}

@@ -1,10 +1,12 @@
-//! Batched request serving over the integer engine.
+//! Batched request serving over the integer engine: the worker-pool
+//! core behind the multi-model front-end.
 //!
 //! Architecture: a bounded request queue (Mutex + two Condvars for
 //! backpressure) feeding `workers` threads, each owning its own
-//! [`Engine`] instance over the shared read-only plan. A worker drains
-//! up to `max_batch` requests, then holds the partial batch open for
-//! at most `deadline` waiting for stragglers — the classic
+//! [`Engine`] over a *shared* pair of compiled [`Program`]s (int +
+//! f32) and the shared read-only plan. A worker drains up to
+//! `max_batch` requests, then holds the partial batch open for at
+//! most `deadline` waiting for stragglers — the classic
 //! micro-batching latency/throughput trade — and runs the whole batch
 //! through one `Engine::run_batch` call so packed weight rows are
 //! decoded once per batch. The hot path allocates nothing per
@@ -13,6 +15,12 @@
 //! scratch arena, and each response recycles its own request's input
 //! `Vec` as the output buffer. Per-request latency (submit ->
 //! response) feeds the percentile stats behind `bbits serve`.
+//!
+//! The pool itself ([`Pool`]) is crate-internal: the public surfaces
+//! are the multi-model [`super::registry::ModelRegistry`] /
+//! [`super::registry::Router`] pair, and [`Server`] — the single-model
+//! wrapper over a one-entry registry that `closed_loop`, the golden
+//! tests, and `bbits serve` without `--model NAME=SPEC` flags use.
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -20,10 +28,11 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
 
+use super::graph::Program;
+use super::registry::ModelRegistry;
 use super::{Engine, EnginePlan};
-use crate::rng::Pcg64;
 use crate::util::json::{num, obj, Json};
 
 /// Server tuning knobs.
@@ -56,6 +65,65 @@ impl Default for ServeConfig {
     }
 }
 
+/// A structurally invalid [`ServeConfig`], rejected at construction —
+/// a zero worker count or queue capacity would wedge every submitter,
+/// a zero batch cap would spin a worker forever, and a zero deadline
+/// degenerates the micro-batch window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeConfigError {
+    ZeroWorkers,
+    ZeroQueueCap,
+    ZeroMaxBatch,
+    ZeroDeadline,
+}
+
+impl fmt::Display for ServeConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeConfigError::ZeroWorkers => {
+                write!(f, "serve config needs workers >= 1 (a pool \
+                           with no workers never answers)")
+            }
+            ServeConfigError::ZeroQueueCap => {
+                write!(f, "serve config needs queue_cap >= 1 (a zero \
+                           capacity queue blocks every submit)")
+            }
+            ServeConfigError::ZeroMaxBatch => {
+                write!(f, "serve config needs max_batch >= 1 (a worker \
+                           cannot run an empty batch)")
+            }
+            ServeConfigError::ZeroDeadline => {
+                write!(f, "serve config needs a non-zero deadline (use \
+                           e.g. 1us to effectively disable the \
+                           micro-batch window)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeConfigError {}
+
+impl ServeConfig {
+    /// Structural validation, run by every construction path
+    /// (registry `register`, `Server::start`, pool spawn).
+    pub fn validate(&self)
+                    -> std::result::Result<(), ServeConfigError> {
+        if self.workers == 0 {
+            return Err(ServeConfigError::ZeroWorkers);
+        }
+        if self.queue_cap == 0 {
+            return Err(ServeConfigError::ZeroQueueCap);
+        }
+        if self.max_batch == 0 {
+            return Err(ServeConfigError::ZeroMaxBatch);
+        }
+        if self.deadline.is_zero() {
+            return Err(ServeConfigError::ZeroDeadline);
+        }
+        Ok(())
+    }
+}
+
 struct Request {
     input: Vec<f32>,
     submitted: Instant,
@@ -73,8 +141,20 @@ struct QueueState {
 /// server is meant to run indefinitely.
 const LATENCY_SAMPLE_CAP: usize = 1 << 18;
 
+/// Map a uniform 64-bit draw `x` onto `0..n` with a widening multiply
+/// (`(x * n) >> 64`). Unlike `x % n`, the map's bucket sizes differ by
+/// at most one part in 2^64 / n for any `n`, and it uses the
+/// high-entropy top bits of an LCG state instead of the weak low bits.
+#[inline]
+pub fn bounded_draw(x: u64, n: u64) -> u64 {
+    (((x as u128) * (n as u128)) >> 64) as u64
+}
+
+/// Per-model counters + latency reservoir. Owned by the registry
+/// entry (an `Arc`), so the numbers survive plan eviction and pool
+/// restarts.
 #[derive(Default)]
-struct StatsInner {
+pub(crate) struct StatsInner {
     latencies_ns: Vec<u64>,
     /// Total latencies observed (>= latencies_ns.len()).
     seen: u64,
@@ -87,21 +167,47 @@ struct StatsInner {
 
 impl StatsInner {
     fn record_latency(&mut self, ns: u64) {
+        self.record_latency_capped(ns, LATENCY_SAMPLE_CAP);
+    }
+
+    /// Reservoir insert with an explicit cap (unit-testable).
+    fn record_latency_capped(&mut self, ns: u64, cap: usize) {
         self.seen += 1;
-        if self.latencies_ns.len() < LATENCY_SAMPLE_CAP {
+        if self.latencies_ns.len() < cap {
             self.latencies_ns.push(ns);
             return;
         }
-        // classic reservoir: keep with probability cap/seen
+        // classic reservoir: keep with probability cap/seen. The
+        // replacement slot comes from a widening-multiply bounded
+        // draw — `(lcg >> 11) % seen` had both modulo bias and the
+        // LCG's weak low bits in play.
         self.lcg = self
             .lcg
             .wrapping_mul(6364136223846793005)
             .wrapping_add(1442695040888963407);
-        let j = (self.lcg >> 11) % self.seen;
-        if (j as usize) < LATENCY_SAMPLE_CAP {
+        let j = bounded_draw(self.lcg, self.seen);
+        if (j as usize) < cap {
             self.latencies_ns[j as usize] = ns;
         }
     }
+}
+
+/// Snapshot a stats cell into a [`ServeStats`]. The (possibly
+/// reservoir-sampled) latency buffer is copied out under the lock and
+/// sorted outside it, so workers never stall on a snapshot.
+pub(crate) fn snapshot_stats(cell: &Mutex<StatsInner>) -> ServeStats {
+    let (lat, _seen, requests, batches, errors) = raw_stats(cell);
+    ServeStats::from_parts(lat, requests, batches, errors)
+}
+
+/// Latency sample (plus the `seen` count it represents) and counters
+/// of one stats cell, pre-snapshot — the registry merges these across
+/// models for aggregate percentiles.
+pub(crate) fn raw_stats(cell: &Mutex<StatsInner>)
+                        -> (Vec<u64>, u64, u64, u64, u64) {
+    let inner = cell.lock().unwrap();
+    (inner.latencies_ns.clone(), inner.seen, inner.requests,
+     inner.batches, inner.errors)
 }
 
 struct Shared {
@@ -109,7 +215,7 @@ struct Shared {
     not_empty: Condvar,
     not_full: Condvar,
     cfg: ServeConfig,
-    stats: Mutex<StatsInner>,
+    stats: Arc<Mutex<StatsInner>>,
 }
 
 /// Handle for one in-flight request.
@@ -146,6 +252,29 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
+    /// Build from a raw (unsorted) latency sample plus counters.
+    pub(crate) fn from_parts(mut lat: Vec<u64>, requests: u64,
+                             batches: u64, errors: u64) -> ServeStats {
+        lat.sort_unstable();
+        let ms = |ns: u64| ns as f64 / 1e6;
+        ServeStats {
+            requests,
+            batches,
+            errors,
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                requests as f64 / batches as f64
+            },
+            p50_ms: ms(percentile(&lat, 0.50)),
+            p90_ms: ms(percentile(&lat, 0.90)),
+            p99_ms: ms(percentile(&lat, 0.99)),
+            max_ms: ms(lat.last().copied().unwrap_or(0)),
+            elapsed_s: 0.0,
+            throughput_rps: 0.0,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("requests", num(self.requests as f64)),
@@ -187,129 +316,106 @@ pub fn percentile(sorted: &[u64], q: f64) -> u64 {
     sorted[idx]
 }
 
-/// The batched inference server.
-pub struct Server {
-    shared: Arc<Shared>,
-    plan: Arc<EnginePlan>,
-    workers: Vec<JoinHandle<()>>,
+/// Why [`Pool::submit`] did not enqueue. `Closed` hands the input
+/// buffer back so the registry can retry on a recompiled pool after
+/// an eviction race — a request must survive its plan going cold.
+pub(crate) enum SubmitRejected {
+    /// Pool is shut down (registry shutdown or plan eviction).
+    Closed(Vec<f32>),
+    /// Request width does not match the model input.
+    BadWidth { got: usize, want: usize },
 }
 
-impl Server {
-    /// Spawn the worker pool; the server accepts requests immediately.
-    pub fn start(plan: Arc<EnginePlan>, cfg: ServeConfig)
-                 -> Result<Server> {
-        if cfg.workers == 0 || cfg.max_batch == 0 || cfg.queue_cap == 0 {
-            bail!("serve config needs workers, max_batch and queue_cap \
-                   >= 1, got {cfg:?}");
-        }
-        plan.validate()?;
+/// One model's worker pool: the bounded queue plus `workers` threads
+/// over a shared compiled program pair. Crate-internal — pools are
+/// owned (and recycled on eviction) by the registry.
+pub(crate) struct Pool {
+    shared: Arc<Shared>,
+    plan: Arc<EnginePlan>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Pool {
+    /// Spawn the worker pool over pre-compiled programs; accepts
+    /// requests immediately. Stats land in the caller's shared cell so
+    /// they outlive this pool.
+    pub(crate) fn start(plan: Arc<EnginePlan>, int_prog: Arc<Program>,
+                        f32_prog: Arc<Program>, cfg: ServeConfig,
+                        stats: Arc<Mutex<StatsInner>>)
+                        -> std::result::Result<Pool, ServeConfigError> {
+        cfg.validate()?;
         let shared = Arc::new(Shared {
             state: Mutex::new(QueueState::default()),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             cfg,
-            stats: Mutex::new(StatsInner::default()),
+            stats,
         });
         let workers = (0..shared.cfg.workers)
             .map(|_| {
                 let shared = shared.clone();
                 let plan = plan.clone();
-                std::thread::spawn(move || worker_loop(shared, plan))
+                let ip = int_prog.clone();
+                let fp = f32_prog.clone();
+                std::thread::spawn(move || worker_loop(shared, plan,
+                                                       ip, fp))
             })
             .collect();
-        Ok(Server { shared, plan, workers })
-    }
-
-    pub fn plan(&self) -> &EnginePlan {
-        &self.plan
+        Ok(Pool { shared, plan, workers: Mutex::new(workers) })
     }
 
     /// Enqueue one request, blocking while the queue is at capacity
     /// (backpressure), and return a [`Ticket`] for the response.
-    pub fn submit(&self, input: Vec<f32>) -> Result<Ticket> {
+    pub(crate) fn submit(&self, input: Vec<f32>)
+                         -> std::result::Result<Ticket, SubmitRejected> {
         if input.len() != self.plan.input_dim {
-            bail!("request has {} values, model {:?} wants {}",
-                  input.len(), self.plan.model, self.plan.input_dim);
+            return Err(SubmitRejected::BadWidth {
+                got: input.len(),
+                want: self.plan.input_dim,
+            });
         }
         let (tx, rx) = mpsc::channel();
-        let req = Request { input, submitted: Instant::now(), tx };
         let mut st = self.shared.state.lock().unwrap();
         while st.q.len() >= self.shared.cfg.queue_cap && !st.closed {
             st = self.shared.not_full.wait(st).unwrap();
         }
         if st.closed {
-            bail!("server is shut down");
+            return Err(SubmitRejected::Closed(input));
         }
-        st.q.push_back(req);
+        st.q.push_back(Request { input, submitted: Instant::now(), tx });
         drop(st);
         self.shared.not_empty.notify_one();
         Ok(Ticket { rx })
     }
 
-    /// Snapshot of the latency/batch statistics so far. The (possibly
-    /// reservoir-sampled) latency buffer is copied out under the lock
-    /// and sorted outside it, so workers never stall on a snapshot.
-    pub fn stats(&self) -> ServeStats {
-        let (mut lat, requests, batches, errors) = {
-            let inner = self.shared.stats.lock().unwrap();
-            (inner.latencies_ns.clone(), inner.requests, inner.batches,
-             inner.errors)
-        };
-        lat.sort_unstable();
-        let ms = |ns: u64| ns as f64 / 1e6;
-        ServeStats {
-            requests,
-            batches,
-            errors,
-            mean_batch: if batches == 0 {
-                0.0
-            } else {
-                requests as f64 / batches as f64
-            },
-            p50_ms: ms(percentile(&lat, 0.50)),
-            p90_ms: ms(percentile(&lat, 0.90)),
-            p99_ms: ms(percentile(&lat, 0.99)),
-            max_ms: ms(lat.last().copied().unwrap_or(0)),
-            elapsed_s: 0.0,
-            throughput_rps: 0.0,
-        }
-    }
-
-    /// Stop accepting requests, drain the queue, join the workers, and
-    /// return the final stats.
-    pub fn shutdown(mut self) -> ServeStats {
+    /// Stop accepting requests, let the workers drain every queued
+    /// request (each pending ticket gets its answer), and join them.
+    /// Idempotent — eviction, registry shutdown, and `Drop` all funnel
+    /// here.
+    pub(crate) fn shutdown(&self) {
         {
             let mut st = self.shared.state.lock().unwrap();
             st.closed = true;
         }
         self.shared.not_empty.notify_all();
         self.shared.not_full.notify_all();
-        for w in self.workers.drain(..) {
+        let mut ws = self.workers.lock().unwrap();
+        for w in ws.drain(..) {
             let _ = w.join();
         }
-        self.stats()
     }
 }
 
-impl Drop for Server {
+impl Drop for Pool {
     fn drop(&mut self) {
-        if self.workers.is_empty() {
-            return; // already shut down
-        }
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.closed = true;
-        }
-        self.shared.not_empty.notify_all();
-        self.shared.not_full.notify_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
 }
 
-fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>) {
-    let mut engine = Engine::new(plan.clone());
+fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>,
+               int_prog: Arc<Program>, f32_prog: Arc<Program>) {
+    let mut engine = Engine::from_compiled(plan.clone(), int_prog,
+                                           f32_prog);
     engine.set_int_enabled(!shared.cfg.force_f32);
     let dim = plan.input_dim;
     let od = plan.output_dim;
@@ -386,7 +492,9 @@ fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>) {
                     stats.record_latency(lat);
                     // …and each response recycles its own request's
                     // input allocation as the output buffer handed
-                    // back through the ticket channel.
+                    // back through the ticket channel. A dropped
+                    // Ticket just makes this send fail — the worker
+                    // moves on, nothing wedges.
                     input.clear();
                     input.extend_from_slice(&out[i * od..(i + 1) * od]);
                     let _ = tx.send(Ok(input));
@@ -403,36 +511,78 @@ fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>) {
     }
 }
 
+/// The single-model batched inference server: a thin wrapper over a
+/// one-entry [`ModelRegistry`] with no plan-cache budget, preserving
+/// the original `start/submit/stats/shutdown` surface for the CLI,
+/// the golden tests, and embedders that host exactly one model.
+pub struct Server {
+    registry: Arc<ModelRegistry>,
+    id: String,
+    plan: Arc<EnginePlan>,
+}
+
+impl Server {
+    /// Register the plan under its model name; the worker pool spawns
+    /// lazily on the first request.
+    pub fn start(plan: Arc<EnginePlan>, cfg: ServeConfig)
+                 -> Result<Server> {
+        let registry = Arc::new(ModelRegistry::new());
+        let id = if plan.model.is_empty() {
+            "default".to_string()
+        } else {
+            plan.model.clone()
+        };
+        registry.register(&id, plan.clone(), cfg)?;
+        Ok(Server { registry, id, plan })
+    }
+
+    pub fn plan(&self) -> &EnginePlan {
+        &self.plan
+    }
+
+    /// The backing one-entry registry (shared stats JSON, tests).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Enqueue one request, blocking while the queue is at capacity
+    /// (backpressure), and return a [`Ticket`] for the response.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Ticket> {
+        self.registry.submit(&self.id, input)
+    }
+
+    /// Snapshot of the latency/batch statistics so far.
+    pub fn stats(&self) -> ServeStats {
+        self.registry.stats(&self.id).unwrap_or_default()
+    }
+
+    /// Stop accepting requests, drain the queue (every queued request
+    /// still gets its response), join the workers, and return the
+    /// final stats.
+    pub fn shutdown(self) -> ServeStats {
+        self.registry.shutdown();
+        self.registry.stats(&self.id).unwrap_or_default()
+    }
+}
+
 /// Closed-loop load driver: `clients` threads each submit
 /// `per_client` random requests back-to-back and wait for every
 /// response. Returns the server stats with throughput over the
-/// measured wall-clock window — what `bbits serve` reports.
+/// measured wall-clock window — what `bbits serve` reports. A thin
+/// single-model view of [`super::registry::closed_loop_router`],
+/// since the server is a one-entry registry.
 pub fn closed_loop(server: &Server, clients: usize, per_client: usize,
                    seed: u64) -> Result<ServeStats> {
-    let dim = server.plan().input_dim;
-    let t0 = Instant::now();
-    std::thread::scope(|scope| -> Result<()> {
-        let handles: Vec<_> = (0..clients)
-            .map(|c| {
-                scope.spawn(move || -> Result<()> {
-                    let mut rng = Pcg64::with_stream(seed, c as u64);
-                    for _ in 0..per_client {
-                        let x: Vec<f32> =
-                            (0..dim).map(|_| rng.normal()).collect();
-                        server.submit(x)?.wait()?;
-                    }
-                    Ok(())
-                })
-            })
-            .collect();
-        for h in handles {
-            h.join().map_err(|_| anyhow!("load client panicked"))??;
-        }
-        Ok(())
-    })?;
-    let elapsed = t0.elapsed().as_secs_f64();
-    let mut stats = server.stats();
-    stats.elapsed_s = elapsed;
+    let router =
+        super::registry::Router::new(server.registry.clone());
+    let ids = [server.id.clone()];
+    let (elapsed, mut per_model) = super::registry::closed_loop_router(
+        &router, &ids, clients, per_client, seed)?;
+    let mut stats =
+        per_model.pop().map(|(_, st)| st).unwrap_or_default();
+    // the counters are cumulative over the server's lifetime, but the
+    // throughput figure covers exactly this driver's window — a server
+    // with prior traffic must not inflate it
     stats.throughput_rps = if elapsed > 0.0 {
         (clients * per_client) as f64 / elapsed
     } else {
@@ -497,6 +647,10 @@ mod tests {
         assert!(Server::start(plan, bad).is_err());
     }
 
+    // Per-field ServeConfig validation (typed ServeConfigError) is
+    // pinned in tests/serve.rs (config_zero_fields_are_typed_errors_
+    // not_hangs) alongside the other lifecycle edges.
+
     #[test]
     fn closed_loop_counts_every_request() {
         let server = Server::start(
@@ -560,4 +714,30 @@ mod tests {
         assert_eq!((fin.requests, fin.batches, fin.errors), (0, 0, 0));
         assert_eq!(fin.max_ms, 0.0);
     }
+
+    #[test]
+    fn reservoir_keeps_cap_and_replaces_with_late_samples() {
+        let mut s = StatsInner::default();
+        let cap = 64usize;
+        // fill phase: first `cap` samples are marker 0
+        for _ in 0..cap {
+            s.record_latency_capped(0, cap);
+        }
+        assert_eq!(s.latencies_ns.len(), cap);
+        // replacement phase: 200x the cap, all marker 1. A uniform
+        // reservoir should end up ~ (200/201) marker-1; a broken
+        // replacement draw (e.g. always out of range) would keep the
+        // initial zeros forever.
+        for _ in 0..cap * 200 {
+            s.record_latency_capped(1, cap);
+        }
+        assert_eq!(s.latencies_ns.len(), cap);
+        assert_eq!(s.seen, (cap * 201) as u64);
+        let ones = s.latencies_ns.iter().filter(|v| **v == 1).count();
+        assert!(ones >= cap * 8 / 10,
+                "reservoir barely replaced: {ones}/{cap} late samples");
+    }
+
+    // bounded_draw range/uniformity is pinned in tests/serve.rs
+    // (bounded_draw_replaces_modulo_without_bias_artifacts).
 }

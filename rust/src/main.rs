@@ -5,6 +5,7 @@
 //! expose the underlying machinery for custom runs.
 
 
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
@@ -15,13 +16,16 @@ use bayesian_bits::config::{presets, Mode};
 use bayesian_bits::coordinator::checkpoint;
 use bayesian_bits::coordinator::sweep::{run_sweep, Job};
 use bayesian_bits::coordinator::trainer::Trainer;
+use bayesian_bits::engine::registry::{closed_loop_router, ModelRegistry,
+                                      Router};
 use bayesian_bits::engine::{self, serve};
 use bayesian_bits::experiments::{self, common::ExpOptions};
 use bayesian_bits::models::{descriptor, Preset};
 use bayesian_bits::bops::BopCounter;
 use bayesian_bits::quant::grid::{bb_quantize_host, QuantConfig};
 use bayesian_bits::report::{arch_viz, TableBuilder};
-use bayesian_bits::runtime::{Manifest, Runtime, TrainState};
+use bayesian_bits::runtime::{manifest_gen, Manifest, Runtime,
+                             TrainState};
 use bayesian_bits::util::bench::Bench;
 use bayesian_bits::util::json::Json;
 use bayesian_bits::util::logging;
@@ -159,12 +163,9 @@ fn cmd_plan(args: &Args, opt: &ExpOptions) -> Result<()> {
     Ok(())
 }
 
-/// `bbits serve` — lower a checkpoint (or a synthetic plan) into the
-/// integer engine and drive it with a closed-loop batched load.
-fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
-    let plan = plan_from_args(args, opt)?;
-    println!("{}", plan.report());
-
+/// The serve worker-pool knobs shared by the single- and multi-model
+/// paths of `bbits serve`.
+fn serve_config_from_args(args: &Args) -> Result<serve::ServeConfig> {
     let workers = args.usize_flag(
         "threads",
         std::thread::available_parallelism()
@@ -181,6 +182,91 @@ fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
         ),
         force_f32: args.bool_flag("no-int"),
     };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Resolve one multi-model `--model NAME=SPEC` spec into a lowered
+/// plan. SPEC grammar:
+///   `preset:MODEL`        in-process preset manifest (deterministic
+///                         weights, 8-bit chains, all channels kept)
+///   `MANIFEST.json:CKPT`  manifest file + trained checkpoint
+///   `MANIFEST.json`       manifest file; params from its init file
+///                         when present, a deterministic default init
+///                         otherwise
+fn plan_from_spec(spec: &str) -> Result<engine::EnginePlan> {
+    if let Some(model) = spec.strip_prefix("preset:") {
+        let (man, params) =
+            manifest_gen::preset_manifest(model, false, 42)?;
+        return engine::lower(&man, &params);
+    }
+    let (mpath, ckpt) = match spec.rsplit_once(':') {
+        // trailing colon: an empty checkpoint part, not part of the path
+        Some((m, "")) => (m, None),
+        Some((m, c)) => (m, Some(c)),
+        None => (spec, None),
+    };
+    let text = std::fs::read_to_string(mpath)
+        .with_context(|| format!("read manifest {mpath:?}"))?;
+    let dir = Path::new(mpath).parent().unwrap_or(Path::new("."));
+    let man = Manifest::from_json(&Json::parse(&text)?, dir)
+        .with_context(|| format!("parse manifest {mpath:?}"))?;
+    let params = match ckpt {
+        Some(c) => {
+            let (name, state) = checkpoint::load(Path::new(c))?;
+            if name != man.name {
+                bail!("checkpoint {c:?} is for {name:?}, manifest \
+                       {mpath:?} is {:?}", man.name);
+            }
+            state.params
+        }
+        // fall back to the deterministic default init only when the
+        // init file is genuinely absent — a present-but-corrupt one
+        // must error, not silently serve synthetic weights
+        None if man.init_file.exists() => man.load_init()?,
+        None => {
+            logging::info(format!(
+                "manifest {mpath:?}: no init file at {:?}, using the \
+                 deterministic default init",
+                man.init_file
+            ));
+            manifest_gen::default_init(&man, 42)
+        }
+    };
+    engine::lower(&man, &params)
+}
+
+/// `bbits serve` — lower a checkpoint (or a synthetic plan) into the
+/// integer engine and drive it with a closed-loop batched load.
+/// Repeated `--model NAME=SPEC` flags switch to the multi-model
+/// registry/router front-end with per-model stats and an optional
+/// `--plan-cache-mb` byte budget over the compiled programs.
+fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
+    let specs: Vec<(String, String)> = args
+        .repeated_flag("model")
+        .iter()
+        .filter_map(|v| {
+            v.split_once('=')
+                .map(|(n, s)| (n.to_string(), s.to_string()))
+        })
+        .collect();
+    if !specs.is_empty() {
+        if specs.len() != args.repeated_flag("model").len() {
+            bail!("cannot mix `--model NAME=SPEC` (multi-model) with \
+                   a plain `--model NAME`");
+        }
+        return cmd_serve_multi(args, opt, &specs);
+    }
+    if args.opt_flag("plan-cache-mb").is_some() {
+        bail!("--plan-cache-mb only applies to the multi-model form \
+               (repeat --model NAME=SPEC); a single-model server keeps \
+               its one compiled plan resident");
+    }
+
+    let plan = plan_from_args(args, opt)?;
+    println!("{}", plan.report());
+
+    let cfg = serve_config_from_args(args)?;
     let clients = args.usize_flag("clients", 8)?;
     let requests = args.usize_flag("requests", 200)?;
     logging::info(format!(
@@ -199,20 +285,91 @@ fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
     Ok(())
 }
 
+/// Multi-model serving: register every `NAME=SPEC`, route a
+/// closed-loop load across all of them, and report per-model stats
+/// plus the plan-cache counters.
+fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
+                   specs: &[(String, String)]) -> Result<()> {
+    let cfg = serve_config_from_args(args)?;
+    let registry = match args.opt_flag("plan-cache-mb") {
+        Some(_) => {
+            let mb = args.f64_flag("plan-cache-mb", 0.0)?;
+            if mb < 0.0 {
+                bail!("--plan-cache-mb must be >= 0, got {mb}");
+            }
+            Arc::new(ModelRegistry::with_budget(
+                (mb * 1024.0 * 1024.0) as usize,
+            ))
+        }
+        None => Arc::new(ModelRegistry::new()),
+    };
+    let mut ids = Vec::new();
+    for (name, spec) in specs {
+        let plan = plan_from_spec(spec)
+            .with_context(|| format!("--model {name}={spec}"))?;
+        println!("{}", plan.report());
+        registry.register(name, Arc::new(plan), cfg.clone())?;
+        ids.push(name.clone());
+    }
+    let clients = args.usize_flag("clients", 8)?;
+    let requests = args.usize_flag("requests", 200)?;
+    logging::info(format!(
+        "routing across {} models with {} workers/model (max batch {}, \
+         plan cache {}); {} clients x {} requests",
+        ids.len(), cfg.workers, cfg.max_batch,
+        match registry.budget_bytes() {
+            Some(b) => format!("{:.2} MiB", b as f64 / (1024.0 * 1024.0)),
+            None => "unbounded".into(),
+        },
+        clients, requests
+    ));
+    let router = Router::new(registry.clone());
+    let (elapsed, per_model) =
+        closed_loop_router(&router, &ids, clients, requests, 7)?;
+    for (id, st) in &per_model {
+        println!("[{id}] {st}");
+    }
+    let cache = registry.cache_stats();
+    println!(
+        "plan cache: {} hits, {} misses ({} recompiles), {} evictions, \
+         {} resident bytes over {:.2}s",
+        cache.hits, cache.misses, cache.recompiles, cache.evictions,
+        registry.resident_bytes(), elapsed
+    );
+    // registry stats JSON, with the load window's throughput numbers
+    // patched over the raw per-model snapshots
+    let mut json = registry.stats_json();
+    if let Json::Obj(top) = &mut json {
+        let models: BTreeMap<String, Json> = per_model
+            .iter()
+            .map(|(id, st)| (id.clone(), st.to_json()))
+            .collect();
+        top.insert("models".to_string(), Json::Obj(models));
+    }
+    let out = opt.out_path("serve_stats.json");
+    std::fs::write(&out, json.to_string())?;
+    logging::info(format!("serve stats written to {out:?}"));
+    registry.shutdown();
+    Ok(())
+}
+
 /// `bbits engine-bench` — packed integer GEMM and spatial conv vs the
 /// f32 fallbacks at every chain width on synthetic layers (GEMM sweep
 /// shared with `benches/bench_engine.rs`). The conv sweep writes the
 /// machine-readable `BENCH_conv.json` artifact.
 fn cmd_engine_bench(args: &Args) -> Result<()> {
+    let conv_only = args.bool_flag("conv-only");
+    let serve_only = args.bool_flag("serve-only");
+    if conv_only && serve_only {
+        bail!("--conv-only and --serve-only are mutually exclusive \
+               (together they would skip every sweep)");
+    }
+    let quick = args.bool_flag("quick");
     let rows = args.usize_flag("rows", 1024)?;
     let cols = args.usize_flag("cols", 1024)?;
     let batch = args.usize_flag("batch", 16)?;
-    let b = if args.bool_flag("quick") {
-        Bench::quick()
-    } else {
-        Bench::default()
-    };
-    if !args.bool_flag("conv-only") {
+    let b = if quick { Bench::quick() } else { Bench::default() };
+    if !conv_only && !serve_only {
         bayesian_bits::util::bench::header(&format!(
             "integer engine — {rows}x{cols} GEMM, batch {batch}"
         ));
@@ -223,26 +380,116 @@ fn cmd_engine_bench(args: &Args) -> Result<()> {
         }
     }
 
-    let hw = args.usize_flag("hw", 14)?;
-    let cin = args.usize_flag("cin", 32)?;
-    let cout = args.usize_flag("cout", 32)?;
-    let ksize = args.usize_flag("ksize", 3)?;
-    bayesian_bits::util::bench::header(&format!(
-        "integer engine — {hw}x{hw}x{cin}->{cout} k{ksize} spatial \
-         conv, batch {batch}"
-    ));
-    let conv = engine::conv_throughput_sweep(hw, cin, cout, ksize,
-                                             &[batch], &[2, 4, 8, 16],
-                                             &b)?;
-    for rec in &conv {
-        println!("{}", rec.line());
+    if !serve_only {
+        let hw = args.usize_flag("hw", 14)?;
+        let cin = args.usize_flag("cin", 32)?;
+        let cout = args.usize_flag("cout", 32)?;
+        let ksize = args.usize_flag("ksize", 3)?;
+        bayesian_bits::util::bench::header(&format!(
+            "integer engine — {hw}x{hw}x{cin}->{cout} k{ksize} spatial \
+             conv, batch {batch}"
+        ));
+        let conv = engine::conv_throughput_sweep(hw, cin, cout, ksize,
+                                                 &[batch],
+                                                 &[2, 4, 8, 16], &b)?;
+        for rec in &conv {
+            println!("{}", rec.line());
+        }
+        let out = Path::new("BENCH_conv.json");
+        bayesian_bits::util::bench::save_json(
+            out,
+            "spatial conv images/sec per bit-width config, int vs f32 \
+             fallback",
+            conv.iter().map(|r| r.to_json()).collect(),
+        )?;
+        println!("wrote {}", out.display());
     }
-    let out = Path::new("BENCH_conv.json");
+
+    if !conv_only {
+        serve_bench(quick)?;
+    }
+    Ok(())
+}
+
+/// Multi-model serve sweep behind `BENCH_serve.json`: a registry of
+/// synthetic models routed by a closed-loop load, once with an
+/// unbounded plan cache (steady-state per-model p50/p99) and once
+/// with a zero byte budget (worst-case eviction/recompile thrash).
+/// Each pass emits one record per model plus a `_cache` record with
+/// the plan-cache counters.
+fn serve_bench(quick: bool) -> Result<()> {
+    let model_dims: &[(&str, &[usize])] = &[
+        ("mlp_small", &[64, 128, 10]),
+        ("mlp_wide", &[96, 192, 16]),
+        ("mlp_deep", &[48, 96, 96, 8]),
+    ];
+    let (clients, per_client) = if quick { (2, 18) } else { (4, 120) };
+    let cfg = serve::ServeConfig {
+        workers: 2,
+        queue_cap: 64,
+        max_batch: 8,
+        deadline: std::time::Duration::from_millis(1),
+        force_f32: false,
+    };
+    bayesian_bits::util::bench::header(&format!(
+        "multi-model serving — {} models, {clients} clients x \
+         {per_client} requests",
+        model_dims.len()
+    ));
+    let mut records = Vec::new();
+    for (mode, registry) in [
+        ("unbounded", Arc::new(ModelRegistry::new())),
+        ("evict", Arc::new(ModelRegistry::with_budget(0))),
+    ] {
+        for (i, (name, dims)) in model_dims.iter().enumerate() {
+            let plan = engine::synthetic_plan(
+                name, dims, if i % 2 == 0 { 4 } else { 8 }, 8, 0.1,
+                17 + i as u64)?;
+            registry.register(name, Arc::new(plan), cfg.clone())?;
+        }
+        let ids: Vec<String> =
+            model_dims.iter().map(|(n, _)| n.to_string()).collect();
+        let router = Router::new(registry.clone());
+        let (elapsed, per_model) =
+            closed_loop_router(&router, &ids, clients, per_client, 7)?;
+        for (id, st) in &per_model {
+            println!("[{mode}/{id}] {st}");
+            records.push(bayesian_bits::util::json::obj(vec![
+                ("model", bayesian_bits::util::json::s(id)),
+                ("cache_mode", bayesian_bits::util::json::s(mode)),
+                ("requests", bayesian_bits::util::json::num(
+                    st.requests as f64)),
+                ("p50_ms", bayesian_bits::util::json::num(st.p50_ms)),
+                ("p99_ms", bayesian_bits::util::json::num(st.p99_ms)),
+                ("throughput_rps", bayesian_bits::util::json::num(
+                    st.throughput_rps)),
+            ]));
+        }
+        let cache = registry.cache_stats();
+        println!(
+            "[{mode}] plan cache: {} hits, {} misses ({} recompiles), \
+             {} evictions over {elapsed:.2}s",
+            cache.hits, cache.misses, cache.recompiles, cache.evictions
+        );
+        records.push(bayesian_bits::util::json::obj(vec![
+            ("model", bayesian_bits::util::json::s("_cache")),
+            ("cache_mode", bayesian_bits::util::json::s(mode)),
+            ("hits", bayesian_bits::util::json::num(cache.hits as f64)),
+            ("misses", bayesian_bits::util::json::num(
+                cache.misses as f64)),
+            ("recompiles", bayesian_bits::util::json::num(
+                cache.recompiles as f64)),
+            ("evictions", bayesian_bits::util::json::num(
+                cache.evictions as f64)),
+        ]));
+        registry.shutdown();
+    }
+    let out = Path::new("BENCH_serve.json");
     bayesian_bits::util::bench::save_json(
         out,
-        "spatial conv images/sec per bit-width config, int vs f32 \
-         fallback",
-        conv.iter().map(|r| r.to_json()).collect(),
+        "multi-model registry/router serving: per-model latency \
+         percentiles and plan-cache eviction counters",
+        records,
     )?;
     println!("wrote {}", out.display());
     Ok(())

@@ -1,0 +1,228 @@
+//! Deterministic in-process manifest generation: build a full
+//! Bayesian-Bits manifest (params + quantizers + layer table, spatial
+//! fields included) from a Rust model-preset descriptor — the same
+//! shapes the python exporter emits. Grown out of the integration-test
+//! support module so the serving CLI can register preset models
+//! (`bbits serve --model NAME=preset:MODEL`) without python artifacts;
+//! `tests/support/mod.rs` now delegates here.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::models::{descriptor, Preset};
+use crate::rng::Pcg64;
+use crate::runtime::Manifest;
+use crate::util::json::Json;
+
+struct ManifestBuilder {
+    params_json: Vec<String>,
+    quant_json: Vec<String>,
+    layers_json: Vec<String>,
+    params: Vec<f32>,
+    slot_offset: usize,
+    rng: Pcg64,
+}
+
+impl ManifestBuilder {
+    fn new(seed: u64) -> Self {
+        Self {
+            params_json: Vec::new(),
+            quant_json: Vec::new(),
+            layers_json: Vec::new(),
+            params: Vec::new(),
+            slot_offset: 0,
+            rng: Pcg64::new(seed),
+        }
+    }
+
+    fn param(&mut self, name: &str, shape: &[usize], group: char,
+             values: Vec<f32>) {
+        let size: usize = shape.iter().product();
+        assert_eq!(values.len(), size, "{name}");
+        let shape_s: Vec<String> =
+            shape.iter().map(|d| d.to_string()).collect();
+        self.params_json.push(format!(
+            "{{\"name\":\"{name}\",\"shape\":[{}],\"group\":\"{group}\",\
+             \"offset\":{},\"size\":{size}}}",
+            shape_s.join(","),
+            self.params.len()
+        ));
+        self.params.extend(values);
+    }
+
+    fn quantizer(&mut self, name: &str, kind: char, signed: bool,
+                 channels: usize, macs: u64) {
+        let n_slots = channels + 4;
+        self.quant_json.push(format!(
+            "{{\"name\":\"{name}\",\"kind\":\"{kind}\",\
+             \"signed\":{signed},\"channels\":{channels},\
+             \"levels\":[2,4,8,16,32],\"offset\":{},\
+             \"n_slots\":{n_slots},\"consumer_macs\":{macs}}}",
+            self.slot_offset
+        ));
+        self.slot_offset += n_slots;
+        // phi: channel slots open, chain -> 8 bit (z4, z8 open)
+        let mut phi = vec![6.0f32; channels];
+        phi.extend_from_slice(&[6.0, 6.0, -6.0, -6.0]);
+        self.param(&format!("{name}.phi"), &[n_slots], 'g', phi);
+        let beta = if kind == 'w' { 1.0 } else { 2.0 };
+        self.param(&format!("{name}.beta"), &[1], 's', vec![beta]);
+    }
+
+    fn normals(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal() * scale).collect()
+    }
+}
+
+/// Build a full manifest + parameter vector for one model preset.
+/// `legacy` emits the pre-spatial schema (no `ksize`/.../`pre` layer
+/// fields), as a pre-schema exporter would have written it. `seed`
+/// drives the weight init (the gate configuration is fixed: every
+/// channel kept, 8-bit chains).
+pub fn preset_manifest(model: &str, legacy: bool, seed: u64)
+                       -> Result<(Manifest, Vec<f32>)> {
+    let desc = descriptor(model, Preset::Small)?;
+    let input = match model {
+        "lenet5" => (16usize, 16usize, 1usize),
+        "vgg7" => (16, 16, 3),
+        _ => (24, 24, 3),
+    };
+    let classes = desc.last().unwrap().cout;
+    let mut b = ManifestBuilder::new(seed);
+    for l in &desc {
+        if l.act_q == format!("{}.in", l.name) {
+            b.quantizer(&l.act_q, 'a', false, 1, l.macs);
+        }
+        let (wshape, fan) = match &l.conv {
+            Some(m) => {
+                let cg = l.cin / m.groups;
+                (vec![m.ksize, m.ksize, cg, l.cout],
+                 m.ksize * m.ksize * cg)
+            }
+            None => (vec![l.cin, l.cout], l.cin),
+        };
+        let scale = (2.0 / fan as f32).sqrt();
+        let w = b.normals(fan * l.cout, scale);
+        b.param(&format!("{}.w", l.name), &wshape, 'w', w);
+        b.quantizer(&l.weight_q, 'w', true, l.cout, l.macs);
+        let bias = b.normals(l.cout, 0.05);
+        b.param(&format!("{}.b", l.name), &[l.cout], 'w', bias);
+    }
+    for l in &desc {
+        let spatial = match &l.conv {
+            Some(m) if !legacy => format!(
+                ",\"ksize\":{},\"stride\":{},\"padding\":\"{}\",\
+                 \"groups\":{},\"in_h\":{},\"in_w\":{}",
+                m.ksize, m.stride, m.padding.label(), m.groups, m.in_h,
+                m.in_w),
+            _ => String::new(),
+        };
+        let pre = if legacy || l.pre_ops.is_empty() {
+            String::new()
+        } else {
+            let ops: Vec<String> =
+                l.pre_ops.iter().map(|o| format!("\"{o}\"")).collect();
+            format!(",\"pre\":[{}]", ops.join(","))
+        };
+        b.layers_json.push(format!(
+            "{{\"name\":\"{}\",\"kind\":\"{}\",\"macs\":{},\
+             \"cin\":{},\"cout\":{},\"weight_q\":\"{}\",\
+             \"act_q\":\"{}\",\"residual_input\":{}{spatial}{pre}}}",
+            l.name, l.kind, l.macs, l.cin, l.cout, l.weight_q, l.act_q,
+            l.residual_input));
+    }
+    let lam: Vec<String> =
+        (0..b.slot_offset).map(|_| "1".to_string()).collect();
+    let text = format!(
+        "{{\"name\":\"{model}\",\"engine\":\"bb\",\"preset\":\"small\",\
+         \"batch\":4,\"n_params\":{},\"n_slots\":{},\
+         \"input_shape\":[{},{},{}],\"num_classes\":{classes},\
+         \"dataset\":{{\"name\":\"mnist_like\",\"input\":[{},{},{}],\
+         \"classes\":{classes},\"train\":8,\"test\":4}},\
+         \"params\":[{}],\"quantizers\":[{}],\"layers\":[{}],\
+         \"lam_base\":[{}],\"hlo_train\":\"t.hlo.txt\",\
+         \"hlo_eval\":\"e.hlo.txt\",\"init_file\":\"i.bin\"}}",
+        b.params.len(),
+        b.slot_offset,
+        input.0, input.1, input.2,
+        input.0, input.1, input.2,
+        b.params_json.join(","),
+        b.quant_json.join(","),
+        b.layers_json.join(","),
+        lam.join(","));
+    let man = Manifest::from_json(&Json::parse(&text)?,
+                                  Path::new("/tmp"))?;
+    Ok((man, b.params))
+}
+
+/// Deterministic servable parameter vector for an arbitrary manifest
+/// whose init file is unavailable: He-init weights seeded by `seed`,
+/// unit weight-grid / 2.0 activation-grid scales, and gate logits set
+/// to the preset-builder convention — every channel slot open, chain
+/// slots `[6, 6, -6, -6]` (an 8-bit chain) when the quantizer has the
+/// standard `channels + 4` phi layout, fully open otherwise.
+pub fn default_init(man: &Manifest, seed: u64) -> Vec<f32> {
+    let mut v = vec![0.0f32; man.n_params];
+    let mut rng = Pcg64::new(seed);
+    for p in &man.params {
+        let vals: Vec<f32> = match p.group {
+            'g' => vec![6.0; p.size],
+            's' => vec![1.0; p.size],
+            _ => {
+                let fan: usize = if p.shape.len() >= 2 {
+                    p.shape[..p.shape.len() - 1].iter().product()
+                } else {
+                    p.size
+                };
+                let scale = (2.0 / fan.max(1) as f32).sqrt();
+                (0..p.size).map(|_| rng.normal() * scale).collect()
+            }
+        };
+        v[p.offset..p.offset + p.size].copy_from_slice(&vals);
+    }
+    for q in &man.quantizers {
+        if let Ok(p) = man.param(&format!("{}.phi", q.name)) {
+            if p.size == q.channels + 4 {
+                let chain = p.offset + q.channels;
+                v[chain..chain + 4]
+                    .copy_from_slice(&[6.0, 6.0, -6.0, -6.0]);
+            }
+        }
+        if let Ok(p) = man.param(&format!("{}.beta", q.name)) {
+            v[p.offset] = if q.kind == 'w' { 1.0 } else { 2.0 };
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_manifest_validates_and_lowers() {
+        let (man, params) = preset_manifest("lenet5", false, 42).unwrap();
+        assert_eq!(man.name, "lenet5");
+        assert_eq!(params.len(), man.n_params);
+        let plan = crate::engine::lower(&man, &params).unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.input_dim, 16 * 16);
+        // unknown model is an error, not a panic
+        assert!(preset_manifest("nope", false, 1).is_err());
+    }
+
+    #[test]
+    fn default_init_produces_a_servable_config() {
+        let (man, _) = preset_manifest("lenet5", false, 42).unwrap();
+        let params = default_init(&man, 7);
+        assert_eq!(params.len(), man.n_params);
+        let plan = crate::engine::lower(&man, &params).unwrap();
+        plan.validate().unwrap();
+        // the builder convention pins an 8-bit chain, all channels kept
+        for l in &plan.layers {
+            assert_eq!(l.w_bits, 8, "{}", l.name);
+            assert_eq!(l.kept.len(), l.out_dim, "{}", l.name);
+        }
+    }
+}

@@ -8,6 +8,7 @@
 
 pub mod artifact;
 pub mod exec;
+pub mod manifest_gen;
 pub mod state;
 
 pub use artifact::{Manifest, ParamDesc, QuantDesc};

@@ -1,0 +1,152 @@
+//! Serving lifecycle edges: config validation, ticket drops, and
+//! shutdown draining. The happy-path serving behavior lives in the
+//! `engine::serve` unit tests and `tests/golden_e2e.rs`; this suite
+//! pins the ways a server can be *mis*used without wedging a worker
+//! or losing a queued request.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bayesian_bits::engine::serve::{bounded_draw, ServeConfig,
+                                   ServeConfigError, Server};
+use bayesian_bits::engine::{synthetic_plan, Engine, EnginePlan};
+
+fn tiny_plan() -> Arc<EnginePlan> {
+    Arc::new(synthetic_plan("t", &[8, 16, 4], 4, 8, 0.2, 9).unwrap())
+}
+
+#[test]
+fn config_zero_fields_are_typed_errors_not_hangs() {
+    let ok = ServeConfig::default();
+    assert_eq!(ok.validate(), Ok(()));
+    let cases = [
+        (ServeConfig { workers: 0, ..ok.clone() },
+         ServeConfigError::ZeroWorkers),
+        (ServeConfig { queue_cap: 0, ..ok.clone() },
+         ServeConfigError::ZeroQueueCap),
+        (ServeConfig { max_batch: 0, ..ok.clone() },
+         ServeConfigError::ZeroMaxBatch),
+        (ServeConfig { deadline: Duration::ZERO, ..ok.clone() },
+         ServeConfigError::ZeroDeadline),
+    ];
+    for (cfg, want) in cases {
+        assert_eq!(cfg.validate(), Err(want), "{cfg:?}");
+        // Server::start rejects the same configs up front — the error
+        // is the typed one, stringified through anyhow
+        let err = Server::start(tiny_plan(), cfg).unwrap_err();
+        assert!(format!("{err}").contains("serve config"), "{err}");
+    }
+}
+
+#[test]
+fn dropped_tickets_do_not_wedge_workers() {
+    let plan = tiny_plan();
+    let server = Server::start(
+        plan.clone(),
+        ServeConfig {
+            workers: 1,
+            queue_cap: 16,
+            max_batch: 4,
+            deadline: Duration::from_micros(200),
+            force_f32: false,
+        },
+    )
+    .unwrap();
+    // submit a burst and immediately drop every ticket: the response
+    // sends fail silently and the worker must keep going
+    for i in 0..8 {
+        let x: Vec<f32> =
+            (0..8).map(|j| ((i * 8 + j) as f32).cos()).collect();
+        drop(server.submit(x).unwrap());
+    }
+    // a later request on the same (single) worker still answers, and
+    // bit-exactly
+    let x: Vec<f32> = (0..8).map(|j| (j as f32).sin()).collect();
+    let want = Engine::new(plan).infer(&x).unwrap();
+    let got = server.submit(x).unwrap().wait().unwrap();
+    assert_eq!(got, want);
+    let stats = server.shutdown();
+    // every request — including the abandoned ones — was processed
+    assert_eq!(stats.requests, 9);
+    assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn shutdown_drains_queued_requests_deterministically() {
+    let plan = tiny_plan();
+    let server = Server::start(
+        plan.clone(),
+        ServeConfig {
+            workers: 1,
+            queue_cap: 64,
+            max_batch: 2,
+            deadline: Duration::from_micros(100),
+            force_f32: false,
+        },
+    )
+    .unwrap();
+    let mut eng = Engine::new(plan);
+    let mut tickets = Vec::new();
+    let mut want = Vec::new();
+    for i in 0..20 {
+        let x: Vec<f32> =
+            (0..8).map(|j| ((i * 8 + j) as f32 * 0.13).sin()).collect();
+        want.push(eng.infer(&x).unwrap());
+        tickets.push(server.submit(x).unwrap());
+    }
+    // shutdown with (very likely) queued work: it must block until
+    // the single worker has drained the queue, so by the time it
+    // returns EVERY ticket already has its answer — none dangle
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 20);
+    assert_eq!(stats.errors, 0);
+    for (t, w) in tickets.into_iter().zip(&want) {
+        assert_eq!(&t.wait().unwrap(), w, "ticket answered post-drain");
+    }
+}
+
+#[test]
+fn submitting_after_shutdown_errors_cleanly() {
+    let plan = tiny_plan();
+    let server =
+        Server::start(plan.clone(), ServeConfig::default()).unwrap();
+    // exercise one request so the pool actually spins up
+    let x: Vec<f32> = vec![0.5; 8];
+    server.submit(x.clone()).unwrap().wait().unwrap();
+    let registry = server.registry().clone();
+    let id = plan.model.clone();
+    server.shutdown();
+    // the registry behind the (consumed) server refuses new work
+    // instead of hanging on a dead pool
+    let err = registry.submit(&id, x).unwrap_err();
+    assert!(format!("{err}").contains("shut down"), "{err}");
+}
+
+#[test]
+fn bounded_draw_replaces_modulo_without_bias_artifacts() {
+    // range correctness at the extremes
+    assert_eq!(bounded_draw(0, 10), 0);
+    assert_eq!(bounded_draw(u64::MAX, 10), 9);
+    assert_eq!(bounded_draw(u64::MAX / 2, 2), 0);
+    assert_eq!(bounded_draw(u64::MAX / 2 + 2, 2), 1);
+    // distribution sanity over an LCG stream for a non-power-of-two
+    // bound: every bucket within 5% of uniform
+    let n = 7u64;
+    let draws = 350_000u64;
+    let mut x = 0x853C49E6748FEA9Bu64;
+    let mut counts = vec![0u64; n as usize];
+    for _ in 0..draws {
+        x = x
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let j = bounded_draw(x, n);
+        assert!(j < n);
+        counts[j as usize] += 1;
+    }
+    let expect = (draws / n) as i64;
+    for (b, c) in counts.iter().enumerate() {
+        let dev = (*c as i64 - expect).abs();
+        assert!(dev < expect / 20,
+                "bucket {b}: {c} vs ~{expect} (dev {dev})");
+    }
+}

@@ -1,0 +1,237 @@
+//! Multi-model registry/router battery: routing by model id,
+//! byte-budget LRU eviction with transparent recompilation, plan-cache
+//! counters, and isolation of per-model stats. Synthetic plans give
+//! deterministic integer outputs, so every served response is checked
+//! bit-exactly against a direct `Engine` oracle — including responses
+//! served *after* the model's compiled programs were evicted.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bayesian_bits::engine::registry::{closed_loop_router,
+                                      ModelRegistry, Router};
+use bayesian_bits::engine::serve::ServeConfig;
+use bayesian_bits::engine::{lower, synthetic_plan, Engine, EnginePlan};
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        workers: 2,
+        queue_cap: 32,
+        max_batch: 4,
+        deadline: Duration::from_micros(200),
+        force_f32: false,
+    }
+}
+
+fn plan_a() -> Arc<EnginePlan> {
+    Arc::new(synthetic_plan("a", &[8, 16, 4], 4, 8, 0.2, 9).unwrap())
+}
+
+fn plan_b() -> Arc<EnginePlan> {
+    Arc::new(synthetic_plan("b", &[6, 12, 3], 8, 8, 0.0, 4).unwrap())
+}
+
+fn input(dim: usize, salt: usize) -> Vec<f32> {
+    (0..dim).map(|j| ((salt * dim + j) as f32 * 0.31).sin()).collect()
+}
+
+#[test]
+fn routes_by_model_id_with_isolated_outputs_and_stats() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("a", plan_a(), cfg()).unwrap();
+    registry.register("b", plan_b(), cfg()).unwrap();
+    assert_eq!(registry.model_ids(), vec!["a", "b"]);
+
+    let mut ea = Engine::new(plan_a());
+    let mut eb = Engine::new(plan_b());
+    let router = Router::new(registry.clone());
+    // interleave submissions; responses must come from the right model
+    let mut pending = Vec::new();
+    for i in 0..6 {
+        let xa = input(8, i);
+        let xb = input(6, i);
+        let wa = ea.infer(&xa).unwrap();
+        let wb = eb.infer(&xb).unwrap();
+        pending.push((router.submit("a", xa).unwrap(), wa));
+        pending.push((router.submit("b", xb).unwrap(), wb));
+    }
+    for (t, want) in pending {
+        assert_eq!(t.wait().unwrap(), want);
+    }
+    // per-model stats are isolated; the aggregate sums them
+    let sa = registry.stats("a").unwrap();
+    let sb = registry.stats("b").unwrap();
+    assert_eq!(sa.requests, 6);
+    assert_eq!(sb.requests, 6);
+    assert_eq!((sa.errors, sb.errors), (0, 0));
+    let agg = registry.aggregate_stats();
+    assert_eq!(agg.requests, 12);
+    assert_eq!(agg.batches, sa.batches + sb.batches);
+    registry.shutdown();
+}
+
+#[test]
+fn zero_budget_lru_evicts_and_recompiles_transparently() {
+    let registry = Arc::new(ModelRegistry::with_budget(0));
+    registry.register("a", plan_a(), cfg()).unwrap();
+    registry.register("b", plan_b(), cfg()).unwrap();
+    assert_eq!(registry.is_resident("a"), Some(false));
+    assert_eq!(registry.resident_bytes(), 0);
+
+    let mut ea = Engine::new(plan_a());
+    let mut eb = Engine::new(plan_b());
+    let oracle_a: Vec<Vec<f32>> =
+        (0..3).map(|i| ea.infer(&input(8, i)).unwrap()).collect();
+    let oracle_b = eb.infer(&input(6, 0)).unwrap();
+
+    // 1) first submit to a: cold compile (miss), a resident
+    assert_eq!(registry.submit("a", input(8, 0)).unwrap()
+                   .wait().unwrap(), oracle_a[0]);
+    assert_eq!(registry.is_resident("a"), Some(true));
+    assert!(registry.resident_bytes() > 0);
+    // 2) submit to b: miss, and the zero budget evicts a
+    assert_eq!(registry.submit("b", input(6, 0)).unwrap()
+                   .wait().unwrap(), oracle_b);
+    assert_eq!(registry.is_resident("a"), Some(false));
+    assert_eq!(registry.is_resident("b"), Some(true));
+    // 3) back to a: recompile — the response is still bit-exact
+    assert_eq!(registry.submit("a", input(8, 1)).unwrap()
+                   .wait().unwrap(), oracle_a[1]);
+    assert_eq!(registry.is_resident("b"), Some(false));
+    // 4) a again while warm: a pure hit
+    assert_eq!(registry.submit("a", input(8, 2)).unwrap()
+                   .wait().unwrap(), oracle_a[2]);
+
+    let c = registry.cache_stats();
+    assert_eq!(c.hits, 1, "{c:?}");
+    assert_eq!(c.misses, 3, "{c:?}");
+    assert_eq!(c.recompiles, 1, "{c:?}");
+    assert_eq!(c.evictions, 2, "{c:?}");
+    // stats survived both evictions of a
+    assert_eq!(registry.stats("a").unwrap().requests, 3);
+    assert_eq!(registry.stats("b").unwrap().requests, 1);
+    registry.shutdown();
+    assert_eq!(registry.resident_bytes(), 0);
+}
+
+#[test]
+fn explicit_evict_then_serve_again() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("a", plan_a(), cfg()).unwrap();
+    let want = Engine::new(plan_a()).infer(&input(8, 5)).unwrap();
+    assert_eq!(registry.submit("a", input(8, 5)).unwrap()
+                   .wait().unwrap(), want);
+    assert!(registry.evict("a"));
+    assert_eq!(registry.is_resident("a"), Some(false));
+    // already cold / unknown: no-ops
+    assert!(!registry.evict("a"));
+    assert!(!registry.evict("nope"));
+    // next request recompiles
+    assert_eq!(registry.submit("a", input(8, 5)).unwrap()
+                   .wait().unwrap(), want);
+    assert_eq!(registry.cache_stats().recompiles, 1);
+}
+
+#[test]
+fn registration_and_routing_errors_are_typed_and_early() {
+    let registry = ModelRegistry::new();
+    registry.register("a", plan_a(), cfg()).unwrap();
+    // duplicate id
+    let err = registry.register("a", plan_b(), cfg()).unwrap_err();
+    assert!(format!("{err}").contains("already registered"), "{err}");
+    // empty id
+    assert!(registry.register("", plan_b(), cfg()).is_err());
+    // invalid config is rejected at registration, not first submit
+    let bad = ServeConfig { max_batch: 0, ..cfg() };
+    assert!(registry.register("c", plan_b(), bad).is_err());
+    // unknown model names the registered set
+    let err = registry.submit("zzz", vec![0.0; 8]).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("unknown model") && msg.contains("\"a\""),
+            "{msg}");
+    // wrong input width is rejected before any compile
+    let err = registry.submit("a", vec![0.0; 3]).unwrap_err();
+    assert!(format!("{err}").contains("wants 8"), "{err}");
+    assert_eq!(registry.is_resident("a"), Some(false));
+    // shutdown closes registration too
+    registry.shutdown();
+    assert!(registry.register("d", plan_b(), cfg()).is_err());
+    assert!(registry.submit("a", vec![0.0; 8]).is_err());
+}
+
+#[test]
+fn closed_loop_router_drives_every_model_and_fills_throughput() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("a", plan_a(), cfg()).unwrap();
+    registry.register("b", plan_b(), cfg()).unwrap();
+    let router = Router::new(registry.clone());
+    let ids = vec!["a".to_string(), "b".to_string()];
+    let (elapsed, per_model) =
+        closed_loop_router(&router, &ids, 4, 30, 11).unwrap();
+    assert!(elapsed > 0.0);
+    assert_eq!(per_model.len(), 2);
+    let total: u64 = per_model.iter().map(|(_, s)| s.requests).sum();
+    assert_eq!(total, 4 * 30);
+    for (id, st) in &per_model {
+        assert!(st.requests > 0, "{id} starved");
+        assert_eq!(st.errors, 0);
+        assert!(st.throughput_rps > 0.0);
+        assert_eq!(st.elapsed_s, elapsed);
+    }
+    // a cloned router routes to the same registry
+    let r2 = router.clone();
+    let want = Engine::new(plan_a()).infer(&input(8, 1)).unwrap();
+    assert_eq!(r2.submit("a", input(8, 1)).unwrap().wait().unwrap(),
+               want);
+    registry.shutdown();
+}
+
+#[test]
+fn stats_json_exposes_models_aggregate_and_cache() {
+    let registry = Arc::new(ModelRegistry::with_budget(0));
+    registry.register("a", plan_a(), cfg()).unwrap();
+    registry.register("b", plan_b(), cfg()).unwrap();
+    registry.submit("a", input(8, 0)).unwrap().wait().unwrap();
+    registry.submit("b", input(6, 0)).unwrap().wait().unwrap();
+    let j = registry.stats_json();
+    let models = j.get("models").unwrap();
+    assert_eq!(models.get("a").unwrap().get("requests").unwrap()
+                   .as_usize().unwrap(), 1);
+    assert_eq!(models.get("b").unwrap().get("requests").unwrap()
+                   .as_usize().unwrap(), 1);
+    assert_eq!(j.get("aggregate").unwrap().get("requests").unwrap()
+                   .as_usize().unwrap(), 2);
+    let cache = j.get("cache").unwrap();
+    assert_eq!(cache.get("misses").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(cache.get("evictions").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(cache.get("budget_bytes").unwrap().as_usize().unwrap(),
+               0);
+    // only b is resident under the zero budget
+    let resident = cache.get("resident_models").unwrap().as_arr()
+        .unwrap();
+    assert_eq!(resident.len(), 1);
+    assert_eq!(resident[0].as_str().unwrap(), "b");
+    // round-trips through the serializer
+    let text = j.to_string();
+    bayesian_bits::util::json::Json::parse(&text).unwrap();
+}
+
+#[test]
+fn preset_manifests_register_and_route_through_the_registry() {
+    // the same builder the CLI uses for `--model NAME=preset:MODEL`
+    let (man, params) = support::preset_manifest("lenet5", false);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_manifest("lenet", &man, &params, cfg()).unwrap();
+    let plan = registry.plan("lenet").unwrap();
+    assert_eq!(plan.input_dim, 16 * 16);
+    // oracle through a direct engine over the same lowering
+    let lowered = Arc::new(lower(&man, &params).unwrap());
+    let x = input(plan.input_dim, 3);
+    let want = Engine::new(lowered).infer(&x).unwrap();
+    let got = registry.submit("lenet", x).unwrap().wait().unwrap();
+    assert_eq!(got, want);
+    registry.shutdown();
+}

@@ -1,155 +1,24 @@
 //! Shared integration-test support: build a full Bayesian-Bits
 //! manifest (params + quantizers + layer table, spatial fields
 //! included) from each Rust model-preset descriptor — the same shapes
-//! the python exporter emits. Used by `tests/conv_parity.rs` (spatial
-//! lowering battery) and `tests/ir.rs` (execution-graph invariants).
+//! the python exporter emits. The builder itself moved into the
+//! library (`runtime::manifest_gen`) so the serving CLI can register
+//! preset models; this module keeps the historical test-facing
+//! signature. Used by `tests/conv_parity.rs` (spatial lowering
+//! battery), `tests/ir.rs` (execution-graph invariants), and
+//! `tests/serve_multi.rs` (registry/router battery).
 //!
 //! Included per-test-crate via `#[path = "support/mod.rs"]`, so keep
 //! everything here used by every includer or justify `allow(dead_code)`
 //! at the item.
 
-use std::path::Path;
-
-use bayesian_bits::models::{descriptor, Preset};
-use bayesian_bits::rng::Pcg64;
 use bayesian_bits::runtime::Manifest;
-use bayesian_bits::util::json::Json;
-
-pub struct ManifestBuilder {
-    params_json: Vec<String>,
-    quant_json: Vec<String>,
-    layers_json: Vec<String>,
-    params: Vec<f32>,
-    slot_offset: usize,
-    rng: Pcg64,
-}
-
-impl ManifestBuilder {
-    fn new(seed: u64) -> Self {
-        Self {
-            params_json: Vec::new(),
-            quant_json: Vec::new(),
-            layers_json: Vec::new(),
-            params: Vec::new(),
-            slot_offset: 0,
-            rng: Pcg64::new(seed),
-        }
-    }
-
-    fn param(&mut self, name: &str, shape: &[usize], group: char,
-             values: Vec<f32>) {
-        let size: usize = shape.iter().product();
-        assert_eq!(values.len(), size, "{name}");
-        let shape_s: Vec<String> =
-            shape.iter().map(|d| d.to_string()).collect();
-        self.params_json.push(format!(
-            "{{\"name\":\"{name}\",\"shape\":[{}],\"group\":\"{group}\",\
-             \"offset\":{},\"size\":{size}}}",
-            shape_s.join(","),
-            self.params.len()
-        ));
-        self.params.extend(values);
-    }
-
-    fn quantizer(&mut self, name: &str, kind: char, signed: bool,
-                 channels: usize, macs: u64) {
-        let n_slots = channels + 4;
-        self.quant_json.push(format!(
-            "{{\"name\":\"{name}\",\"kind\":\"{kind}\",\
-             \"signed\":{signed},\"channels\":{channels},\
-             \"levels\":[2,4,8,16,32],\"offset\":{},\
-             \"n_slots\":{n_slots},\"consumer_macs\":{macs}}}",
-            self.slot_offset
-        ));
-        self.slot_offset += n_slots;
-        // phi: channel slots open, chain -> 8 bit (z4, z8 open)
-        let mut phi = vec![6.0f32; channels];
-        phi.extend_from_slice(&[6.0, 6.0, -6.0, -6.0]);
-        self.param(&format!("{name}.phi"), &[n_slots], 'g', phi);
-        let beta = if kind == 'w' { 1.0 } else { 2.0 };
-        self.param(&format!("{name}.beta"), &[1], 's', vec![beta]);
-    }
-
-    fn normals(&mut self, n: usize, scale: f32) -> Vec<f32> {
-        (0..n).map(|_| self.rng.normal() * scale).collect()
-    }
-}
 
 /// Build a full manifest + parameter vector for one model preset.
 /// `legacy` emits the pre-spatial schema (no `ksize`/.../`pre` layer
 /// fields), as a pre-schema exporter would have written it.
 pub fn preset_manifest(model: &str, legacy: bool) -> (Manifest, Vec<f32>) {
-    let desc = descriptor(model, Preset::Small).unwrap();
-    let input = match model {
-        "lenet5" => (16usize, 16usize, 1usize),
-        "vgg7" => (16, 16, 3),
-        _ => (24, 24, 3),
-    };
-    let classes = desc.last().unwrap().cout;
-    let mut b = ManifestBuilder::new(42);
-    for l in &desc {
-        if l.act_q == format!("{}.in", l.name) {
-            b.quantizer(&l.act_q, 'a', false, 1, l.macs);
-        }
-        let (wshape, fan) = match &l.conv {
-            Some(m) => {
-                let cg = l.cin / m.groups;
-                (vec![m.ksize, m.ksize, cg, l.cout],
-                 m.ksize * m.ksize * cg)
-            }
-            None => (vec![l.cin, l.cout], l.cin),
-        };
-        let scale = (2.0 / fan as f32).sqrt();
-        let w = b.normals(fan * l.cout, scale);
-        b.param(&format!("{}.w", l.name), &wshape, 'w', w);
-        b.quantizer(&l.weight_q, 'w', true, l.cout, l.macs);
-        let bias = b.normals(l.cout, 0.05);
-        b.param(&format!("{}.b", l.name), &[l.cout], 'w', bias);
-    }
-    for l in &desc {
-        let spatial = match &l.conv {
-            Some(m) if !legacy => format!(
-                ",\"ksize\":{},\"stride\":{},\"padding\":\"{}\",\
-                 \"groups\":{},\"in_h\":{},\"in_w\":{}",
-                m.ksize, m.stride, m.padding.label(), m.groups, m.in_h,
-                m.in_w),
-            _ => String::new(),
-        };
-        let pre = if legacy || l.pre_ops.is_empty() {
-            String::new()
-        } else {
-            let ops: Vec<String> =
-                l.pre_ops.iter().map(|o| format!("\"{o}\"")).collect();
-            format!(",\"pre\":[{}]", ops.join(","))
-        };
-        b.layers_json.push(format!(
-            "{{\"name\":\"{}\",\"kind\":\"{}\",\"macs\":{},\
-             \"cin\":{},\"cout\":{},\"weight_q\":\"{}\",\
-             \"act_q\":\"{}\",\"residual_input\":{}{spatial}{pre}}}",
-            l.name, l.kind, l.macs, l.cin, l.cout, l.weight_q, l.act_q,
-            l.residual_input));
-    }
-    let lam: Vec<String> =
-        (0..b.slot_offset).map(|_| "1".to_string()).collect();
-    let text = format!(
-        "{{\"name\":\"{model}\",\"engine\":\"bb\",\"preset\":\"small\",\
-         \"batch\":4,\"n_params\":{},\"n_slots\":{},\
-         \"input_shape\":[{},{},{}],\"num_classes\":{classes},\
-         \"dataset\":{{\"name\":\"mnist_like\",\"input\":[{},{},{}],\
-         \"classes\":{classes},\"train\":8,\"test\":4}},\
-         \"params\":[{}],\"quantizers\":[{}],\"layers\":[{}],\
-         \"lam_base\":[{}],\"hlo_train\":\"t.hlo.txt\",\
-         \"hlo_eval\":\"e.hlo.txt\",\"init_file\":\"i.bin\"}}",
-        b.params.len(),
-        b.slot_offset,
-        input.0, input.1, input.2,
-        input.0, input.1, input.2,
-        b.params_json.join(","),
-        b.quant_json.join(","),
-        b.layers_json.join(","),
-        lam.join(","));
-    let man =
-        Manifest::from_json(&Json::parse(&text).unwrap(), Path::new("/tmp"))
-            .unwrap();
-    (man, b.params)
+    bayesian_bits::runtime::manifest_gen::preset_manifest(model, legacy,
+                                                          42)
+        .unwrap()
 }
