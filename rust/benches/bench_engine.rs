@@ -1,16 +1,20 @@
 //! Integer engine throughput: images/sec per bit-width config and
-//! batch size, integer path vs the f32 simulated-quant fallback.
+//! batch size — scalar vs SIMD integer kernel backends vs the f32
+//! simulated-quant fallback.
 //!
 //! The packed low-bit path wins on memory traffic (a 2-bit layer
 //! streams 16x fewer weight bytes than f32) and the win grows with
-//! batch size because each packed row is decoded once per batch.
-//! Emits `BENCH_engine.json` in the working directory — the
-//! machine-readable artifact perf tracking reads. The sweep itself is
+//! batch size because each packed row is decoded once per batch; the
+//! SIMD backend then widens the compute side (8 i32 multiply-adds per
+//! step, AVX2/NEON where the CPU has them) with bit-identical
+//! results. Emits `BENCH_engine.json` in the working directory — the
+//! machine-readable artifact perf tracking reads; every record
+//! carries a `backend` column. The sweep itself is
 //! `engine::throughput_sweep`, shared with `bbits engine-bench`.
 
 use std::path::Path;
 
-use bayesian_bits::engine::throughput_sweep;
+use bayesian_bits::engine::{throughput_sweep, BENCH_ENGINE_TITLE};
 use bayesian_bits::util::bench::{header, save_json, Bench};
 
 fn main() {
@@ -19,19 +23,20 @@ fn main() {
     const ROWS: usize = 2048;
     const COLS: usize = 2048;
     header(&format!(
-        "integer engine — {ROWS}x{COLS} layer, int vs f32 fallback"
+        "integer engine — {ROWS}x{COLS} layer, scalar/simd int vs f32"
     ));
     let quick = std::env::args().any(|a| a == "--quick");
     let b = if quick { Bench::quick() } else { Bench::default() };
 
+    // forced=None sweeps both integer backends plus the f32 reference
     let records =
-        throughput_sweep(ROWS, COLS, &[1, 16], &[2, 4, 8, 16], &b)
+        throughput_sweep(ROWS, COLS, &[1, 16], &[2, 4, 8, 16], None,
+                         &b)
             .unwrap();
     for rec in &records {
         println!("{}", rec.line());
     }
-    save_json(Path::new("BENCH_engine.json"),
-              "engine images/sec vs batch size per bit-width config",
+    save_json(Path::new("BENCH_engine.json"), BENCH_ENGINE_TITLE,
               records.iter().map(|r| r.to_json()).collect())
         .unwrap();
     println!("wrote BENCH_engine.json");

@@ -42,7 +42,7 @@ const VALUE_FLAGS: &[&str] = &[
     // engine / serving flags
     "checkpoint", "dims", "wbits", "abits", "prune", "max-batch",
     "deadline-ms", "queue-cap", "clients", "requests", "rows", "cols",
-    "batch", "hw", "cin", "cout", "ksize", "plan-cache-mb",
+    "batch", "hw", "cin", "cout", "ksize", "plan-cache-mb", "backend",
 ];
 
 impl Args {
@@ -204,17 +204,24 @@ Integer inference engine (rust/src/engine)
                   recompile; 0 keeps only the hot model resident)
                   --threads N --max-batch B --deadline-ms F
                   --queue-cap N --clients C --requests N [--no-int]
+                  --backend scalar|simd forces the integer kernel
+                  backend (default: BBITS_BACKEND env, then per-node
+                  auto selection; results are bit-identical)
   plan            lower a checkpoint (or synthetic spec, same flags as
                   serve) and print the plan report; --dump-ir prints
                   the compiled execution graphs (typed node list +
-                  scratch-arena map) for the int and f32 paths
-  engine-bench    packed integer GEMM + spatial conv vs f32 fallback
-                  throughput; writes BENCH_conv.json (records now
-                  include arena_bytes / peak_scratch_bytes) and a
-                  multi-model serve sweep to BENCH_serve.json
+                  scratch-arena map) for the int and f32 paths —
+                  integer kernel nodes carry their backend
+                  (gemm.simd / conv2d.simd / dwconv2d.simd)
+  engine-bench    packed integer GEMM + spatial conv, scalar vs simd
+                  integer backends vs the f32 fallback; writes
+                  BENCH_engine.json (GEMM sweep) and BENCH_conv.json
+                  (conv sweep) with a backend column per record, plus
+                  a multi-model serve sweep to BENCH_serve.json
                   (per-model p50/p99 + plan-cache eviction counters)
                   --rows N --cols N --batch B (GEMM; skip: --conv-only)
                   --hw N --cin N --cout N --ksize K (conv layer)
+                  --backend scalar|simd restricts the backend sweep
                   --serve-only runs just the serve sweep
 
 Utilities
@@ -305,6 +312,12 @@ mod tests {
         let p = parse("plan --dims 8,4 --dump-ir");
         assert_eq!(p.command, "plan");
         assert!(p.bool_flag("dump-ir"));
+        // the kernel-backend flag is registered (value form)
+        let b = parse("engine-bench --backend simd --rows 64");
+        assert_eq!(b.str_flag("backend", "x"), "simd");
+        assert_eq!(parse("serve --backend=scalar")
+                       .str_flag("backend", "x"),
+                   "scalar");
     }
 
     #[test]

@@ -27,6 +27,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use super::kernels::Backend;
 use super::{adapt_features_into, adapt_spatial_into, kernels,
             EnginePlan};
 use crate::quant::grid::CodeGrid;
@@ -128,13 +129,19 @@ pub enum Node {
     /// the reference path consumes.
     Dequantize { src: BufId, dst: BufId, step: f32 },
     /// Dense GEMM over the layer's kept rows. `int` selects packed
-    /// integer codes (i64 accumulators) vs simulated-quant f32 rows.
-    Gemm { layer: usize, src: BufId, dst: BufId, int: bool },
-    /// Spatial im2col convolution over kept rows (same `int` split).
-    Conv2d { layer: usize, src: BufId, dst: BufId, int: bool },
+    /// integer codes (i64 accumulators) vs simulated-quant f32 rows;
+    /// `backend` is the pass-assigned kernel implementation (always
+    /// [`Backend::Scalar`] on the f32 path — only the integer kernels
+    /// have SIMD forms).
+    Gemm { layer: usize, src: BufId, dst: BufId, int: bool,
+           backend: Backend },
+    /// Spatial im2col convolution over kept rows (same `int` and
+    /// `backend` split).
+    Conv2d { layer: usize, src: BufId, dst: BufId, int: bool,
+             backend: Backend },
     /// Depthwise integer fast path (`groups == in_c`); the f32
     /// reference runs depthwise layers through [`Node::Conv2d`].
-    DwConv2d { layer: usize, src: BufId, dst: BufId },
+    DwConv2d { layer: usize, src: BufId, dst: BufId, backend: Backend },
     /// i64 accumulators -> dense f32 channels: bias broadcast,
     /// kept-row scatter through the folded `s_w * s_a` requantize
     /// scale, optional ReLU. Pruned channel positions carry bias only.
@@ -215,6 +222,9 @@ impl Node {
         }
     }
 
+    /// Display name; integer kernel nodes carry their backend as a
+    /// suffix (`gemm.simd`), which is what `bbits plan --dump-ir`
+    /// prints and the CI backend smoke greps for.
     pub fn op_name(&self) -> &'static str {
         match self {
             Node::Pre { .. } => "pre",
@@ -224,15 +234,32 @@ impl Node {
             Node::AdaptFeatures { .. } => "adapt_features",
             Node::Quantize { .. } => "quantize",
             Node::Dequantize { .. } => "dequantize",
-            Node::Gemm { int: true, .. } => "gemm",
             Node::Gemm { int: false, .. } => "gemm.f32",
-            Node::Conv2d { int: true, .. } => "conv2d",
+            Node::Gemm { backend: Backend::Simd, .. } => "gemm.simd",
+            Node::Gemm { .. } => "gemm",
             Node::Conv2d { int: false, .. } => "conv2d.f32",
+            Node::Conv2d { backend: Backend::Simd, .. } => {
+                "conv2d.simd"
+            }
+            Node::Conv2d { .. } => "conv2d",
+            Node::DwConv2d { backend: Backend::Simd, .. } => {
+                "dwconv2d.simd"
+            }
             Node::DwConv2d { .. } => "dwconv2d",
             Node::Requant { .. } => "requant",
             Node::Epilogue { .. } => "epilogue",
             Node::RequantQuantize { .. } => "requant_quantize",
             Node::BiasFill { .. } => "bias_fill",
+        }
+    }
+
+    /// The pass-assigned kernel backend, for kernel nodes.
+    pub fn backend(&self) -> Option<Backend> {
+        match self {
+            Node::Gemm { backend, .. }
+            | Node::Conv2d { backend, .. }
+            | Node::DwConv2d { backend, .. } => Some(*backend),
+            _ => None,
         }
     }
 }
@@ -281,9 +308,20 @@ pub struct Program {
 impl Program {
     /// Compile a plan through the ordered pass pipeline (graph build
     /// -> pruned-channel elision -> pre-op materialization ->
-    /// quantize/requant fusion -> liveness + arena assignment).
+    /// quantize/requant fusion -> backend assignment -> liveness +
+    /// arena assignment). Kernel backends resolve from the
+    /// `BBITS_BACKEND` env override, falling back to per-node auto
+    /// selection.
     pub fn compile(plan: Arc<EnginePlan>, int_path: bool) -> Program {
-        super::passes::compile(plan, int_path)
+        super::passes::compile(plan, int_path, None)
+    }
+
+    /// [`Self::compile`] with every integer kernel node forced onto
+    /// one [`Backend`] (`None` keeps the env-then-auto resolution) —
+    /// the lever behind `--backend` and the differential test battery.
+    pub fn compile_with_backend(plan: Arc<EnginePlan>, int_path: bool,
+                                forced: Option<Backend>) -> Program {
+        super::passes::compile(plan, int_path, forced)
     }
 
     pub fn plan(&self) -> &EnginePlan {
@@ -474,7 +512,7 @@ impl Program {
                     *o = step * *v as f32;
                 }
             }
-            Node::Gemm { layer, src, dst, int } => {
+            Node::Gemm { layer, src, dst, int, backend } => {
                 let l = &layers[*layer];
                 let cols = l.in_dim;
                 if *int {
@@ -485,9 +523,12 @@ impl Program {
                     st.row.resize(cols, 0);
                     let (s0, s1) = self.range(*src, n);
                     let (d0, d1) = self.range(*dst, n);
-                    kernels::matmul_packed(packed, &st.i32a[s0..s1], n,
-                                           l.act.bits(), &mut st.row,
-                                           &mut st.i64a[d0..d1]);
+                    let mm = match backend {
+                        Backend::Simd => kernels::matmul_packed_simd,
+                        Backend::Scalar => kernels::matmul_packed,
+                    };
+                    mm(packed, &st.i32a[s0..s1], n, l.act.bits(),
+                       &mut st.row, &mut st.i64a[d0..d1]);
                 } else {
                     let (x, y) = Self::f32_pair(&self.bufs, &mut st.f32a,
                                                 *src, *dst, n);
@@ -495,7 +536,7 @@ impl Program {
                                         x, n, y);
                 }
             }
-            Node::Conv2d { layer, src, dst, int } => {
+            Node::Conv2d { layer, src, dst, int, backend } => {
                 let l = &layers[*layer];
                 let sp = l.spatial.as_ref().expect("conv without spatial");
                 let rows = l.kept.len();
@@ -516,10 +557,13 @@ impl Program {
                         kernels::low_bit_pair(packed.bits, l.act.bits());
                     let (s0, s1) = self.range(*src, n);
                     let (d0, d1) = self.range(*dst, n);
-                    kernels::conv2d_codes(&st.wrows, &l.kept, cpg, sp,
-                                          &st.i32a[s0..s1], n, low,
-                                          &mut st.patch,
-                                          &mut st.i64a[d0..d1]);
+                    let conv = match backend {
+                        Backend::Simd => kernels::conv2d_codes_simd,
+                        Backend::Scalar => kernels::conv2d_codes,
+                    };
+                    conv(&st.wrows, &l.kept, cpg, sp,
+                         &st.i32a[s0..s1], n, low, &mut st.patch,
+                         &mut st.i64a[d0..d1]);
                 } else {
                     st.patchf.resize(plen, 0.0);
                     let (x, y) = Self::f32_pair(&self.bufs, &mut st.f32a,
@@ -528,7 +572,7 @@ impl Program {
                                         n, &mut st.patchf, y);
                 }
             }
-            Node::DwConv2d { layer, src, dst } => {
+            Node::DwConv2d { layer, src, dst, backend } => {
                 let l = &layers[*layer];
                 let sp = l.spatial.as_ref().expect("dwconv without spatial");
                 let rows = l.kept.len();
@@ -546,9 +590,12 @@ impl Program {
                 let low = kernels::low_bit_pair(packed.bits, l.act.bits());
                 let (s0, s1) = self.range(*src, n);
                 let (d0, d1) = self.range(*dst, n);
-                kernels::dwconv2d_codes(&st.wrows, &l.kept, cpg, sp,
-                                        &st.i32a[s0..s1], n, low,
-                                        &mut st.i64a[d0..d1]);
+                let dw = match backend {
+                    Backend::Simd => kernels::dwconv2d_codes_simd,
+                    Backend::Scalar => kernels::dwconv2d_codes,
+                };
+                dw(&st.wrows, &l.kept, cpg, sp, &st.i32a[s0..s1], n,
+                   low, &mut st.i64a[d0..d1]);
             }
             Node::Requant { layer, src, dst, scale, relu } => {
                 let l = &layers[*layer];

@@ -28,6 +28,22 @@
 //! (`codes * step`), so int and f32 paths agree up to f32 accumulation
 //! error — the invariants `tests/engine_parity.rs` and
 //! `tests/conv_parity.rs` pin down.
+//!
+//! Every integer kernel exists twice: a scalar form whose inner dot
+//! is [`dot_codes`] — the untouched bit-exact arithmetic oracle — and
+//! a `_simd` form whose inner dot runs eight explicit accumulator
+//! lanes (`chunks_exact(LANES)` unrolling, with AVX2/NEON inner loops
+//! where the host CPU has them). The GEMM/conv loop drivers are
+//! shared and parameterized by the dot function (only the arithmetic
+//! differs between backends); the depthwise SIMD kernel restructures
+//! its loops (lanes across kept channels) and stays a separate body.
+//! Because both dot forms compute the *exact* integer sum and integer
+//! addition is associative, results are bit-identical;
+//! `tests/kernel_backends.rs` runs the differential battery that pins
+//! it. Which form a compiled node executes is the [`Backend`]
+//! discriminant the pass pipeline assigns (`engine::passes`).
+
+use anyhow::{bail, Result};
 
 use super::pack::PackedMatrix;
 use super::SpatialPlan;
@@ -64,6 +80,258 @@ pub fn low_bit_pair(w_bits: u32, a_bits: u32) -> bool {
     w_bits <= 8 && a_bits <= 8
 }
 
+// -------------------------------------------------------------------
+// Kernel backends (SIMD integer hot path)
+// -------------------------------------------------------------------
+
+/// Accumulator lane count of the vectorized integer kernels: 8 x i32
+/// is exactly one AVX2 register (two NEON q-registers), and the
+/// portable fallback unrolls the same eight explicit lanes, so every
+/// specialization accumulates the identical exact integer sums.
+pub const LANES: usize = 8;
+
+/// Which kernel implementation a compiled node executes. The scalar
+/// kernels are the bit-exact parity oracle; the SIMD kernels compute
+/// the same exact i64 accumulators with [`LANES`]-lane chunking, so
+/// outputs are bit-identical and the choice is purely a throughput
+/// lever. Assigned per node by the pass pipeline; forced globally by
+/// the `BBITS_BACKEND` env override or the `--backend` CLI flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Simd,
+}
+
+impl Backend {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Simd => "simd",
+        }
+    }
+
+    /// Parse the CLI/env spelling (`scalar` | `simd`).
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "scalar" => Ok(Backend::Scalar),
+            "simd" => Ok(Backend::Simd),
+            other => bail!(
+                "unknown kernel backend {other:?} (expected \"scalar\" \
+                 or \"simd\")"
+            ),
+        }
+    }
+
+    /// The `BBITS_BACKEND` override: force every integer kernel node
+    /// onto one backend. Unset falls back to per-node auto selection;
+    /// an invalid value warns and is ignored rather than silently
+    /// changing which kernels run.
+    pub fn from_env() -> Option<Backend> {
+        match std::env::var("BBITS_BACKEND") {
+            Ok(v) => match Backend::parse(&v) {
+                Ok(b) => Some(b),
+                Err(_) => {
+                    crate::util::logging::warn(format!(
+                        "ignoring BBITS_BACKEND={v:?} (expected \
+                         \"scalar\" or \"simd\")"
+                    ));
+                    None
+                }
+            },
+            Err(_) => None,
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_enabled() -> bool {
+    use std::sync::OnceLock;
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+/// One <= [`I32_BLOCK`] block of the low-bit path on the portable
+/// lanes: eight explicit i32 accumulators over `chunks_exact(LANES)`
+/// plus a scalar tail. Each lane sums at most `I32_BLOCK / LANES`
+/// products bounded by `127 * 255`, so a lane stays far inside i32
+/// range (the same bound that protects the scalar block).
+// on aarch64 the NEON form always wins, but the portable lanes stay
+// compiled (and unit-tested) as the specification of the lane split
+#[cfg_attr(target_arch = "aarch64", allow(dead_code))]
+fn dot_block_i32_portable(w: &[i32], a: &[i32]) -> i64 {
+    let mut lanes = [0i32; LANES];
+    let wc = w.chunks_exact(LANES);
+    let ac = a.chunks_exact(LANES);
+    let (wr, ar) = (wc.remainder(), ac.remainder());
+    for (wv, av) in wc.zip(ac) {
+        for (l, acc) in lanes.iter_mut().enumerate() {
+            *acc += wv[l] * av[l];
+        }
+    }
+    let mut tail = 0i32;
+    for (x, y) in wr.iter().zip(ar) {
+        tail += *x * *y;
+    }
+    lanes.iter().map(|v| *v as i64).sum::<i64>() + tail as i64
+}
+
+/// AVX2 specialization of [`dot_block_i32_portable`]: one
+/// `vpmulld`/`vpaddd` chain over the same eight lanes — identical
+/// exact sums, ~an 8-wide multiply per cycle instead of the SSE2
+/// baseline the autovectorizer gets.
+///
+/// # Safety
+/// The caller must have verified AVX2 is available on this CPU.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_block_i32_avx2(w: &[i32], a: &[i32]) -> i64 {
+    use std::arch::x86_64::*;
+    // bound by the shorter operand: a caller-side length mismatch
+    // degrades to the same truncated sum the scalar kernel computes
+    // instead of an out-of-bounds vector load
+    let len = w.len().min(a.len());
+    let n = len - len % LANES;
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i < n {
+        let wv = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+        let av = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(wv, av));
+        i += LANES;
+    }
+    let mut lanes = [0i32; LANES];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut tail = 0i32;
+    for j in n..len {
+        tail += w[j] * a[j];
+    }
+    lanes.iter().map(|v| *v as i64).sum::<i64>() + tail as i64
+}
+
+/// NEON specialization (baseline on aarch64, no runtime detection):
+/// two 4-lane multiply-accumulate chains — the same eight lanes.
+#[cfg(target_arch = "aarch64")]
+fn dot_block_i32_neon(w: &[i32], a: &[i32]) -> i64 {
+    // SAFETY: NEON is a mandatory aarch64 feature; every load is in
+    // bounds because `n` is limited by the shorter operand.
+    unsafe {
+        use std::arch::aarch64::*;
+        let len = w.len().min(a.len());
+        let n = len - len % LANES;
+        let mut acc0 = vdupq_n_s32(0);
+        let mut acc1 = vdupq_n_s32(0);
+        let mut i = 0;
+        while i < n {
+            let w0 = vld1q_s32(w.as_ptr().add(i));
+            let w1 = vld1q_s32(w.as_ptr().add(i + 4));
+            let a0 = vld1q_s32(a.as_ptr().add(i));
+            let a1 = vld1q_s32(a.as_ptr().add(i + 4));
+            acc0 = vmlaq_s32(acc0, w0, a0);
+            acc1 = vmlaq_s32(acc1, w1, a1);
+            i += LANES;
+        }
+        let mut tail = 0i32;
+        for j in n..len {
+            tail += w[j] * a[j];
+        }
+        vaddlvq_s32(acc0) + vaddlvq_s32(acc1) + tail as i64
+    }
+}
+
+/// Low-bit block dot on the best specialization this CPU has.
+/// Exactly one cfg block survives per target.
+#[inline]
+fn dot_block_i32(w: &[i32], a: &[i32]) -> i64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: guarded by the runtime AVX2 detection above.
+            unsafe { dot_block_i32_avx2(w, a) }
+        } else {
+            dot_block_i32_portable(w, a)
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        dot_block_i32_neon(w, a)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        dot_block_i32_portable(w, a)
+    }
+}
+
+/// Wide-operand path (16-bit operands go straight to i64): four
+/// explicit i64 lanes. AVX2/NEON have no 64-bit vector multiply worth
+/// the shuffle traffic, so the widening form stays portable — the win
+/// is breaking the single-accumulator dependency chain.
+fn dot_wide_i64(w: &[i32], a: &[i32]) -> i64 {
+    const W: usize = LANES / 2;
+    let mut lanes = [0i64; W];
+    let wc = w.chunks_exact(W);
+    let ac = a.chunks_exact(W);
+    let (wr, ar) = (wc.remainder(), ac.remainder());
+    for (wv, av) in wc.zip(ac) {
+        for (l, acc) in lanes.iter_mut().enumerate() {
+            *acc += wv[l] as i64 * av[l] as i64;
+        }
+    }
+    let mut total: i64 = lanes.iter().sum();
+    for (x, y) in wr.iter().zip(ar) {
+        total += *x as i64 * *y as i64;
+    }
+    total
+}
+
+/// [`dot_codes`] on the SIMD backend — bit-identical result (both
+/// forms compute the exact integer sum; integer addition is
+/// associative, so lane order cannot change it).
+#[inline]
+pub fn dot_codes_simd(w: &[i32], a: &[i32], low_bit: bool) -> i64 {
+    debug_assert_eq!(w.len(), a.len());
+    if low_bit {
+        let mut total = 0i64;
+        for (wb, ab) in w.chunks(I32_BLOCK).zip(a.chunks(I32_BLOCK)) {
+            total += dot_block_i32(wb, ab);
+        }
+        total
+    } else {
+        dot_wide_i64(w, a)
+    }
+}
+
+/// Shared GEMM driver: decode each packed row once, dot it against
+/// every sample. The inner `dot` is the only thing that differs
+/// between backends — the arithmetic oracle ([`dot_codes`]) and the
+/// lane-chunked form ([`dot_codes_simd`]) stay independent.
+fn matmul_packed_with(dot: fn(&[i32], &[i32], bool) -> i64,
+                      w: &PackedMatrix, acts: &[i32], n: usize,
+                      act_bits: u32, row_scratch: &mut [i32],
+                      y: &mut [i64]) {
+    let cols = w.cols;
+    let rows = w.rows;
+    debug_assert_eq!(acts.len(), n * cols);
+    debug_assert_eq!(y.len(), n * rows);
+    let low = low_bit_pair(w.bits, act_bits);
+    for r in 0..rows {
+        w.unpack_row_into(r, row_scratch);
+        let row = &row_scratch[..cols];
+        for s in 0..n {
+            y[s * rows + r] =
+                dot(row, &acts[s * cols..(s + 1) * cols], low);
+        }
+    }
+}
+
+/// [`matmul_packed`] on the SIMD backend: identical decode/loop
+/// structure, vectorized inner dot, bit-identical `y`.
+pub fn matmul_packed_simd(w: &PackedMatrix, acts: &[i32], n: usize,
+                          act_bits: u32, row_scratch: &mut [i32],
+                          y: &mut [i64]) {
+    matmul_packed_with(dot_codes_simd, w, acts, n, act_bits,
+                       row_scratch, y);
+}
+
 /// Packed matrix times a batch of code vectors.
 ///
 /// * `acts` — `n` activation-code vectors, flat `[n, cols]`;
@@ -75,19 +343,8 @@ pub fn low_bit_pair(w_bits: u32, a_bits: u32) -> bool {
 pub fn matmul_packed(w: &PackedMatrix, acts: &[i32], n: usize,
                      act_bits: u32, row_scratch: &mut [i32],
                      y: &mut [i64]) {
-    let cols = w.cols;
-    let rows = w.rows;
-    debug_assert_eq!(acts.len(), n * cols);
-    debug_assert_eq!(y.len(), n * rows);
-    let low = low_bit_pair(w.bits, act_bits);
-    for r in 0..rows {
-        w.unpack_row_into(r, row_scratch);
-        let row = &row_scratch[..cols];
-        for s in 0..n {
-            y[s * rows + r] =
-                dot_codes(row, &acts[s * cols..(s + 1) * cols], low);
-        }
-    }
+    matmul_packed_with(dot_codes, w, acts, n, act_bits, row_scratch,
+                       y);
 }
 
 /// Dense f32 matrix (`rows x cols`, row-major) times a batch of f32
@@ -142,22 +399,15 @@ pub fn extract_patch<T: Copy + Default>(x: &[T], sp: &SpatialPlan,
     }
 }
 
-/// Spatial integer convolution over decoded weight codes (im2col over
-/// codes).
-///
-/// * `w_rows` — `[rows, patch_len]` codes, decoded once per batch;
-/// * `kept` — dense output channel of each row, ascending (so rows of
-///   one group are contiguous and a patch is gathered once per
-///   (pixel, group));
-/// * `cout_per_group` — dense output channels per group;
-/// * `acts` — `n` NHWC activation-code tensors, flat `[n, in_len]`;
-/// * `low` — both operands <= 8 bits: blocked-i32 accumulation;
-/// * `patch` — caller scratch of at least `patch_len` slots;
-/// * `y` — flat `[n, out_pixels, rows]` exact accumulators.
+/// Shared im2col driver: one patch gather per (pixel, group), then
+/// every kept row of that group dotted with `dot` — again the only
+/// backend difference.
 #[allow(clippy::too_many_arguments)]
-pub fn conv2d_codes(w_rows: &[i32], kept: &[u32], cout_per_group: usize,
-                    sp: &SpatialPlan, acts: &[i32], n: usize, low: bool,
-                    patch: &mut [i32], y: &mut [i64]) {
+fn conv2d_codes_with(dot: fn(&[i32], &[i32], bool) -> i64,
+                     w_rows: &[i32], kept: &[u32],
+                     cout_per_group: usize, sp: &SpatialPlan,
+                     acts: &[i32], n: usize, low: bool,
+                     patch: &mut [i32], y: &mut [i64]) {
     let rows = kept.len();
     let plen = sp.patch_len();
     let in_len = sp.in_len();
@@ -177,13 +427,33 @@ pub fn conv2d_codes(w_rows: &[i32], kept: &[u32], cout_per_group: usize,
                         extract_patch(x, sp, g, oh, ow, patch);
                         cur_g = g;
                     }
-                    y[ybase + r] = dot_codes(
+                    y[ybase + r] = dot(
                         &w_rows[r * plen..(r + 1) * plen],
                         &patch[..plen], low);
                 }
             }
         }
     }
+}
+
+/// Spatial integer convolution over decoded weight codes (im2col over
+/// codes).
+///
+/// * `w_rows` — `[rows, patch_len]` codes, decoded once per batch;
+/// * `kept` — dense output channel of each row, ascending (so rows of
+///   one group are contiguous and a patch is gathered once per
+///   (pixel, group));
+/// * `cout_per_group` — dense output channels per group;
+/// * `acts` — `n` NHWC activation-code tensors, flat `[n, in_len]`;
+/// * `low` — both operands <= 8 bits: blocked-i32 accumulation;
+/// * `patch` — caller scratch of at least `patch_len` slots;
+/// * `y` — flat `[n, out_pixels, rows]` exact accumulators.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_codes(w_rows: &[i32], kept: &[u32], cout_per_group: usize,
+                    sp: &SpatialPlan, acts: &[i32], n: usize, low: bool,
+                    patch: &mut [i32], y: &mut [i64]) {
+    conv2d_codes_with(dot_codes, w_rows, kept, cout_per_group, sp,
+                      acts, n, low, patch, y);
 }
 
 /// Depthwise fast path (`groups == in_c`): each kept output channel
@@ -239,6 +509,100 @@ pub fn dwconv2d_codes(w_rows: &[i32], kept: &[u32],
                     }
                     y[ybase + r] =
                         if low { acc32 as i64 } else { acc };
+                }
+            }
+        }
+    }
+}
+
+/// [`conv2d_codes`] on the SIMD backend: the same im2col structure
+/// (one patch gather per (pixel, group)), vectorized row dots,
+/// bit-identical `y`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_codes_simd(w_rows: &[i32], kept: &[u32],
+                         cout_per_group: usize, sp: &SpatialPlan,
+                         acts: &[i32], n: usize, low: bool,
+                         patch: &mut [i32], y: &mut [i64]) {
+    conv2d_codes_with(dot_codes_simd, w_rows, kept, cout_per_group,
+                      sp, acts, n, low, patch, y);
+}
+
+/// [`dwconv2d_codes`] on the SIMD backend: the strided tap gather is
+/// inherently scatter-shaped along the patch, so the lanes run
+/// *across kept channels* instead — [`LANES`] rows accumulate
+/// together per output pixel, one tap at a time. Same exact per-row
+/// sums, bit-identical `y`.
+pub fn dwconv2d_codes_simd(w_rows: &[i32], kept: &[u32],
+                           cout_per_group: usize, sp: &SpatialPlan,
+                           acts: &[i32], n: usize, low: bool,
+                           y: &mut [i64]) {
+    debug_assert_eq!(sp.groups, sp.in_c);
+    let rows = kept.len();
+    let plen = sp.k * sp.k;
+    let in_len = sp.in_len();
+    let opix = sp.out_pixels();
+    debug_assert_eq!(w_rows.len(), rows * plen);
+    debug_assert_eq!(acts.len(), n * in_len);
+    debug_assert_eq!(y.len(), n * opix * rows);
+    // a row's k*k window fits one i32 lane at low widths (the scalar
+    // kernel's condition, trivially met: plen <= I32_BLOCK)
+    let low = low && plen <= I32_BLOCK;
+    for s in 0..n {
+        let x = &acts[s * in_len..(s + 1) * in_len];
+        for oh in 0..sp.out_h {
+            let ih0 = (oh * sp.stride) as isize - sp.pad_top as isize;
+            for ow in 0..sp.out_w {
+                let iw0 =
+                    (ow * sp.stride) as isize - sp.pad_left as isize;
+                let ybase = (s * opix + oh * sp.out_w + ow) * rows;
+                let mut r0 = 0;
+                while r0 < rows {
+                    let ln = LANES.min(rows - r0);
+                    // input channel each lane's row reads
+                    let mut ci = [0usize; LANES];
+                    for (l, c) in ci.iter_mut().enumerate().take(ln) {
+                        *c = kept[r0 + l] as usize / cout_per_group;
+                    }
+                    let mut acc32 = [0i32; LANES];
+                    let mut acc64 = [0i64; LANES];
+                    for kh in 0..sp.k {
+                        let ih = ih0 + kh as isize;
+                        if ih < 0 || ih as usize >= sp.in_h {
+                            continue;
+                        }
+                        let xrow = ih as usize * sp.in_w;
+                        for kw in 0..sp.k {
+                            let iw = iw0 + kw as isize;
+                            if iw < 0 || iw as usize >= sp.in_w {
+                                continue;
+                            }
+                            let xbase =
+                                (xrow + iw as usize) * sp.in_c;
+                            let tap = kh * sp.k + kw;
+                            if low {
+                                for l in 0..ln {
+                                    acc32[l] += w_rows
+                                        [(r0 + l) * plen + tap]
+                                        * x[xbase + ci[l]];
+                                }
+                            } else {
+                                for l in 0..ln {
+                                    acc64[l] += w_rows
+                                        [(r0 + l) * plen + tap]
+                                        as i64
+                                        * x[xbase + ci[l]] as i64;
+                                }
+                            }
+                        }
+                    }
+                    for l in 0..ln {
+                        y[ybase + r0 + l] = if low {
+                            acc32[l] as i64
+                        } else {
+                            acc64[l]
+                        };
+                    }
+                    r0 += ln;
                 }
             }
         }
@@ -321,6 +685,169 @@ mod tests {
             w.iter().zip(&a).map(|(x, y)| *x as i64 * *y as i64).sum();
         assert_eq!(dot_codes(&w, &a, true), want);
         assert_eq!(dot_codes(&w, &a, false), want);
+    }
+
+    #[test]
+    fn dot_codes_simd_bit_exact_vs_scalar_every_length() {
+        let mut rng = crate::rng::Pcg64::new(11);
+        // every remainder-lane shape up to a few vectors, plus block
+        // boundaries of the low-bit path
+        let mut sizes: Vec<usize> = (0..=3 * LANES + 1).collect();
+        sizes.extend([I32_BLOCK - 1, I32_BLOCK, I32_BLOCK + 1,
+                      2 * I32_BLOCK + 17]);
+        for n in sizes {
+            let w: Vec<i32> = (0..n)
+                .map(|_| (rng.next_u64() % 255) as i32 - 127)
+                .collect();
+            let a: Vec<i32> =
+                (0..n).map(|_| (rng.next_u64() % 256) as i32).collect();
+            for low in [true, false] {
+                assert_eq!(dot_codes_simd(&w, &a, low),
+                           dot_codes(&w, &a, low), "n={n} low={low}");
+            }
+            // wide operands exercise the i64 lanes for real
+            let w16: Vec<i32> = (0..n)
+                .map(|_| (rng.next_u64() % 65535) as i32 - 32767)
+                .collect();
+            let a16: Vec<i32> = (0..n)
+                .map(|_| (rng.next_u64() % 65536) as i32)
+                .collect();
+            assert_eq!(dot_codes_simd(&w16, &a16, false),
+                       dot_codes(&w16, &a16, false), "wide n={n}");
+        }
+    }
+
+    #[test]
+    fn matmul_packed_simd_bit_exact_vs_scalar() {
+        let mut rng = crate::rng::Pcg64::new(13);
+        for (bits, a_bits) in [(2u32, 8u32), (4, 4), (8, 8), (16, 16)] {
+            for cols in [1usize, 7, LANES, 3 * LANES + 1, 130] {
+                let rows = 5;
+                let n = 3;
+                let hi = (1i64 << (bits - 1)) - 1;
+                let codes: Vec<i64> = (0..rows * cols)
+                    .map(|_| {
+                        (rng.next_u64() % (2 * hi + 1) as u64) as i64
+                            - hi
+                    })
+                    .collect();
+                let w = PackedMatrix::pack(&codes, rows, cols, bits,
+                                           true)
+                    .unwrap();
+                let amax = (1i64 << a_bits) - 1;
+                let acts: Vec<i32> = (0..n * cols)
+                    .map(|_| {
+                        (rng.next_u64() % (amax + 1) as u64) as i32
+                    })
+                    .collect();
+                let mut scratch = vec![0i32; cols];
+                let mut ys = vec![0i64; n * rows];
+                let mut yv = vec![0i64; n * rows];
+                matmul_packed(&w, &acts, n, a_bits, &mut scratch,
+                              &mut ys);
+                matmul_packed_simd(&w, &acts, n, a_bits, &mut scratch,
+                                   &mut yv);
+                assert_eq!(ys, yv, "bits={bits} cols={cols}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_kernels_simd_bit_exact_vs_scalar() {
+        use crate::models::Padding;
+        let mut rng = crate::rng::Pcg64::new(17);
+        for (groups, stride) in [(1usize, 1usize), (2, 2), (3, 1)] {
+            let (in_h, in_w, cg, cout, k) = (5, 4, 3, 2 * groups, 3);
+            let in_c = groups * cg;
+            let sp = SpatialPlan::new(in_h, in_w, in_c, k, stride,
+                                      Padding::Same, groups)
+                .unwrap();
+            let plen = sp.patch_len();
+            let kept: Vec<u32> = (0..cout as u32).collect();
+            let w: Vec<i32> = (0..cout * plen)
+                .map(|_| (rng.next_u64() % 15) as i32 - 7)
+                .collect();
+            let n = 2;
+            let x: Vec<i32> = (0..n * sp.in_len())
+                .map(|_| (rng.next_u64() % 16) as i32)
+                .collect();
+            for low in [true, false] {
+                let mut patch = vec![0i32; plen];
+                let mut ys = vec![0i64; n * sp.out_pixels() * cout];
+                let mut yv = ys.clone();
+                conv2d_codes(&w, &kept, cout / groups, &sp, &x, n, low,
+                             &mut patch, &mut ys);
+                conv2d_codes_simd(&w, &kept, cout / groups, &sp, &x, n,
+                                  low, &mut patch, &mut yv);
+                assert_eq!(ys, yv, "g={groups} s={stride} low={low}");
+            }
+        }
+    }
+
+    #[test]
+    fn dwconv_simd_bit_exact_vs_scalar_with_pruning() {
+        use crate::models::Padding;
+        let mut rng = crate::rng::Pcg64::new(19);
+        // channel counts straddling the lane width, pruned subsets
+        for c in [3usize, LANES, LANES + 3, 2 * LANES + 1] {
+            let sp = SpatialPlan::new(5, 5, c, 3, 1, Padding::Same, c)
+                .unwrap();
+            let plen = sp.patch_len();
+            // prune every third channel (at least one survivor)
+            let kept: Vec<u32> = (0..c as u32)
+                .filter(|ch| ch % 3 != 1 || c < 3)
+                .collect();
+            let w: Vec<i32> = (0..kept.len() * plen)
+                .map(|_| (rng.next_u64() % 7) as i32 - 3)
+                .collect();
+            let n = 2;
+            let x: Vec<i32> = (0..n * sp.in_len())
+                .map(|_| (rng.next_u64() % 16) as i32)
+                .collect();
+            for low in [true, false] {
+                let mut ys =
+                    vec![0i64; n * sp.out_pixels() * kept.len()];
+                let mut yv = ys.clone();
+                dwconv2d_codes(&w, &kept, 1, &sp, &x, n, low, &mut ys);
+                dwconv2d_codes_simd(&w, &kept, 1, &sp, &x, n, low,
+                                    &mut yv);
+                assert_eq!(ys, yv, "c={c} low={low}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_block_specialization_matches_scalar() {
+        // pin each specialization directly, independent of what the
+        // runtime dispatcher picks on this host
+        let mut rng = crate::rng::Pcg64::new(23);
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let w: Vec<i32> = (0..n)
+                .map(|_| (rng.next_u64() % 255) as i32 - 127)
+                .collect();
+            let a: Vec<i32> =
+                (0..n).map(|_| (rng.next_u64() % 256) as i32).collect();
+            let want = dot_codes(&w, &a, false);
+            assert_eq!(dot_block_i32_portable(&w, &a), want, "n={n}");
+            assert_eq!(dot_wide_i64(&w, &a), want, "n={n}");
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_enabled() {
+                    // SAFETY: AVX2 presence just checked.
+                    let got = unsafe { dot_block_i32_avx2(&w, &a) };
+                    assert_eq!(got, want, "avx2 n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backend_parse_and_labels_round_trip() {
+        assert_eq!(Backend::parse("scalar").unwrap(), Backend::Scalar);
+        assert_eq!(Backend::parse("simd").unwrap(), Backend::Simd);
+        assert!(Backend::parse("avx512").is_err());
+        assert_eq!(Backend::Scalar.label(), "scalar");
+        assert_eq!(Backend::Simd.label(), "simd");
     }
 
     #[test]

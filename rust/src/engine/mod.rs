@@ -13,7 +13,10 @@
 //! * [`pack`] — bit-packed weight storage for the 2/4/8/16/32 chain;
 //! * [`kernels`] — packed-weight integer GEMM and im2col-over-codes
 //!   spatial convolution (i32/i64 accumulate, one requantize
-//!   multiply) plus the f32 simulated-quant fallbacks;
+//!   multiply) plus the f32 simulated-quant fallbacks; each integer
+//!   kernel exists as the scalar oracle and a bit-identical SIMD form
+//!   ([`Backend`]), selected per compiled node by the pass pipeline
+//!   and forceable via `BBITS_BACKEND` / `--backend`;
 //! * [`serve`] — the batched worker-pool core (micro-batching queue,
 //!   per-worker [`Engine`] instances over one shared compiled program
 //!   pair) plus the single-model [`Server`] wrapper;
@@ -68,6 +71,7 @@ use crate::util::json::{num, s as jstr, Json};
 use pack::PackedMatrix;
 
 pub use graph::{ExecState, Program};
+pub use kernels::Backend;
 pub use lower::{lower, lower_with_mode, synthetic_conv_plan,
                 synthetic_plan};
 pub use registry::{CacheStats, ModelRegistry, Router};
@@ -371,6 +375,9 @@ impl EnginePlan {
 pub struct SweepRecord {
     pub summary: Summary,
     pub int_path: bool,
+    /// Kernel backend the integer path ran (f32 records are always
+    /// scalar — the f32 kernels have no SIMD form).
+    pub backend: Backend,
     pub w_bits: u32,
     pub batch: usize,
     pub rows: usize,
@@ -391,6 +398,7 @@ impl SweepRecord {
     pub fn to_json(&self) -> Json {
         self.summary.to_json(vec![
             ("path", jstr(if self.int_path { "int" } else { "f32" })),
+            ("backend", jstr(self.backend.label())),
             ("w_bits", num(self.w_bits as f64)),
             ("a_bits", num(8.0)),
             ("batch", num(self.batch as f64)),
@@ -403,11 +411,32 @@ impl SweepRecord {
     }
 }
 
+/// `BENCH_engine.json` artifact title — one constant for its two
+/// writers (`bbits engine-bench` and `benches/bench_engine.rs`) so
+/// the machine-readable artifact's description cannot drift.
+pub const BENCH_ENGINE_TITLE: &str =
+    "engine images/sec per bit-width config, scalar vs simd integer \
+     backends vs f32 fallback";
+
+/// The (int_path, backend) execution configs a sweep measures: the
+/// scalar-vs-SIMD integer pair plus the f32 scalar reference, or just
+/// one integer backend (plus the reference) when forced.
+fn sweep_configs(forced: Option<Backend>) -> Vec<(bool, Backend)> {
+    match forced {
+        Some(b) => vec![(true, b), (false, Backend::Scalar)],
+        None => vec![(true, Backend::Scalar), (true, Backend::Simd),
+                     (false, Backend::Scalar)],
+    }
+}
+
 /// Int-vs-f32 throughput sweep on one synthetic `rows x cols` layer
-/// across weight widths and batch sizes — the single implementation
-/// behind `bbits engine-bench` and `benches/bench_engine.rs`.
+/// across weight widths, batch sizes, and kernel backends
+/// (scalar-vs-SIMD on the integer path; `forced` restricts to one) —
+/// the single implementation behind `bbits engine-bench` and
+/// `benches/bench_engine.rs`.
 pub fn throughput_sweep(rows: usize, cols: usize, batches: &[usize],
-                        wbits: &[u32], b: &Bench)
+                        wbits: &[u32], forced: Option<Backend>,
+                        b: &Bench)
                         -> Result<Vec<SweepRecord>> {
     let mut rng = crate::rng::Pcg64::new(3);
     let mut out = Vec::new();
@@ -418,8 +447,9 @@ pub fn throughput_sweep(rows: usize, cols: usize, batches: &[usize],
             let plan = Arc::new(synthetic_plan(
                 &format!("bench_w{wb}"), &[cols, rows], wb, 8, 0.0,
                 11)?);
-            for int_path in [true, false] {
-                let mut eng = Engine::new(plan.clone());
+            for (int_path, backend) in sweep_configs(forced) {
+                let mut eng =
+                    Engine::with_backend(plan.clone(), Some(backend));
                 eng.set_int_enabled(int_path);
                 let (arena_bytes, peak_scratch_bytes) = {
                     let p = eng.program(int_path);
@@ -427,7 +457,11 @@ pub fn throughput_sweep(rows: usize, cols: usize, batches: &[usize],
                 };
                 let label = format!(
                     "{} w{wb}a8 batch={batch} ({rows}x{cols})",
-                    if int_path { "int" } else { "f32" }
+                    if int_path {
+                        format!("int/{}", backend.label())
+                    } else {
+                        "f32".to_string()
+                    }
                 );
                 let summary = b.run(&label, || {
                     let y = eng.infer_batch(&xs, batch).unwrap();
@@ -438,6 +472,7 @@ pub fn throughput_sweep(rows: usize, cols: usize, batches: &[usize],
                 out.push(SweepRecord {
                     summary,
                     int_path,
+                    backend,
                     w_bits: wb,
                     batch,
                     rows,
@@ -456,6 +491,8 @@ pub fn throughput_sweep(rows: usize, cols: usize, batches: &[usize],
 pub struct ConvSweepRecord {
     pub summary: Summary,
     pub int_path: bool,
+    /// Kernel backend the integer path ran (f32 records are scalar).
+    pub backend: Backend,
     pub w_bits: u32,
     pub batch: usize,
     pub hw: usize,
@@ -477,6 +514,7 @@ impl ConvSweepRecord {
     pub fn to_json(&self) -> Json {
         self.summary.to_json(vec![
             ("path", jstr(if self.int_path { "int" } else { "f32" })),
+            ("backend", jstr(self.backend.label())),
             ("w_bits", num(self.w_bits as f64)),
             ("a_bits", num(8.0)),
             ("batch", num(self.batch as f64)),
@@ -493,11 +531,13 @@ impl ConvSweepRecord {
 
 /// Int-vs-f32 throughput sweep on one synthetic spatial conv layer
 /// (`hw x hw x cin -> cout`, SAME padding, stride 1) across weight
-/// widths and batch sizes — the measurement behind `BENCH_conv.json`
-/// (`bbits engine-bench`).
+/// widths, batch sizes, and kernel backends — the measurement behind
+/// `BENCH_conv.json` (`bbits engine-bench`).
+#[allow(clippy::too_many_arguments)]
 pub fn conv_throughput_sweep(hw: usize, cin: usize, cout: usize,
                              ksize: usize, batches: &[usize],
-                             wbits: &[u32], b: &Bench)
+                             wbits: &[u32], forced: Option<Backend>,
+                             b: &Bench)
                              -> Result<Vec<ConvSweepRecord>> {
     let mut rng = crate::rng::Pcg64::new(5);
     let in_len = hw * hw * cin;
@@ -509,8 +549,9 @@ pub fn conv_throughput_sweep(hw: usize, cin: usize, cout: usize,
             let plan = Arc::new(synthetic_conv_plan(
                 &format!("bench_conv_w{wb}"), hw, cin, cout, ksize, 1,
                 Padding::Same, 1, wb, 8, 0.0, 13)?);
-            for int_path in [true, false] {
-                let mut eng = Engine::new(plan.clone());
+            for (int_path, backend) in sweep_configs(forced) {
+                let mut eng =
+                    Engine::with_backend(plan.clone(), Some(backend));
                 eng.set_int_enabled(int_path);
                 let (arena_bytes, peak_scratch_bytes) = {
                     let p = eng.program(int_path);
@@ -519,7 +560,11 @@ pub fn conv_throughput_sweep(hw: usize, cin: usize, cout: usize,
                 let label = format!(
                     "{} conv w{wb}a8 batch={batch} \
                      ({hw}x{hw}x{cin}->{cout} k{ksize})",
-                    if int_path { "int" } else { "f32" }
+                    if int_path {
+                        format!("int/{}", backend.label())
+                    } else {
+                        "f32".to_string()
+                    }
                 );
                 let summary = b.run(&label, || {
                     let y = eng.infer_batch(&xs, batch).unwrap();
@@ -530,6 +575,7 @@ pub fn conv_throughput_sweep(hw: usize, cin: usize, cout: usize,
                 out.push(ConvSweepRecord {
                     summary,
                     int_path,
+                    backend,
                     w_bits: wb,
                     batch,
                     hw,
@@ -645,11 +691,23 @@ pub fn adapt_spatial(x: &[f32], from: (usize, usize, usize),
 /// Compile a plan into its two shareable execution graphs (integer
 /// path and f32 simulated-quant reference). The registry's serving
 /// workers all execute the *same* compiled pair for one model; only
-/// the [`ExecState`] arenas are per-worker.
+/// the [`ExecState`] arenas are per-worker. Kernel backends resolve
+/// from `BBITS_BACKEND`, then the per-node auto rule.
 pub fn compile_pair(plan: &Arc<EnginePlan>)
                     -> (Arc<Program>, Arc<Program>) {
-    (Arc::new(Program::compile(plan.clone(), true)),
-     Arc::new(Program::compile(plan.clone(), false)))
+    compile_pair_with(plan, None)
+}
+
+/// [`compile_pair`] with every integer kernel node forced onto one
+/// [`Backend`] (`None` keeps env-then-auto resolution) — the serving
+/// and bench plumbing behind `--backend`.
+pub fn compile_pair_with(plan: &Arc<EnginePlan>,
+                         forced: Option<Backend>)
+                         -> (Arc<Program>, Arc<Program>) {
+    (Arc::new(Program::compile_with_backend(plan.clone(), true,
+                                            forced)),
+     Arc::new(Program::compile_with_backend(plan.clone(), false,
+                                            forced)))
 }
 
 /// One inference executor: a shared read-only plan compiled once into
@@ -668,6 +726,15 @@ pub struct Engine {
 impl Engine {
     pub fn new(plan: Arc<EnginePlan>) -> Engine {
         let (int_prog, f32_prog) = compile_pair(&plan);
+        Engine::from_compiled(plan, int_prog, f32_prog)
+    }
+
+    /// [`Engine::new`] with every integer kernel node forced onto one
+    /// [`Backend`] (`None` keeps env-then-auto resolution) — what the
+    /// differential battery and the bench sweeps construct.
+    pub fn with_backend(plan: Arc<EnginePlan>, forced: Option<Backend>)
+                        -> Engine {
+        let (int_prog, f32_prog) = compile_pair_with(&plan, forced);
         Engine::from_compiled(plan, int_prog, f32_prog)
     }
 

@@ -18,17 +18,25 @@
 //!    consumed only by the next integer layer's `Quantize` becomes one
 //!    `RequantQuantize`, eliminating the intermediate activation
 //!    buffer between adjacent integer layers;
-//! 5. **liveness + arena assignment** (`engine::arena`) — disjoint
+//! 5. **backend assignment** — each integer kernel node gets its
+//!    [`Backend`] discriminant: a forced choice (`--backend` /
+//!    `BBITS_BACKEND`) when given, otherwise SIMD wherever the
+//!    kernel's lane dimension reaches [`kernels::LANES`] and scalar
+//!    below it (vector setup would outweigh sub-lane work);
+//! 6. **liveness + arena assignment** (`engine::arena`) — disjoint
 //!    live ranges share scratch space (ping-pong reuse).
 //!
 //! Numerics are untouched by every pass: each rewrite replays exactly
-//! the f32/integer operation sequence of the unfused graph, which is
-//! why `tests/golden_e2e.rs` stays bit-exact across the pipeline.
+//! the f32/integer operation sequence of the unfused graph (and the
+//! scalar/SIMD kernel pairs compute identical exact integer
+//! accumulators), which is why `tests/golden_e2e.rs` stays bit-exact
+//! across the pipeline on either backend.
 
 use std::sync::Arc;
 
 use super::arena;
 use super::graph::{BufId, BufSpec, DType, Node, PreStep, Program};
+use super::kernels::{self, Backend};
 use super::{ActSpec, EnginePlan, PlanLayer, PreOp};
 use crate::quant::grid::CodeGrid;
 
@@ -56,11 +64,13 @@ impl Draft {
     }
 }
 
-pub(crate) fn compile(plan: Arc<EnginePlan>, int_path: bool) -> Program {
+pub(crate) fn compile(plan: Arc<EnginePlan>, int_path: bool,
+                      forced: Option<Backend>) -> Program {
     let mut d = build(plan, int_path);
     elide_pruned(&mut d);
     materialize_pre(&mut d);
     fuse_requant_quantize(&mut d);
+    assign_backends(&mut d, forced.or_else(Backend::from_env));
     let layout = arena::assign(&mut d.bufs, &d.nodes, d.input, d.output);
     Program {
         plan: d.plan,
@@ -158,13 +168,19 @@ fn emit_layer(d: &mut Draft, li: usize, l: &PlanLayer, cur: BufId)
         let q = d.buf(DType::I32, in_len);
         d.push(Node::Quantize { src: cur, dst: q, grid }, li);
         let acc = d.buf(DType::I64, opix * rows);
+        // backends are assigned by the dedicated pass after fusion;
+        // Scalar here is just the placeholder
         let kernel = match &l.spatial {
             Some(sp) if sp.in_c == sp.groups => {
-                Node::DwConv2d { layer: li, src: q, dst: acc }
+                Node::DwConv2d { layer: li, src: q, dst: acc,
+                                 backend: Backend::Scalar }
             }
             Some(_) => Node::Conv2d { layer: li, src: q, dst: acc,
-                                      int: true },
-            None => Node::Gemm { layer: li, src: q, dst: acc, int: true },
+                                      int: true,
+                                      backend: Backend::Scalar },
+            None => Node::Gemm { layer: li, src: q, dst: acc,
+                                 int: true,
+                                 backend: Backend::Scalar },
         };
         d.push(kernel, li);
         let scale = l.w_scale as f64 * grid.step as f64;
@@ -187,11 +203,14 @@ fn emit_layer(d: &mut Draft, li: usize, l: &PlanLayer, cur: BufId)
             }
         };
         let acc = d.buf(DType::F32, opix * rows);
+        // the f32 kernels have no SIMD form — backend stays Scalar
         let kernel = match &l.spatial {
             Some(_) => Node::Conv2d { layer: li, src: acts, dst: acc,
-                                      int: false },
+                                      int: false,
+                                      backend: Backend::Scalar },
             None => Node::Gemm { layer: li, src: acts, dst: acc,
-                                 int: false },
+                                 int: false,
+                                 backend: Backend::Scalar },
         };
         d.push(kernel, li);
         d.push(Node::Epilogue { layer: li, src: acc, dst: out,
@@ -260,6 +279,46 @@ fn materialize_pre(d: &mut Draft) {
                 }
             }
             other => d.push(other, li),
+        }
+    }
+}
+
+/// Auto selection rule: SIMD pays off once the kernel's lane
+/// dimension fills at least one vector of accumulators.
+fn auto_backend(lane_dim: usize) -> Backend {
+    if lane_dim >= kernels::LANES {
+        Backend::Simd
+    } else {
+        Backend::Scalar
+    }
+}
+
+/// Pass 5: assign each integer kernel node its [`Backend`]. `forced`
+/// (CLI `--backend` or `BBITS_BACKEND`) overrides the per-node auto
+/// rule; f32 kernel nodes always stay scalar. The lane dimension is
+/// what the kernel's inner lanes actually run over: the GEMM row
+/// width, the conv im2col patch length, and the depthwise kernel's
+/// kept-channel count (its lanes run across rows).
+fn assign_backends(d: &mut Draft, forced: Option<Backend>) {
+    let plan = d.plan.clone();
+    for node in d.nodes.iter_mut() {
+        match node {
+            Node::Gemm { layer, int: true, backend, .. } => {
+                *backend = forced.unwrap_or_else(|| {
+                    auto_backend(plan.layers[*layer].in_dim)
+                });
+            }
+            Node::Conv2d { layer, int: true, backend, .. } => {
+                *backend = forced.unwrap_or_else(|| {
+                    auto_backend(plan.layers[*layer].in_dim)
+                });
+            }
+            Node::DwConv2d { layer, backend, .. } => {
+                *backend = forced.unwrap_or_else(|| {
+                    auto_backend(plan.layers[*layer].kept.len())
+                });
+            }
+            _ => {}
         }
     }
 }

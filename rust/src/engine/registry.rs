@@ -244,7 +244,8 @@ impl ModelRegistry {
         e.compiled_once = true;
         let (plan, cfg, stats) =
             (e.plan.clone(), e.cfg.clone(), e.stats.clone());
-        let (int_prog, f32_prog) = super::compile_pair(&plan);
+        let (int_prog, f32_prog) =
+            super::compile_pair_with(&plan, cfg.backend);
         // each worker's ExecState only ever materializes the arenas
         // of the path it executes, so the cache cost charges that
         // path alone (the other program's node list is negligible)

@@ -31,6 +31,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::graph::Program;
+use super::kernels::Backend;
 use super::registry::ModelRegistry;
 use super::{Engine, EnginePlan};
 use crate::util::json::{num, obj, Json};
@@ -48,6 +49,10 @@ pub struct ServeConfig {
     pub deadline: Duration,
     /// Run the f32 fallback instead of the integer path (A/B lever).
     pub force_f32: bool,
+    /// Force every integer kernel node onto one backend when this
+    /// model's programs compile (and recompile after eviction);
+    /// `None` resolves `BBITS_BACKEND`, then per-node auto selection.
+    pub backend: Option<Backend>,
 }
 
 impl Default for ServeConfig {
@@ -61,6 +66,7 @@ impl Default for ServeConfig {
             max_batch: 16,
             deadline: Duration::from_millis(2),
             force_f32: false,
+            backend: None,
         }
     }
 }
@@ -610,7 +616,7 @@ mod tests {
                 queue_cap: 32,
                 max_batch: 4,
                 deadline: Duration::from_millis(1),
-                force_f32: false,
+                ..ServeConfig::default()
             },
         )
         .unwrap();

@@ -145,19 +145,32 @@ fn plan_from_args(args: &Args, opt: &ExpOptions)
     }
 }
 
+/// The `--backend` flag: force every integer kernel node onto one
+/// backend (`scalar` | `simd`); absent means `BBITS_BACKEND`, then
+/// per-node auto selection. Shared by serve/plan/engine-bench.
+fn backend_from_args(args: &Args) -> Result<Option<engine::Backend>> {
+    match args.opt_flag("backend") {
+        None => Ok(None),
+        Some(s) => Ok(Some(engine::Backend::parse(s)?)),
+    }
+}
+
 /// `bbits plan` — lower a checkpoint (or a synthetic spec) and
 /// inspect the result without serving. `--dump-ir` additionally
 /// prints the compiled execution graphs (node list + arena map) for
-/// the integer path and the f32 reference path.
+/// the integer path and the f32 reference path; `--backend` forces
+/// the kernel backend the dumped integer nodes carry.
 fn cmd_plan(args: &Args, opt: &ExpOptions) -> Result<()> {
     let plan = plan_from_args(args, opt)?;
     println!("{}", plan.report());
     if args.bool_flag("dump-ir") {
+        let backend = backend_from_args(args)?;
         let plan = Arc::new(plan);
-        let int_prog =
-            engine::graph::Program::compile(plan.clone(), true);
+        let int_prog = engine::graph::Program::compile_with_backend(
+            plan.clone(), true, backend);
         println!("{}", int_prog.dump());
-        let f32_prog = engine::graph::Program::compile(plan, false);
+        let f32_prog = engine::graph::Program::compile_with_backend(
+            plan, false, backend);
         println!("{}", f32_prog.dump());
     }
     Ok(())
@@ -181,6 +194,7 @@ fn serve_config_from_args(args: &Args) -> Result<serve::ServeConfig> {
             args.f64_flag("deadline-ms", 2.0)?.max(0.0) / 1e3,
         ),
         force_f32: args.bool_flag("no-int"),
+        backend: backend_from_args(args)?,
     };
     cfg.validate()?;
     Ok(cfg)
@@ -353,10 +367,13 @@ fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
     Ok(())
 }
 
-/// `bbits engine-bench` — packed integer GEMM and spatial conv vs the
-/// f32 fallbacks at every chain width on synthetic layers (GEMM sweep
-/// shared with `benches/bench_engine.rs`). The conv sweep writes the
-/// machine-readable `BENCH_conv.json` artifact.
+/// `bbits engine-bench` — packed integer GEMM and spatial conv at
+/// every chain width on synthetic layers, sweeping the scalar and
+/// SIMD kernel backends against the f32 fallback (GEMM sweep shared
+/// with `benches/bench_engine.rs`). Writes the machine-readable
+/// `BENCH_engine.json` (GEMM) and `BENCH_conv.json` (conv) artifacts,
+/// each record carrying a `backend` column; `--backend` restricts the
+/// sweep to one backend.
 fn cmd_engine_bench(args: &Args) -> Result<()> {
     let conv_only = args.bool_flag("conv-only");
     let serve_only = args.bool_flag("serve-only");
@@ -368,16 +385,25 @@ fn cmd_engine_bench(args: &Args) -> Result<()> {
     let rows = args.usize_flag("rows", 1024)?;
     let cols = args.usize_flag("cols", 1024)?;
     let batch = args.usize_flag("batch", 16)?;
+    let backend = backend_from_args(args)?;
     let b = if quick { Bench::quick() } else { Bench::default() };
     if !conv_only && !serve_only {
         bayesian_bits::util::bench::header(&format!(
             "integer engine — {rows}x{cols} GEMM, batch {batch}"
         ));
-        for rec in engine::throughput_sweep(rows, cols, &[batch],
-                                            &[2, 4, 8, 16], &b)?
-        {
+        let gemm = engine::throughput_sweep(rows, cols, &[batch],
+                                            &[2, 4, 8, 16], backend,
+                                            &b)?;
+        for rec in &gemm {
             println!("{}", rec.line());
         }
+        let out = Path::new("BENCH_engine.json");
+        bayesian_bits::util::bench::save_json(
+            out,
+            engine::BENCH_ENGINE_TITLE,
+            gemm.iter().map(|r| r.to_json()).collect(),
+        )?;
+        println!("wrote {}", out.display());
     }
 
     if !serve_only {
@@ -391,15 +417,16 @@ fn cmd_engine_bench(args: &Args) -> Result<()> {
         ));
         let conv = engine::conv_throughput_sweep(hw, cin, cout, ksize,
                                                  &[batch],
-                                                 &[2, 4, 8, 16], &b)?;
+                                                 &[2, 4, 8, 16],
+                                                 backend, &b)?;
         for rec in &conv {
             println!("{}", rec.line());
         }
         let out = Path::new("BENCH_conv.json");
         bayesian_bits::util::bench::save_json(
             out,
-            "spatial conv images/sec per bit-width config, int vs f32 \
-             fallback",
+            "spatial conv images/sec per bit-width config, scalar vs \
+             simd integer backends vs f32 fallback",
             conv.iter().map(|r| r.to_json()).collect(),
         )?;
         println!("wrote {}", out.display());
@@ -429,7 +456,7 @@ fn serve_bench(quick: bool) -> Result<()> {
         queue_cap: 64,
         max_batch: 8,
         deadline: std::time::Duration::from_millis(1),
-        force_f32: false,
+        ..serve::ServeConfig::default()
     };
     bayesian_bits::util::bench::header(&format!(
         "multi-model serving — {} models, {clients} clients x \

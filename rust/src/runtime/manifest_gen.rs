@@ -75,18 +75,29 @@ impl ManifestBuilder {
     }
 }
 
-/// Build a full manifest + parameter vector for one model preset.
-/// `legacy` emits the pre-spatial schema (no `ksize`/.../`pre` layer
-/// fields), as a pre-schema exporter would have written it. `seed`
-/// drives the weight init (the gate configuration is fixed: every
-/// channel kept, 8-bit chains).
+/// Build a full manifest + parameter vector for one model preset at
+/// the small (test) scale. `legacy` emits the pre-spatial schema (no
+/// `ksize`/.../`pre` layer fields), as a pre-schema exporter would
+/// have written it. `seed` drives the weight init (the gate
+/// configuration is fixed: every channel kept, 8-bit chains).
 pub fn preset_manifest(model: &str, legacy: bool, seed: u64)
                        -> Result<(Manifest, Vec<f32>)> {
-    let desc = descriptor(model, Preset::Small)?;
-    let input = match model {
-        "lenet5" => (16usize, 16usize, 1usize),
-        "vgg7" => (16, 16, 3),
-        _ => (24, 24, 3),
+    preset_manifest_at(model, legacy, seed, Preset::Small)
+}
+
+/// [`preset_manifest`] at an explicit descriptor scale —
+/// `Preset::Paper` builds the full paper-scale network (e.g.
+/// ResNet18 over 224x224x3 with ~11M weights), the manifest the
+/// paper-scale end-to-end lowering test pushes through the IR.
+pub fn preset_manifest_at(model: &str, legacy: bool, seed: u64,
+                          preset: Preset)
+                          -> Result<(Manifest, Vec<f32>)> {
+    let desc = descriptor(model, preset)?;
+    // input map: the first layer's recorded conv geometry (identical
+    // to the historical per-model match at the small preset)
+    let input = match desc.first().and_then(|l| l.conv.as_ref()) {
+        Some(m) => (m.in_h, m.in_w, desc[0].cin),
+        None => (1, 1, desc.first().map(|l| l.cin).unwrap_or(1)),
     };
     let classes = desc.last().unwrap().cout;
     let mut b = ManifestBuilder::new(seed);
@@ -134,8 +145,13 @@ pub fn preset_manifest(model: &str, legacy: bool, seed: u64)
     }
     let lam: Vec<String> =
         (0..b.slot_offset).map(|_| "1".to_string()).collect();
+    let preset_label = match preset {
+        Preset::Small => "small",
+        Preset::Paper => "paper",
+    };
     let text = format!(
-        "{{\"name\":\"{model}\",\"engine\":\"bb\",\"preset\":\"small\",\
+        "{{\"name\":\"{model}\",\"engine\":\"bb\",\
+         \"preset\":\"{preset_label}\",\
          \"batch\":4,\"n_params\":{},\"n_slots\":{},\
          \"input_shape\":[{},{},{}],\"num_classes\":{classes},\
          \"dataset\":{{\"name\":\"mnist_like\",\"input\":[{},{},{}],\
@@ -210,6 +226,21 @@ mod tests {
         assert_eq!(plan.input_dim, 16 * 16);
         // unknown model is an error, not a panic
         assert!(preset_manifest("nope", false, 1).is_err());
+    }
+
+    #[test]
+    fn paper_preset_manifest_lowers_at_full_scale() {
+        let (man, params) =
+            preset_manifest_at("lenet5", false, 42,
+                               crate::models::Preset::Paper)
+                .unwrap();
+        assert_eq!(man.preset, "paper");
+        assert_eq!(params.len(), man.n_params);
+        let plan = crate::engine::lower(&man, &params).unwrap();
+        plan.validate().unwrap();
+        // paper lenet5 runs on 28x28 MNIST-scale inputs
+        assert_eq!(plan.input_dim, 28 * 28);
+        assert_eq!(plan.output_dim, 10);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use bayesian_bits::engine::graph::{Node, Program};
 use bayesian_bits::engine::lower::{self, build_layer};
 use bayesian_bits::engine::{synthetic_conv_plan, synthetic_plan,
-                            ActSpec, Engine, EnginePlan};
+                            ActSpec, Backend, Engine, EnginePlan};
 use bayesian_bits::models::Padding;
 use bayesian_bits::quant::grid::quantize_codes_host;
 use support::preset_manifest;
@@ -335,13 +335,62 @@ fn ir_executor_matches_manual_integer_pipeline_bit_exactly() {
 fn dump_lists_nodes_and_arena_map() {
     let (man, params) = preset_manifest("lenet5", false);
     let plan = Arc::new(lower::lower(&man, &params).unwrap());
-    let prog = Program::compile(plan, true);
+    let prog = Program::compile_with_backend(plan.clone(), true,
+                                             Some(Backend::Simd));
     let dump = prog.dump();
     assert!(dump.contains("lenet5"), "{dump}");
     assert!(dump.contains("arena"), "{dump}");
     assert!(dump.contains("maxpool2"), "{dump}");
     assert!(dump.contains("requant_quantize"), "{dump}");
     assert!(dump.contains("conv1"), "{dump}");
+    // kernel nodes print their backend discriminant (CI greps this)
+    assert!(dump.contains("conv2d.simd"), "{dump}");
+    assert!(dump.contains("gemm.simd"), "{dump}");
     // one line per node plus header/footer
     assert!(dump.lines().count() >= prog.nodes().len() + 3, "{dump}");
+    // the scalar compile prints undecorated kernel names
+    let prog = Program::compile_with_backend(plan, true,
+                                             Some(Backend::Scalar));
+    let dump = prog.dump();
+    assert!(!dump.contains(".simd"), "{dump}");
+    assert!(dump.contains("conv2d"), "{dump}");
+}
+
+#[test]
+fn backend_auto_rule_splits_on_lane_width() {
+    use bayesian_bits::engine::kernels::LANES;
+    // sub-lane rows stay scalar, lane-filling rows go SIMD — only
+    // when nothing forces a backend
+    let plan = Arc::new(
+        synthetic_plan("mix", &[LANES - 1, LANES, 4 * LANES, 10], 4, 8,
+                       0.0, 3)
+            .unwrap());
+    let prog = Program::compile_with_backend(plan.clone(), true, None);
+    if std::env::var("BBITS_BACKEND").is_err() {
+        let got: Vec<Backend> = prog
+            .nodes()
+            .iter()
+            .filter_map(|n| n.backend())
+            .collect();
+        // layer widths (in_dim) are LANES-1, LANES, 4*LANES
+        assert_eq!(got,
+                   vec![Backend::Scalar, Backend::Simd, Backend::Simd]);
+    }
+    // a forced compile overrides the rule on every kernel node
+    for forced in [Backend::Scalar, Backend::Simd] {
+        let prog = Program::compile_with_backend(plan.clone(), true,
+                                                 Some(forced));
+        for n in prog.nodes() {
+            if let Some(b) = n.backend() {
+                assert_eq!(b, forced);
+            }
+        }
+    }
+    // the f32 reference path never carries a SIMD kernel
+    let prog = Program::compile_with_backend(plan, false,
+                                             Some(Backend::Simd));
+    for n in prog.nodes() {
+        assert_ne!(n.backend(), Some(Backend::Simd), "{}",
+                   n.op_name());
+    }
 }

@@ -7,8 +7,13 @@ use std::collections::BTreeMap;
 
 use bayesian_bits::bops::{BopCounter, QuantState};
 use bayesian_bits::data::synth::{generate, DatasetSpec};
-use bayesian_bits::engine::kernels::{dot_codes, extract_patch,
-                                     low_bit_pair};
+use bayesian_bits::engine::kernels::{conv2d_codes, conv2d_codes_simd,
+                                     dot_codes, dot_codes_simd,
+                                     dwconv2d_codes,
+                                     dwconv2d_codes_simd,
+                                     extract_patch, low_bit_pair,
+                                     matmul_packed, matmul_packed_simd,
+                                     LANES};
 use bayesian_bits::engine::pack::{code_range, PackedMatrix};
 use bayesian_bits::engine::SpatialPlan;
 use bayesian_bits::models::{descriptor, Padding, Preset};
@@ -425,6 +430,161 @@ fn prop_packed_roundtrip_odd_rows_and_lanes_after_pruning() {
             }
         }
         PropResult::Pass
+    });
+}
+
+#[test]
+fn prop_simd_dot_bit_exact_across_remainder_lane_widths() {
+    // Every width in 1..=3*LANES+1 against the exact i64 oracle and
+    // the scalar kernel: tail-handling bugs cannot hide behind
+    // lane-multiple shapes.
+    check("simd_dot_remainder_lanes", 300, |g: &mut Gen| {
+        let n = g.usize_in(1, 3 * LANES + 1);
+        let w_bits = *g.choose(&[2u32, 4, 8, 16]);
+        let a_bits = *g.choose(&[2u32, 4, 8, 16]);
+        let (wlo, whi) = code_range(w_bits, true);
+        let w: Vec<i32> = (0..n)
+            .map(|_| g.usize_in(0, (whi - wlo) as usize) as i32
+                + wlo as i32)
+            .collect();
+        let amax = (1u64 << a_bits) - 1;
+        let a: Vec<i32> = (0..n)
+            .map(|_| g.usize_in(0, amax as usize) as i32)
+            .collect();
+        let want: i64 =
+            w.iter().zip(&a).map(|(x, y)| *x as i64 * *y as i64).sum();
+        let low = low_bit_pair(w_bits, a_bits);
+        if dot_codes_simd(&w, &a, low) != want
+            || dot_codes(&w, &a, low) != want
+        {
+            return PropResult::Fail(format!(
+                "w{w_bits}a{a_bits} n={n}: simd/scalar vs exact"));
+        }
+        // the widening path is exact at every width; the blocked-i32
+        // path additionally wherever it is eligible
+        PropResult::check(
+            dot_codes_simd(&w, &a, false) == want
+                && (!low || dot_codes_simd(&w, &a, true) == want),
+            || format!("n={n}: accumulator paths disagree"))
+    });
+}
+
+#[test]
+fn prop_simd_matmul_bit_exact_at_odd_widths() {
+    // GEMM row widths straddling the lane width (never a multiple by
+    // construction when odd), pruned row counts, small batches.
+    check("simd_matmul_odd_widths", 120, |g: &mut Gen| {
+        let bits = *g.choose(&[2u32, 4, 8, 16]);
+        let a_bits = *g.choose(&[4u32, 8, 16]);
+        let rows = g.usize_in(1, 6);
+        let cols = g.usize_in(1, 3 * LANES + 1);
+        let n = g.usize_in(1, 3);
+        let (lo, hi) = code_range(bits, true);
+        let span = (hi - lo) as u64 + 1;
+        let codes: Vec<i64> = (0..rows * cols)
+            .map(|_| lo + (g.rng.next_u64() % span) as i64)
+            .collect();
+        let p = match PackedMatrix::pack(&codes, rows, cols, bits,
+                                         true) {
+            Ok(p) => p,
+            Err(e) => return PropResult::Fail(format!("pack: {e}")),
+        };
+        let amax = (1u64 << a_bits) - 1;
+        let acts: Vec<i32> = (0..n * cols)
+            .map(|_| (g.rng.next_u64() % (amax + 1)) as i32)
+            .collect();
+        let mut scratch = vec![0i32; cols];
+        let mut ys = vec![0i64; n * rows];
+        let mut yv = ys.clone();
+        matmul_packed(&p, &acts, n, a_bits, &mut scratch, &mut ys);
+        matmul_packed_simd(&p, &acts, n, a_bits, &mut scratch,
+                           &mut yv);
+        PropResult::check(ys == yv, || format!(
+            "w{bits}a{a_bits} {rows}x{cols} n={n}"))
+    });
+}
+
+#[test]
+fn prop_simd_conv_bit_exact_on_odd_patches_and_groups() {
+    // Odd im2col row lengths (odd cg x odd k*k) and group counts that
+    // do not divide the lane width, with pruned kept subsets.
+    check("simd_conv_odd_patches", 100, |g: &mut Gen| {
+        let k = *g.choose(&[1usize, 2, 3]);
+        let groups = *g.choose(&[1usize, 2, 3, 5]);
+        let cg = 2 * g.usize_in(0, 2) + 1; // odd per-group width
+        let in_c = groups * cg;
+        let in_h = g.usize_in(k, 6);
+        let in_w = g.usize_in(k, 6);
+        let stride = g.usize_in(1, 2);
+        let padding =
+            if g.bool() { Padding::Same } else { Padding::Valid };
+        let sp = match SpatialPlan::new(in_h, in_w, in_c, k, stride,
+                                        padding, groups) {
+            Ok(sp) => sp,
+            Err(_) => return PropResult::Pass,
+        };
+        let plen = sp.patch_len();
+        let cpg = g.usize_in(1, 3);
+        let cout = groups * cpg;
+        let mut kept: Vec<u32> =
+            (0..cout as u32).filter(|_| g.bool()).collect();
+        if kept.is_empty() {
+            kept.push(0);
+        }
+        let w: Vec<i32> = (0..kept.len() * plen)
+            .map(|_| g.usize_in(0, 254) as i32 - 127)
+            .collect();
+        let n = g.usize_in(1, 2);
+        let x: Vec<i32> = (0..n * sp.in_len())
+            .map(|_| g.usize_in(0, 255) as i32)
+            .collect();
+        let low = g.bool();
+        let mut patch = vec![0i32; plen];
+        let mut ys = vec![0i64; n * sp.out_pixels() * kept.len()];
+        let mut yv = ys.clone();
+        conv2d_codes(&w, &kept, cpg, &sp, &x, n, low, &mut patch,
+                     &mut ys);
+        conv2d_codes_simd(&w, &kept, cpg, &sp, &x, n, low, &mut patch,
+                          &mut yv);
+        PropResult::check(ys == yv, || format!(
+            "k{k} g{groups} cg{cg} {in_h}x{in_w} s{stride} low={low}"))
+    });
+}
+
+#[test]
+fn prop_simd_dwconv_bit_exact_on_non_lane_channel_counts() {
+    // Depthwise group counts (== channels) around and between lane
+    // multiples, pruned kept subsets, both accumulator paths.
+    check("simd_dwconv_lanes", 100, |g: &mut Gen| {
+        let c = g.usize_in(1, 2 * LANES + 3);
+        let k = *g.choose(&[1usize, 3]);
+        let hw = g.usize_in(k.max(2), 6);
+        let stride = g.usize_in(1, 2);
+        let sp = match SpatialPlan::new(hw, hw, c, k, stride,
+                                        Padding::Same, c) {
+            Ok(sp) => sp,
+            Err(_) => return PropResult::Pass,
+        };
+        let mut kept: Vec<u32> =
+            (0..c as u32).filter(|_| g.bool()).collect();
+        if kept.is_empty() {
+            kept.push((c - 1) as u32);
+        }
+        let plen = k * k;
+        let w: Vec<i32> = (0..kept.len() * plen)
+            .map(|_| g.usize_in(0, 254) as i32 - 127)
+            .collect();
+        let n = g.usize_in(1, 2);
+        let x: Vec<i32> = (0..n * sp.in_len())
+            .map(|_| g.usize_in(0, 255) as i32)
+            .collect();
+        let low = g.bool();
+        let mut ys = vec![0i64; n * sp.out_pixels() * kept.len()];
+        let mut yv = ys.clone();
+        dwconv2d_codes(&w, &kept, 1, &sp, &x, n, low, &mut ys);
+        dwconv2d_codes_simd(&w, &kept, 1, &sp, &x, n, low, &mut yv);
+        PropResult::check(ys == yv, || format!(
+            "c{c} k{k} hw{hw} s{stride} low={low} kept={}", kept.len()))
     });
 }
 

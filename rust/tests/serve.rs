@@ -49,6 +49,7 @@ fn dropped_tickets_do_not_wedge_workers() {
             max_batch: 4,
             deadline: Duration::from_micros(200),
             force_f32: false,
+            backend: None,
         },
     )
     .unwrap();
@@ -82,6 +83,7 @@ fn shutdown_drains_queued_requests_deterministically() {
             max_batch: 2,
             deadline: Duration::from_micros(100),
             force_f32: false,
+            backend: None,
         },
     )
     .unwrap();

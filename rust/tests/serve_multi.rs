@@ -23,6 +23,7 @@ fn cfg() -> ServeConfig {
         max_batch: 4,
         deadline: Duration::from_micros(200),
         force_f32: false,
+        backend: None,
     }
 }
 
