@@ -9,8 +9,11 @@
 //! step, AVX2/NEON where the CPU has them) with bit-identical
 //! results. Emits `BENCH_engine.json` in the working directory — the
 //! machine-readable artifact perf tracking reads; every record
-//! carries a `backend` column. The sweep itself is
-//! `engine::throughput_sweep`, shared with `bbits engine-bench`.
+//! carries a `backend` column plus a `nodes` per-(op, backend,
+//! bit-width) breakdown column measured by a short profiled pass run
+//! after the timed loop (the timed loop itself stays uninstrumented).
+//! The sweep itself is `engine::throughput_sweep`, shared with
+//! `bbits engine-bench`.
 
 use std::path::Path;
 

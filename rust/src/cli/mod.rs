@@ -29,7 +29,7 @@ pub struct Args {
 const SWITCHES: &[&str] = &[
     "help", "det-gates", "show-preft", "curves", "quick", "paper-scale",
     "skip-baselines", "no-finetune", "no-int", "conv-only", "dump-ir",
-    "serve-only",
+    "serve-only", "profile",
 ];
 
 /// Flags that take a value (`--flag v` or `--flag=v`). Anything not
@@ -43,6 +43,7 @@ const VALUE_FLAGS: &[&str] = &[
     "checkpoint", "dims", "wbits", "abits", "prune", "max-batch",
     "deadline-ms", "queue-cap", "clients", "requests", "rows", "cols",
     "batch", "hw", "cin", "cout", "ksize", "plan-cache-mb", "backend",
+    "trace-out",
 ];
 
 impl Args {
@@ -207,12 +208,19 @@ Integer inference engine (rust/src/engine)
                   --backend scalar|simd forces the integer kernel
                   backend (default: BBITS_BACKEND env, then per-node
                   auto selection; results are bit-identical)
+                  --trace-out FILE records request spans (enqueue ->
+                  queue_wait -> batch_form -> infer -> respond) and
+                  per-node kernel slices, written as Chrome
+                  trace-event JSON (chrome://tracing / Perfetto)
   plan            lower a checkpoint (or synthetic spec, same flags as
                   serve) and print the plan report; --dump-ir prints
                   the compiled execution graphs (typed node list +
                   scratch-arena map) for the int and f32 paths —
                   integer kernel nodes carry their backend
-                  (gemm.simd / conv2d.simd / dwconv2d.simd)
+                  (gemm.simd / conv2d.simd / dwconv2d.simd);
+                  --profile runs a few synthetic batches through the
+                  instrumented interpreter and prints per-node timings
+                  plus the (op, backend, bit-width) aggregate table
   engine-bench    packed integer GEMM + spatial conv, scalar vs simd
                   integer backends vs the f32 fallback; writes
                   BENCH_engine.json (GEMM sweep) and BENCH_conv.json
@@ -318,6 +326,14 @@ mod tests {
         assert_eq!(parse("serve --backend=scalar")
                        .str_flag("backend", "x"),
                    "scalar");
+        // observability flags: --profile switch, --trace-out value
+        let p = parse("plan --dims 8,4 --profile");
+        assert!(p.bool_flag("profile"));
+        let t = parse("serve --trace-out trace.json");
+        assert_eq!(t.opt_flag("trace-out"), Some("trace.json"));
+        assert_eq!(parse("serve --trace-out=t.json")
+                       .str_flag("trace-out", "x"),
+                   "t.json");
     }
 
     #[test]

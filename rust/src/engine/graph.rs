@@ -24,10 +24,13 @@
 
 use std::fmt::Write as _;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use super::kernels::Backend;
+use super::trace::{KernelKey, NodeMeta, NodeTimer, SpanKind,
+                   TraceRecorder};
 use super::{adapt_features_into, adapt_spatial_into, kernels,
             EnginePlan};
 use crate::quant::grid::CodeGrid;
@@ -293,6 +296,11 @@ pub struct Program {
     pub(crate) nodes: Vec<Node>,
     /// Owning layer index per node (dump labeling).
     pub(crate) node_layer: Vec<usize>,
+    /// Pass-stable id per node: assigned at graph build and preserved
+    /// through elision/materialization/fusion rewrites, so profiler
+    /// attribution survives the pass pipeline (a fused node keeps the
+    /// id of the requantize it absorbed).
+    pub(crate) node_ids: Vec<usize>,
     pub(crate) bufs: Vec<BufSpec>,
     pub(crate) input: BufId,
     pub(crate) output: BufId,
@@ -334,6 +342,46 @@ impl Program {
 
     pub fn nodes(&self) -> &[Node] {
         &self.nodes
+    }
+
+    /// Pass-stable node ids, parallel to [`Self::nodes`].
+    pub fn node_ids(&self) -> &[usize] {
+        &self.node_ids
+    }
+
+    /// Profiler aggregation key for node `i`: (op, backend, weight and
+    /// activation bit width of the owning layer). Non-kernel nodes
+    /// report backend `"-"`; the f32 reference path reports the
+    /// simulated bit widths its grids encode.
+    pub fn kernel_key(&self, i: usize) -> KernelKey {
+        let layer = &self.plan.layers[self.node_layer[i]];
+        KernelKey {
+            op: self.nodes[i].op_name(),
+            backend: self.nodes[i]
+                .backend()
+                .map(|b| b.label())
+                .unwrap_or("-"),
+            w_bits: layer.w_bits,
+            a_bits: layer.act.bits(),
+        }
+    }
+
+    /// Attribution table for [`TraceRecorder::register_nodes`]: one
+    /// entry per node, in execution order.
+    pub fn node_metas(&self) -> Vec<NodeMeta> {
+        (0..self.nodes.len())
+            .map(|i| {
+                let k = self.kernel_key(i);
+                NodeMeta {
+                    op: k.op,
+                    backend: k.backend,
+                    w_bits: k.w_bits,
+                    a_bits: k.a_bits,
+                    node_id: self.node_ids[i],
+                    model: self.plan.model.clone(),
+                }
+            })
+            .collect()
     }
 
     pub fn bufs(&self) -> &[BufSpec] {
@@ -381,6 +429,41 @@ impl Program {
     /// lands in the output buffer — read it with [`Self::output_slice`].
     pub fn execute(&self, xs: &[f32], n: usize, st: &mut ExecState)
                    -> Result<()> {
+        self.stage_input(xs, n, st)?;
+        for node in &self.nodes {
+            self.exec_node(node, n, st);
+        }
+        Ok(())
+    }
+
+    /// [`Self::execute`] with every node execution timed into
+    /// `timers[i]` (one slot per node) and, when a recorder is given,
+    /// recorded as a [`SpanKind::Node`] span at `base + i` in the
+    /// recorder's attribution table. Kept separate from `execute` so
+    /// the uninstrumented hot loop carries zero profiling branches.
+    pub fn execute_instrumented(
+        &self, xs: &[f32], n: usize, st: &mut ExecState,
+        timers: &mut [NodeTimer],
+        trace: Option<(&TraceRecorder, u64, u64)>,
+    ) -> Result<()> {
+        debug_assert_eq!(timers.len(), self.nodes.len());
+        self.stage_input(xs, n, st)?;
+        for (i, node) in self.nodes.iter().enumerate() {
+            let t0 = Instant::now();
+            self.exec_node(node, n, st);
+            let dur = t0.elapsed().as_nanos() as u64;
+            timers[i].observe(dur);
+            if let Some((rec, base, tid)) = trace {
+                rec.record(SpanKind::Node, rec.since(t0), dur, tid,
+                           base + i as u64, n as u64);
+            }
+        }
+        Ok(())
+    }
+
+    /// Shared batch setup: arena sizing + input staging.
+    fn stage_input(&self, xs: &[f32], n: usize, st: &mut ExecState)
+                   -> Result<()> {
         if xs.len() != n * self.plan.input_dim {
             bail!("batch of {} inputs must be {} x {} values, got {}",
                   n, n, self.plan.input_dim, xs.len());
@@ -390,9 +473,6 @@ impl Program {
         st.i64a.resize(self.i64_len * n, 0);
         let (i0, i1) = self.range(self.input, n);
         st.f32a[i0..i1].copy_from_slice(xs);
-        for node in &self.nodes {
-            self.exec_node(node, n, st);
-        }
         Ok(())
     }
 
@@ -748,8 +828,9 @@ impl Program {
                 .unwrap_or_else(|| "-".into());
             let _ = writeln!(
                 s,
-                "{i:>3}. {:<18} {:<14} {src} -> {}",
-                node.op_name(), layer, buf(node.writes()),
+                "{i:>3}. #{:<4} {:<18} {:<14} {src} -> {}",
+                self.node_ids[i], node.op_name(), layer,
+                buf(node.writes()),
             );
         }
         let _ = writeln!(

@@ -80,6 +80,28 @@ pub fn low_bit_pair(w_bits: u32, a_bits: u32) -> bool {
     w_bits <= 8 && a_bits <= 8
 }
 
+/// Observability seam around one kernel section: with a timer attached
+/// the closure's wall-clock duration accumulates into it; without one
+/// this is a direct call the optimizer erases (`None` is statically
+/// known at every current call site, so the disabled form costs
+/// nothing). The graph interpreter times whole nodes
+/// (`Program::execute_instrumented`); this hook is the finer seam for
+/// timing *inside* a kernel (decode vs. accumulate vs. requantize)
+/// without restructuring call sites.
+#[inline(always)]
+pub fn timed<R>(timer: Option<&mut super::trace::NodeTimer>,
+                f: impl FnOnce() -> R) -> R {
+    match timer {
+        None => f(),
+        Some(t) => {
+            let t0 = std::time::Instant::now();
+            let r = f();
+            t.observe(t0.elapsed().as_nanos() as u64);
+            r
+        }
+    }
+}
+
 // -------------------------------------------------------------------
 // Kernel backends (SIMD integer hot path)
 // -------------------------------------------------------------------
@@ -343,8 +365,10 @@ pub fn matmul_packed_simd(w: &PackedMatrix, acts: &[i32], n: usize,
 pub fn matmul_packed(w: &PackedMatrix, acts: &[i32], n: usize,
                      act_bits: u32, row_scratch: &mut [i32],
                      y: &mut [i64]) {
-    matmul_packed_with(dot_codes, w, acts, n, act_bits, row_scratch,
-                       y);
+    timed(None, || {
+        matmul_packed_with(dot_codes, w, acts, n, act_bits,
+                           row_scratch, y)
+    });
 }
 
 /// Dense f32 matrix (`rows x cols`, row-major) times a batch of f32
@@ -452,8 +476,10 @@ fn conv2d_codes_with(dot: fn(&[i32], &[i32], bool) -> i64,
 pub fn conv2d_codes(w_rows: &[i32], kept: &[u32], cout_per_group: usize,
                     sp: &SpatialPlan, acts: &[i32], n: usize, low: bool,
                     patch: &mut [i32], y: &mut [i64]) {
-    conv2d_codes_with(dot_codes, w_rows, kept, cout_per_group, sp,
-                      acts, n, low, patch, y);
+    timed(None, || {
+        conv2d_codes_with(dot_codes, w_rows, kept, cout_per_group, sp,
+                          acts, n, low, patch, y)
+    });
 }
 
 /// Depthwise fast path (`groups == in_c`): each kept output channel
@@ -672,6 +698,18 @@ pub fn dequantize(codes: &[i32], step: f32, out: &mut Vec<f32>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn timed_hook_passes_through_and_accumulates() {
+        // disabled form: pure pass-through
+        assert_eq!(timed(None, || 41 + 1), 42);
+        // enabled form: result unchanged, duration observed
+        let mut t = super::super::trace::NodeTimer::default();
+        let r = timed(Some(&mut t), || (0..100u64).sum::<u64>());
+        assert_eq!(r, 4950);
+        assert_eq!(t.calls, 1);
+        assert!(t.max_ns <= t.total_ns || t.calls == 1);
+    }
 
     #[test]
     fn dot_codes_paths_agree() {

@@ -24,7 +24,12 @@
 //!   named lowered plans with lazy program compilation, a [`Router`]
 //!   that fans requests out to per-model pools, and a byte-budget LRU
 //!   that evicts cold compiled plans (transparently recompiled on the
-//!   next hit).
+//!   next hit);
+//! * [`trace`] — the observability substrate: a lock-free span ring
+//!   buffer (`enqueue -> queue_wait -> batch_form -> infer ->
+//!   respond` plus per-node kernel slices), log-linear latency
+//!   histograms, per-(op, backend, bit-width) kernel timers, and
+//!   Chrome trace-event export (`--trace-out`, `--profile`).
 //!
 //! Dense layers execute as GEMMs over `[cout, in]` weight rows.
 //! Conv/dwconv layers keep their `[cout, cin/groups * k * k]` row
@@ -59,7 +64,9 @@ pub mod pack;
 mod passes;
 pub mod registry;
 pub mod serve;
+pub mod trace;
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -76,6 +83,8 @@ pub use lower::{lower, lower_with_mode, synthetic_conv_plan,
                 synthetic_plan};
 pub use registry::{CacheStats, ModelRegistry, Router};
 pub use serve::{ServeConfig, ServeConfigError, ServeStats, Server};
+pub use trace::{Histogram, KernelKey, NodeTimer, SpanKind,
+                TraceRecorder};
 
 /// Spatial execution geometry of one conv/dwconv layer: input feature
 /// map, kernel/stride/groups, and the padding resolved to explicit
@@ -388,6 +397,10 @@ pub struct SweepRecord {
     pub arena_bytes: usize,
     /// Max simultaneously-live per-sample bytes (packing lower bound).
     pub peak_scratch_bytes: usize,
+    /// Per-(op, backend, bit-width) kernel timers from a short
+    /// profiled pass run *after* the timed loop (the timed loop stays
+    /// uninstrumented), heaviest first.
+    pub nodes: Vec<(trace::KernelKey, trace::NodeTimer)>,
 }
 
 impl SweepRecord {
@@ -407,6 +420,7 @@ impl SweepRecord {
             ("images_per_sec", num(self.images_per_sec)),
             ("arena_bytes", num(self.arena_bytes as f64)),
             ("peak_scratch_bytes", num(self.peak_scratch_bytes as f64)),
+            ("nodes", trace::kernel_rows_json(&self.nodes)),
         ])
     }
 }
@@ -469,6 +483,13 @@ pub fn throughput_sweep(rows: usize, cols: usize, batches: &[usize],
                 });
                 let images_per_sec =
                     batch as f64 / (summary.median_ns * 1e-9);
+                // per-node breakdown from a short profiled pass after
+                // the timed loop, which stays uninstrumented
+                eng.enable_profiling();
+                for _ in 0..3 {
+                    eng.infer_batch(&xs, batch)?;
+                }
+                let nodes = eng.kernel_profile(int_path);
                 out.push(SweepRecord {
                     summary,
                     int_path,
@@ -480,6 +501,7 @@ pub fn throughput_sweep(rows: usize, cols: usize, batches: &[usize],
                     images_per_sec,
                     arena_bytes,
                     peak_scratch_bytes,
+                    nodes,
                 });
             }
         }
@@ -504,6 +526,9 @@ pub struct ConvSweepRecord {
     pub arena_bytes: usize,
     /// Max simultaneously-live per-sample bytes (packing lower bound).
     pub peak_scratch_bytes: usize,
+    /// Per-(op, backend, bit-width) kernel timers from a short
+    /// profiled pass run *after* the timed loop, heaviest first.
+    pub nodes: Vec<(trace::KernelKey, trace::NodeTimer)>,
 }
 
 impl ConvSweepRecord {
@@ -525,6 +550,7 @@ impl ConvSweepRecord {
             ("images_per_sec", num(self.images_per_sec)),
             ("arena_bytes", num(self.arena_bytes as f64)),
             ("peak_scratch_bytes", num(self.peak_scratch_bytes as f64)),
+            ("nodes", trace::kernel_rows_json(&self.nodes)),
         ])
     }
 }
@@ -572,6 +598,13 @@ pub fn conv_throughput_sweep(hw: usize, cin: usize, cout: usize,
                 });
                 let images_per_sec =
                     batch as f64 / (summary.median_ns * 1e-9);
+                // per-node breakdown from a short profiled pass after
+                // the timed loop, which stays uninstrumented
+                eng.enable_profiling();
+                for _ in 0..3 {
+                    eng.infer_batch(&xs, batch)?;
+                }
+                let nodes = eng.kernel_profile(int_path);
                 out.push(ConvSweepRecord {
                     summary,
                     int_path,
@@ -585,6 +618,7 @@ pub fn conv_throughput_sweep(hw: usize, cin: usize, cout: usize,
                     images_per_sec,
                     arena_bytes,
                     peak_scratch_bytes,
+                    nodes,
                 });
             }
         }
@@ -721,6 +755,28 @@ pub struct Engine {
     f32_prog: Arc<Program>,
     int_enabled: bool,
     st: ExecState,
+    /// Per-node timers, one slot per compiled node of each path.
+    /// `None` keeps `run_batch` on the uninstrumented hot loop.
+    profile: Option<EngineProfile>,
+    trace: Option<TraceCtx>,
+}
+
+/// Per-node wall-clock timers for both compiled paths (enabled by
+/// [`Engine::enable_profiling`]; flushed per batch by the serving
+/// workers, read cumulatively by `plan --profile` and the benches).
+struct EngineProfile {
+    int: Vec<trace::NodeTimer>,
+    fp: Vec<trace::NodeTimer>,
+}
+
+/// Span-recorder attachment: where this engine's per-node slices go,
+/// the node-table base offsets of its two programs, and the trace
+/// thread id (worker index + 1) its slices are drawn on.
+struct TraceCtx {
+    rec: Arc<TraceRecorder>,
+    int_base: u64,
+    f32_base: u64,
+    tid: u64,
 }
 
 impl Engine {
@@ -750,7 +806,96 @@ impl Engine {
             f32_prog,
             int_enabled: true,
             st: ExecState::default(),
+            profile: None,
+            trace: None,
         }
+    }
+
+    /// Turn on per-node wall-clock timing: every subsequent batch runs
+    /// through the instrumented interpreter loop, accumulating one
+    /// [`NodeTimer`] per compiled node of each path. Off by default —
+    /// the uninstrumented hot loop takes no timestamps at all.
+    pub fn enable_profiling(&mut self) {
+        self.profile = Some(EngineProfile {
+            int: vec![trace::NodeTimer::default();
+                      self.int_prog.node_ids().len()],
+            fp: vec![trace::NodeTimer::default();
+                     self.f32_prog.node_ids().len()],
+        });
+    }
+
+    /// Attach a span recorder: per-node slices of every profiled batch
+    /// are recorded into `rec` on trace thread `tid`, attributed via
+    /// the node tables registered here. Implies nothing by itself —
+    /// slices only flow once [`Self::enable_profiling`] is also on.
+    pub fn attach_trace(&mut self, rec: Arc<TraceRecorder>, tid: u64) {
+        let int_base = rec.register_nodes(self.int_prog.node_metas());
+        let f32_base = rec.register_nodes(self.f32_prog.node_metas());
+        self.trace = Some(TraceCtx { rec, int_base, f32_base, tid });
+    }
+
+    /// Drain accumulated per-node timers into `sink`, keyed by
+    /// (op, backend, bit-width), and reset them — the per-batch flush
+    /// the serving workers run under the stats lock. No-op while
+    /// profiling is off.
+    pub fn flush_profile_into(
+        &mut self, sink: &mut BTreeMap<trace::KernelKey,
+                                       trace::NodeTimer>) {
+        let Some(p) = &mut self.profile else { return };
+        for (prog, timers) in [(&self.int_prog, &mut p.int),
+                               (&self.f32_prog, &mut p.fp)] {
+            for (i, t) in timers.iter_mut().enumerate() {
+                if t.calls == 0 {
+                    continue;
+                }
+                sink.entry(prog.kernel_key(i)).or_default().merge(t);
+                *t = trace::NodeTimer::default();
+            }
+        }
+    }
+
+    /// Cumulative (op, backend, bit-width) kernel profile of one path,
+    /// heaviest first; empty while profiling is off. Does not reset —
+    /// the `plan --profile` / bench aggregation read.
+    pub fn kernel_profile(&self, int_path: bool)
+                          -> Vec<(trace::KernelKey, trace::NodeTimer)> {
+        let mut map = BTreeMap::new();
+        if let Some(p) = &self.profile {
+            let (prog, timers) = if int_path {
+                (&self.int_prog, &p.int)
+            } else {
+                (&self.f32_prog, &p.fp)
+            };
+            for (i, t) in timers.iter().enumerate() {
+                if t.calls > 0 {
+                    map.entry(prog.kernel_key(i))
+                       .or_insert_with(trace::NodeTimer::default)
+                       .merge(t);
+                }
+            }
+        }
+        trace::sorted_kernel_rows(&map)
+    }
+
+    /// Per-node cumulative profile of one path in execution order:
+    /// `(pass-stable node id, kernel key, timer)` for every node that
+    /// ran — the `plan --profile` per-node listing.
+    pub fn node_profile(&self, int_path: bool)
+                        -> Vec<(usize, trace::KernelKey,
+                                trace::NodeTimer)> {
+        let Some(p) = &self.profile else { return Vec::new() };
+        let (prog, timers) = if int_path {
+            (&self.int_prog, &p.int)
+        } else {
+            (&self.f32_prog, &p.fp)
+        };
+        prog.node_ids()
+            .iter()
+            .zip(timers)
+            .enumerate()
+            .filter(|(_, (_, t))| t.calls > 0)
+            .map(|(i, (&id, t))| (id, prog.kernel_key(i), *t))
+            .collect()
     }
 
     pub fn plan(&self) -> &EnginePlan {
@@ -783,12 +928,21 @@ impl Engine {
     /// zero-copy primitive the serving workers use. Weight rows are
     /// decoded once per layer and reused across the batch.
     pub fn run_batch(&mut self, xs: &[f32], n: usize) -> Result<&[f32]> {
-        let prog = if self.int_enabled {
-            &self.int_prog
-        } else {
-            &self.f32_prog
-        };
-        prog.execute(xs, n, &mut self.st)?;
+        let int = self.int_enabled;
+        let prog = if int { &self.int_prog } else { &self.f32_prog };
+        match &mut self.profile {
+            None => prog.execute(xs, n, &mut self.st)?,
+            Some(p) => {
+                let timers = if int { &mut p.int } else { &mut p.fp };
+                let tr = self.trace.as_ref().map(|t| {
+                    let base =
+                        if int { t.int_base } else { t.f32_base };
+                    (t.rec.as_ref(), base, t.tid)
+                });
+                prog.execute_instrumented(xs, n, &mut self.st,
+                                          timers, tr)?;
+            }
+        }
         Ok(prog.output_slice(&self.st, n))
     }
 

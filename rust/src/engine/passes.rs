@@ -47,6 +47,11 @@ struct Draft {
     int_path: bool,
     nodes: Vec<Node>,
     node_layer: Vec<usize>,
+    /// Pass-stable id per node (see [`Program::node_ids`]): rewrites
+    /// must preserve the id of the node they replace so profiler
+    /// attribution survives the pipeline.
+    node_ids: Vec<usize>,
+    next_id: usize,
     bufs: Vec<BufSpec>,
     input: BufId,
     output: BufId,
@@ -58,9 +63,19 @@ impl Draft {
         self.bufs.len() - 1
     }
 
+    /// Append a brand-new node under a fresh id.
     fn push(&mut self, node: Node, layer: usize) {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.push_kept(node, layer, id);
+    }
+
+    /// Append a node that replaces (or survives from) an earlier one,
+    /// keeping that node's id.
+    fn push_kept(&mut self, node: Node, layer: usize, id: usize) {
         self.nodes.push(node);
         self.node_layer.push(layer);
+        self.node_ids.push(id);
     }
 }
 
@@ -77,6 +92,7 @@ pub(crate) fn compile(plan: Arc<EnginePlan>, int_path: bool,
         int_path: d.int_path,
         nodes: d.nodes,
         node_layer: d.node_layer,
+        node_ids: d.node_ids,
         bufs: d.bufs,
         input: d.input,
         output: d.output,
@@ -131,6 +147,8 @@ fn build(plan: Arc<EnginePlan>, int_path: bool) -> Draft {
         int_path,
         nodes: Vec::new(),
         node_layer: Vec::new(),
+        node_ids: Vec::new(),
+        next_id: 0,
         bufs: Vec::new(),
         input: 0,
         output: 0,
@@ -225,15 +243,20 @@ fn elide_pruned(d: &mut Draft) {
     let plan = d.plan.clone();
     let old_nodes = std::mem::take(&mut d.nodes);
     let old_layers = std::mem::take(&mut d.node_layer);
-    for (node, li) in old_nodes.into_iter().zip(old_layers) {
+    let old_ids = std::mem::take(&mut d.node_ids);
+    for ((node, li), id) in
+        old_nodes.into_iter().zip(old_layers).zip(old_ids)
+    {
         if !plan.layers[li].kept.is_empty() {
-            d.push(node, li);
+            d.push_kept(node, li, id);
             continue;
         }
         match node {
             Node::Requant { layer, dst, relu, .. }
             | Node::Epilogue { layer, dst, relu, .. } => {
-                d.push(Node::BiasFill { layer, dst, relu }, li);
+                // the BiasFill stands in for the elided epilogue and
+                // inherits its id
+                d.push_kept(Node::BiasFill { layer, dst, relu }, li, id);
             }
             // quantize / kernel / pre feeding a dead kernel: dropped
             _ => {}
@@ -246,7 +269,10 @@ fn elide_pruned(d: &mut Draft) {
 fn materialize_pre(d: &mut Draft) {
     let old_nodes = std::mem::take(&mut d.nodes);
     let old_layers = std::mem::take(&mut d.node_layer);
-    for (node, li) in old_nodes.into_iter().zip(old_layers) {
+    let old_ids = std::mem::take(&mut d.node_ids);
+    for ((node, li), id) in
+        old_nodes.into_iter().zip(old_layers).zip(old_ids)
+    {
         match node {
             Node::Pre { src, dst, steps, .. } => {
                 let mut cur = src;
@@ -274,11 +300,17 @@ fn materialize_pre(d: &mut Draft) {
                                                   want }
                         }
                     };
-                    d.push(concrete, li);
+                    // the first expanded step inherits the Pre
+                    // placeholder's id; later steps are new nodes
+                    if i == 0 {
+                        d.push_kept(concrete, li, id);
+                    } else {
+                        d.push(concrete, li);
+                    }
                     cur = out;
                 }
             }
-            other => d.push(other, li),
+            other => d.push_kept(other, li, id),
         }
     }
 }
@@ -328,6 +360,7 @@ fn assign_backends(d: &mut Draft, forced: Option<Backend>) {
 fn fuse_requant_quantize(d: &mut Draft) {
     let old_nodes = std::mem::take(&mut d.nodes);
     let old_layers = std::mem::take(&mut d.node_layer);
+    let old_ids = std::mem::take(&mut d.node_ids);
     let mut readers = vec![0usize; d.bufs.len()];
     for node in &old_nodes {
         if let Some(b) = node.reads() {
@@ -344,20 +377,22 @@ fn fuse_requant_quantize(d: &mut Draft) {
                 if *dst == *qsrc && readers[*dst] == 1
                     && *dst != d.output
                 {
-                    d.push(Node::RequantQuantize {
+                    // the fused node keeps the requantize's id (the
+                    // absorbed quantize's id retires)
+                    d.push_kept(Node::RequantQuantize {
                         layer: *layer,
                         src: *src,
                         dst: *qdst,
                         scale: *scale,
                         relu: *relu,
                         grid: *grid,
-                    }, old_layers[i]);
+                    }, old_layers[i], old_ids[i]);
                     i += 2;
                     continue;
                 }
             }
         }
-        d.push(old_nodes[i].clone(), old_layers[i]);
+        d.push_kept(old_nodes[i].clone(), old_layers[i], old_ids[i]);
         i += 1;
     }
 }

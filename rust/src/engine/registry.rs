@@ -29,7 +29,8 @@
 //! caller via `resident_bytes()`).
 //!
 //! Per-model [`ServeStats`] live in the entry, not the pool, so
-//! counters and latency reservoirs survive eviction/recompile cycles.
+//! counters, gauges, and latency histograms survive eviction/recompile
+//! cycles.
 //! An eviction drains the victim's queue before the programs drop —
 //! every queued ticket is answered — and a submitter that raced the
 //! eviction gets its input handed back internally and retried on the
@@ -41,8 +42,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::serve::{snapshot_stats, raw_stats, Pool, ServeConfig,
-                   ServeStats, StatsInner, SubmitRejected, Ticket};
+use super::serve::{snapshot_cell, snapshot_stats, Pool, ServeConfig,
+                   ServeStats, StatsCell, StatsSnapshot,
+                   SubmitRejected, Ticket};
+use super::trace::{self, TraceRecorder};
 use super::EnginePlan;
 use crate::rng::Pcg64;
 use crate::runtime::Manifest;
@@ -80,7 +83,7 @@ struct Entry {
     plan: Arc<EnginePlan>,
     cfg: ServeConfig,
     /// Survives eviction — stats are per *model*, not per pool.
-    stats: Arc<Mutex<StatsInner>>,
+    stats: Arc<StatsCell>,
     active: Option<Active>,
     /// LRU tick of the last submit.
     last_used: u64,
@@ -104,6 +107,9 @@ pub struct ModelRegistry {
     inner: Mutex<Inner>,
     /// Plan-cache byte budget; `None` = unbounded (never evict).
     budget_bytes: Option<usize>,
+    /// Span recorder handed to every pool spawned after `set_trace`;
+    /// `None` keeps the serve path on its zero-overhead branch.
+    trace: Mutex<Option<Arc<TraceRecorder>>>,
 }
 
 impl Default for ModelRegistry {
@@ -117,7 +123,8 @@ impl ModelRegistry {
     /// resident until shutdown.
     pub fn new() -> ModelRegistry {
         ModelRegistry { inner: Mutex::new(Inner::default()),
-                        budget_bytes: None }
+                        budget_bytes: None,
+                        trace: Mutex::new(None) }
     }
 
     /// Registry whose compiled programs + arenas are LRU-evicted once
@@ -125,11 +132,20 @@ impl ModelRegistry {
     /// the single model being served resident.
     pub fn with_budget(bytes: usize) -> ModelRegistry {
         ModelRegistry { inner: Mutex::new(Inner::default()),
-                        budget_bytes: Some(bytes) }
+                        budget_bytes: Some(bytes),
+                        trace: Mutex::new(None) }
     }
 
     pub fn budget_bytes(&self) -> Option<usize> {
         self.budget_bytes
+    }
+
+    /// Attach (or detach) a span recorder. Pools spawned afterwards —
+    /// lazy compiles and post-eviction recompiles included — record
+    /// request spans and per-node kernel slices into it; pools already
+    /// running are unaffected, so set this before the first request.
+    pub fn set_trace(&self, trace: Option<Arc<TraceRecorder>>) {
+        *self.trace.lock().unwrap() = trace;
     }
 
     /// Register a lowered plan under `id`. Cheap: compilation of the
@@ -151,7 +167,7 @@ impl ModelRegistry {
         g.entries.insert(id.to_string(), Entry {
             plan,
             cfg,
-            stats: Arc::new(Mutex::new(StatsInner::default())),
+            stats: Arc::new(StatsCell::new()),
             active: None,
             last_used: 0,
             compiled_once: false,
@@ -255,8 +271,9 @@ impl ModelRegistry {
             int_prog.arena_bytes()
         };
         let cost_bytes = exec_arena * cfg.max_batch * cfg.workers;
+        let trace = self.trace.lock().unwrap().clone();
         let pool = Arc::new(
-            Pool::start(plan, int_prog, f32_prog, cfg, stats)
+            Pool::start(plan, int_prog, f32_prog, cfg, stats, trace)
                 .map_err(|e| anyhow!("{e}"))?,
         );
         inner.resident_bytes += cost_bytes;
@@ -353,57 +370,41 @@ impl ModelRegistry {
 
     /// Per-model stats snapshot; `None` for an unknown id.
     pub fn stats(&self, id: &str) -> Option<ServeStats> {
-        let cell = self
-            .inner
+        Some(snapshot_stats(&self.stats_cell(id)?))
+    }
+
+    /// The shared per-model stats cell (test oracle access).
+    pub(crate) fn stats_cell(&self, id: &str) -> Option<Arc<StatsCell>> {
+        self.inner
             .lock()
             .unwrap()
             .entries
             .get(id)
-            .map(|e| e.stats.clone())?;
-        Some(snapshot_stats(&cell))
+            .map(|e| e.stats.clone())
     }
 
-    /// Aggregate stats across every model: counters summed, latency
-    /// percentiles over the merged reservoirs. Each model's reservoir
-    /// is a uniform sample of its own history at rate `len/seen`;
-    /// before concatenating, every sample is truncated to the lowest
-    /// rate present, so a saturated high-traffic reservoir is not
-    /// out-weighted by a small model's complete sample.
+    /// Aggregate stats across every model: counters and gauges
+    /// summed, latency percentiles over the element-wise *merged*
+    /// histograms. Histogram merge is exact (bucket counts add), so
+    /// unlike the reservoir-resampling scheme this replaced, a
+    /// high-traffic model's distribution is weighted by its true
+    /// request count.
     pub fn aggregate_stats(&self) -> ServeStats {
-        let cells: Vec<Arc<Mutex<StatsInner>>> = {
+        let cells: Vec<Arc<StatsCell>> = {
             let g = self.inner.lock().unwrap();
             g.entries.values().map(|e| e.stats.clone()).collect()
         };
-        let mut parts: Vec<(Vec<u64>, u64)> = Vec::new();
-        let (mut requests, mut batches, mut errors) = (0u64, 0u64, 0u64);
+        let mut agg: Option<StatsSnapshot> = None;
         for cell in &cells {
-            let (l, seen, r, b, e) = raw_stats(cell);
-            if seen > 0 {
-                parts.push((l, seen));
-            }
-            requests += r;
-            batches += b;
-            errors += e;
-        }
-        let min_rate = parts
-            .iter()
-            .map(|(l, seen)| l.len() as f64 / *seen as f64)
-            .fold(1.0f64, f64::min);
-        let mut lat = Vec::new();
-        for (l, seen) in parts {
-            let keep = ((seen as f64 * min_rate) as usize).min(l.len());
-            if keep == l.len() {
-                lat.extend_from_slice(&l);
-            } else {
-                // an unsaturated buffer is in arrival order, so take
-                // an even stride across it (a systematic sample of
-                // the history), not a warmup-biased prefix
-                for i in 0..keep {
-                    lat.push(l[i * l.len() / keep]);
-                }
+            let s = snapshot_cell(cell);
+            match &mut agg {
+                Some(a) => a.merge(&s),
+                None => agg = Some(s),
             }
         }
-        ServeStats::from_parts(lat, requests, batches, errors)
+        agg.as_ref()
+           .map(ServeStats::from_snapshot)
+           .unwrap_or_default()
     }
 
     /// The full stats surface as one JSON document:
@@ -414,9 +415,19 @@ impl ModelRegistry {
         let ids = self.model_ids();
         let mut models = BTreeMap::new();
         for id in &ids {
-            if let Some(st) = self.stats(id) {
-                models.insert(id.clone(), st.to_json());
+            let Some(cell) = self.stats_cell(id) else { continue };
+            let mut st = match snapshot_stats(&cell).to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("ServeStats::to_json is an object"),
+            };
+            // per-(op, backend, bit-width) kernel timers, present once
+            // the model has served a profiled batch
+            let rows = cell.kernel_rows();
+            if !rows.is_empty() {
+                st.insert("kernels".to_string(),
+                          trace::kernel_rows_json(&rows));
             }
+            models.insert(id.clone(), Json::Obj(st));
         }
         let g = self.inner.lock().unwrap();
         let resident: Vec<Json> = g

@@ -22,8 +22,9 @@
 //! wrapper over a one-entry registry that `closed_loop`, the golden
 //! tests, and `bbits serve` without `--model NAME=SPEC` flags use.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -33,6 +34,8 @@ use anyhow::{anyhow, Result};
 use super::graph::Program;
 use super::kernels::Backend;
 use super::registry::ModelRegistry;
+use super::trace::{self, Histogram, KernelKey, NodeTimer, SpanKind,
+                   TraceRecorder};
 use super::{Engine, EnginePlan};
 use crate::util::json::{num, obj, Json};
 
@@ -132,6 +135,8 @@ impl ServeConfig {
 
 struct Request {
     input: Vec<f32>,
+    /// Trace request id (0 when no recorder is attached).
+    id: u64,
     submitted: Instant,
     tx: mpsc::Sender<std::result::Result<Vec<f32>, String>>,
 }
@@ -156,9 +161,10 @@ pub fn bounded_draw(x: u64, n: u64) -> u64 {
     (((x as u128) * (n as u128)) >> 64) as u64
 }
 
-/// Per-model counters + latency reservoir. Owned by the registry
-/// entry (an `Arc`), so the numbers survive plan eviction and pool
-/// restarts.
+/// Per-model counters, latency/queue-depth histograms, and kernel
+/// profile. The latency *reservoir* is retained purely as the test
+/// oracle for the histogram's documented 1% relative-error bound —
+/// every reported percentile comes from the histogram.
 #[derive(Default)]
 pub(crate) struct StatsInner {
     latencies_ns: Vec<u64>,
@@ -169,6 +175,14 @@ pub(crate) struct StatsInner {
     requests: u64,
     batches: u64,
     errors: u64,
+    /// Primary latency metric: log-linear histogram, O(octaves) to
+    /// clone and exactly mergeable across workers/models.
+    hist: Histogram,
+    /// Queue depth observed at each batch formation.
+    qdepth: Histogram,
+    /// Per-(op, backend, bit-width) kernel timings, flushed once per
+    /// batch by profiling workers (tracing-enabled pools only).
+    kernels: BTreeMap<KernelKey, NodeTimer>,
 }
 
 impl StatsInner {
@@ -178,6 +192,7 @@ impl StatsInner {
 
     /// Reservoir insert with an explicit cap (unit-testable).
     fn record_latency_capped(&mut self, ns: u64, cap: usize) {
+        self.hist.record(ns);
         self.seen += 1;
         if self.latencies_ns.len() < cap {
             self.latencies_ns.push(ns);
@@ -198,22 +213,95 @@ impl StatsInner {
     }
 }
 
-/// Snapshot a stats cell into a [`ServeStats`]. The (possibly
-/// reservoir-sampled) latency buffer is copied out under the lock and
-/// sorted outside it, so workers never stall on a snapshot.
-pub(crate) fn snapshot_stats(cell: &Mutex<StatsInner>) -> ServeStats {
-    let (lat, _seen, requests, batches, errors) = raw_stats(cell);
-    ServeStats::from_parts(lat, requests, batches, errors)
+/// One model's stats cell: the locked counters/histograms plus the
+/// lock-free gauges submitters and workers bump on the hot path.
+/// Owned by the registry entry (an `Arc`), so the numbers survive
+/// plan eviction and pool restarts.
+pub(crate) struct StatsCell {
+    pub(crate) inner: Mutex<StatsInner>,
+    /// Requests submitted but not yet answered.
+    inflight: AtomicU64,
+    /// Queue length after the most recent push/pop.
+    queue_depth: AtomicU64,
+    started: Instant,
 }
 
-/// Latency sample (plus the `seen` count it represents) and counters
-/// of one stats cell, pre-snapshot — the registry merges these across
-/// models for aggregate percentiles.
-pub(crate) fn raw_stats(cell: &Mutex<StatsInner>)
-                        -> (Vec<u64>, u64, u64, u64, u64) {
-    let inner = cell.lock().unwrap();
-    (inner.latencies_ns.clone(), inner.seen, inner.requests,
-     inner.batches, inner.errors)
+impl StatsCell {
+    pub(crate) fn new() -> StatsCell {
+        StatsCell {
+            inner: Mutex::new(StatsInner::default()),
+            inflight: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    /// Aggregated kernel rows, sorted by descending total time.
+    pub(crate) fn kernel_rows(&self) -> Vec<(KernelKey, NodeTimer)> {
+        trace::sorted_kernel_rows(&self.inner.lock().unwrap().kernels)
+    }
+}
+
+/// Mergeable raw snapshot of one stats cell. Taking it holds the lock
+/// only for O(histogram octaves) clones — never the O(reservoir cap)
+/// copy the old snapshot path did, so submitters can't stall behind a
+/// stats scrape.
+#[derive(Clone)]
+pub(crate) struct StatsSnapshot {
+    pub(crate) hist: Histogram,
+    pub(crate) qdepth: Histogram,
+    pub(crate) requests: u64,
+    pub(crate) batches: u64,
+    pub(crate) errors: u64,
+    pub(crate) inflight: u64,
+    pub(crate) queue_depth: u64,
+    pub(crate) uptime: Duration,
+}
+
+impl StatsSnapshot {
+    /// Cross-model aggregation: histograms merge exactly (elementwise
+    /// bucket add), counters and gauges sum, uptime takes the oldest.
+    pub(crate) fn merge(&mut self, other: &StatsSnapshot) {
+        self.hist.merge(&other.hist);
+        self.qdepth.merge(&other.qdepth);
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.errors += other.errors;
+        self.inflight += other.inflight;
+        self.queue_depth += other.queue_depth;
+        self.uptime = self.uptime.max(other.uptime);
+    }
+}
+
+pub(crate) fn snapshot_cell(cell: &StatsCell) -> StatsSnapshot {
+    let (hist, qdepth, requests, batches, errors) = {
+        let inner = cell.inner.lock().unwrap();
+        (inner.hist.clone(), inner.qdepth.clone(), inner.requests,
+         inner.batches, inner.errors)
+    };
+    StatsSnapshot {
+        hist,
+        qdepth,
+        requests,
+        batches,
+        errors,
+        inflight: cell.inflight.load(Ordering::Relaxed),
+        queue_depth: cell.queue_depth.load(Ordering::Relaxed),
+        uptime: cell.started.elapsed(),
+    }
+}
+
+/// Snapshot a stats cell into a [`ServeStats`].
+pub(crate) fn snapshot_stats(cell: &StatsCell) -> ServeStats {
+    ServeStats::from_snapshot(&snapshot_cell(cell))
+}
+
+/// Test oracle: the exact (sorted) latency reservoir of a cell. Only
+/// the histogram-error tests read this.
+pub(crate) fn latency_oracle(cell: &StatsCell) -> Vec<u64> {
+    let mut v = cell.inner.lock().unwrap().latencies_ns.clone();
+    v.sort_unstable();
+    v
 }
 
 struct Shared {
@@ -221,7 +309,10 @@ struct Shared {
     not_empty: Condvar,
     not_full: Condvar,
     cfg: ServeConfig,
-    stats: Arc<Mutex<StatsInner>>,
+    stats: Arc<StatsCell>,
+    /// Span recorder; `None` keeps the serve path on the untraced
+    /// fast path (one branch per batch).
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 /// Handle for one in-flight request.
@@ -240,17 +331,29 @@ impl Ticket {
     }
 }
 
-/// Aggregate serving statistics.
+/// Aggregate serving statistics. Percentiles come from the log-linear
+/// latency histogram (documented ≤ 1% relative error, exactly
+/// mergeable across models); gauges read the lock-free cell atomics.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
     pub requests: u64,
     pub batches: u64,
     pub errors: u64,
+    /// errors / requests (0 when idle).
+    pub error_rate: f64,
     pub mean_batch: f64,
     pub p50_ms: f64,
     pub p90_ms: f64,
     pub p99_ms: f64,
     pub max_ms: f64,
+    /// Queue length after the most recent push/pop (gauge).
+    pub queue_depth: u64,
+    /// p90 of the queue depth seen at batch formation.
+    pub queue_depth_p90: f64,
+    /// Requests submitted but not yet answered (gauge).
+    pub inflight: u64,
+    /// Milliseconds since the model's stats cell was created.
+    pub uptime_ms: f64,
     /// Wall-clock seconds of the measured window (filled by the load
     /// driver; 0 when only queue stats were sampled).
     pub elapsed_s: f64,
@@ -258,24 +361,32 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
-    /// Build from a raw (unsorted) latency sample plus counters.
-    pub(crate) fn from_parts(mut lat: Vec<u64>, requests: u64,
-                             batches: u64, errors: u64) -> ServeStats {
-        lat.sort_unstable();
+    /// Derive the reported figures from a raw (possibly merged)
+    /// snapshot.
+    pub(crate) fn from_snapshot(s: &StatsSnapshot) -> ServeStats {
         let ms = |ns: u64| ns as f64 / 1e6;
         ServeStats {
-            requests,
-            batches,
-            errors,
-            mean_batch: if batches == 0 {
+            requests: s.requests,
+            batches: s.batches,
+            errors: s.errors,
+            error_rate: if s.requests == 0 {
                 0.0
             } else {
-                requests as f64 / batches as f64
+                s.errors as f64 / s.requests as f64
             },
-            p50_ms: ms(percentile(&lat, 0.50)),
-            p90_ms: ms(percentile(&lat, 0.90)),
-            p99_ms: ms(percentile(&lat, 0.99)),
-            max_ms: ms(lat.last().copied().unwrap_or(0)),
+            mean_batch: if s.batches == 0 {
+                0.0
+            } else {
+                s.requests as f64 / s.batches as f64
+            },
+            p50_ms: ms(s.hist.percentile(0.50)),
+            p90_ms: ms(s.hist.percentile(0.90)),
+            p99_ms: ms(s.hist.percentile(0.99)),
+            max_ms: ms(s.hist.max()),
+            queue_depth: s.queue_depth,
+            queue_depth_p90: s.qdepth.percentile(0.90) as f64,
+            inflight: s.inflight,
+            uptime_ms: s.uptime.as_secs_f64() * 1e3,
             elapsed_s: 0.0,
             throughput_rps: 0.0,
         }
@@ -286,11 +397,16 @@ impl ServeStats {
             ("requests", num(self.requests as f64)),
             ("batches", num(self.batches as f64)),
             ("errors", num(self.errors as f64)),
+            ("error_rate", num(self.error_rate)),
             ("mean_batch", num(self.mean_batch)),
             ("p50_ms", num(self.p50_ms)),
             ("p90_ms", num(self.p90_ms)),
             ("p99_ms", num(self.p99_ms)),
             ("max_ms", num(self.max_ms)),
+            ("queue_depth", num(self.queue_depth as f64)),
+            ("queue_depth_p90", num(self.queue_depth_p90)),
+            ("inflight", num(self.inflight as f64)),
+            ("uptime_ms", num(self.uptime_ms)),
             ("elapsed_s", num(self.elapsed_s)),
             ("throughput_rps", num(self.throughput_rps)),
         ])
@@ -301,12 +417,17 @@ impl fmt::Display for ServeStats {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "{} requests in {} batches (mean batch {:.2}, {} errors) \
+            "{} requests in {} batches (mean batch {:.2}, {} errors, \
+             {:.2}% error rate) \
              | latency p50={:.3}ms p90={:.3}ms p99={:.3}ms max={:.3}ms \
-             | {:.1} req/s over {:.2}s",
+             | queue depth {} (p90 {:.0}) inflight {} \
+             | {:.1} req/s over {:.2}s (up {:.1}s)",
             self.requests, self.batches, self.mean_batch, self.errors,
+            self.error_rate * 100.0,
             self.p50_ms, self.p90_ms, self.p99_ms, self.max_ms,
-            self.throughput_rps, self.elapsed_s
+            self.queue_depth, self.queue_depth_p90, self.inflight,
+            self.throughput_rps, self.elapsed_s,
+            self.uptime_ms / 1e3,
         )
     }
 }
@@ -347,7 +468,8 @@ impl Pool {
     /// they outlive this pool.
     pub(crate) fn start(plan: Arc<EnginePlan>, int_prog: Arc<Program>,
                         f32_prog: Arc<Program>, cfg: ServeConfig,
-                        stats: Arc<Mutex<StatsInner>>)
+                        stats: Arc<StatsCell>,
+                        trace: Option<Arc<TraceRecorder>>)
                         -> std::result::Result<Pool, ServeConfigError> {
         cfg.validate()?;
         let shared = Arc::new(Shared {
@@ -356,15 +478,18 @@ impl Pool {
             not_full: Condvar::new(),
             cfg,
             stats,
+            trace,
         });
         let workers = (0..shared.cfg.workers)
-            .map(|_| {
+            .map(|wi| {
                 let shared = shared.clone();
                 let plan = plan.clone();
                 let ip = int_prog.clone();
                 let fp = f32_prog.clone();
+                // worker trace tids start at 1; tid 0 is submitters
                 std::thread::spawn(move || worker_loop(shared, plan,
-                                                       ip, fp))
+                                                       ip, fp,
+                                                       wi as u64 + 1))
             })
             .collect();
         Ok(Pool { shared, plan, workers: Mutex::new(workers) })
@@ -381,6 +506,7 @@ impl Pool {
             });
         }
         let (tx, rx) = mpsc::channel();
+        let t_submit = Instant::now();
         let mut st = self.shared.state.lock().unwrap();
         while st.q.len() >= self.shared.cfg.queue_cap && !st.closed {
             st = self.shared.not_full.wait(st).unwrap();
@@ -388,8 +514,24 @@ impl Pool {
         if st.closed {
             return Err(SubmitRejected::Closed(input));
         }
-        st.q.push_back(Request { input, submitted: Instant::now(), tx });
+        // request ids are only allocated (and spans only recorded)
+        // when a recorder is attached — the untraced submit path costs
+        // one None check plus two relaxed atomic stores
+        let id = match &self.shared.trace {
+            Some(rec) => rec.next_request_id(),
+            None => 0,
+        };
+        st.q.push_back(Request { input, id, submitted: Instant::now(),
+                                 tx });
+        let depth = st.q.len() as u64;
         drop(st);
+        self.shared.stats.queue_depth.store(depth, Ordering::Relaxed);
+        self.shared.stats.inflight.fetch_add(1, Ordering::Relaxed);
+        if let Some(rec) = &self.shared.trace {
+            rec.record(SpanKind::Enqueue, rec.since(t_submit),
+                       t_submit.elapsed().as_nanos() as u64, 0, id,
+                       depth);
+        }
         self.shared.not_empty.notify_one();
         Ok(Ticket { rx })
     }
@@ -419,16 +561,23 @@ impl Drop for Pool {
 }
 
 fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>,
-               int_prog: Arc<Program>, f32_prog: Arc<Program>) {
+               int_prog: Arc<Program>, f32_prog: Arc<Program>,
+               tid: u64) {
     let mut engine = Engine::from_compiled(plan.clone(), int_prog,
                                            f32_prog);
     engine.set_int_enabled(!shared.cfg.force_f32);
+    if let Some(rec) = &shared.trace {
+        // traced pools also profile: per-node spans into the ring,
+        // per-kernel aggregates flushed into the stats cell per batch
+        engine.enable_profiling();
+        engine.attach_trace(rec.clone(), tid);
+    }
     let dim = plan.input_dim;
     let od = plan.output_dim;
     // per-worker flat batch staging, reused across batches
     let mut flat: Vec<f32> = Vec::new();
     loop {
-        let batch = {
+        let (batch, t_first, depth_seen) = {
             let mut st = shared.state.lock().unwrap();
             loop {
                 if !st.q.is_empty() {
@@ -439,6 +588,8 @@ fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>,
                 }
                 st = shared.not_empty.wait(st).unwrap();
             }
+            let t_first = Instant::now();
+            let depth_seen = st.q.len() as u64;
             let mut batch = Vec::with_capacity(shared.cfg.max_batch);
             while batch.len() < shared.cfg.max_batch {
                 match st.q.pop_front() {
@@ -472,11 +623,27 @@ fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>,
                     }
                 }
             }
-            batch
+            shared.stats.queue_depth
+                  .store(st.q.len() as u64, Ordering::Relaxed);
+            (batch, t_first, depth_seen)
         };
         shared.not_full.notify_all();
 
         let n = batch.len();
+        if let Some(rec) = &shared.trace {
+            // the batch just closed: per-request queue_wait spans plus
+            // one batch_form span covering the straggler window
+            let closed = Instant::now();
+            for r in &batch {
+                rec.record(
+                    SpanKind::QueueWait, rec.since(r.submitted),
+                    closed.duration_since(r.submitted).as_nanos() as u64,
+                    tid, r.id, 0);
+            }
+            rec.record(SpanKind::BatchForm, rec.since(t_first),
+                       closed.duration_since(t_first).as_nanos() as u64,
+                       tid, 0, n as u64);
+        }
         flat.clear();
         flat.reserve(n * dim);
         for r in &batch {
@@ -484,15 +651,26 @@ fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>,
         }
         // `run_batch` borrows the logits straight out of the engine's
         // arena — no per-batch output allocation…
+        let t_infer = Instant::now();
         let result = engine.run_batch(&flat, n);
         let done = Instant::now();
-        let mut stats = shared.stats.lock().unwrap();
+        if let Some(rec) = &shared.trace {
+            rec.record(SpanKind::Infer, rec.since(t_infer),
+                       done.duration_since(t_infer).as_nanos() as u64,
+                       tid, 0, n as u64);
+        }
+        let mut stats = shared.stats.inner.lock().unwrap();
         stats.batches += 1;
         stats.requests += n as u64;
+        stats.qdepth.record(depth_seen);
+        // profiling workers drain their per-node timers under the
+        // per-batch stats lock they already hold (no-op otherwise)
+        engine.flush_profile_into(&mut stats.kernels);
         match result {
             Ok(out) => {
+                let trace = shared.trace.as_deref();
                 for (i, r) in batch.into_iter().enumerate() {
-                    let Request { mut input, submitted, tx } = r;
+                    let Request { mut input, id, submitted, tx } = r;
                     let lat =
                         done.duration_since(submitted).as_nanos() as u64;
                     stats.record_latency(lat);
@@ -504,6 +682,12 @@ fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>,
                     input.clear();
                     input.extend_from_slice(&out[i * od..(i + 1) * od]);
                     let _ = tx.send(Ok(input));
+                    if let Some(rec) = trace {
+                        rec.record(
+                            SpanKind::Respond, rec.since(done),
+                            done.elapsed().as_nanos() as u64, tid, id,
+                            0);
+                    }
                 }
             }
             Err(e) => {
@@ -514,6 +698,9 @@ fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>,
                 }
             }
         }
+        drop(stats);
+        shared.stats.inflight
+              .fetch_sub(n as u64, Ordering::Relaxed);
     }
 }
 
@@ -532,7 +719,22 @@ impl Server {
     /// lazily on the first request.
     pub fn start(plan: Arc<EnginePlan>, cfg: ServeConfig)
                  -> Result<Server> {
+        Server::start_inner(plan, cfg, None)
+    }
+
+    /// [`Self::start`] with a span recorder attached: the serve path
+    /// records `enqueue → queue_wait → batch_form → infer → respond`
+    /// spans and per-node kernel slices into `trace` (the
+    /// `--trace-out` surface).
+    pub fn start_traced(plan: Arc<EnginePlan>, cfg: ServeConfig,
+                        trace: Arc<TraceRecorder>) -> Result<Server> {
+        Server::start_inner(plan, cfg, Some(trace))
+    }
+
+    fn start_inner(plan: Arc<EnginePlan>, cfg: ServeConfig,
+                   trace: Option<Arc<TraceRecorder>>) -> Result<Server> {
         let registry = Arc::new(ModelRegistry::new());
+        registry.set_trace(trace);
         let id = if plan.model.is_empty() {
             "default".to_string()
         } else {
@@ -715,6 +917,11 @@ mod tests {
         assert_eq!((st.p50_ms, st.p90_ms, st.p99_ms, st.max_ms),
                    (0.0, 0.0, 0.0, 0.0));
         assert_eq!((st.elapsed_s, st.throughput_rps), (0.0, 0.0));
+        // gauges: nothing queued or in flight, error rate zero — but
+        // the uptime clock runs from registration
+        assert_eq!((st.queue_depth, st.inflight), (0, 0));
+        assert_eq!((st.error_rate, st.queue_depth_p90), (0.0, 0.0));
+        assert!(st.uptime_ms >= 0.0);
         // shutting down an idle server yields the same zero stats
         let fin = server.shutdown();
         assert_eq!((fin.requests, fin.batches, fin.errors), (0, 0, 0));
@@ -746,4 +953,66 @@ mod tests {
 
     // bounded_draw range/uniformity is pinned in tests/serve.rs
     // (bounded_draw_replaces_modulo_without_bias_artifacts).
+
+    #[test]
+    fn histogram_percentiles_match_reservoir_oracle() {
+        // the acceptance bound: every reported percentile (histogram)
+        // agrees with the exact reservoir oracle within 1% relative
+        // error (+1µs absolute slack for sub-bucket rounding)
+        let server = Server::start(
+            tiny_plan(),
+            ServeConfig { workers: 2, ..ServeConfig::default() },
+        )
+        .unwrap();
+        closed_loop(&server, 4, 50, 3).unwrap();
+        let st = server.stats();
+        let cell = server.registry().stats_cell("t").unwrap();
+        let oracle = latency_oracle(&cell);
+        assert_eq!(oracle.len(), 200, "reservoir under cap is exact");
+        for (q, got_ms) in [(0.50, st.p50_ms), (0.90, st.p90_ms),
+                            (0.99, st.p99_ms)] {
+            let want_ms = percentile(&oracle, q) as f64 / 1e6;
+            let tol = want_ms * 0.01 + 1e-3;
+            assert!((got_ms - want_ms).abs() <= tol,
+                    "q{q}: hist {got_ms}ms vs oracle {want_ms}ms");
+        }
+        // max is tracked exactly, not bucketed
+        assert_eq!(st.max_ms,
+                   *oracle.last().unwrap() as f64 / 1e6);
+        // post-traffic gauges: drained and sane
+        assert_eq!(st.inflight, 0);
+        assert_eq!(st.requests, 200);
+        assert_eq!(st.error_rate, 0.0);
+        assert!(st.uptime_ms > 0.0);
+        assert!(st.queue_depth_p90 >= 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn traced_server_records_all_request_phases() {
+        let rec = TraceRecorder::with_capacity(1 << 12);
+        let server = Server::start_traced(
+            tiny_plan(),
+            ServeConfig { workers: 2, ..ServeConfig::default() },
+            rec.clone(),
+        )
+        .unwrap();
+        closed_loop(&server, 2, 20, 5).unwrap();
+        server.shutdown();
+        let events = rec.events();
+        for kind in [SpanKind::Enqueue, SpanKind::QueueWait,
+                     SpanKind::BatchForm, SpanKind::Infer,
+                     SpanKind::Respond, SpanKind::Node] {
+            let n = events.iter().filter(|e| e.kind == kind).count();
+            assert!(n > 0, "missing {} spans", kind.label());
+        }
+        // every request got an id and an enqueue span
+        let enq: Vec<u64> = events
+            .iter()
+            .filter(|e| e.kind == SpanKind::Enqueue)
+            .map(|e| e.a)
+            .collect();
+        assert_eq!(enq.len(), 40);
+        assert!(enq.iter().all(|id| (1..=40).contains(id)));
+    }
 }

@@ -1,0 +1,554 @@
+//! Observability primitives for the serving stack: a lock-free span
+//! recorder with Chrome trace-event export, HDR-style log-linear
+//! histograms for latency/queue-depth percentiles, and per-node kernel
+//! timers keyed by (op, backend, bit-width).
+//!
+//! Everything here is dependency-free and cheap to *not* use: when no
+//! [`TraceRecorder`] is attached the serve path takes one branch per
+//! batch and the interpreter hot loop is byte-identical to the
+//! uninstrumented build (`Program::execute` is untouched; the profiled
+//! variant is a separate method).
+//!
+//! # Ring-buffer layout
+//!
+//! The recorder is a fixed power-of-two array of slots. A writer claims
+//! a slot with one `fetch_add(1, Relaxed)` on the cursor and masks the
+//! index — no CAS loop, no lock, writers never wait on each other. Slot
+//! fields are plain relaxed atomics; the `seq` field (claim index + 1,
+//! so 0 means "never written") is stored last with `Release`. Readers
+//! only run after the pool has quiesced (export happens post-shutdown),
+//! so a torn slot on wrap is at worst one bogus event in a diagnostic
+//! artifact, never UB — the whole recorder is safe Rust. When the
+//! buffer wraps, the oldest events are overwritten; [`TraceRecorder::
+//! dropped`] reports how many.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{num, obj, s, Json};
+
+// -------------------------------------------------------------------
+// Span taxonomy
+// -------------------------------------------------------------------
+
+/// Typed span phases recorded along a request's path through the pool,
+/// plus per-node kernel slices from the instrumented interpreter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Submitter-side: backpressure wait + queue push (args: req, depth).
+    Enqueue = 0,
+    /// Per request: queue push until its batch was closed (args: req).
+    QueueWait = 1,
+    /// Per batch: first pop until the deadline window closed (args: batch).
+    BatchForm = 2,
+    /// Per batch: the `run_batch` call (args: batch).
+    Infer = 3,
+    /// Per request: response channel send after inference (args: req).
+    Respond = 4,
+    /// Per IR node execution inside `Infer` (args: node/op/backend/bits).
+    Node = 5,
+}
+
+impl SpanKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::Enqueue => "enqueue",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::BatchForm => "batch_form",
+            SpanKind::Infer => "infer",
+            SpanKind::Respond => "respond",
+            SpanKind::Node => "node",
+        }
+    }
+
+    fn from_u64(v: u64) -> SpanKind {
+        match v {
+            0 => SpanKind::Enqueue,
+            1 => SpanKind::QueueWait,
+            2 => SpanKind::BatchForm,
+            3 => SpanKind::Infer,
+            4 => SpanKind::Respond,
+            _ => SpanKind::Node,
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// Recorder
+// -------------------------------------------------------------------
+
+/// Static attribution for one IR node, registered once per program so
+/// node spans can carry (op, backend, bit-width) without any per-event
+/// allocation: the event stores only a table index.
+#[derive(Debug, Clone)]
+pub struct NodeMeta {
+    pub op: &'static str,
+    pub backend: &'static str,
+    pub w_bits: u32,
+    pub a_bits: u32,
+    /// Pass-stable node id (survives elision/fusion rewrites).
+    pub node_id: usize,
+    pub model: String,
+}
+
+#[derive(Default)]
+struct Slot {
+    /// Claim index + 1; 0 = never written. Stored last (Release).
+    seq: AtomicU64,
+    kind: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+    tid: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+/// One decoded event, in recorder-epoch nanoseconds.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub kind: SpanKind,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub tid: u64,
+    /// Request id (request spans) or node-meta table index (node spans).
+    pub a: u64,
+    /// Batch size / queue depth, span-kind dependent.
+    pub b: u64,
+}
+
+/// Default ring capacity: 64K events (~3.5 MB of slots).
+pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 16;
+
+/// Lock-free bounded span recorder. Clone the `Arc` freely; recording
+/// is `&self` and never blocks.
+pub struct TraceRecorder {
+    epoch: Instant,
+    cursor: AtomicU64,
+    mask: usize,
+    slots: Vec<Slot>,
+    node_meta: Mutex<Vec<NodeMeta>>,
+    request_ids: AtomicU64,
+}
+
+impl TraceRecorder {
+    pub fn new() -> Arc<TraceRecorder> {
+        TraceRecorder::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+
+    /// `capacity` is rounded up to the next power of two (min 64).
+    pub fn with_capacity(capacity: usize) -> Arc<TraceRecorder> {
+        let cap = capacity.max(64).next_power_of_two();
+        let slots = (0..cap).map(|_| Slot::default()).collect();
+        Arc::new(TraceRecorder {
+            epoch: Instant::now(),
+            cursor: AtomicU64::new(0),
+            mask: cap - 1,
+            slots,
+            node_meta: Mutex::new(Vec::new()),
+            request_ids: AtomicU64::new(0),
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Nanoseconds from the recorder epoch to `t` (0 if `t` precedes it).
+    pub fn since(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Allocate a fresh request id (monotonic, starts at 1).
+    pub fn next_request_id(&self) -> u64 {
+        self.request_ids.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Record one span. Lock-free: one fetch_add plus six relaxed
+    /// stores; on wrap the oldest slot is silently overwritten.
+    pub fn record(&self, kind: SpanKind, start_ns: u64, dur_ns: u64,
+                  tid: u64, a: u64, b: u64) {
+        let claim = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[claim as usize & self.mask];
+        slot.kind.store(kind as u64, Ordering::Relaxed);
+        slot.start_ns.store(start_ns, Ordering::Relaxed);
+        slot.dur_ns.store(dur_ns, Ordering::Relaxed);
+        slot.tid.store(tid, Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        slot.seq.store(claim + 1, Ordering::Release);
+    }
+
+    /// Register a program's node attribution table; returns the base
+    /// offset to add to a node index when recording [`SpanKind::Node`].
+    pub fn register_nodes(&self, metas: Vec<NodeMeta>) -> u64 {
+        let mut table = self.node_meta.lock().unwrap();
+        let base = table.len() as u64;
+        table.extend(metas);
+        base
+    }
+
+    /// Events recorded so far but overwritten by ring wrap-around.
+    pub fn dropped(&self) -> u64 {
+        self.cursor
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.capacity() as u64)
+    }
+
+    /// Snapshot of every populated slot, sorted by start time. Meant
+    /// to run after the recorded activity has quiesced.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for slot in &self.slots {
+            if slot.seq.load(Ordering::Acquire) == 0 {
+                continue;
+            }
+            out.push(TraceEvent {
+                kind: SpanKind::from_u64(slot.kind.load(Ordering::Relaxed)),
+                start_ns: slot.start_ns.load(Ordering::Relaxed),
+                dur_ns: slot.dur_ns.load(Ordering::Relaxed),
+                tid: slot.tid.load(Ordering::Relaxed),
+                a: slot.a.load(Ordering::Relaxed),
+                b: slot.b.load(Ordering::Relaxed),
+            });
+        }
+        out.sort_by_key(|e| (e.start_ns, e.tid));
+        out
+    }
+
+    /// Serialize as a Chrome trace-event JSON array (`ph: "X"` complete
+    /// events, microsecond timestamps) loadable by chrome://tracing and
+    /// Perfetto. Node spans carry (op, backend, w_bits, a_bits, model);
+    /// request spans carry the request id.
+    pub fn chrome_trace(&self) -> Json {
+        let metas = self.node_meta.lock().unwrap();
+        let events = self.events();
+        let mut arr = Vec::with_capacity(events.len());
+        for e in &events {
+            let (name, cat, args) = match e.kind {
+                SpanKind::Node => match metas.get(e.a as usize) {
+                    Some(m) => (m.op, "kernel", obj(vec![
+                        ("node", num(m.node_id as f64)),
+                        ("op", s(m.op)),
+                        ("backend", s(m.backend)),
+                        ("w_bits", num(m.w_bits as f64)),
+                        ("a_bits", num(m.a_bits as f64)),
+                        ("model", s(&m.model)),
+                        ("batch", num(e.b as f64)),
+                    ])),
+                    // meta table raced a wrapped slot: keep the event,
+                    // degrade the attribution
+                    None => ("node", "kernel",
+                             obj(vec![("node", num(e.a as f64))])),
+                },
+                SpanKind::Enqueue => (e.kind.label(), "serve", obj(vec![
+                    ("req", num(e.a as f64)),
+                    ("depth", num(e.b as f64)),
+                ])),
+                SpanKind::QueueWait | SpanKind::Respond => {
+                    (e.kind.label(), "serve",
+                     obj(vec![("req", num(e.a as f64))]))
+                }
+                SpanKind::BatchForm | SpanKind::Infer => {
+                    (e.kind.label(), "serve",
+                     obj(vec![("batch", num(e.b as f64))]))
+                }
+            };
+            arr.push(obj(vec![
+                ("name", s(name)),
+                ("cat", s(cat)),
+                ("ph", s("X")),
+                ("ts", num(e.start_ns as f64 / 1e3)),
+                ("dur", num(e.dur_ns as f64 / 1e3)),
+                ("pid", num(1.0)),
+                ("tid", num(e.tid as f64)),
+                ("args", args),
+            ]));
+        }
+        Json::Arr(arr)
+    }
+}
+
+// -------------------------------------------------------------------
+// Log-linear histogram
+// -------------------------------------------------------------------
+
+/// Sub-bucket resolution: 2^6 = 64 linear sub-buckets per octave, so
+/// bucket width / bucket low ≤ 1/64 and the midpoint representative is
+/// within 1/128 ≈ 0.78% of any value in the bucket — the documented
+/// "< 1% relative error" bound. Values below 64 are exact.
+const SUB_BITS: u32 = 6;
+const SUB: usize = 1 << SUB_BITS;
+
+/// HDR-style log-linear histogram over `u64` values (we record
+/// nanoseconds and queue depths). Counts are exact; values are bucketed
+/// with ≤ ~0.78% relative error. Merging is elementwise bucket addition
+/// — exact, associative, and commutative — so per-worker and per-model
+/// histograms aggregate without resampling (unlike the old reservoir
+/// merge, which truncated to the slowest model's sample rate).
+///
+/// Buckets grow lazily with the largest value seen (max 3776 for the
+/// full u64 range, ~30 KB), so cloning a snapshot is O(octaves seen),
+/// not O(sample count) like the reservoir it replaces.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let e = 63 - v.leading_zeros();
+    let sub = ((v >> (e - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    ((e - SUB_BITS) as usize + 1) * SUB + sub
+}
+
+/// Midpoint of the bucket's value range (exact for index < 64).
+fn bucket_midpoint(index: usize) -> u64 {
+    if index < SUB {
+        return index as u64;
+    }
+    let e = (index / SUB + SUB_BITS as usize - 1) as u32;
+    let sub = (index % SUB) as u64;
+    let low = (1u64 << e) + (sub << (e - SUB_BITS));
+    low + (1u64 << (e - SUB_BITS)) / 2
+}
+
+impl Histogram {
+    pub fn record(&mut self, v: u64) {
+        let idx = bucket_index(v);
+        if idx >= self.buckets.len() {
+            self.buckets.resize(idx + 1, 0);
+        }
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Elementwise bucket addition: exact and associative.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.buckets.len() > self.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (dst, src) in self.buckets.iter_mut().zip(&other.buckets) {
+            *dst += src;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Nearest-rank percentile (`q` in [0, 1]) as the bucket midpoint
+    /// of the bucket holding that rank, clamped to the observed max.
+    /// Within ~0.78% of the exact nearest-rank value; 0 when empty.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank =
+            ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_midpoint(idx).min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+// -------------------------------------------------------------------
+// Kernel profiling
+// -------------------------------------------------------------------
+
+/// Aggregation key for kernel timings: which op, on which backend, at
+/// which weight/activation bit width. `Ord` so profiles live in
+/// deterministic `BTreeMap`s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct KernelKey {
+    pub op: &'static str,
+    pub backend: &'static str,
+    pub w_bits: u32,
+    pub a_bits: u32,
+}
+
+/// Monotonic per-node (or per-key, after aggregation) timing counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NodeTimer {
+    pub calls: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+}
+
+impl NodeTimer {
+    #[inline]
+    pub fn observe(&mut self, ns: u64) {
+        self.calls += 1;
+        self.total_ns = self.total_ns.saturating_add(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn merge(&mut self, other: &NodeTimer) {
+        self.calls += other.calls;
+        self.total_ns = self.total_ns.saturating_add(other.total_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+/// Serialize aggregated kernel rows (sorted by descending total time)
+/// as the JSON array used by `stats_json` and the bench artifacts'
+/// per-node breakdown column.
+pub fn kernel_rows_json(rows: &[(KernelKey, NodeTimer)]) -> Json {
+    let total: u64 = rows.iter().map(|(_, t)| t.total_ns).sum();
+    Json::Arr(
+        rows.iter()
+            .map(|(k, t)| {
+                let share = if total > 0 {
+                    t.total_ns as f64 / total as f64
+                } else {
+                    0.0
+                };
+                obj(vec![
+                    ("op", s(k.op)),
+                    ("backend", s(k.backend)),
+                    ("w_bits", num(k.w_bits as f64)),
+                    ("a_bits", num(k.a_bits as f64)),
+                    ("calls", num(t.calls as f64)),
+                    ("total_ns", num(t.total_ns as f64)),
+                    ("max_ns", num(t.max_ns as f64)),
+                    ("share", num(share)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Sort a kernel profile map's rows by descending total time (ties by
+/// key for determinism).
+pub fn sorted_kernel_rows(
+    map: &std::collections::BTreeMap<KernelKey, NodeTimer>,
+) -> Vec<(KernelKey, NodeTimer)> {
+    let mut rows: Vec<(KernelKey, NodeTimer)> =
+        map.iter().map(|(k, t)| (*k, *t)).collect();
+    rows.sort_by(|a, b| b.1.total_ns.cmp(&a.1.total_ns)
+        .then(a.0.cmp(&b.0)));
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_contiguous_at_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(63), 63);
+        assert_eq!(bucket_index(64), 64);
+        assert_eq!(bucket_index(127), 127);
+        assert_eq!(bucket_index(128), 128);
+        let mut prev = 0usize;
+        for v in [1u64, 63, 64, 65, 127, 128, 1000, 1 << 20, u64::MAX] {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "{v}");
+            prev = idx;
+        }
+        // full-range index stays small: lazy buckets are bounded
+        assert!(bucket_index(u64::MAX) < 3776);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = Histogram::default();
+        for v in 0..64u64 {
+            h.record(v);
+        }
+        for (q, want) in [(0.5, 31), (1.0, 63)] {
+            assert_eq!(h.percentile(q), want);
+        }
+        assert_eq!(h.count(), 64);
+    }
+
+    #[test]
+    fn midpoint_stays_within_bound() {
+        for v in [64u64, 100, 1_000, 123_456, 9_999_999, 1 << 40] {
+            let rep = bucket_midpoint(bucket_index(v));
+            let err = (rep as f64 - v as f64).abs() / v as f64;
+            assert!(err <= 1.0 / 128.0 + 1e-12, "{v}: rep {rep}");
+        }
+    }
+
+    #[test]
+    fn recorder_assigns_monotonic_request_ids() {
+        let rec = TraceRecorder::with_capacity(64);
+        assert_eq!(rec.next_request_id(), 1);
+        assert_eq!(rec.next_request_id(), 2);
+    }
+
+    #[test]
+    fn recorder_wraps_and_reports_drops() {
+        let rec = TraceRecorder::with_capacity(64);
+        for i in 0..100u64 {
+            rec.record(SpanKind::Infer, i, 1, 0, 0, 4);
+        }
+        let events = rec.events();
+        assert_eq!(events.len(), 64);
+        assert_eq!(rec.dropped(), 36);
+        // survivors are the newest claims
+        assert!(events.iter().all(|e| e.start_ns >= 36));
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_through_parser() {
+        let rec = TraceRecorder::with_capacity(64);
+        let base = rec.register_nodes(vec![NodeMeta {
+            op: "gemm.simd",
+            backend: "simd",
+            w_bits: 4,
+            a_bits: 8,
+            node_id: 7,
+            model: "m".into(),
+        }]);
+        rec.record(SpanKind::Enqueue, 10, 5, 0, 1, 2);
+        rec.record(SpanKind::Node, 20, 3, 1, base, 8);
+        let j = rec.chrome_trace();
+        let text = j.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(),
+                   "enqueue");
+        assert_eq!(arr[1].get("name").unwrap().as_str().unwrap(),
+                   "gemm.simd");
+        let args = arr[1].get("args").unwrap();
+        assert_eq!(args.get("w_bits").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(args.get("node").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(args.get("backend").unwrap().as_str().unwrap(),
+                   "simd");
+    }
+}

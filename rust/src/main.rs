@@ -159,19 +159,72 @@ fn backend_from_args(args: &Args) -> Result<Option<engine::Backend>> {
 /// inspect the result without serving. `--dump-ir` additionally
 /// prints the compiled execution graphs (node list + arena map) for
 /// the integer path and the f32 reference path; `--backend` forces
-/// the kernel backend the dumped integer nodes carry.
+/// the kernel backend the dumped integer nodes carry; `--profile`
+/// runs a few synthetic batches through the instrumented interpreter
+/// and prints the per-node timings plus the (op, backend, bit-width)
+/// aggregate.
 fn cmd_plan(args: &Args, opt: &ExpOptions) -> Result<()> {
-    let plan = plan_from_args(args, opt)?;
+    let plan = Arc::new(plan_from_args(args, opt)?);
     println!("{}", plan.report());
+    let backend = backend_from_args(args)?;
     if args.bool_flag("dump-ir") {
-        let backend = backend_from_args(args)?;
-        let plan = Arc::new(plan);
         let int_prog = engine::graph::Program::compile_with_backend(
             plan.clone(), true, backend);
         println!("{}", int_prog.dump());
         let f32_prog = engine::graph::Program::compile_with_backend(
-            plan, false, backend);
+            plan.clone(), false, backend);
         println!("{}", f32_prog.dump());
+    }
+    if args.bool_flag("profile") {
+        let int_path = !args.bool_flag("no-int");
+        let batch = args.usize_flag("batch", 8)?;
+        let iters = args.usize_flag("requests", 12)?.max(1);
+        let mut eng = engine::Engine::with_backend(plan.clone(),
+                                                   backend);
+        eng.set_int_enabled(int_path);
+        eng.enable_profiling();
+        let xs: Vec<f32> = (0..batch * plan.input_dim)
+            .map(|i| ((i as f32) * 0.37).sin())
+            .collect();
+        for _ in 0..iters {
+            eng.infer_batch(&xs, batch)?;
+        }
+        println!(
+            "node profile — {} path, {iters} batches x {batch}:",
+            if int_path { "int" } else { "f32" }
+        );
+        for (id, k, t) in eng.node_profile(int_path) {
+            println!(
+                "profile: node #{id:<3} {:<14} {:<7} w{}a{} \
+                 calls={} total={}ns max={}ns",
+                k.op, k.backend, k.w_bits, k.a_bits, t.calls,
+                t.total_ns, t.max_ns
+            );
+        }
+        let rows = eng.kernel_profile(int_path);
+        let mut t = TableBuilder::new(
+            "kernel profile — by (op, backend, bit width)",
+            &["Op", "Backend", "W", "A", "Calls", "Total us", "Max us",
+              "Share"],
+        );
+        let total: u64 = rows.iter().map(|(_, nt)| nt.total_ns).sum();
+        for (k, nt) in &rows {
+            t.row(&[
+                k.op.to_string(),
+                k.backend.to_string(),
+                format!("{}", k.w_bits),
+                format!("{}", k.a_bits),
+                format!("{}", nt.calls),
+                format!("{:.1}", nt.total_ns as f64 / 1e3),
+                format!("{:.1}", nt.max_ns as f64 / 1e3),
+                format!("{:.1}%", if total > 0 {
+                    100.0 * nt.total_ns as f64 / total as f64
+                } else {
+                    0.0
+                }),
+            ]);
+        }
+        println!("{}", t.render());
     }
     Ok(())
 }
@@ -289,13 +342,47 @@ fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
         cfg.workers, cfg.max_batch, cfg.deadline,
         if cfg.force_f32 { "OFF" } else { "on" }, clients, requests
     ));
-    let server = serve::Server::start(Arc::new(plan), cfg)?;
+    let trace = trace_from_args(args);
+    let server = match &trace {
+        Some((_, rec)) => serve::Server::start_traced(
+            Arc::new(plan), cfg, rec.clone())?,
+        None => serve::Server::start(Arc::new(plan), cfg)?,
+    };
     let stats = serve::closed_loop(&server, clients, requests, 7)?;
     println!("{stats}");
     let out = opt.out_path("serve_stats.json");
     std::fs::write(&out, stats.to_json().to_string())?;
     logging::info(format!("serve stats written to {out:?}"));
     server.shutdown();
+    write_trace(trace)?;
+    Ok(())
+}
+
+/// The `--trace-out FILE` flag: an attached span recorder plus the
+/// path its Chrome trace-event JSON is written to after shutdown.
+fn trace_from_args(args: &Args)
+                   -> Option<(String, Arc<engine::TraceRecorder>)> {
+    args.opt_flag("trace-out")
+        .map(|p| (p.to_string(), engine::TraceRecorder::new()))
+}
+
+/// Export a recorder's spans once the serving stack has quiesced
+/// (workers joined — no recording is concurrent with this read).
+fn write_trace(trace: Option<(String, Arc<engine::TraceRecorder>)>)
+               -> Result<()> {
+    let Some((path, rec)) = trace else { return Ok(()) };
+    let events = rec.events().len();
+    let dropped = rec.dropped();
+    std::fs::write(&path, rec.chrome_trace().to_string())
+        .with_context(|| format!("write trace {path:?}"))?;
+    logging::info(format!(
+        "chrome trace written to {path:?} ({events} events{})",
+        if dropped > 0 {
+            format!(", {dropped} dropped by ring wrap")
+        } else {
+            String::new()
+        }
+    ));
     Ok(())
 }
 
@@ -317,6 +404,10 @@ fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
         }
         None => Arc::new(ModelRegistry::new()),
     };
+    let trace = trace_from_args(args);
+    if let Some((_, rec)) = &trace {
+        registry.set_trace(Some(rec.clone()));
+    }
     let mut ids = Vec::new();
     for (name, spec) in specs {
         let plan = plan_from_spec(spec)
@@ -351,12 +442,33 @@ fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
         registry.resident_bytes(), elapsed
     );
     // registry stats JSON, with the load window's throughput numbers
-    // patched over the raw per-model snapshots
+    // patched over the raw per-model snapshots; the per-node kernel
+    // counters only the registry snapshot carries survive the patch
     let mut json = registry.stats_json();
     if let Json::Obj(top) = &mut json {
+        let kernels: BTreeMap<String, Json> = match top.get("models") {
+            Some(Json::Obj(snap)) => snap
+                .iter()
+                .filter_map(|(id, m)| match m {
+                    Json::Obj(f) => f
+                        .get("kernels")
+                        .map(|k| (id.clone(), k.clone())),
+                    _ => None,
+                })
+                .collect(),
+            _ => BTreeMap::new(),
+        };
         let models: BTreeMap<String, Json> = per_model
             .iter()
-            .map(|(id, st)| (id.clone(), st.to_json()))
+            .map(|(id, st)| {
+                let mut m = st.to_json();
+                if let (Json::Obj(f), Some(k)) =
+                    (&mut m, kernels.get(id))
+                {
+                    f.insert("kernels".to_string(), k.clone());
+                }
+                (id.clone(), m)
+            })
             .collect();
         top.insert("models".to_string(), Json::Obj(models));
     }
@@ -364,6 +476,7 @@ fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
     std::fs::write(&out, json.to_string())?;
     logging::info(format!("serve stats written to {out:?}"));
     registry.shutdown();
+    write_trace(trace)?;
     Ok(())
 }
 

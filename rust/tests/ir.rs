@@ -356,6 +356,70 @@ fn dump_lists_nodes_and_arena_map() {
     assert!(dump.contains("conv2d"), "{dump}");
 }
 
+// -------------------------------------------------------------------
+// pass-stable node ids (profiler attribution)
+// -------------------------------------------------------------------
+
+#[test]
+fn node_ids_are_unique_deterministic_and_backend_invariant() {
+    let mut plans: Vec<(String, Arc<EnginePlan>)> = Vec::new();
+    for model in ["lenet5", "vgg7", "resnet18", "mobilenetv2"] {
+        let (man, params) = preset_manifest(model, false);
+        plans.push((model.into(),
+                    Arc::new(lower::lower(&man, &params).unwrap())));
+    }
+    plans.push(("pruned-chain".into(), Arc::new(
+        synthetic_plan("chain", &[16, 32, 32, 10], 4, 8, 0.4, 5)
+            .unwrap())));
+    plans.push(("dw".into(), Arc::new(
+        synthetic_conv_plan("dw", 6, 4, 4, 3, 1, Padding::Same, 4, 4,
+                            8, 0.25, 13).unwrap())));
+    for (label, plan) in &plans {
+        for int_path in [true, false] {
+            let prog = Program::compile(plan.clone(), int_path);
+            let ids = prog.node_ids();
+            // one id per node, all distinct (unique profiler keys)
+            assert_eq!(ids.len(), prog.nodes().len(), "{label}");
+            let mut sorted = ids.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), ids.len(),
+                       "{label}/{int_path}: duplicate node ids");
+            // recompiling the same plan reproduces the same ids
+            let again = Program::compile(plan.clone(), int_path);
+            assert_eq!(again.node_ids(), ids, "{label}/{int_path}");
+        }
+        // the backend choice relabels kernels but must not renumber
+        // them — profiles across backends stay comparable per node
+        let scalar = Program::compile_with_backend(
+            plan.clone(), true, Some(Backend::Scalar));
+        let simd = Program::compile_with_backend(
+            plan.clone(), true, Some(Backend::Simd));
+        assert_eq!(scalar.node_ids(), simd.node_ids(), "{label}");
+    }
+}
+
+#[test]
+fn fusion_retires_ids_instead_of_renumbering() {
+    // dense_chain_plan(false) fuses twice; the surviving ids must be a
+    // subset of a hypothetical unfused numbering (i.e. fusion removes
+    // ids, it never shifts the survivors), which shows up as gaps
+    // rather than a dense 0..n range
+    let plan = Arc::new(dense_chain_plan(false));
+    let prog = Program::compile(plan.clone(), true);
+    assert_eq!(fused(&prog), 2);
+    let ids = prog.node_ids();
+    let max_id = *ids.iter().max().unwrap();
+    assert!(max_id >= ids.len(),
+            "two fused ids must retire: max {max_id} over {} nodes",
+            ids.len());
+    // the dump carries the stable id of every node
+    let dump = prog.dump();
+    for id in ids {
+        assert!(dump.contains(&format!("#{id}")), "{dump}");
+    }
+}
+
 #[test]
 fn backend_auto_rule_splits_on_lane_width() {
     use bayesian_bits::engine::kernels::LANES;

@@ -1,0 +1,327 @@
+//! Observability battery: histogram error bounds vs the exact
+//! reservoir-style oracle, merge algebra, the lock-free span ring
+//! under concurrency, and end-to-end Chrome trace validity through a
+//! traced server.
+
+use std::sync::Arc;
+
+use bayesian_bits::engine::serve::{closed_loop, percentile};
+use bayesian_bits::engine::trace::TraceEvent;
+use bayesian_bits::engine::{synthetic_plan, Engine, Histogram,
+                            ServeConfig, Server, SpanKind,
+                            TraceRecorder};
+use bayesian_bits::rng::Pcg64;
+use bayesian_bits::util::json::Json;
+
+// ------------------------------------------------------------------
+// Histogram properties
+// ------------------------------------------------------------------
+
+/// The documented bound: bucket midpoints sit within 1/128 (< 1%) of
+/// any value in their bucket, values below 64 are exact, and the
+/// sub-64-width buckets add at most 1 of absolute rounding.
+fn error_bound(exact: u64) -> f64 {
+    exact as f64 / 128.0 + 1.0
+}
+
+/// Randomized value streams with qualitatively different shapes —
+/// uniform-small (the exact region), uniform-wide (spans many
+/// octaves), log-uniform (heavy tail), and a tight cluster.
+fn distributions(seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Pcg64::new(seed);
+    let n = 5000;
+    let uniform_small: Vec<u64> =
+        (0..n).map(|_| rng.next_below(100)).collect();
+    let uniform_wide: Vec<u64> =
+        (0..n).map(|_| rng.next_below(10_000_000_000)).collect();
+    let log_uniform: Vec<u64> = (0..n)
+        .map(|_| (1u64 << rng.next_below(50)) + rng.next_below(1000))
+        .collect();
+    let clustered: Vec<u64> =
+        (0..n).map(|_| 1_000_000 + rng.next_below(1000)).collect();
+    vec![uniform_small, uniform_wide, log_uniform, clustered]
+}
+
+#[test]
+fn histogram_percentiles_within_bound_of_exact_oracle() {
+    for (di, data) in distributions(41).into_iter().enumerate() {
+        let mut h = Histogram::default();
+        for &v in &data {
+            h.record(v);
+        }
+        let mut sorted = data.clone();
+        sorted.sort_unstable();
+        assert_eq!(h.count(), data.len() as u64, "dist {di}");
+        assert_eq!(h.max(), *sorted.last().unwrap(), "dist {di}");
+        for q in [0.01, 0.25, 0.5, 0.9, 0.95, 0.99, 0.999, 1.0] {
+            let exact = percentile(&sorted, q);
+            let got = h.percentile(q);
+            let err = (got as f64 - exact as f64).abs();
+            assert!(
+                err <= error_bound(exact),
+                "dist {di} q={q}: hist {got} vs exact {exact} \
+                 (err {err}, bound {})",
+                error_bound(exact)
+            );
+        }
+        // mean is exact (sum and count are not bucketed)
+        let want_mean =
+            sorted.iter().map(|&v| v as f64).sum::<f64>()
+                / sorted.len() as f64;
+        assert!((h.mean() - want_mean).abs() < 1e-6, "dist {di}");
+    }
+}
+
+#[test]
+fn histogram_merge_is_associative_and_order_free() {
+    let parts = distributions(97);
+    let hists: Vec<Histogram> = parts
+        .iter()
+        .map(|data| {
+            let mut h = Histogram::default();
+            for &v in data {
+                h.record(v);
+            }
+            h
+        })
+        .collect();
+    let [a, b, c, d] = &hists[..] else { unreachable!() };
+    // (a + b) + c == a + (b + c), exactly (derived PartialEq)
+    let mut left = a.clone();
+    left.merge(b);
+    left.merge(c);
+    let mut right_inner = b.clone();
+    right_inner.merge(c);
+    let mut right = a.clone();
+    right.merge(&right_inner);
+    assert_eq!(left, right);
+    // merge of per-worker histograms == one histogram over the
+    // concatenated stream (exact bucket counts, not resampling)
+    let mut merged = a.clone();
+    for h in [b, c, d] {
+        merged.merge(h);
+    }
+    let mut whole = Histogram::default();
+    for data in &parts {
+        for &v in data {
+            whole.record(v);
+        }
+    }
+    assert_eq!(merged, whole);
+    // merging an empty histogram is the identity
+    let mut with_empty = merged.clone();
+    with_empty.merge(&Histogram::default());
+    assert_eq!(with_empty, merged);
+}
+
+// ------------------------------------------------------------------
+// Span ring buffer
+// ------------------------------------------------------------------
+
+#[test]
+fn ring_survives_concurrent_recording_without_loss() {
+    let rec = TraceRecorder::with_capacity(8192);
+    let threads = 4usize;
+    let per = 1000u64;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let rec = rec.clone();
+            s.spawn(move || {
+                for i in 0..per {
+                    rec.record(SpanKind::Infer,
+                               (t as u64) * 1_000_000 + i, 10,
+                               t as u64, i, 0);
+                }
+            });
+        }
+    });
+    let events = rec.events();
+    assert_eq!(events.len(), threads * per as usize);
+    assert_eq!(rec.dropped(), 0);
+    for t in 0..threads as u64 {
+        let mine: Vec<&TraceEvent> =
+            events.iter().filter(|e| e.tid == t).collect();
+        assert_eq!(mine.len(), per as usize, "tid {t}");
+        // per-thread payloads all arrived intact (no torn slots)
+        let mut ids: Vec<u64> = mine.iter().map(|e| e.a).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..per).collect::<Vec<u64>>(), "tid {t}");
+    }
+}
+
+#[test]
+fn ring_wrap_keeps_capacity_and_counts_drops() {
+    let rec = TraceRecorder::with_capacity(64);
+    assert_eq!(rec.capacity(), 64);
+    for i in 0..200u64 {
+        rec.record(SpanKind::Enqueue, i, 1, 0, i, 0);
+    }
+    let events = rec.events();
+    assert_eq!(events.len(), 64);
+    assert_eq!(rec.dropped(), 200 - 64);
+    // the survivors are the newest claims
+    assert!(events.iter().all(|e| e.a >= 200 - 64));
+}
+
+#[test]
+fn request_ids_are_unique_across_threads() {
+    let rec = TraceRecorder::new();
+    let mut ids: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let rec = rec.clone();
+                s.spawn(move || {
+                    (0..250)
+                        .map(|_| rec.next_request_id())
+                        .collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 1000);
+    assert!(*ids.first().unwrap() >= 1); // 0 means "untraced"
+}
+
+// ------------------------------------------------------------------
+// End-to-end: traced server -> Chrome trace-event JSON
+// ------------------------------------------------------------------
+
+fn small_cfg() -> ServeConfig {
+    ServeConfig {
+        workers: 2,
+        queue_cap: 32,
+        max_batch: 4,
+        deadline: std::time::Duration::from_millis(1),
+        force_f32: false,
+        backend: None,
+    }
+}
+
+#[test]
+fn traced_server_emits_loadable_chrome_trace() {
+    let plan = Arc::new(
+        synthetic_plan("traced", &[16, 24, 6], 4, 8, 0.2, 19).unwrap());
+    let rec = TraceRecorder::new();
+    let server =
+        Server::start_traced(plan, small_cfg(), rec.clone()).unwrap();
+    closed_loop(&server, 3, 20, 11).unwrap();
+    server.shutdown();
+
+    let json = rec.chrome_trace();
+    // the export must survive a serialize -> parse roundtrip (what
+    // chrome://tracing and the CI python check do)
+    let reparsed = Json::parse(&json.to_string()).unwrap();
+    let Json::Arr(events) = reparsed else {
+        panic!("chrome trace must be a JSON array");
+    };
+    assert!(!events.is_empty());
+    let mut names = std::collections::BTreeSet::new();
+    let mut kernel_slices = 0usize;
+    for e in &events {
+        let Json::Obj(m) = e else { panic!("event must be an object") };
+        for key in ["name", "cat", "ph", "ts", "dur", "pid", "tid",
+                    "args"] {
+            assert!(m.contains_key(key), "missing {key}: {m:?}");
+        }
+        assert_eq!(m["ph"], Json::Str("X".into()));
+        let (Json::Num(ts), Json::Num(dur)) = (&m["ts"], &m["dur"])
+        else {
+            panic!("ts/dur must be numbers");
+        };
+        assert!(*ts >= 0.0 && *dur >= 0.0);
+        let Json::Str(name) = &m["name"] else {
+            panic!("name must be a string");
+        };
+        names.insert(name.clone());
+        if m["cat"] == Json::Str("kernel".into()) {
+            kernel_slices += 1;
+            let Json::Obj(args) = &m["args"] else {
+                panic!("kernel args must be an object");
+            };
+            // per-node slices attribute (op, backend, bit widths)
+            for key in ["node", "op", "backend", "w_bits", "a_bits"] {
+                assert!(args.contains_key(key),
+                        "kernel slice missing {key}: {args:?}");
+            }
+        }
+    }
+    // all five request phases appear, plus per-node kernel slices
+    for phase in ["enqueue", "queue_wait", "batch_form", "infer",
+                  "respond"] {
+        assert!(names.contains(phase), "missing phase {phase:?} in \
+                 {names:?}");
+    }
+    assert!(kernel_slices > 0, "no per-node kernel slices recorded");
+}
+
+#[test]
+fn untraced_server_allocates_no_request_ids() {
+    let plan = Arc::new(
+        synthetic_plan("plain", &[12, 8], 4, 8, 0.0, 23).unwrap());
+    let server = Server::start(plan, small_cfg()).unwrap();
+    let st = closed_loop(&server, 2, 10, 3).unwrap();
+    assert_eq!(st.requests, 20);
+    assert_eq!(st.errors, 0);
+    server.shutdown();
+}
+
+// ------------------------------------------------------------------
+// Per-node profiler
+// ------------------------------------------------------------------
+
+#[test]
+fn profiler_counts_every_node_once_per_batch() {
+    let plan = Arc::new(
+        synthetic_plan("prof", &[16, 24, 6], 4, 8, 0.2, 29).unwrap());
+    let mut eng = Engine::new(plan.clone());
+    eng.enable_profiling();
+    let xs: Vec<f32> = (0..2 * plan.input_dim)
+        .map(|i| ((i as f32) * 0.21).sin())
+        .collect();
+    let iters = 5u64;
+    for _ in 0..iters {
+        eng.infer_batch(&xs, 2).unwrap();
+    }
+    let nodes = eng.node_profile(true);
+    assert!(!nodes.is_empty());
+    for (id, key, t) in &nodes {
+        assert_eq!(t.calls, iters, "node #{id} {key:?}");
+        assert!(t.max_ns <= t.total_ns);
+    }
+    // node ids are unique within one program's profile
+    let mut ids: Vec<usize> = nodes.iter().map(|(id, _, _)| *id)
+                                   .collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), nodes.len());
+    // aggregate rows preserve the total call volume and sort by
+    // descending total time
+    let rows = eng.kernel_profile(true);
+    assert!(!rows.is_empty());
+    let agg_calls: u64 = rows.iter().map(|(_, t)| t.calls).sum();
+    let node_calls: u64 = nodes.iter().map(|(_, _, t)| t.calls).sum();
+    assert_eq!(agg_calls, node_calls);
+    for pair in rows.windows(2) {
+        assert!(pair[0].1.total_ns >= pair[1].1.total_ns);
+    }
+    // the f32 path has not run, so its profile is empty
+    assert!(eng.node_profile(false).is_empty());
+}
+
+#[test]
+fn profiling_disabled_engine_matches_profiled_results() {
+    let plan = Arc::new(
+        synthetic_plan("prof_eq", &[10, 14, 4], 4, 8, 0.1, 31).unwrap());
+    let xs: Vec<f32> = (0..3 * plan.input_dim)
+        .map(|i| ((i as f32) * 0.4).cos())
+        .collect();
+    let mut plain = Engine::new(plan.clone());
+    let want = plain.infer_batch(&xs, 3).unwrap();
+    let mut profiled = Engine::new(plan);
+    profiled.enable_profiling();
+    let got = profiled.infer_batch(&xs, 3).unwrap();
+    assert_eq!(want, got);
+}
