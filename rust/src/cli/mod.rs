@@ -43,7 +43,7 @@ const VALUE_FLAGS: &[&str] = &[
     "checkpoint", "dims", "wbits", "abits", "prune", "max-batch",
     "deadline-ms", "queue-cap", "clients", "requests", "rows", "cols",
     "batch", "hw", "cin", "cout", "ksize", "plan-cache-mb", "backend",
-    "trace-out",
+    "trace-out", "ladder", "slo-ms",
 ];
 
 impl Args {
@@ -196,6 +196,12 @@ Integer inference engine (rust/src/engine)
                   --model M --checkpoint PATH  (or, without a
                   checkpoint, a synthetic plan: --dims 128,256,10
                   --wbits N --abits N --prune F)
+                  --ladder T1,T2,.. lowers the checkpoint once per
+                  gate threshold into a precision ladder (one compiled
+                  rung per bit-width tier); --slo-ms D sets the
+                  per-request deadline the router picks rungs against —
+                  under queue pressure requests degrade to cheaper
+                  rungs instead of shedding
                   multi-model: repeat --model NAME=SPEC where SPEC is
                   `preset:MODEL` (in-process preset manifest),
                   `MANIFEST.json` (deterministic init), or
@@ -227,6 +233,8 @@ Integer inference engine (rust/src/engine)
                   (conv sweep) with a backend column per record, plus
                   a multi-model serve sweep to BENCH_serve.json
                   (per-model p50/p99 + plan-cache eviction counters)
+                  and an SLO deadline-pressure sweep to
+                  BENCH_ladder.json (precision ladder vs static plan)
                   --rows N --cols N --batch B (GEMM; skip: --conv-only)
                   --hw N --cin N --cout N --ksize K (conv layer)
                   --backend scalar|simd restricts the backend sweep
@@ -331,6 +339,11 @@ mod tests {
         assert!(p.bool_flag("profile"));
         let t = parse("serve --trace-out trace.json");
         assert_eq!(t.opt_flag("trace-out"), Some("trace.json"));
+        // precision-ladder flags: --ladder list, --slo-ms value
+        let l = parse("serve --ladder 0.3,0.5,0.9 --slo-ms 2.5");
+        assert_eq!(l.f64_list_flag("ladder", &[]).unwrap(),
+                   vec![0.3, 0.5, 0.9]);
+        assert_eq!(l.f64_flag("slo-ms", 0.0).unwrap(), 2.5);
         assert_eq!(parse("serve --trace-out=t.json")
                        .str_flag("trace-out", "x"),
                    "t.json");

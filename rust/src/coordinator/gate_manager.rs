@@ -6,7 +6,7 @@ use std::collections::BTreeMap;
 
 use crate::bops::QuantState;
 use crate::config::Mode;
-use crate::quant::gates::test_time_gate;
+use crate::quant::gates::{self, test_time_gate_at};
 use crate::runtime::Manifest;
 
 /// Per-slot lock vectors plus helpers bound to one manifest.
@@ -89,13 +89,23 @@ impl<'m> GateManager<'m> {
     /// matching the autoregressive posterior's support).
     pub fn test_gates(&self, phi: &[f64], lock_mask: &[f32],
                       lock_val: &[f32]) -> Vec<f32> {
+        self.test_gates_at(phi, lock_mask, lock_val, gates::THRESHOLD)
+    }
+
+    /// [`Self::test_gates`] at an explicit Eq. 22 threshold `t` — one
+    /// posterior thresholded at several `t`s yields the precision
+    /// ladder's rungs. The `> 0.5` comparisons below are midpoints on
+    /// binary {0,1} lock/gate values, not the gate threshold; `t` only
+    /// enters through [`test_time_gate_at`].
+    pub fn test_gates_at(&self, phi: &[f64], lock_mask: &[f32],
+                         lock_val: &[f32], threshold: f64) -> Vec<f32> {
         let mut z = vec![0.0f32; self.man.n_slots];
         for q in &self.man.quantizers {
             for i in 0..q.n_slots {
                 let s = q.offset + i;
                 z[s] = if lock_mask[s] > 0.5 {
                     lock_val[s]
-                } else if test_time_gate(phi[s]) {
+                } else if test_time_gate_at(phi[s], threshold) {
                     1.0
                 } else {
                     0.0

@@ -35,6 +35,7 @@ use super::{ActSpec, EnginePlan, PlanLayer, PreOp, SpatialPlan};
 use crate::config::Mode;
 use crate::coordinator::gate_manager::GateManager;
 use crate::models::Padding;
+use crate::quant::gates;
 use crate::quant::grid::quantize_codes_host;
 use crate::rng::Pcg64;
 use crate::runtime::Manifest;
@@ -149,6 +150,21 @@ pub fn lower(man: &Manifest, params: &[f32]) -> Result<EnginePlan> {
 /// baseline checkpoint, etc.).
 pub fn lower_with_mode(man: &Manifest, params: &[f32], mode: &Mode)
                        -> Result<EnginePlan> {
+    lower_with_mode_at(man, params, mode, gates::THRESHOLD)
+}
+
+/// [`lower_with_mode`] at an explicit Eq. 22 gate threshold in (0, 1):
+/// the precision-ladder primitive. One trained posterior lowered at
+/// several thresholds yields a family of plans — a smaller threshold
+/// opens fewer gates (shorter residual bit chains, more pruned
+/// channels => a cheaper rung), a larger one opens more. The default
+/// (`gates::THRESHOLD`) keeps [`lower`] / [`lower_with_mode`]
+/// bit-exact with the committed golden fixture.
+pub fn lower_with_mode_at(man: &Manifest, params: &[f32], mode: &Mode,
+                          threshold: f64) -> Result<EnginePlan> {
+    if !(threshold > 0.0 && threshold < 1.0) {
+        bail!("gate threshold must be in (0, 1), got {}", threshold);
+    }
     if man.engine != "bb" {
         bail!("engine lowering needs a Bayesian-Bits manifest, got {:?}",
               man.engine);
@@ -167,7 +183,7 @@ pub fn lower_with_mode(man: &Manifest, params: &[f32], mode: &Mode)
         .iter()
         .map(|i| params[*i] as f64)
         .collect();
-    let gates = gm.test_gates(&phi, &lock_mask, &lock_val);
+    let gates = gm.test_gates_at(&phi, &lock_mask, &lock_val, threshold);
 
     let n_layers = man.layers.len();
     let mut layers = Vec::with_capacity(n_layers);

@@ -79,9 +79,10 @@ use pack::PackedMatrix;
 
 pub use graph::{ExecState, Program};
 pub use kernels::Backend;
-pub use lower::{lower, lower_with_mode, synthetic_conv_plan,
-                synthetic_plan};
-pub use registry::{CacheStats, ModelRegistry, Router};
+pub use lower::{lower, lower_with_mode, lower_with_mode_at,
+                synthetic_conv_plan, synthetic_plan};
+pub use registry::{pick_rung, CacheStats, ModelRegistry, RungInfo,
+                   RungLoad, Router};
 pub use serve::{ServeConfig, ServeConfigError, ServeStats, Server};
 pub use trace::{Histogram, KernelKey, NodeTimer, SpanKind,
                 TraceRecorder};

@@ -1,36 +1,44 @@
 //! Multi-model serving: a named registry of lowered plans, a router
 //! that fans requests out to per-model worker pools, and a
-//! byte-budget LRU over the *compiled* side of each model.
+//! byte-budget LRU over the *compiled* side of each model. Each entry
+//! holds a **precision ladder**: one or more rungs, each the same
+//! checkpoint lowered at a different Eq. 22 gate threshold (e.g.
+//! `w2`/`w4`/`w8` variants of one posterior), and the per-request
+//! rung pick degrades to cheaper bit widths under SLO/queue pressure
+//! instead of shedding load.
 //!
 //! ```text
 //!   Router::submit(model_id, x)
-//!        │  (name -> entry, LRU touch, lazy compile)
+//!        │  (name -> entry, rung pick, LRU touch, lazy compile)
 //!        v
-//!   ModelRegistry ── entry "a" ── Arc<EnginePlan> (always resident)
-//!        │               └─ Active: {int Program, f32 Program,
-//!        │                           Pool: queue + workers + arenas}
-//!        ├─ entry "b" ── … (cold: plan only, no programs, no pool)
+//!   ModelRegistry ── entry "a" ── rung t0.20/w2 ── Arc<EnginePlan>
+//!        │               │            └─ Active: {int+f32 Programs,
+//!        │               │                        Pool: queue+workers}
+//!        │               └─ rung t0.90/w8 ── … (cold: plan only)
+//!        ├─ entry "b" ── rung t0.34/w8 (single-rung = classic entry)
 //!        └─ CacheStats {hits, misses, recompiles, evictions}
 //! ```
 //!
-//! Registration is cheap: an entry owns only the lowered
+//! Registration is cheap: a rung owns only the lowered
 //! [`EnginePlan`] (the weights). Both execution
 //! [`Program`](super::graph::Program)s (integer
 //! path + f32 reference) and the worker pool with its scratch arenas
 //! are compiled lazily on the first request and dropped again when the
 //! plan-cache byte budget forces an eviction — the next request to an
-//! evicted model transparently recompiles (a *recompile* miss). The
-//! cost function is the PR-3 arena accounting:
-//! `executed_path.arena_bytes() * max_batch * workers`, i.e. the
-//! scratch the pool pins at full occupancy (each worker's `ExecState`
-//! materializes only the path it runs). The LRU never
-//! evicts the entry being activated, so a single model larger than
-//! the budget still serves (over budget, with a warning left to the
-//! caller via `resident_bytes()`).
+//! evicted rung transparently recompiles (a *recompile* miss). The
+//! cost function counts the full resident set of a compiled rung:
+//! `(int.arena_bytes() + f32.arena_bytes()) * max_batch * workers`,
+//! i.e. the scratch the pool pins at full occupancy across both
+//! programs of the pair (each worker holds both paths so the
+//! `force_f32` A/B lever and error fallbacks never allocate
+//! mid-request). The LRU is rung-granular — a cold rung of a hot
+//! model evicts before the hot rung — and never evicts the rung being
+//! activated, so a single rung larger than the budget still serves.
 //!
-//! Per-model [`ServeStats`] live in the entry, not the pool, so
+//! Per-rung [`ServeStats`] live in the rung, not the pool, so
 //! counters, gauges, and latency histograms survive eviction/recompile
-//! cycles.
+//! cycles; the per-rung latency histogram doubles as the measured
+//! cost signal the rung pick consumes.
 //! An eviction drains the victim's queue before the programs drop —
 //! every queued ticket is answered — and a submitter that raced the
 //! eviction gets its input handed back internally and retried on the
@@ -38,22 +46,25 @@
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use super::serve::{snapshot_cell, snapshot_stats, Pool, ServeConfig,
                    ServeStats, StatsCell, StatsSnapshot,
                    SubmitRejected, Ticket};
-use super::trace::{self, TraceRecorder};
+use super::trace::{self, KernelKey, NodeTimer, TraceRecorder};
 use super::EnginePlan;
+use crate::config::Mode;
+use crate::quant::gates;
 use crate::rng::Pcg64;
 use crate::runtime::Manifest;
 use crate::util::json::{num, obj, Json};
 
 /// Plan-cache counters: every submit is a hit (programs resident) or
 /// a miss (cold compile); recompiles are the subset of misses whose
-/// entry had been compiled before (i.e. evicted in between).
+/// rung had been compiled before (i.e. evicted in between). All four
+/// count rung-granular events.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
@@ -73,22 +84,129 @@ impl CacheStats {
     }
 }
 
-/// The compiled (evictable) side of one entry.
+/// Live load signals for one ladder rung, consumed by [`pick_rung`].
+#[derive(Debug, Clone, Copy)]
+pub struct RungLoad {
+    /// Measured p90 request latency in ns; 0 = no samples yet, which
+    /// the policy treats optimistically (the first served batch
+    /// corrects it).
+    pub lat_ns: u64,
+    /// Requests submitted to this rung and not yet answered.
+    pub backlog: u64,
+}
+
+/// Pick the ladder rung for one request. `rungs` ascend in precision
+/// (rung 0 is the cheapest, the last is the most accurate — ascending
+/// gate threshold). With an SLO, the policy walks down from the most
+/// accurate rung and takes the first whose predicted completion —
+/// its measured p90 scaled by the batch waves queued ahead of the
+/// request — still fits the budget, falling through to the cheapest
+/// rung when none does. Without an SLO it sheds precision linearly
+/// with queue pressure (total backlog against `queue_cap`). Both arms
+/// are monotone: a deeper queue never picks a *more* expensive rung.
+pub fn pick_rung(rungs: &[RungLoad], slo: Option<Duration>,
+                 queue_cap: usize, max_batch: usize) -> usize {
+    let n = rungs.len();
+    if n <= 1 {
+        return 0;
+    }
+    let total: u64 = rungs.iter().map(|r| r.backlog).sum();
+    match slo {
+        Some(slo) => {
+            let slo_ns = slo.as_nanos();
+            let waves = 1 + total as u128 / max_batch.max(1) as u128;
+            for i in (0..n).rev() {
+                if rungs[i].lat_ns as u128 * waves <= slo_ns {
+                    return i;
+                }
+            }
+            0
+        }
+        None => {
+            let cap = queue_cap.max(1);
+            let shed =
+                (total.min(cap as u64) as usize * n) / (cap + 1);
+            n - 1 - shed.min(n - 1)
+        }
+    }
+}
+
+/// Reporting view of one ladder rung (`ModelRegistry::ladder`).
+#[derive(Debug, Clone)]
+pub struct RungInfo {
+    /// Unique per-model rung label, e.g. `"r0/t0.200/w2"`.
+    pub label: String,
+    /// Eq. 22 gate threshold this rung was lowered at.
+    pub threshold: f64,
+    /// Register-time proxy accuracy score in [0, 1].
+    pub score: f64,
+    /// Largest weight bit width across the rung's layers.
+    pub w_bits: u32,
+    /// Whether the rung's compiled programs are currently resident.
+    pub resident: bool,
+    pub stats: ServeStats,
+}
+
+/// The compiled (evictable) side of one rung.
 struct Active {
     pool: Arc<Pool>,
     cost_bytes: usize,
 }
 
-struct Entry {
+/// One rung of a model's precision ladder.
+struct Rung {
+    label: String,
+    threshold: f64,
+    score: f64,
+    w_bits: u32,
     plan: Arc<EnginePlan>,
-    cfg: ServeConfig,
-    /// Survives eviction — stats are per *model*, not per pool.
+    /// Survives eviction — stats are per *rung*, not per pool; the
+    /// latency histogram is also the rung's measured cost signal.
     stats: Arc<StatsCell>,
     active: Option<Active>,
     /// LRU tick of the last submit.
     last_used: u64,
-    /// Whether this entry has ever compiled (recompile accounting).
+    /// Whether this rung has ever compiled (recompile accounting).
     compiled_once: bool,
+}
+
+struct Entry {
+    cfg: ServeConfig,
+    /// Ascending gate threshold == ascending precision; `rungs.last()`
+    /// is the most accurate (the idle default), `rungs[0]` the
+    /// cheapest. Single-rung entries behave exactly like the
+    /// pre-ladder registry.
+    rungs: Vec<Rung>,
+}
+
+impl Entry {
+    /// The most accurate rung — the model's canonical plan.
+    fn top(&self) -> &Rung {
+        self.rungs.last().expect("entry has at least one rung")
+    }
+}
+
+/// Cheap register-time proxy for a rung's accuracy: the
+/// parameter-weighted mean over layers of (bits/8, capped at 1) x
+/// kept-channel ratio. Widths ≥ 8 bits count as full fidelity (the
+/// paper's 8-bit configurations track FP32 closely), pruned channels
+/// scale fidelity down. Not a measured accuracy — a free, monotone
+/// ranking signal available before the rung ever runs.
+fn proxy_accuracy(plan: &EnginePlan) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for l in &plan.layers {
+        let w = (l.in_dim * l.out_dim) as f64;
+        let bits = (l.w_bits.min(8) as f64) / 8.0;
+        let kept = l.kept.len() as f64 / l.out_dim.max(1) as f64;
+        num += w * bits * kept;
+        den += w;
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
 }
 
 #[derive(Default)]
@@ -129,7 +247,7 @@ impl ModelRegistry {
 
     /// Registry whose compiled programs + arenas are LRU-evicted once
     /// their summed cost exceeds `bytes`. A budget of 0 keeps at most
-    /// the single model being served resident.
+    /// the single rung being served resident.
     pub fn with_budget(bytes: usize) -> ModelRegistry {
         ModelRegistry { inner: Mutex::new(Inner::default()),
                         budget_bytes: Some(bytes),
@@ -148,15 +266,76 @@ impl ModelRegistry {
         *self.trace.lock().unwrap() = trace;
     }
 
-    /// Register a lowered plan under `id`. Cheap: compilation of the
+    /// Register a lowered plan under `id` as a single-rung ladder at
+    /// the paper's default gate threshold. Cheap: compilation of the
     /// execution programs is deferred to the first request.
     pub fn register(&self, id: &str, plan: Arc<EnginePlan>,
                     cfg: ServeConfig) -> Result<()> {
+        self.register_ladder_plans(id,
+                                   vec![(gates::THRESHOLD, plan)], cfg)
+    }
+
+    /// Register a precision ladder from explicit (threshold, plan)
+    /// rungs. Thresholds must be distinct, in (0, 1); rungs are stored
+    /// in ascending threshold order (== ascending precision), and
+    /// every plan must agree on input/output width — they are the
+    /// same model at different fidelities.
+    pub fn register_ladder_plans(&self, id: &str,
+                                 rungs: Vec<(f64, Arc<EnginePlan>)>,
+                                 cfg: ServeConfig) -> Result<()> {
         if id.is_empty() {
             bail!("model id must be non-empty");
         }
         cfg.validate()?;
-        plan.validate()?;
+        if rungs.is_empty() {
+            bail!("model {id:?}: a ladder needs at least one rung");
+        }
+        let mut rungs = rungs;
+        rungs.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for w in rungs.windows(2) {
+            if w[0].0 == w[1].0 {
+                bail!("model {id:?}: duplicate ladder threshold {}",
+                      w[0].0);
+            }
+        }
+        for (t, plan) in &rungs {
+            if !(*t > 0.0 && *t < 1.0) {
+                bail!("model {id:?}: gate threshold must be in (0, 1), \
+                       got {t}");
+            }
+            plan.validate()?;
+            if plan.input_dim != rungs[0].1.input_dim
+                || plan.output_dim != rungs[0].1.output_dim
+            {
+                bail!("model {id:?}: ladder rungs disagree on model \
+                       width ({}x{} vs {}x{})",
+                      plan.input_dim, plan.output_dim,
+                      rungs[0].1.input_dim, rungs[0].1.output_dim);
+            }
+        }
+        let rungs: Vec<Rung> = rungs
+            .into_iter()
+            .enumerate()
+            .map(|(i, (threshold, plan))| {
+                let w_bits = plan
+                    .layers
+                    .iter()
+                    .map(|l| l.w_bits)
+                    .max()
+                    .unwrap_or(0);
+                Rung {
+                    label: format!("r{i}/t{threshold:.3}/w{w_bits}"),
+                    threshold,
+                    score: proxy_accuracy(&plan),
+                    w_bits,
+                    plan,
+                    stats: Arc::new(StatsCell::new()),
+                    active: None,
+                    last_used: 0,
+                    compiled_once: false,
+                }
+            })
+            .collect();
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             bail!("registry is shut down");
@@ -164,15 +343,32 @@ impl ModelRegistry {
         if g.entries.contains_key(id) {
             bail!("model {id:?} is already registered");
         }
-        g.entries.insert(id.to_string(), Entry {
-            plan,
-            cfg,
-            stats: Arc::new(StatsCell::new()),
-            active: None,
-            last_used: 0,
-            compiled_once: false,
-        });
+        g.entries.insert(id.to_string(), Entry { cfg, rungs });
         Ok(())
+    }
+
+    /// Lower one checkpoint at each of `thresholds` and register the
+    /// resulting ladder — one posterior, many bit widths. Thresholds
+    /// are deduplicated after sorting; distinct thresholds may still
+    /// lower to identical plans when no gate logit sits between them
+    /// (each rung keeps its own label and stats either way).
+    pub fn register_ladder(&self, id: &str, man: &Manifest,
+                           params: &[f32], mode: &Mode,
+                           thresholds: &[f64], cfg: ServeConfig)
+                           -> Result<()> {
+        let mut ts = thresholds.to_vec();
+        ts.sort_by(|a, b| a.total_cmp(b));
+        ts.dedup();
+        let rungs = ts
+            .into_iter()
+            .map(|t| {
+                let plan =
+                    super::lower::lower_with_mode_at(man, params, mode,
+                                                     t)?;
+                Ok((t, Arc::new(plan)))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.register_ladder_plans(id, rungs, cfg)
     }
 
     /// Lower a manifest + parameter vector and register the result —
@@ -184,20 +380,61 @@ impl ModelRegistry {
         self.register(id, Arc::new(plan), cfg)
     }
 
-    /// Route one request to `id`'s worker pool (compiling the model's
-    /// programs first if it is cold), and return the response ticket.
+    /// Route one request to `id`, picking the ladder rung from the
+    /// model's SLO and current queue pressure ([`pick_rung`]), and
+    /// return the response ticket. Single-rung models skip the policy.
     /// Blocks on that model's queue backpressure, never on another
     /// model's.
     pub fn submit(&self, id: &str, input: Vec<f32>) -> Result<Ticket> {
+        let rung = self.pick_rung_for(id)?;
+        self.submit_to(id, rung, input)
+    }
+
+    /// Route one request to a specific ladder rung (index in ascending
+    /// threshold order, as reported by [`Self::ladder`]) — replay and
+    /// bit-exactness tests pin rungs with this.
+    pub fn submit_rung(&self, id: &str, rung: usize, input: Vec<f32>)
+                       -> Result<Ticket> {
+        self.submit_to(id, rung, input)
+    }
+
+    /// The live rung pick for `id`: per-rung measured p90 + backlog
+    /// gauges against the model's SLO and queue capacity.
+    fn pick_rung_for(&self, id: &str) -> Result<usize> {
+        let (cells, slo, queue_cap, max_batch) = {
+            let g = self.inner.lock().unwrap();
+            let Some(e) = g.entries.get(id) else {
+                let known: Vec<&str> =
+                    g.entries.keys().map(|k| k.as_str()).collect();
+                bail!("unknown model {id:?} (registered: {known:?})");
+            };
+            if e.rungs.len() <= 1 {
+                return Ok(0);
+            }
+            (e.rungs.iter().map(|r| r.stats.clone()).collect::<Vec<_>>(),
+             e.cfg.slo, e.cfg.queue_cap, e.cfg.max_batch)
+        };
+        // gauge + histogram reads happen off the registry lock — a
+        // stats scrape or busy worker must not stall routing
+        let loads: Vec<RungLoad> = cells
+            .iter()
+            .map(|c| RungLoad { lat_ns: c.measured_p90_ns(),
+                                backlog: c.backlog() })
+            .collect();
+        Ok(pick_rung(&loads, slo, queue_cap, max_batch))
+    }
+
+    fn submit_to(&self, id: &str, rung: usize, input: Vec<f32>)
+                 -> Result<Ticket> {
         // Bounded retry: losing the checkout -> enqueue race to an
         // eviction is rare, but under a tiny budget with adversarial
         // interleaving one request could otherwise ping-pong compiles
-        // forever. Each retry re-activates the model, so a handful of
+        // forever. Each retry re-activates the rung, so a handful of
         // attempts is ample in practice.
         const MAX_EVICTION_RETRIES: usize = 16;
         let mut input = input;
         for _ in 0..MAX_EVICTION_RETRIES {
-            let pool = self.checkout(id, input.len())?;
+            let pool = self.checkout(id, rung, input.len())?;
             match pool.submit(input) {
                 Ok(t) => return Ok(t),
                 // the pool was evicted (or is draining) between
@@ -219,9 +456,10 @@ impl ModelRegistry {
                tight for the offered concurrency");
     }
 
-    /// LRU-touch `id`, lazily compiling + evicting as needed, and
-    /// return its live pool.
-    fn checkout(&self, id: &str, width: usize) -> Result<Arc<Pool>> {
+    /// LRU-touch rung `rung` of `id`, lazily compiling + evicting as
+    /// needed, and return its live pool.
+    fn checkout(&self, id: &str, rung: usize, width: usize)
+                -> Result<Arc<Pool>> {
         // evicted pools collected under the lock, drained after it —
         // a victim's queue join must not stall other models' submits
         let mut victims: Vec<Active> = Vec::new();
@@ -240,12 +478,17 @@ impl ModelRegistry {
         inner.clock += 1;
         let now = inner.clock;
         let e = inner.entries.get_mut(id).unwrap();
-        if width != e.plan.input_dim {
-            bail!("request has {width} values, model {id:?} wants {}",
-                  e.plan.input_dim);
+        if rung >= e.rungs.len() {
+            bail!("model {id:?} has {} ladder rungs, rung {rung} \
+                   requested", e.rungs.len());
         }
-        e.last_used = now;
-        if let Some(a) = &e.active {
+        let r = &mut e.rungs[rung];
+        if width != r.plan.input_dim {
+            bail!("request has {width} values, model {id:?} wants {}",
+                  r.plan.input_dim);
+        }
+        r.last_used = now;
+        if let Some(a) = &r.active {
             inner.cache.hits += 1;
             return Ok(a.pool.clone());
         }
@@ -254,23 +497,23 @@ impl ModelRegistry {
         // this compile; acceptable at current plan sizes, and it keeps
         // the LRU/byte accounting trivially consistent.
         inner.cache.misses += 1;
-        if e.compiled_once {
+        if r.compiled_once {
             inner.cache.recompiles += 1;
         }
-        e.compiled_once = true;
+        r.compiled_once = true;
         let (plan, cfg, stats) =
-            (e.plan.clone(), e.cfg.clone(), e.stats.clone());
+            (r.plan.clone(), e.cfg.clone(), r.stats.clone());
         let (int_prog, f32_prog) =
             super::compile_pair_with(&plan, cfg.backend);
-        // each worker's ExecState only ever materializes the arenas
-        // of the path it executes, so the cache cost charges that
-        // path alone (the other program's node list is negligible)
-        let exec_arena = if cfg.force_f32 {
-            f32_prog.arena_bytes()
-        } else {
-            int_prog.arena_bytes()
-        };
-        let cost_bytes = exec_arena * cfg.max_batch * cfg.workers;
+        // full resident set of the pair: every worker's ExecState can
+        // materialize either path (force_f32 A/B lever, parity
+        // checks), so both arenas are pinned while the rung is warm —
+        // charging only the executed path let the byte budget
+        // silently overshoot
+        let cost_bytes = (int_prog.arena_bytes()
+                          + f32_prog.arena_bytes())
+            * cfg.max_batch
+            * cfg.workers;
         let trace = self.trace.lock().unwrap().clone();
         let pool = Arc::new(
             Pool::start(plan, int_prog, f32_prog, cfg, stats, trace)
@@ -279,20 +522,24 @@ impl ModelRegistry {
         inner.resident_bytes += cost_bytes;
         if let Some(budget) = self.budget_bytes {
             while inner.resident_bytes > budget {
-                // evict the least-recently-used *other* resident model
+                // evict the least-recently-used *other* resident rung
+                // (a cold rung of this same model is fair game)
                 let victim = inner
                     .entries
                     .iter()
-                    .filter(|(k, e)| {
-                        e.active.is_some() && k.as_str() != id
+                    .flat_map(|(k, e)| {
+                        e.rungs.iter().enumerate().map(move |(ri, r)| {
+                            (k, ri, r)
+                        })
                     })
-                    .min_by_key(|(_, e)| e.last_used)
-                    .map(|(k, _)| k.clone());
-                let Some(victim) = victim else { break };
-                let a = inner
-                    .entries
-                    .get_mut(&victim)
-                    .unwrap()
+                    .filter(|(k, ri, r)| {
+                        r.active.is_some()
+                            && !(k.as_str() == id && *ri == rung)
+                    })
+                    .min_by_key(|(_, _, r)| r.last_used)
+                    .map(|(k, ri, _)| (k.clone(), ri));
+                let Some((vk, vr)) = victim else { break };
+                let a = inner.entries.get_mut(&vk).unwrap().rungs[vr]
                     .active
                     .take()
                     .unwrap();
@@ -301,7 +548,7 @@ impl ModelRegistry {
                 victims.push(a);
             }
         }
-        inner.entries.get_mut(id).unwrap().active =
+        inner.entries.get_mut(id).unwrap().rungs[rung].active =
             Some(Active { pool: pool.clone(), cost_bytes });
         drop(g);
         // drain each victim's queue (every ticket answered) and join
@@ -313,23 +560,34 @@ impl ModelRegistry {
         Ok(pool)
     }
 
-    /// Drop `id`'s compiled programs + pool (draining its queue), as
-    /// the budget sweep would. Returns false if unknown or already
-    /// cold. The entry itself stays registered.
+    /// Drop every resident rung of `id` (compiled programs + pool,
+    /// draining each queue), as the budget sweep would. Returns false
+    /// if unknown or already fully cold. The entry itself stays
+    /// registered.
     pub fn evict(&self, id: &str) -> bool {
-        let a = {
+        let actives: Vec<Active> = {
             let mut g = self.inner.lock().unwrap();
             let inner = &mut *g;
             let Some(e) = inner.entries.get_mut(id) else {
                 return false;
             };
-            let Some(a) = e.active.take() else { return false };
-            inner.resident_bytes -= a.cost_bytes;
-            inner.cache.evictions += 1;
-            a
+            let mut v = Vec::new();
+            for r in e.rungs.iter_mut() {
+                if let Some(a) = r.active.take() {
+                    inner.resident_bytes -= a.cost_bytes;
+                    inner.cache.evictions += 1;
+                    v.push(a);
+                }
+            }
+            v
         };
+        if actives.is_empty() {
+            return false;
+        }
         // drain + join with the registry unlocked, as checkout does
-        a.pool.shutdown();
+        for a in actives {
+            a.pool.shutdown();
+        }
         true
     }
 
@@ -338,28 +596,48 @@ impl ModelRegistry {
         self.inner.lock().unwrap().entries.keys().cloned().collect()
     }
 
-    /// The lowered plan behind `id` (always resident, even when the
-    /// compiled programs are evicted).
+    /// The model's canonical lowered plan — the most accurate rung's
+    /// (always resident, even when the compiled programs are evicted).
     pub fn plan(&self, id: &str) -> Option<Arc<EnginePlan>> {
         self.inner
             .lock()
             .unwrap()
             .entries
             .get(id)
-            .map(|e| e.plan.clone())
+            .map(|e| e.top().plan.clone())
     }
 
-    /// Whether `id`'s compiled programs are currently resident.
+    /// Reporting view of `id`'s ladder, ascending threshold order.
+    pub fn ladder(&self, id: &str) -> Option<Vec<RungInfo>> {
+        let rungs: Vec<(String, f64, f64, u32, bool, Arc<StatsCell>)> = {
+            let g = self.inner.lock().unwrap();
+            g.entries.get(id)?.rungs
+                .iter()
+                .map(|r| (r.label.clone(), r.threshold, r.score,
+                          r.w_bits, r.active.is_some(),
+                          r.stats.clone()))
+                .collect()
+        };
+        Some(rungs
+            .into_iter()
+            .map(|(label, threshold, score, w_bits, resident, cell)| {
+                RungInfo { label, threshold, score, w_bits, resident,
+                           stats: snapshot_stats(&cell) }
+            })
+            .collect())
+    }
+
+    /// Whether any of `id`'s rungs is currently resident.
     pub fn is_resident(&self, id: &str) -> Option<bool> {
         self.inner
             .lock()
             .unwrap()
             .entries
             .get(id)
-            .map(|e| e.active.is_some())
+            .map(|e| e.rungs.iter().any(|r| r.active.is_some()))
     }
 
-    /// Summed cost of every resident compiled model.
+    /// Summed cost of every resident compiled rung.
     pub fn resident_bytes(&self) -> usize {
         self.inner.lock().unwrap().resident_bytes
     }
@@ -368,72 +646,105 @@ impl ModelRegistry {
         self.inner.lock().unwrap().cache
     }
 
-    /// Per-model stats snapshot; `None` for an unknown id.
+    /// Per-model stats snapshot, merged across the ladder's rungs;
+    /// `None` for an unknown id.
     pub fn stats(&self, id: &str) -> Option<ServeStats> {
-        Some(snapshot_stats(&self.stats_cell(id)?))
+        let cells = self.rung_cells(id)?;
+        Some(merged_cells_stats(&cells))
     }
 
-    /// The shared per-model stats cell (test oracle access).
+    /// The stats cell of `id`'s most accurate rung (test oracle
+    /// access; single-rung models have exactly one cell).
     pub(crate) fn stats_cell(&self, id: &str) -> Option<Arc<StatsCell>> {
         self.inner
             .lock()
             .unwrap()
             .entries
             .get(id)
-            .map(|e| e.stats.clone())
+            .map(|e| e.top().stats.clone())
     }
 
-    /// Aggregate stats across every model: counters and gauges
-    /// summed, latency percentiles over the element-wise *merged*
-    /// histograms. Histogram merge is exact (bucket counts add), so
-    /// unlike the reservoir-resampling scheme this replaced, a
-    /// high-traffic model's distribution is weighted by its true
+    /// Every stats cell of `id`'s ladder, ascending threshold order.
+    fn rung_cells(&self, id: &str) -> Option<Vec<Arc<StatsCell>>> {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .get(id)
+            .map(|e| e.rungs.iter().map(|r| r.stats.clone()).collect())
+    }
+
+    /// Aggregate stats across every model and rung: counters and
+    /// gauges summed, latency percentiles over the element-wise
+    /// *merged* histograms. Histogram merge is exact (bucket counts
+    /// add), so unlike the reservoir-resampling scheme this replaced,
+    /// a high-traffic model's distribution is weighted by its true
     /// request count.
     pub fn aggregate_stats(&self) -> ServeStats {
         let cells: Vec<Arc<StatsCell>> = {
             let g = self.inner.lock().unwrap();
-            g.entries.values().map(|e| e.stats.clone()).collect()
+            g.entries
+                .values()
+                .flat_map(|e| e.rungs.iter().map(|r| r.stats.clone()))
+                .collect()
         };
-        let mut agg: Option<StatsSnapshot> = None;
-        for cell in &cells {
-            let s = snapshot_cell(cell);
-            match &mut agg {
-                Some(a) => a.merge(&s),
-                None => agg = Some(s),
-            }
-        }
-        agg.as_ref()
-           .map(ServeStats::from_snapshot)
-           .unwrap_or_default()
+        merged_cells_stats(&cells)
     }
 
     /// The full stats surface as one JSON document:
-    /// `{"models": {id: ServeStats…}, "aggregate": ServeStats,
+    /// `{"models": {id: ServeStats… + "rungs": {label: rung row…}},
+    ///   "aggregate": ServeStats,
     ///   "cache": {hits, misses, recompiles, evictions,
     ///             budget_bytes, resident_bytes, resident_models}}`.
+    /// Each rung row is the rung's own ServeStats plus its threshold,
+    /// proxy score, max weight bits, and residency.
     pub fn stats_json(&self) -> Json {
         let ids = self.model_ids();
         let mut models = BTreeMap::new();
         for id in &ids {
-            let Some(cell) = self.stats_cell(id) else { continue };
-            let mut st = match snapshot_stats(&cell).to_json() {
+            let Some(cells) = self.rung_cells(id) else { continue };
+            let Some(infos) = self.ladder(id) else { continue };
+            let mut st = match merged_cells_stats(&cells).to_json() {
                 Json::Obj(m) => m,
                 _ => unreachable!("ServeStats::to_json is an object"),
             };
             // per-(op, backend, bit-width) kernel timers, present once
-            // the model has served a profiled batch
-            let rows = cell.kernel_rows();
-            if !rows.is_empty() {
+            // the model has served a profiled batch (merged over rungs)
+            let mut kernels: BTreeMap<KernelKey, NodeTimer> =
+                BTreeMap::new();
+            for cell in &cells {
+                for (k, t) in cell.kernel_rows() {
+                    kernels.entry(k).or_default().merge(&t);
+                }
+            }
+            if !kernels.is_empty() {
+                let rows = trace::sorted_kernel_rows(&kernels);
                 st.insert("kernels".to_string(),
                           trace::kernel_rows_json(&rows));
             }
+            let mut rungs = BTreeMap::new();
+            for info in infos {
+                let mut row = match info.stats.to_json() {
+                    Json::Obj(m) => m,
+                    _ => unreachable!(),
+                };
+                row.insert("threshold".to_string(),
+                           num(info.threshold));
+                row.insert("score".to_string(), num(info.score));
+                row.insert("w_bits".to_string(),
+                           num(info.w_bits as f64));
+                row.insert("resident".to_string(),
+                           Json::Bool(info.resident));
+                rungs.insert(info.label, Json::Obj(row));
+            }
+            st.insert("rungs".to_string(), Json::Obj(rungs));
             models.insert(id.clone(), Json::Obj(st));
         }
         let g = self.inner.lock().unwrap();
         let resident: Vec<Json> = g
             .entries
             .iter()
-            .filter(|(_, e)| e.active.is_some())
+            .filter(|(_, e)| e.rungs.iter().any(|r| r.active.is_some()))
             .map(|(k, _)| Json::Str(k.clone()))
             .collect();
         // start from the canonical counter serialization so a counter
@@ -469,9 +780,11 @@ impl ModelRegistry {
             inner.closed = true;
             let mut v = Vec::new();
             for e in inner.entries.values_mut() {
-                if let Some(a) = e.active.take() {
-                    inner.resident_bytes -= a.cost_bytes;
-                    v.push(a);
+                for r in e.rungs.iter_mut() {
+                    if let Some(a) = r.active.take() {
+                        inner.resident_bytes -= a.cost_bytes;
+                        v.push(a);
+                    }
                 }
             }
             v
@@ -480,6 +793,21 @@ impl ModelRegistry {
             a.pool.shutdown();
         }
     }
+}
+
+/// Merge a set of stats cells into one [`ServeStats`].
+fn merged_cells_stats(cells: &[Arc<StatsCell>]) -> ServeStats {
+    let mut agg: Option<StatsSnapshot> = None;
+    for cell in cells {
+        let s = snapshot_cell(cell);
+        match &mut agg {
+            Some(a) => a.merge(&s),
+            None => agg = Some(s),
+        }
+    }
+    agg.as_ref()
+       .map(ServeStats::from_snapshot)
+       .unwrap_or_default()
 }
 
 impl Drop for ModelRegistry {
@@ -500,7 +828,8 @@ impl Router {
         Router { registry }
     }
 
-    /// Route one request to `model_id` and return its ticket.
+    /// Route one request to `model_id` (rung picked by SLO/pressure)
+    /// and return its ticket.
     pub fn submit(&self, model_id: &str, input: Vec<f32>)
                   -> Result<Ticket> {
         self.registry.submit(model_id, input)
@@ -571,4 +900,66 @@ pub fn closed_loop_router(router: &Router, ids: &[String],
         })
         .collect();
     Ok((elapsed, per_model))
+}
+
+/// Outcome of a deadline-counting closed loop ([`closed_loop_deadline`]).
+pub struct DeadlineReport {
+    /// Requests whose submit -> response latency fit the SLO.
+    pub within: u64,
+    pub total: u64,
+    pub elapsed_s: f64,
+    /// Every per-request latency (ns), ascending.
+    pub latencies_ns: Vec<u64>,
+}
+
+/// Closed-loop driver over one model that measures each request
+/// against a deadline: `clients` threads each submit `per_client`
+/// random requests back-to-back; every response's end-to-end latency
+/// is compared to `slo`. This is the `BENCH_ladder.json` harness —
+/// the same pressured loop run against a static plan and against a
+/// ladder shows how many requests each serves within the deadline.
+pub fn closed_loop_deadline(router: &Router, id: &str, clients: usize,
+                            per_client: usize, slo: Duration, seed: u64)
+                            -> Result<DeadlineReport> {
+    let dim = router
+        .registry()
+        .plan(id)
+        .map(|p| p.input_dim)
+        .ok_or_else(|| anyhow!("unknown model {id:?}"))?;
+    let t0 = Instant::now();
+    let mut latencies: Vec<u64> = Vec::new();
+    std::thread::scope(|scope| -> Result<()> {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || -> Result<Vec<u64>> {
+                    let mut rng = Pcg64::with_stream(seed, c as u64);
+                    let mut lats = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let x: Vec<f32> =
+                            (0..dim).map(|_| rng.normal()).collect();
+                        let t = Instant::now();
+                        router.submit(id, x)?.wait()?;
+                        lats.push(t.elapsed().as_nanos() as u64);
+                    }
+                    Ok(lats)
+                })
+            })
+            .collect();
+        for h in handles {
+            latencies.extend(
+                h.join()
+                 .map_err(|_| anyhow!("load client panicked"))??);
+        }
+        Ok(())
+    })?;
+    latencies.sort_unstable();
+    let slo_ns = slo.as_nanos() as u64;
+    let within =
+        latencies.iter().filter(|l| **l <= slo_ns).count() as u64;
+    Ok(DeadlineReport {
+        within,
+        total: latencies.len() as u64,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        latencies_ns: latencies,
+    })
 }

@@ -56,6 +56,11 @@ pub struct ServeConfig {
     /// model's programs compile (and recompile after eviction);
     /// `None` resolves `BBITS_BACKEND`, then per-node auto selection.
     pub backend: Option<Backend>,
+    /// Per-request latency target (SLO). With a precision ladder
+    /// registered, the rung pick chooses the most accurate rung whose
+    /// predicted completion still fits this budget; `None` falls back
+    /// to pure queue-pressure shedding. Ignored by single-rung models.
+    pub slo: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -70,6 +75,7 @@ impl Default for ServeConfig {
             deadline: Duration::from_millis(2),
             force_f32: false,
             backend: None,
+            slo: None,
         }
     }
 }
@@ -84,6 +90,7 @@ pub enum ServeConfigError {
     ZeroQueueCap,
     ZeroMaxBatch,
     ZeroDeadline,
+    ZeroSlo,
 }
 
 impl fmt::Display for ServeConfigError {
@@ -105,6 +112,10 @@ impl fmt::Display for ServeConfigError {
                 write!(f, "serve config needs a non-zero deadline (use \
                            e.g. 1us to effectively disable the \
                            micro-batch window)")
+            }
+            ServeConfigError::ZeroSlo => {
+                write!(f, "serve config SLO must be non-zero (omit it \
+                           to disable deadline-aware rung selection)")
             }
         }
     }
@@ -128,6 +139,9 @@ impl ServeConfig {
         }
         if self.deadline.is_zero() {
             return Err(ServeConfigError::ZeroDeadline);
+        }
+        if matches!(self.slo, Some(d) if d.is_zero()) {
+            return Err(ServeConfigError::ZeroSlo);
         }
         Ok(())
     }
@@ -239,6 +253,18 @@ impl StatsCell {
     /// Aggregated kernel rows, sorted by descending total time.
     pub(crate) fn kernel_rows(&self) -> Vec<(KernelKey, NodeTimer)> {
         trace::sorted_kernel_rows(&self.inner.lock().unwrap().kernels)
+    }
+
+    /// Live backlog for the rung pick: requests submitted and not yet
+    /// answered (queued + mid-inference). Lock-free.
+    pub(crate) fn backlog(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Measured p90 request latency in ns (0 until the first response)
+    /// — the per-rung cost signal the pick policy consumes.
+    pub(crate) fn measured_p90_ns(&self) -> u64 {
+        self.inner.lock().unwrap().hist.percentile(0.90)
     }
 }
 
@@ -512,6 +538,10 @@ impl Pool {
             st = self.shared.not_full.wait(st).unwrap();
         }
         if st.closed {
+            // keep the gauge honest on the reject path too
+            let depth = st.q.len() as u64;
+            drop(st);
+            self.shared.stats.queue_depth.store(depth, Ordering::Relaxed);
             return Err(SubmitRejected::Closed(input));
         }
         // request ids are only allocated (and spans only recorded)
@@ -597,6 +627,12 @@ fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>,
                     None => break,
                 }
             }
+            // publish the post-drain depth before the straggler window
+            // and the inference itself: with every worker mid-batch
+            // nothing else would refresh the gauge, and the rung pick
+            // reads it as the pressure signal
+            shared.stats.queue_depth
+                  .store(st.q.len() as u64, Ordering::Relaxed);
             // micro-batch window: hold a partial batch open briefly
             if batch.len() < shared.cfg.max_batch
                 && !shared.cfg.deadline.is_zero()
@@ -876,6 +912,46 @@ mod tests {
         assert!(stats.throughput_rps > 0.0);
         assert!(stats.mean_batch >= 1.0);
         server.shutdown();
+    }
+
+    #[test]
+    fn queue_depth_gauge_stays_fresh_while_workers_busy() {
+        // one worker, batch of one: once the worker is mid-inference,
+        // only the submit-side stores and the worker's post-drain
+        // store keep the gauge honest. The plan is big enough (~1.1M
+        // weights) that one inference dwarfs four enqueues — the
+        // worker cannot possibly drain the backlog before the read.
+        let plan = Arc::new(
+            synthetic_plan("big", &[32, 1024, 1024, 8], 4, 8, 0.0, 11)
+                .unwrap());
+        let server = Server::start(
+            plan,
+            ServeConfig {
+                workers: 1,
+                queue_cap: 16,
+                max_batch: 1,
+                deadline: Duration::from_micros(1),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|i| {
+                server.submit(vec![i as f32 * 0.1; 32]).unwrap()
+            })
+            .collect();
+        // workers busy (first inference running at most), three
+        // requests still queued: the gauge must reflect that now, not
+        // after the next batch forms
+        assert!(server.stats().queue_depth >= 1,
+                "gauge stale while workers busy");
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        // fully drained: the last batch formation published depth 0
+        let fin = server.shutdown();
+        assert_eq!(fin.queue_depth, 0);
+        assert_eq!(fin.requests, 4);
     }
 
     #[test]

@@ -16,7 +16,8 @@ use bayesian_bits::config::{presets, Mode};
 use bayesian_bits::coordinator::checkpoint;
 use bayesian_bits::coordinator::sweep::{run_sweep, Job};
 use bayesian_bits::coordinator::trainer::Trainer;
-use bayesian_bits::engine::registry::{closed_loop_router, ModelRegistry,
+use bayesian_bits::engine::registry::{closed_loop_deadline,
+                                      closed_loop_router, ModelRegistry,
                                       Router};
 use bayesian_bits::engine::{self, serve};
 use bayesian_bits::experiments::{self, common::ExpOptions};
@@ -239,6 +240,16 @@ fn serve_config_from_args(args: &Args) -> Result<serve::ServeConfig> {
             .unwrap_or(2)
             .min(8),
     )?;
+    let slo = match args.opt_flag("slo-ms") {
+        Some(_) => {
+            let ms = args.f64_flag("slo-ms", 0.0)?;
+            if ms <= 0.0 {
+                bail!("--slo-ms must be > 0, got {ms}");
+            }
+            Some(std::time::Duration::from_secs_f64(ms / 1e3))
+        }
+        None => None,
+    };
     let cfg = serve::ServeConfig {
         workers,
         queue_cap: args.usize_flag("queue-cap", 256)?,
@@ -248,6 +259,7 @@ fn serve_config_from_args(args: &Args) -> Result<serve::ServeConfig> {
         ),
         force_f32: args.bool_flag("no-int"),
         backend: backend_from_args(args)?,
+        slo,
     };
     cfg.validate()?;
     Ok(cfg)
@@ -262,10 +274,17 @@ fn serve_config_from_args(args: &Args) -> Result<serve::ServeConfig> {
 ///                         when present, a deterministic default init
 ///                         otherwise
 fn plan_from_spec(spec: &str) -> Result<engine::EnginePlan> {
+    let (man, params) = model_source_from_spec(spec)?;
+    engine::lower(&man, &params)
+}
+
+/// Resolve a `--model NAME=SPEC` spec into its manifest + parameter
+/// vector — the checkpoint-level source a precision ladder lowers at
+/// several thresholds (where a plain model lowers it exactly once).
+fn model_source_from_spec(spec: &str)
+                          -> Result<(Manifest, Vec<f32>)> {
     if let Some(model) = spec.strip_prefix("preset:") {
-        let (man, params) =
-            manifest_gen::preset_manifest(model, false, 42)?;
-        return engine::lower(&man, &params);
+        return manifest_gen::preset_manifest(model, false, 42);
     }
     let (mpath, ckpt) = match spec.rsplit_once(':') {
         // trailing colon: an empty checkpoint part, not part of the path
@@ -300,7 +319,7 @@ fn plan_from_spec(spec: &str) -> Result<engine::EnginePlan> {
             manifest_gen::default_init(&man, 42)
         }
     };
-    engine::lower(&man, &params)
+    Ok((man, params))
 }
 
 /// `bbits serve` — lower a checkpoint (or a synthetic plan) into the
@@ -329,6 +348,10 @@ fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
                (repeat --model NAME=SPEC); a single-model server keeps \
                its one compiled plan resident");
     }
+    let ladder = args.f64_list_flag("ladder", &[])?;
+    if !ladder.is_empty() {
+        return cmd_serve_ladder_single(args, opt, &ladder);
+    }
 
     let plan = plan_from_args(args, opt)?;
     println!("{}", plan.report());
@@ -356,6 +379,73 @@ fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
     server.shutdown();
     write_trace(trace)?;
     Ok(())
+}
+
+/// Single-model `bbits serve --ladder T1,T2,...`: lower the same
+/// checkpoint at every listed gate threshold into a precision ladder
+/// behind a one-entry registry, drive the closed loop through the
+/// SLO/pressure rung pick, and report per-rung rows.
+fn cmd_serve_ladder_single(args: &Args, opt: &ExpOptions,
+                           ladder: &[f64]) -> Result<()> {
+    let Some(ckpt) = args.opt_flag("checkpoint") else {
+        bail!("--ladder needs a checkpoint to lower at several \
+               thresholds: pass --checkpoint CKPT (or use the \
+               multi-model form, e.g. --model a=preset:lenet5 \
+               --ladder 0.3,0.5,0.9)");
+    };
+    let model = args.str_flag("model", "lenet5");
+    let mode = Mode::parse(&args.str_flag("mode", "bb"))?;
+    let man = Manifest::load(Path::new(&opt.artifacts_dir), &model)?;
+    let (ck_model, state) = checkpoint::load(Path::new(ckpt))?;
+    if ck_model != man.name {
+        bail!("checkpoint is for {ck_model:?}, manifest is {:?}",
+              man.name);
+    }
+    let cfg = serve_config_from_args(args)?;
+    let clients = args.usize_flag("clients", 8)?;
+    let requests = args.usize_flag("requests", 200)?;
+    let registry = Arc::new(ModelRegistry::new());
+    let trace = trace_from_args(args);
+    if let Some((_, rec)) = &trace {
+        registry.set_trace(Some(rec.clone()));
+    }
+    registry.register_ladder(&model, &man, &state.params, &mode,
+                             ladder, cfg.clone())?;
+    print_ladder(&registry, &model);
+    logging::info(format!(
+        "serving the {}-rung ladder with {} workers/rung (max batch \
+         {}, slo {:?}); {} clients x {} requests",
+        ladder.len(), cfg.workers, cfg.max_batch, cfg.slo, clients,
+        requests
+    ));
+    let router = Router::new(registry.clone());
+    let ids = [model.clone()];
+    let (_, per_model) =
+        closed_loop_router(&router, &ids, clients, requests, 7)?;
+    for (id, st) in &per_model {
+        println!("[{id}] {st}");
+    }
+    print_ladder(&registry, &model);
+    let out = opt.out_path("serve_stats.json");
+    std::fs::write(&out, registry.stats_json().to_string())?;
+    logging::info(format!("serve stats written to {out:?}"));
+    registry.shutdown();
+    write_trace(trace)?;
+    Ok(())
+}
+
+/// Print one row per ladder rung of `id`: threshold, bit width, proxy
+/// score, residency, request count, and measured latency.
+fn print_ladder(registry: &ModelRegistry, id: &str) {
+    let Some(rungs) = registry.ladder(id) else { return };
+    for r in &rungs {
+        println!(
+            "[{id}/{}] threshold={:.3} w_bits={} score={:.3} \
+             resident={} requests={} p50={:.3}ms p90={:.3}ms",
+            r.label, r.threshold, r.w_bits, r.score, r.resident,
+            r.stats.requests, r.stats.p50_ms, r.stats.p90_ms
+        );
+    }
 }
 
 /// The `--trace-out FILE` flag: an attached span recorder plus the
@@ -408,12 +498,24 @@ fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
     if let Some((_, rec)) = &trace {
         registry.set_trace(Some(rec.clone()));
     }
+    let ladder = args.f64_list_flag("ladder", &[])?;
     let mut ids = Vec::new();
     for (name, spec) in specs {
-        let plan = plan_from_spec(spec)
-            .with_context(|| format!("--model {name}={spec}"))?;
-        println!("{}", plan.report());
-        registry.register(name, Arc::new(plan), cfg.clone())?;
+        if ladder.is_empty() {
+            let plan = plan_from_spec(spec)
+                .with_context(|| format!("--model {name}={spec}"))?;
+            println!("{}", plan.report());
+            registry.register(name, Arc::new(plan), cfg.clone())?;
+        } else {
+            // every model becomes a ladder: its checkpoint lowered at
+            // each listed gate threshold
+            let (man, params) = model_source_from_spec(spec)
+                .with_context(|| format!("--model {name}={spec}"))?;
+            registry.register_ladder(name, &man, &params,
+                                     &Mode::BayesianBits, &ladder,
+                                     cfg.clone())?;
+            print_ladder(&registry, name);
+        }
         ids.push(name.clone());
     }
     let clients = args.usize_flag("clients", 8)?;
@@ -433,6 +535,9 @@ fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
         closed_loop_router(&router, &ids, clients, requests, 7)?;
     for (id, st) in &per_model {
         println!("[{id}] {st}");
+        if !ladder.is_empty() {
+            print_ladder(&registry, id);
+        }
     }
     let cache = registry.cache_stats();
     println!(
@@ -443,29 +548,40 @@ fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
     );
     // registry stats JSON, with the load window's throughput numbers
     // patched over the raw per-model snapshots; the per-node kernel
-    // counters only the registry snapshot carries survive the patch
+    // counters and the per-rung ladder rows only the registry
+    // snapshot carries survive the patch
     let mut json = registry.stats_json();
     if let Json::Obj(top) = &mut json {
-        let kernels: BTreeMap<String, Json> = match top.get("models") {
-            Some(Json::Obj(snap)) => snap
-                .iter()
-                .filter_map(|(id, m)| match m {
-                    Json::Obj(f) => f
-                        .get("kernels")
-                        .map(|k| (id.clone(), k.clone())),
-                    _ => None,
-                })
-                .collect(),
-            _ => BTreeMap::new(),
-        };
+        let carry: BTreeMap<String, Vec<(String, Json)>> =
+            match top.get("models") {
+                Some(Json::Obj(snap)) => snap
+                    .iter()
+                    .filter_map(|(id, m)| match m {
+                        Json::Obj(f) => Some((
+                            id.clone(),
+                            ["kernels", "rungs"]
+                                .iter()
+                                .filter_map(|k| {
+                                    f.get(*k).map(|v| {
+                                        (k.to_string(), v.clone())
+                                    })
+                                })
+                                .collect(),
+                        )),
+                        _ => None,
+                    })
+                    .collect(),
+                _ => BTreeMap::new(),
+            };
         let models: BTreeMap<String, Json> = per_model
             .iter()
             .map(|(id, st)| {
                 let mut m = st.to_json();
-                if let (Json::Obj(f), Some(k)) =
-                    (&mut m, kernels.get(id))
+                if let (Json::Obj(f), Some(kv)) = (&mut m, carry.get(id))
                 {
-                    f.insert("kernels".to_string(), k.clone());
+                    for (k, v) in kv {
+                        f.insert(k.clone(), v.clone());
+                    }
                 }
                 (id.clone(), m)
             })
@@ -547,6 +663,7 @@ fn cmd_engine_bench(args: &Args) -> Result<()> {
 
     if !conv_only {
         serve_bench(quick)?;
+        ladder_bench(quick)?;
     }
     Ok(())
 }
@@ -629,6 +746,148 @@ fn serve_bench(quick: bool) -> Result<()> {
         out,
         "multi-model registry/router serving: per-model latency \
          percentiles and plan-cache eviction counters",
+        records,
+    )?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Median wall-clock of a batch-of-`n` inference over `plan`, sampled
+/// `samples` times after one warmup batch — the SLO calibration probe
+/// for [`ladder_bench`].
+fn median_batch_ns(plan: &Arc<engine::EnginePlan>, n: usize,
+                   samples: usize) -> Result<u64> {
+    let mut eng = engine::Engine::new(plan.clone());
+    let xs = vec![0.25f32; plan.input_dim * n];
+    eng.infer_batch(&xs, n)?;
+    let mut t: Vec<u64> = (0..samples)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            eng.infer_batch(&xs, n).map(|_| t0.elapsed().as_nanos()
+                                                as u64)
+        })
+        .collect::<Result<_>>()?;
+    t.sort_unstable();
+    Ok(t[t.len() / 2])
+}
+
+/// Deadline-pressure sweep behind `BENCH_ladder.json`: the same
+/// synthetic checkpoint served once as a static highest-bit plan and
+/// once as a w2/w4/w8 precision ladder, hammered by a closed loop of
+/// more clients than one batch absorbs. The SLO is calibrated between
+/// the measured w2 and w8 batch times scaled by the steady-state wave
+/// depth, so the static plan misses under pressure while the ladder
+/// can degrade to cheaper rungs and keep fitting the deadline. Each
+/// record carries `within_deadline` / `total` plus per-rung request
+/// counts; the CI smoke asserts the ladder beats the static config.
+fn ladder_bench(quick: bool) -> Result<()> {
+    let dims: &[usize] = &[256, 512, 512, 16];
+    let (clients, per_client) = if quick { (12, 16) } else { (12, 60) };
+    let cfg = serve::ServeConfig {
+        workers: 1,
+        queue_cap: 64,
+        max_batch: 4,
+        deadline: std::time::Duration::from_micros(500),
+        ..serve::ServeConfig::default()
+    };
+    let p2 = Arc::new(engine::synthetic_plan("lad", dims, 2, 8, 0.0,
+                                             23)?);
+    let p4 = Arc::new(engine::synthetic_plan("lad", dims, 4, 8, 0.0,
+                                             23)?);
+    let p8 = Arc::new(engine::synthetic_plan("lad", dims, 8, 8, 0.0,
+                                             23)?);
+    // SLO calibration: steady state stacks `clients / max_batch` waves
+    // of work ahead of a fresh request, so scale the midpoint of the
+    // cheapest/priciest batch times by that wave depth. Static w8 at
+    // 3 waves of t8 overshoots the midpoint; ladder w2 fits under it.
+    let t2 = median_batch_ns(&p2, cfg.max_batch, 5)?;
+    let t8 = median_batch_ns(&p8, cfg.max_batch, 5)?;
+    let waves = (clients / cfg.max_batch).max(1) as u64;
+    let slo_ns = waves * (t2 + t8) / 2;
+    let slo = std::time::Duration::from_nanos(slo_ns);
+    bayesian_bits::util::bench::header(&format!(
+        "SLO-adaptive ladder — {clients} clients x {per_client}, \
+         slo {:.3}ms (w2 {:.3}ms / w8 {:.3}ms per batch)",
+        slo_ns as f64 / 1e6, t2 as f64 / 1e6, t8 as f64 / 1e6
+    ));
+    let configs: Vec<(&str, Vec<(f64, Arc<engine::EnginePlan>)>)> =
+        vec![
+            ("static_w8", vec![(0.9, p8.clone())]),
+            ("ladder_w2_w4_w8",
+             vec![(0.2, p2), (0.5, p4), (0.9, p8)]),
+        ];
+    let mut records = Vec::new();
+    for (name, rungs) in configs {
+        let n_rungs = rungs.len();
+        let mut cfg = cfg.clone();
+        cfg.slo = Some(slo);
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register_ladder_plans("lad", rungs, cfg)?;
+        // Warm every rung's latency histogram while idle so the first
+        // pressured pick already knows what each rung costs.
+        for rung in 0..n_rungs {
+            let tickets: Vec<_> = (0..3)
+                .map(|_| registry.submit_rung(
+                    "lad", rung, vec![0.5f32; dims[0]]))
+                .collect::<Result<_>>()?;
+            for t in tickets {
+                t.wait()?;
+            }
+        }
+        let router = Router::new(registry.clone());
+        let rep = closed_loop_deadline(&router, "lad", clients,
+                                       per_client, slo, 7)?;
+        let pct = |p: f64| -> f64 {
+            let i = ((rep.latencies_ns.len() as f64 - 1.0) * p)
+                .round() as usize;
+            rep.latencies_ns[i] as f64 / 1e6
+        };
+        let (p50, p99) = (pct(0.50), pct(0.99));
+        println!(
+            "[{name}] {}/{} within {:.3}ms SLO, p50 {p50:.3}ms p99 \
+             {p99:.3}ms over {:.2}s",
+            rep.within, rep.total, slo_ns as f64 / 1e6, rep.elapsed_s
+        );
+        let mut fields = vec![
+            ("config", bayesian_bits::util::json::s(name)),
+            ("slo_ms", bayesian_bits::util::json::num(
+                slo_ns as f64 / 1e6)),
+            ("within_deadline", bayesian_bits::util::json::num(
+                rep.within as f64)),
+            ("total", bayesian_bits::util::json::num(rep.total as f64)),
+            ("p50_ms", bayesian_bits::util::json::num(p50)),
+            ("p99_ms", bayesian_bits::util::json::num(p99)),
+            ("elapsed_s", bayesian_bits::util::json::num(rep.elapsed_s)),
+        ];
+        let mut rung_rows = Vec::new();
+        for info in registry.ladder("lad").unwrap_or_default() {
+            println!(
+                "  [{name}/{}] requests={} p90={:.3}ms",
+                info.label, info.stats.requests, info.stats.p90_ms
+            );
+            rung_rows.push(bayesian_bits::util::json::obj(vec![
+                ("label", bayesian_bits::util::json::s(&info.label)),
+                ("threshold", bayesian_bits::util::json::num(
+                    info.threshold)),
+                ("w_bits", bayesian_bits::util::json::num(
+                    info.w_bits as f64)),
+                ("score", bayesian_bits::util::json::num(info.score)),
+                ("requests", bayesian_bits::util::json::num(
+                    info.stats.requests as f64)),
+                ("p90_ms", bayesian_bits::util::json::num(
+                    info.stats.p90_ms)),
+            ]));
+        }
+        fields.push(("rungs", Json::Arr(rung_rows)));
+        records.push(bayesian_bits::util::json::obj(fields));
+        registry.shutdown();
+    }
+    let out = Path::new("BENCH_ladder.json");
+    bayesian_bits::util::bench::save_json(
+        out,
+        "SLO-adaptive precision ladder vs static highest-bit plan: \
+         requests served within a calibrated deadline under closed-loop \
+         pressure, with per-rung request counts",
         records,
     )?;
     println!("wrote {}", out.display());

@@ -54,9 +54,18 @@ pub fn prob_active(phi: f64) -> f64 {
     sigmoid(phi - TAU * (-GAMMA / ZETA).ln())
 }
 
-/// Eq. 22: z = 1[ sigma(tau log(-gamma/zeta) - phi) < t ].
+/// Eq. 22: z = 1[ sigma(tau log(-gamma/zeta) - phi) < t ] at the
+/// paper's default threshold [`THRESHOLD`].
 pub fn test_time_gate(phi: f64) -> bool {
-    sigmoid(TAU * (-GAMMA / ZETA).ln() - phi) < THRESHOLD
+    test_time_gate_at(phi, THRESHOLD)
+}
+
+/// Eq. 22 at an explicit threshold `t`: the precision-ladder
+/// primitive. A smaller `t` opens fewer gates (shorter residual
+/// chains, more pruned channels => a cheaper plan); a larger `t`
+/// opens more. `t = THRESHOLD` reproduces [`test_time_gate`] exactly.
+pub fn test_time_gate_at(phi: f64, threshold: f64) -> bool {
+    sigmoid(TAU * (-GAMMA / ZETA).ln() - phi) < threshold
 }
 
 /// A view over one quantizer's slots in the global gate vector:
@@ -164,6 +173,23 @@ mod tests {
         assert_eq!(test_time_gate(0.0), p_zero < THRESHOLD);
         assert!(test_time_gate(5.0));
         assert!(!test_time_gate(-5.0));
+    }
+
+    #[test]
+    fn explicit_threshold_matches_default_and_is_monotone() {
+        for phi in [-6.0, -1.0, 0.0, 1.0, 6.0] {
+            assert_eq!(test_time_gate(phi),
+                       test_time_gate_at(phi, THRESHOLD));
+        }
+        // raising t can only open gates, never close them
+        for phi in [-2.0, -0.5, 0.0, 0.5, 2.0] {
+            let mut open = false;
+            for t in [0.05, 0.2, 0.34, 0.5, 0.9, 0.99] {
+                let g = test_time_gate_at(phi, t);
+                assert!(g || !open, "gate closed as t rose");
+                open = g;
+            }
+        }
     }
 
     #[test]

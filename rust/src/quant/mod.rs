@@ -12,7 +12,8 @@
 pub mod gates;
 pub mod grid;
 
-pub use gates::{prob_active, test_time_gate, GateView, HardConcrete};
+pub use gates::{prob_active, test_time_gate, test_time_gate_at, GateView,
+                HardConcrete};
 pub use grid::{bb_quantize_host, step_sizes, QuantConfig};
 
 /// Hardware-friendly bit-width chain (paper Eq. 4).

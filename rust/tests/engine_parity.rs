@@ -227,8 +227,7 @@ fn checkpoint_to_serve_end_to_end_uses_integer_path() {
             queue_cap: 16,
             max_batch: 4,
             deadline: std::time::Duration::from_millis(1),
-            force_f32: false,
-            backend: None,
+            ..ServeConfig::default()
         },
     )
     .unwrap();

@@ -1,0 +1,248 @@
+//! Precision-ladder battery: one trained posterior lowered at several
+//! Eq. 22 gate thresholds must yield genuinely different bit-width
+//! rungs, every rung must serve bit-exactly against a direct
+//! `lower_with_mode_at` oracle — including after LRU eviction and
+//! recompilation — and the rung-pick policy must degrade precision
+//! monotonically with queue pressure, never shedding upward.
+//!
+//! The preset manifests init gate logits at saturated +/-6, where
+//! every reasonable threshold produces the same plan; these tests move
+//! phi onto intermediate posteriors so the ladder actually fans out.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bayesian_bits::config::Mode;
+use bayesian_bits::engine::registry::{pick_rung, ModelRegistry,
+                                      RungLoad};
+use bayesian_bits::engine::serve::ServeConfig;
+use bayesian_bits::engine::{lower, Engine};
+use bayesian_bits::quant::gates::{GAMMA, TAU, ZETA};
+use bayesian_bits::runtime::Manifest;
+use support::preset_manifest;
+
+/// Ascending thresholds chosen around the perturbed posteriors below:
+/// 0.2 opens nothing past z2 (w2), 0.5 opens z4 (w4), 0.9 opens z8
+/// (w8).
+const LADDER: [f64; 3] = [0.2, 0.5, 0.9];
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        workers: 1,
+        queue_cap: 16,
+        max_batch: 2,
+        deadline: Duration::from_micros(200),
+        ..ServeConfig::default()
+    }
+}
+
+/// Gate logit whose Eq. 22 inactive probability is exactly `p0`: the
+/// test-time gate opens iff the threshold exceeds `p0`.
+fn phi_for_p0(p0: f64) -> f32 {
+    let c = TAU * (-GAMMA / ZETA).ln();
+    (c - (p0 / (1.0 - p0)).ln()) as f32
+}
+
+/// lenet5 preset with gate logits moved to intermediate posteriors:
+/// weight z4 residuals sit at p0 = 0.25 and z8 at p0 = 0.6, deeper
+/// residuals near-closed, channel gates and activation residuals up
+/// to 8 bits near-open. Every [`LADDER`] rung then shares its kept
+/// channel sets and a8 activations but differs in weight bits.
+fn laddered_manifest() -> (Manifest, Vec<f32>) {
+    let (man, mut params) = preset_manifest("lenet5", false);
+    let idx = man.phi_index();
+    for q in &man.quantizers {
+        for i in 0..q.n_slots {
+            let p0 = if i < q.channels {
+                0.05
+            } else {
+                match (q.kind, i - q.channels) {
+                    ('w', 0) => 0.25,
+                    ('w', 1) => 0.60,
+                    ('a', 0) | ('a', 1) => 0.05,
+                    _ => 0.95,
+                }
+            };
+            params[idx[q.offset + i]] = phi_for_p0(p0);
+        }
+    }
+    (man, params)
+}
+
+fn input(dim: usize, salt: usize) -> Vec<f32> {
+    (0..dim)
+        .map(|j| ((salt * dim + j) as f32 * 0.23).sin().abs())
+        .collect()
+}
+
+#[test]
+fn ladder_rungs_are_bit_exact_vs_direct_lowering_across_eviction() {
+    let (man, params) = laddered_manifest();
+    let registry = Arc::new(ModelRegistry::with_budget(0));
+    // registration order must not matter: pass thresholds shuffled
+    registry
+        .register_ladder("mdl", &man, &params, &Mode::BayesianBits,
+                         &[0.9, 0.2, 0.5], cfg())
+        .unwrap();
+    let info = registry.ladder("mdl").unwrap();
+    assert_eq!(info.len(), 3);
+    // rungs ascend in threshold, bit width, and proxy score
+    for w in info.windows(2) {
+        assert!(w[0].threshold < w[1].threshold);
+        assert!(w[0].w_bits < w[1].w_bits,
+                "{} vs {}", w[0].label, w[1].label);
+        assert!(w[0].score < w[1].score,
+                "{} vs {}", w[0].label, w[1].label);
+    }
+    assert_eq!((info[0].w_bits, info[1].w_bits, info[2].w_bits),
+               (2, 4, 8));
+
+    // direct-lowering oracle per rung
+    let mut oracles: Vec<Engine> = LADDER
+        .iter()
+        .map(|t| {
+            Engine::new(Arc::new(
+                lower::lower_with_mode_at(&man, &params,
+                                          &Mode::BayesianBits, *t)
+                    .unwrap(),
+            ))
+        })
+        .collect();
+    // distinct rungs really compute different numbers somewhere
+    let dim = registry.plan("mdl").unwrap().input_dim;
+    let probe = input(dim, 99);
+    assert_ne!(oracles[0].infer(&probe).unwrap(),
+               oracles[2].infer(&probe).unwrap(),
+               "w2 and w8 rungs should disagree on some input");
+
+    // alternate rungs under a zero byte budget: every switch evicts
+    // the previous rung and recompiles the next, and the responses
+    // stay bit-exact throughout
+    for round in 0..3 {
+        for r in 0..3 {
+            let x = input(dim, round * 3 + r);
+            let want = oracles[r].infer(&x).unwrap();
+            let got = registry
+                .submit_rung("mdl", r, x)
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(got, want, "round {round} rung {r}");
+        }
+    }
+    let c = registry.cache_stats();
+    assert_eq!(c.misses, 9, "{c:?}");
+    assert_eq!(c.recompiles, 6, "{c:?}");
+    assert_eq!(c.evictions, 8, "{c:?}");
+    // per-rung stats survive eviction
+    for i in registry.ladder("mdl").unwrap() {
+        assert_eq!(i.stats.requests, 3, "{}", i.label);
+    }
+    // rung indices out of range are typed errors, not panics
+    assert!(registry.submit_rung("mdl", 7, input(dim, 0)).is_err());
+    registry.shutdown();
+}
+
+#[test]
+fn idle_ladder_requests_take_the_most_accurate_rung() {
+    let (man, params) = laddered_manifest();
+    for slo in [None, Some(Duration::from_secs(1))] {
+        let mut c = cfg();
+        c.slo = slo;
+        let registry = Arc::new(ModelRegistry::new());
+        registry
+            .register_ladder("mdl", &man, &params,
+                             &Mode::BayesianBits, &LADDER, c)
+            .unwrap();
+        let dim = registry.plan("mdl").unwrap().input_dim;
+        for s in 0..4 {
+            registry.submit("mdl", input(dim, s)).unwrap().wait()
+                .unwrap();
+        }
+        let info = registry.ladder("mdl").unwrap();
+        assert_eq!(info[2].stats.requests, 4, "slo={slo:?}");
+        assert_eq!(info[0].stats.requests + info[1].stats.requests, 0,
+                   "slo={slo:?}");
+        registry.shutdown();
+    }
+}
+
+#[test]
+fn rung_selection_degrades_monotonically_with_queue_depth() {
+    // SLO arm: p90s of 100/200/400us against a 500us budget, batch 4
+    let slo_pick = |backlog: u64| -> usize {
+        let rungs = [
+            RungLoad { lat_ns: 100_000, backlog: 0 },
+            RungLoad { lat_ns: 200_000, backlog: 0 },
+            RungLoad { lat_ns: 400_000, backlog },
+        ];
+        pick_rung(&rungs, Some(Duration::from_micros(500)), 16, 4)
+    };
+    // idle: the most accurate rung fits and wins
+    assert_eq!(slo_pick(0), 2);
+    // deep queue: nothing fits, fall through to the cheapest rung
+    assert_eq!(slo_pick(40), 0);
+    let mut prev = slo_pick(0);
+    for b in 0..48 {
+        let now = slo_pick(b);
+        assert!(now <= prev,
+                "backlog {b} picked rung {now} after {prev}");
+        prev = now;
+    }
+
+    // no-SLO arm: linear precision shedding against queue_cap
+    let shed_pick = |backlog: u64| -> usize {
+        let rungs = [
+            RungLoad { lat_ns: 0, backlog },
+            RungLoad { lat_ns: 0, backlog: 0 },
+            RungLoad { lat_ns: 0, backlog: 0 },
+        ];
+        pick_rung(&rungs, None, 16, 4)
+    };
+    assert_eq!(shed_pick(0), 2);
+    assert_eq!(shed_pick(16), 0);
+    let mut prev = shed_pick(0);
+    for b in 0..=20 {
+        let now = shed_pick(b);
+        assert!(now <= prev,
+                "backlog {b} picked rung {now} after {prev}");
+        prev = now;
+    }
+
+    // unmeasured rungs are treated optimistically under an SLO
+    let fresh = [RungLoad { lat_ns: 0, backlog: 30 }; 3];
+    assert_eq!(pick_rung(&fresh, Some(Duration::from_micros(1)), 16, 4),
+               2);
+    // degenerate ladders short-circuit
+    assert_eq!(pick_rung(&fresh[..1], None, 16, 4), 0);
+    assert_eq!(pick_rung(&[], None, 16, 4), 0);
+}
+
+#[test]
+fn ladder_registration_validates_thresholds_and_plans() {
+    let (man, params) = laddered_manifest();
+    let registry = ModelRegistry::new();
+    // out-of-range thresholds are rejected
+    for bad in [&[0.0][..], &[1.0][..], &[-0.5, 0.3][..]] {
+        assert!(registry
+            .register_ladder("x", &man, &params, &Mode::BayesianBits,
+                             bad, cfg())
+            .is_err());
+    }
+    // an empty threshold list is rejected
+    assert!(registry
+        .register_ladder("x", &man, &params, &Mode::BayesianBits, &[],
+                         cfg())
+        .is_err());
+    // duplicates collapse instead of erroring (same rung twice is
+    // meaningless but harmless to request)
+    registry
+        .register_ladder("x", &man, &params, &Mode::BayesianBits,
+                         &[0.5, 0.5, 0.9], cfg())
+        .unwrap();
+    assert_eq!(registry.ladder("x").unwrap().len(), 2);
+    registry.shutdown();
+}

@@ -28,6 +28,8 @@ fn config_zero_fields_are_typed_errors_not_hangs() {
          ServeConfigError::ZeroMaxBatch),
         (ServeConfig { deadline: Duration::ZERO, ..ok.clone() },
          ServeConfigError::ZeroDeadline),
+        (ServeConfig { slo: Some(Duration::ZERO), ..ok.clone() },
+         ServeConfigError::ZeroSlo),
     ];
     for (cfg, want) in cases {
         assert_eq!(cfg.validate(), Err(want), "{cfg:?}");
@@ -48,8 +50,7 @@ fn dropped_tickets_do_not_wedge_workers() {
             queue_cap: 16,
             max_batch: 4,
             deadline: Duration::from_micros(200),
-            force_f32: false,
-            backend: None,
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -82,8 +83,7 @@ fn shutdown_drains_queued_requests_deterministically() {
             queue_cap: 64,
             max_batch: 2,
             deadline: Duration::from_micros(100),
-            force_f32: false,
-            backend: None,
+            ..ServeConfig::default()
         },
     )
     .unwrap();

@@ -22,8 +22,7 @@ fn cfg() -> ServeConfig {
         queue_cap: 32,
         max_batch: 4,
         deadline: Duration::from_micros(200),
-        force_f32: false,
-        backend: None,
+        ..ServeConfig::default()
     }
 }
 
@@ -116,6 +115,35 @@ fn zero_budget_lru_evicts_and_recompiles_transparently() {
     assert_eq!(registry.stats("b").unwrap().requests, 1);
     registry.shutdown();
     assert_eq!(registry.resident_bytes(), 0);
+}
+
+/// Eviction accounting must charge the *full* resident set of a
+/// compiled model — both halves of the program pair (integer + f32
+/// fallback), scaled by the per-worker scratch arenas — not just the
+/// integer program. A budget sized to the int half alone must still
+/// trigger eviction when the second model arrives.
+#[test]
+fn eviction_costing_counts_full_program_pair() {
+    let c = cfg();
+    let (ia, fa) = bayesian_bits::engine::compile_pair(&plan_a());
+    let cost_a =
+        (ia.arena_bytes() + fa.arena_bytes()) * c.max_batch * c.workers;
+    let int_only = ia.arena_bytes() * c.max_batch * c.workers;
+    assert!(cost_a > int_only, "f32 half must add to the cost");
+
+    let registry = Arc::new(ModelRegistry::with_budget(cost_a));
+    registry.register("a", plan_a(), cfg()).unwrap();
+    registry.register("b", plan_b(), cfg()).unwrap();
+    registry.submit("a", input(8, 0)).unwrap().wait().unwrap();
+    // resident bytes reflect the pair cost exactly
+    assert_eq!(registry.resident_bytes(), cost_a);
+    // b does not fit next to a under a budget of exactly cost_a; if
+    // the f32 half were uncounted, both would appear to fit
+    registry.submit("b", input(6, 0)).unwrap().wait().unwrap();
+    assert_eq!(registry.is_resident("a"), Some(false));
+    assert_eq!(registry.is_resident("b"), Some(true));
+    assert_eq!(registry.cache_stats().evictions, 1);
+    registry.shutdown();
 }
 
 #[test]

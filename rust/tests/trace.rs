@@ -195,8 +195,7 @@ fn small_cfg() -> ServeConfig {
         queue_cap: 32,
         max_batch: 4,
         deadline: std::time::Duration::from_millis(1),
-        force_f32: false,
-        backend: None,
+        ..ServeConfig::default()
     }
 }
 
