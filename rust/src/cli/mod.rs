@@ -43,7 +43,7 @@ const VALUE_FLAGS: &[&str] = &[
     "checkpoint", "dims", "wbits", "abits", "prune", "max-batch",
     "deadline-ms", "queue-cap", "clients", "requests", "rows", "cols",
     "batch", "hw", "cin", "cout", "ksize", "plan-cache-mb", "backend",
-    "trace-out", "ladder", "slo-ms",
+    "trace-out", "ladder", "slo-ms", "intra-threads",
 ];
 
 impl Args {
@@ -211,9 +211,14 @@ Integer inference engine (rust/src/engine)
                   recompile; 0 keeps only the hot model resident)
                   --threads N --max-batch B --deadline-ms F
                   --queue-cap N --clients C --requests N [--no-int]
-                  --backend scalar|simd forces the integer kernel
-                  backend (default: BBITS_BACKEND env, then per-node
-                  auto selection; results are bit-identical)
+                  --backend scalar|simd|blocked forces the integer
+                  kernel backend (default: BBITS_BACKEND env, then
+                  per-node auto selection, which never picks blocked;
+                  results are bit-identical across all three)
+                  --intra-threads N shards each request's blocked
+                  kernels across N scoped threads (capped so workers x
+                  intra never oversubscribes the machine; scalar/simd
+                  nodes ignore it)
                   --trace-out FILE records request spans (enqueue ->
                   queue_wait -> batch_form -> infer -> respond) and
                   per-node kernel slices, written as Chrome
@@ -223,22 +228,27 @@ Integer inference engine (rust/src/engine)
                   the compiled execution graphs (typed node list +
                   scratch-arena map) for the int and f32 paths —
                   integer kernel nodes carry their backend
-                  (gemm.simd / conv2d.simd / dwconv2d.simd);
+                  (gemm.simd / conv2d.blocked / dwconv2d.simd);
                   --profile runs a few synthetic batches through the
                   instrumented interpreter and prints per-node timings
                   plus the (op, backend, bit-width) aggregate table
   engine-bench    packed integer GEMM + spatial conv, scalar vs simd
-                  integer backends vs the f32 fallback; writes
-                  BENCH_engine.json (GEMM sweep) and BENCH_conv.json
-                  (conv sweep) with a backend column per record, plus
-                  a multi-model serve sweep to BENCH_serve.json
-                  (per-model p50/p99 + plan-cache eviction counters)
-                  and an SLO deadline-pressure sweep to
-                  BENCH_ladder.json (precision ladder vs static plan)
+                  vs blocked integer backends vs the f32 fallback;
+                  writes BENCH_engine.json (GEMM sweep) and
+                  BENCH_conv.json (conv sweep) with a backend column
+                  per record, plus a multi-model serve sweep to
+                  BENCH_serve.json (per-model p50/p99 + plan-cache
+                  eviction counters) and an SLO deadline-pressure
+                  sweep to BENCH_ladder.json (ladder vs static plan)
                   --rows N --cols N --batch B (GEMM; skip: --conv-only)
                   --hw N --cin N --cout N --ksize K (conv layer)
-                  --backend scalar|simd restricts the backend sweep
+                  --backend scalar|simd|blocked restricts the sweep
                   --serve-only runs just the serve sweep
+                  --paper-scale instead measures end-to-end forwards
+                  through the full 224x224 ResNet18 lowering per
+                  backend (incl. blocked + --intra-threads sharding)
+                  and writes BENCH_paper.json; every record is a
+                  measurement, never a projection
 
 Utilities
   parity          check Rust runtime vs golden quantizer vectors
@@ -344,6 +354,13 @@ mod tests {
         assert_eq!(l.f64_list_flag("ladder", &[]).unwrap(),
                    vec![0.3, 0.5, 0.9]);
         assert_eq!(l.f64_flag("slo-ms", 0.0).unwrap(), 2.5);
+        // blocked-backend flags: --intra-threads value, --paper-scale
+        // switch
+        let i = parse("serve --backend blocked --intra-threads 3");
+        assert_eq!(i.str_flag("backend", "x"), "blocked");
+        assert_eq!(i.usize_flag("intra-threads", 1).unwrap(), 3);
+        assert!(parse("engine-bench --paper-scale")
+            .bool_flag("paper-scale"));
         assert_eq!(parse("serve --trace-out=t.json")
                        .str_flag("trace-out", "x"),
                    "t.json");

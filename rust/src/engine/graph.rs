@@ -29,6 +29,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::kernels::Backend;
+use super::pack::PanelMatrix;
 use super::trace::{KernelKey, NodeMeta, NodeTimer, SpanKind,
                    TraceRecorder};
 use super::{adapt_features_into, adapt_spatial_into, kernels,
@@ -152,6 +153,17 @@ pub enum Node {
     /// f32 accumulators -> dense f32 channels (bias + scatter + ReLU,
     /// no scale) — the reference-path epilogue.
     Epilogue { layer: usize, src: BufId, dst: BufId, relu: bool },
+    /// Fused [`Node::Epilogue`] + the next integer layer's
+    /// [`Node::Quantize`] on mixed f32/int chains: f32 accumulators go
+    /// straight to the integer consumer's activation codes without
+    /// materializing the dense f32 buffer between them.
+    EpilogueQuantize {
+        layer: usize,
+        src: BufId,
+        dst: BufId,
+        relu: bool,
+        grid: CodeGrid,
+    },
     /// Fused [`Node::Requant`] + the next integer layer's
     /// [`Node::Quantize`]: accumulators go straight to the consumer's
     /// activation codes without materializing the f32 buffer between
@@ -185,6 +197,7 @@ impl Node {
             | Node::DwConv2d { src, .. }
             | Node::Requant { src, .. }
             | Node::Epilogue { src, .. }
+            | Node::EpilogueQuantize { src, .. }
             | Node::RequantQuantize { src, .. } => Some(*src),
             Node::BiasFill { .. } => None,
         }
@@ -205,6 +218,7 @@ impl Node {
             | Node::DwConv2d { dst, .. }
             | Node::Requant { dst, .. }
             | Node::Epilogue { dst, .. }
+            | Node::EpilogueQuantize { dst, .. }
             | Node::RequantQuantize { dst, .. }
             | Node::BiasFill { dst, .. } => *dst,
         }
@@ -219,6 +233,7 @@ impl Node {
             | Node::DwConv2d { layer, .. }
             | Node::Requant { layer, .. }
             | Node::Epilogue { layer, .. }
+            | Node::EpilogueQuantize { layer, .. }
             | Node::RequantQuantize { layer, .. }
             | Node::BiasFill { layer, .. } => Some(*layer),
             _ => None,
@@ -239,18 +254,28 @@ impl Node {
             Node::Dequantize { .. } => "dequantize",
             Node::Gemm { int: false, .. } => "gemm.f32",
             Node::Gemm { backend: Backend::Simd, .. } => "gemm.simd",
+            Node::Gemm { backend: Backend::Blocked, .. } => {
+                "gemm.blocked"
+            }
             Node::Gemm { .. } => "gemm",
             Node::Conv2d { int: false, .. } => "conv2d.f32",
             Node::Conv2d { backend: Backend::Simd, .. } => {
                 "conv2d.simd"
             }
+            Node::Conv2d { backend: Backend::Blocked, .. } => {
+                "conv2d.blocked"
+            }
             Node::Conv2d { .. } => "conv2d",
             Node::DwConv2d { backend: Backend::Simd, .. } => {
                 "dwconv2d.simd"
             }
+            Node::DwConv2d { backend: Backend::Blocked, .. } => {
+                "dwconv2d.blocked"
+            }
             Node::DwConv2d { .. } => "dwconv2d",
             Node::Requant { .. } => "requant",
             Node::Epilogue { .. } => "epilogue",
+            Node::EpilogueQuantize { .. } => "epilogue_quantize",
             Node::RequantQuantize { .. } => "requant_quantize",
             Node::BiasFill { .. } => "bias_fill",
         }
@@ -284,6 +309,19 @@ pub struct ExecState {
     patchf: Vec<f32>,
     /// Dense per-channel staging for the fused requantize+quantize.
     dense: Vec<f32>,
+    /// Intra-request shard count for blocked kernel nodes (0 and 1
+    /// both mean single-threaded; set via [`ExecState::set_intra_threads`]).
+    intra: usize,
+}
+
+impl ExecState {
+    /// Number of scoped threads blocked kernel nodes shard one
+    /// request across. Scalar/SIMD nodes ignore this; blocked nodes
+    /// split kept rows / output tiles into disjoint output slices,
+    /// which is bit-exact by integer-sum associativity.
+    pub fn set_intra_threads(&mut self, n: usize) {
+        self.intra = n;
+    }
 }
 
 /// A compiled, arena-assigned execution graph for one plan and one
@@ -302,6 +340,10 @@ pub struct Program {
     /// id of the requantize it absorbed).
     pub(crate) node_ids: Vec<usize>,
     pub(crate) bufs: Vec<BufSpec>,
+    /// Compile-time weight panels for [`Backend::Blocked`] kernel
+    /// nodes, keyed by layer index (`None` for layers without one).
+    /// Shared via `Arc` so cloning a program never re-packs.
+    pub(crate) panels: Vec<Option<Arc<PanelMatrix>>>,
     pub(crate) input: BufId,
     pub(crate) output: BufId,
     /// Arena footprints in per-sample elements.
@@ -408,13 +450,35 @@ impl Program {
         self.peak_live
     }
 
-    /// Number of fused requantize+quantize nodes (adjacent integer
-    /// layers whose intermediate f32 activations were eliminated).
+    /// Number of fused boundary nodes: requantize+quantize (adjacent
+    /// integer layers) plus epilogue+quantize (f32 layer feeding an
+    /// integer consumer on a mixed chain) — every place the pass
+    /// pipeline eliminated an intermediate dense f32 buffer.
     pub fn fused_count(&self) -> usize {
         self.nodes
             .iter()
-            .filter(|n| matches!(n, Node::RequantQuantize { .. }))
+            .filter(|n| matches!(n, Node::RequantQuantize { .. }
+                                    | Node::EpilogueQuantize { .. }))
             .count()
+    }
+
+    /// Number of fused epilogue+quantize nodes only (the mixed
+    /// f32/int chain subset of [`Self::fused_count`]).
+    pub fn fused_epilogue_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::EpilogueQuantize { .. }))
+            .count()
+    }
+
+    /// Total bytes of compile-time weight panels held for blocked
+    /// kernel nodes (zero unless the blocked backend was forced).
+    pub fn panel_bytes(&self) -> usize {
+        self.panels
+            .iter()
+            .flatten()
+            .map(|p| p.panel_bytes())
+            .sum()
     }
 
     /// Element range of buffer `b` for an `n`-sample batch.
@@ -596,19 +660,28 @@ impl Program {
                 let l = &layers[*layer];
                 let cols = l.in_dim;
                 if *int {
-                    let packed = l
-                        .packed
-                        .as_ref()
-                        .expect("integer GEMM without packed rows");
-                    st.row.resize(cols, 0);
                     let (s0, s1) = self.range(*src, n);
                     let (d0, d1) = self.range(*dst, n);
-                    let mm = match backend {
-                        Backend::Simd => kernels::matmul_packed_simd,
-                        Backend::Scalar => kernels::matmul_packed,
-                    };
-                    mm(packed, &st.i32a[s0..s1], n, l.act.bits(),
-                       &mut st.row, &mut st.i64a[d0..d1]);
+                    if let Backend::Blocked = backend {
+                        let pm = self.panels[*layer]
+                            .as_ref()
+                            .expect("blocked GEMM without panels");
+                        kernels::matmul_panels(
+                            pm, &st.i32a[s0..s1], n, l.act.bits(),
+                            st.intra.max(1), &mut st.i64a[d0..d1]);
+                    } else {
+                        let packed = l
+                            .packed
+                            .as_ref()
+                            .expect("integer GEMM without packed rows");
+                        st.row.resize(cols, 0);
+                        let mm = match backend {
+                            Backend::Simd => kernels::matmul_packed_simd,
+                            _ => kernels::matmul_packed,
+                        };
+                        mm(packed, &st.i32a[s0..s1], n, l.act.bits(),
+                           &mut st.row, &mut st.i64a[d0..d1]);
+                    }
                 } else {
                     let (x, y) = Self::f32_pair(&self.bufs, &mut st.f32a,
                                                 *src, *dst, n);
@@ -623,29 +696,40 @@ impl Program {
                 let plen = sp.patch_len();
                 let cpg = l.out_dim / sp.groups;
                 if *int {
-                    let packed = l
-                        .packed
-                        .as_ref()
-                        .expect("integer conv without packed rows");
-                    st.wrows.resize(rows * plen, 0);
-                    for r in 0..rows {
-                        packed.unpack_row_into(
-                            r, &mut st.wrows[r * plen..(r + 1) * plen]);
-                    }
-                    st.patch.resize(plen, 0);
-                    let low =
-                        kernels::low_bit_pair(packed.bits, l.act.bits());
                     let (s0, s1) = self.range(*src, n);
                     let (d0, d1) = self.range(*dst, n);
-                    let conv = match backend {
-                        Backend::Simd => kernels::conv2d_codes_simd,
-                        Backend::Scalar => kernels::conv2d_codes,
-                    };
-                    conv(&st.wrows, &l.kept, cpg, sp,
-                         &st.i32a[s0..s1], n, low, &mut st.patch,
-                         &mut st.i64a[d0..d1]);
+                    if let Backend::Blocked = backend {
+                        let pm = self.panels[*layer]
+                            .as_ref()
+                            .expect("blocked conv without panels");
+                        kernels::conv2d_panels(
+                            pm, &l.kept, cpg, sp, &st.i32a[s0..s1], n,
+                            l.act.bits(), st.intra.max(1),
+                            &mut st.i64a[d0..d1]);
+                    } else {
+                        let packed = l
+                            .packed
+                            .as_ref()
+                            .expect("integer conv without packed rows");
+                        st.wrows.resize(rows * plen, 0);
+                        for r in 0..rows {
+                            packed.unpack_row_into(
+                                r,
+                                &mut st.wrows[r * plen..(r + 1) * plen]);
+                        }
+                        st.patch.resize(plen, 0);
+                        let low = kernels::low_bit_pair(packed.bits,
+                                                        l.act.bits());
+                        let conv = match backend {
+                            Backend::Simd => kernels::conv2d_codes_simd,
+                            _ => kernels::conv2d_codes,
+                        };
+                        conv(&st.wrows, &l.kept, cpg, sp,
+                             &st.i32a[s0..s1], n, low, &mut st.patch,
+                             &mut st.i64a[d0..d1]);
+                    }
                 } else {
-                    st.patchf.resize(plen, 0.0);
+                    st.patchf.resize(kernels::NR * plen, 0.0);
                     let (x, y) = Self::f32_pair(&self.bufs, &mut st.f32a,
                                                 *src, *dst, n);
                     kernels::conv2d_f32(&l.f32_rows, &l.kept, cpg, sp, x,
@@ -658,24 +742,35 @@ impl Program {
                 let rows = l.kept.len();
                 let plen = sp.patch_len();
                 let cpg = l.out_dim / sp.groups;
-                let packed = l
-                    .packed
-                    .as_ref()
-                    .expect("integer dwconv without packed rows");
-                st.wrows.resize(rows * plen, 0);
-                for r in 0..rows {
-                    packed.unpack_row_into(
-                        r, &mut st.wrows[r * plen..(r + 1) * plen]);
-                }
-                let low = kernels::low_bit_pair(packed.bits, l.act.bits());
                 let (s0, s1) = self.range(*src, n);
                 let (d0, d1) = self.range(*dst, n);
-                let dw = match backend {
-                    Backend::Simd => kernels::dwconv2d_codes_simd,
-                    Backend::Scalar => kernels::dwconv2d_codes,
-                };
-                dw(&st.wrows, &l.kept, cpg, sp, &st.i32a[s0..s1], n,
-                   low, &mut st.i64a[d0..d1]);
+                if let Backend::Blocked = backend {
+                    let pm = self.panels[*layer]
+                        .as_ref()
+                        .expect("blocked dwconv without panels");
+                    kernels::dwconv2d_panels(
+                        pm, &l.kept, cpg, sp, &st.i32a[s0..s1], n,
+                        l.act.bits(), st.intra.max(1),
+                        &mut st.i64a[d0..d1]);
+                } else {
+                    let packed = l
+                        .packed
+                        .as_ref()
+                        .expect("integer dwconv without packed rows");
+                    st.wrows.resize(rows * plen, 0);
+                    for r in 0..rows {
+                        packed.unpack_row_into(
+                            r, &mut st.wrows[r * plen..(r + 1) * plen]);
+                    }
+                    let low = kernels::low_bit_pair(packed.bits,
+                                                    l.act.bits());
+                    let dw = match backend {
+                        Backend::Simd => kernels::dwconv2d_codes_simd,
+                        _ => kernels::dwconv2d_codes,
+                    };
+                    dw(&st.wrows, &l.kept, cpg, sp, &st.i32a[s0..s1],
+                       n, low, &mut st.i64a[d0..d1]);
+                }
             }
             Node::Requant { layer, src, dst, scale, relu } => {
                 let l = &layers[*layer];
@@ -731,6 +826,44 @@ impl Program {
                 }
                 if *relu {
                     relu_slice(y);
+                }
+            }
+            Node::EpilogueQuantize { layer, src, dst, relu, grid } => {
+                let l = &layers[*layer];
+                let rows = l.kept.len();
+                let out_dim = l.out_dim;
+                let opix = l
+                    .spatial
+                    .as_ref()
+                    .map(|sp| sp.out_pixels())
+                    .unwrap_or(1);
+                st.dense.resize(out_dim, 0.0);
+                let (s0, s1) = self.range(*src, n);
+                let (d0, d1) = self.range(*dst, n);
+                let x = &st.f32a[s0..s1];
+                let out = &mut st.i32a[d0..d1];
+                for s in 0..n {
+                    for p in 0..opix {
+                        let ybase = (s * opix + p) * rows;
+                        let obase = (s * opix + p) * out_dim;
+                        match &l.bias {
+                            Some(b) => st.dense.copy_from_slice(b),
+                            None => st.dense.fill(0.0),
+                        }
+                        for (k, ch) in l.kept.iter().enumerate() {
+                            st.dense[*ch as usize] += x[ybase + k];
+                        }
+                        for (ch, o) in
+                            out[obase..obase + out_dim].iter_mut()
+                                                       .enumerate()
+                        {
+                            let mut v = st.dense[ch];
+                            if *relu && v < 0.0 {
+                                v = 0.0;
+                            }
+                            *o = grid.code(v) as i32;
+                        }
+                    }
                 }
             }
             Node::RequantQuantize { layer, src, dst, scale, relu, grid } => {

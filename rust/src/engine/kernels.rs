@@ -29,23 +29,28 @@
 //! error — the invariants `tests/engine_parity.rs` and
 //! `tests/conv_parity.rs` pin down.
 //!
-//! Every integer kernel exists twice: a scalar form whose inner dot
-//! is [`dot_codes`] — the untouched bit-exact arithmetic oracle — and
+//! Every integer kernel exists three times: a scalar form whose inner
+//! dot is [`dot_codes`] — the untouched bit-exact arithmetic oracle —
 //! a `_simd` form whose inner dot runs eight explicit accumulator
 //! lanes (`chunks_exact(LANES)` unrolling, with AVX2/NEON inner loops
-//! where the host CPU has them). The GEMM/conv loop drivers are
-//! shared and parameterized by the dot function (only the arithmetic
-//! differs between backends); the depthwise SIMD kernel restructures
-//! its loops (lanes across kept channels) and stays a separate body.
-//! Because both dot forms compute the *exact* integer sum and integer
-//! addition is associative, results are bit-identical;
-//! `tests/kernel_backends.rs` runs the differential battery that pins
-//! it. Which form a compiled node executes is the [`Backend`]
-//! discriminant the pass pipeline assigns (`engine::passes`).
+//! where the host CPU has them), and a `_panels` form for the
+//! `blocked` backend that streams compile-time `[MR x KC]` weight
+//! panels (`engine::pack::PanelMatrix`), tiles conv output pixels so
+//! each im2col gather amortizes across [`NR`] pixels, and optionally
+//! shards its work across scoped threads ([`shard_ranges`]). The
+//! scalar/SIMD GEMM/conv loop drivers are shared and parameterized by
+//! the dot function; the depthwise SIMD kernel restructures its loops
+//! (lanes across kept channels) and stays a separate body. Because
+//! every form computes the *exact* integer sum and integer addition
+//! is associative, results are bit-identical across backends, loop
+//! orders, and thread counts; `tests/kernel_backends.rs` runs the
+//! differential battery that pins it. Which form a compiled node
+//! executes is the [`Backend`] discriminant the pass pipeline assigns
+//! (`engine::passes`).
 
 use anyhow::{bail, Result};
 
-use super::pack::PackedMatrix;
+use super::pack::{PackedMatrix, PanelMatrix, KC, MR};
 use super::SpatialPlan;
 use crate::quant::grid::quantize_codes_host;
 
@@ -122,6 +127,12 @@ pub const LANES: usize = 8;
 pub enum Backend {
     Scalar,
     Simd,
+    /// Cache-blocked form: compile-time `[MR x KC]` weight panels
+    /// (`engine::pack::PanelMatrix`), patch-tiled conv loops, and
+    /// optional kept-row sharding across scoped threads. Never picked
+    /// by the per-node auto rule — only a forced `--backend blocked` /
+    /// `BBITS_BACKEND=blocked` / `ServeConfig.backend` selects it.
+    Blocked,
 }
 
 impl Backend {
@@ -129,17 +140,19 @@ impl Backend {
         match self {
             Backend::Scalar => "scalar",
             Backend::Simd => "simd",
+            Backend::Blocked => "blocked",
         }
     }
 
-    /// Parse the CLI/env spelling (`scalar` | `simd`).
+    /// Parse the CLI/env spelling (`scalar` | `simd` | `blocked`).
     pub fn parse(s: &str) -> Result<Backend> {
         match s {
             "scalar" => Ok(Backend::Scalar),
             "simd" => Ok(Backend::Simd),
+            "blocked" => Ok(Backend::Blocked),
             other => bail!(
-                "unknown kernel backend {other:?} (expected \"scalar\" \
-                 or \"simd\")"
+                "unknown kernel backend {other:?} (expected \"scalar\", \
+                 \"simd\", or \"blocked\")"
             ),
         }
     }
@@ -155,7 +168,7 @@ impl Backend {
                 Err(_) => {
                     crate::util::logging::warn(format!(
                         "ignoring BBITS_BACKEND={v:?} (expected \
-                         \"scalar\" or \"simd\")"
+                         \"scalar\", \"simd\", or \"blocked\")"
                     ));
                     None
                 }
@@ -197,13 +210,21 @@ fn dot_block_i32_portable(w: &[i32], a: &[i32]) -> i64 {
     lanes.iter().map(|v| *v as i64).sum::<i64>() + tail as i64
 }
 
-/// AVX2 specialization of [`dot_block_i32_portable`]: one
-/// `vpmulld`/`vpaddd` chain over the same eight lanes — identical
-/// exact sums, ~an 8-wide multiply per cycle instead of the SSE2
-/// baseline the autovectorizer gets.
+/// AVX2 specialization of [`dot_block_i32_portable`], built on
+/// `vpmaddwd`: both operands of the low-bit path fit `i16` (codes and
+/// activation codes are <= 8 bits), so sixteen i32 values pack into
+/// one register of i16 lanes and a single multiply-add computes two
+/// exact MACs per 32-bit lane. `_mm256_packs_epi32` applies the same
+/// 128-bit-lane interleave to both operands, so products still pair
+/// `w[i] * a[i]`, and the final lane total is the exact integer sum —
+/// permutation cannot change it. Each `vpmaddwd` pair sum is bounded
+/// by `2 * 127 * 255 < 2^16` and a lane accumulates at most
+/// `I32_BLOCK / 16` of them, far inside i32 (the block bound).
 ///
 /// # Safety
-/// The caller must have verified AVX2 is available on this CPU.
+/// The caller must have verified AVX2 is available on this CPU, and —
+/// as for every [`dot_block_i32`] path — both operands must be low-bit
+/// codes (|v| <= 255): wider values would saturate the i16 pack.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn dot_block_i32_avx2(w: &[i32], a: &[i32]) -> i64 {
@@ -212,14 +233,20 @@ unsafe fn dot_block_i32_avx2(w: &[i32], a: &[i32]) -> i64 {
     // degrades to the same truncated sum the scalar kernel computes
     // instead of an out-of-bounds vector load
     let len = w.len().min(a.len());
-    let n = len - len % LANES;
+    let n = len - len % (2 * LANES);
     let mut acc = _mm256_setzero_si256();
     let mut i = 0;
     while i < n {
-        let wv = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
-        let av = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
-        acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(wv, av));
-        i += LANES;
+        let w0 = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+        let w1 = _mm256_loadu_si256(
+            w.as_ptr().add(i + LANES) as *const __m256i);
+        let a0 = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let a1 = _mm256_loadu_si256(
+            a.as_ptr().add(i + LANES) as *const __m256i);
+        let wp = _mm256_packs_epi32(w0, w1);
+        let ap = _mm256_packs_epi32(a0, a1);
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wp, ap));
+        i += 2 * LANES;
     }
     let mut lanes = [0i32; LANES];
     _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
@@ -261,9 +288,16 @@ fn dot_block_i32_neon(w: &[i32], a: &[i32]) -> i64 {
 }
 
 /// Low-bit block dot on the best specialization this CPU has.
-/// Exactly one cfg block survives per target.
+/// Exactly one cfg block survives per target. Operands must be
+/// low-bit codes (|v| <= 255, the `low_bit_pair` contract every call
+/// site already enforces): the AVX2 form packs them into i16 lanes.
 #[inline]
 fn dot_block_i32(w: &[i32], a: &[i32]) -> i64 {
+    debug_assert!(
+        w.iter().all(|v| v.abs() <= 255)
+            && a.iter().all(|v| v.abs() <= 255),
+        "dot_block_i32 operands outside the low-bit code range"
+    );
     #[cfg(target_arch = "x86_64")]
     {
         if avx2_enabled() {
@@ -636,8 +670,13 @@ pub fn dwconv2d_codes_simd(w_rows: &[i32], kept: &[u32],
 }
 
 /// f32 reference spatial convolution over the simulated-quant dense
-/// rows — same im2col structure as [`conv2d_codes`], scalar f32
-/// accumulation.
+/// rows — im2col with the blocked backend's pixel tiling: output
+/// pixels go [`NR`] at a time, each patch is gathered once per (tile,
+/// group) into `patch` (caller scratch of at least `NR * patch_len`
+/// slots), and each weight row is then dotted against all `NR`
+/// patches while it is hot. Only the (row, pixel) loop order changes
+/// versus the untiled form — every individual dot product accumulates
+/// in the same element order, so the f32 results are bit-identical.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_f32(w_rows: &[f32], kept: &[u32], cout_per_group: usize,
                   sp: &SpatialPlan, xs: &[f32], n: usize,
@@ -649,28 +688,363 @@ pub fn conv2d_f32(w_rows: &[f32], kept: &[u32], cout_per_group: usize,
     debug_assert_eq!(w_rows.len(), rows * plen);
     debug_assert_eq!(xs.len(), n * in_len);
     debug_assert_eq!(y.len(), n * opix * rows);
+    debug_assert!(patch.len() >= NR * plen);
     for s in 0..n {
         let x = &xs[s * in_len..(s + 1) * in_len];
-        for oh in 0..sp.out_h {
-            for ow in 0..sp.out_w {
-                let ybase = (s * opix + oh * sp.out_w + ow) * rows;
-                let mut cur_g = usize::MAX;
-                for r in 0..rows {
-                    let g = kept[r] as usize / cout_per_group;
-                    if g != cur_g {
-                        extract_patch(x, sp, g, oh, ow, patch);
-                        cur_g = g;
+        let mut p0 = 0;
+        while p0 < opix {
+            let tl = NR.min(opix - p0);
+            let mut cur_g = usize::MAX;
+            for r in 0..rows {
+                let g = kept[r] as usize / cout_per_group;
+                if g != cur_g {
+                    for (pi, tb) in
+                        patch.chunks_mut(plen).enumerate().take(tl)
+                    {
+                        let p = p0 + pi;
+                        extract_patch(x, sp, g, p / sp.out_w,
+                                      p % sp.out_w, tb);
                     }
-                    let row = &w_rows[r * plen..(r + 1) * plen];
+                    cur_g = g;
+                }
+                let row = &w_rows[r * plen..(r + 1) * plen];
+                for pi in 0..tl {
                     let mut acc = 0.0f32;
-                    for (a, b) in row.iter().zip(&patch[..plen]) {
+                    for (a, b) in row
+                        .iter()
+                        .zip(&patch[pi * plen..(pi + 1) * plen])
+                    {
                         acc += a * b;
                     }
-                    y[ybase + r] = acc;
+                    y[(s * opix + p0 + pi) * rows + r] = acc;
                 }
+            }
+            p0 += tl;
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// Blocked backend: panel streaming, patch tiles, kept-row sharding
+// -------------------------------------------------------------------
+
+/// Output-pixel tile width of the blocked conv kernels: each im2col
+/// patch is gathered once per `[KC x NR]` activation block, and one
+/// `[MR x KC]` weight panel is then dotted against all `NR` patches
+/// while it sits in L1 (8 KiB panel + `NR * KC * 4 = 8 KiB` patch
+/// block — half of a typical 32 KiB L1d).
+pub const NR: usize = 8;
+
+/// Split `units` work items into at most `threads` contiguous,
+/// disjoint `(start, end)` ranges covering `0..units` (never more
+/// ranges than units, sizes differing by at most one).
+pub fn shard_ranges(units: usize, threads: usize)
+                    -> Vec<(usize, usize)> {
+    let t = threads.max(1).min(units.max(1));
+    let (base, extra) = (units / t, units % t);
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Shared output pointer handed to the scoped-thread shards. Sound
+/// because every shard writes a statically disjoint set of `y`
+/// indices: [`shard_ranges`] partitions the row blocks (GEMM,
+/// depthwise) or output-pixel tiles (conv), and each output element is
+/// owned by exactly one block/tile.
+struct ShardPtr(*mut i64);
+unsafe impl Send for ShardPtr {}
+unsafe impl Sync for ShardPtr {}
+
+/// One GEMM row block of [`matmul_panels`]: accumulate the block's
+/// `mr` rows against all `n` samples, panel by panel, then write the
+/// rows' outputs. Accumulation per row runs in ascending-k order with
+/// a <= [`KC`]-sized i32 block per panel on the low-bit path — a
+/// different partial-sum grouping than the scalar oracle's
+/// [`I32_BLOCK`] chunks, but every grouping of an exact integer sum is
+/// the same sum.
+fn matmul_panels_block(pm: &PanelMatrix, acts: &[i32], n: usize,
+                       low: bool, b: usize, acc: &mut [i64],
+                       y: *mut i64) {
+    let (rows, cols) = (pm.rows, pm.cols);
+    let (r0, mr) = pm.blocks()[b];
+    acc[..mr * n].fill(0);
+    for kb in 0..pm.kblocks() {
+        let k0 = kb * KC;
+        let klen = KC.min(cols.saturating_sub(k0));
+        if klen == 0 {
+            break;
+        }
+        let panel = pm.panel(b, kb);
+        for s in 0..n {
+            let ab = &acts[s * cols + k0..s * cols + k0 + klen];
+            for m in 0..mr {
+                let wrow = &panel[m * KC..m * KC + klen];
+                acc[m * n + s] += if low {
+                    dot_block_i32(wrow, ab)
+                } else {
+                    dot_wide_i64(wrow, ab)
+                };
             }
         }
     }
+    for m in 0..mr {
+        for s in 0..n {
+            // SAFETY: this block owns output rows r0..r0+mr (row
+            // blocks partition 0..rows), in bounds by the caller's
+            // `y.len() == n * rows` check.
+            unsafe { *y.add(s * rows + r0 + m) = acc[m * n + s] };
+        }
+    }
+}
+
+/// [`matmul_packed`] on the `blocked` backend: streams compile-time
+/// decoded `[MR x KC]` panels (no per-call row decode) and keeps each
+/// panel L1-resident while it is dotted against every sample's
+/// matching activation block. `threads > 1` shards the panel row
+/// blocks across scoped threads — each shard writes a disjoint set of
+/// kept rows, and because every backend computes the same *exact*
+/// integer sums and integer addition is associative, the result is
+/// bit-identical to the scalar oracle for every thread count.
+pub fn matmul_panels(pm: &PanelMatrix, acts: &[i32], n: usize,
+                     act_bits: u32, threads: usize, y: &mut [i64]) {
+    debug_assert_eq!(acts.len(), n * pm.cols);
+    debug_assert_eq!(y.len(), n * pm.rows);
+    let low = low_bit_pair(pm.bits, act_bits);
+    let nb = pm.blocks().len();
+    let shards = shard_ranges(nb, threads);
+    let yp = ShardPtr(y.as_mut_ptr());
+    if shards.len() == 1 {
+        let mut acc = vec![0i64; MR * n];
+        for b in 0..nb {
+            matmul_panels_block(pm, acts, n, low, b, &mut acc, yp.0);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for &(b0, b1) in &shards {
+            let yp = &yp;
+            scope.spawn(move || {
+                let mut acc = vec![0i64; MR * n];
+                for b in b0..b1 {
+                    matmul_panels_block(pm, acts, n, low, b, &mut acc,
+                                        yp.0);
+                }
+            });
+        }
+    });
+}
+
+/// [`conv2d_codes`] on the `blocked` backend: output pixels are tiled
+/// [`NR`] at a time, each im2col patch is gathered once per (tile,
+/// group) into the tile buffer, and every `[MR x KC]` weight panel of
+/// the group is dotted against all `NR` patches while L1-resident —
+/// the panel traffic that [`conv2d_codes`] pays once per pixel is
+/// paid once per tile. `threads > 1` shards the *pixel tiles* across
+/// scoped threads (sharding rows would duplicate every patch gather
+/// per shard); each shard owns a disjoint pixel range of `y`. Exact
+/// integer sums throughout, so bit-identical to the scalar oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_panels(pm: &PanelMatrix, kept: &[u32],
+                     cout_per_group: usize, sp: &SpatialPlan,
+                     acts: &[i32], n: usize, act_bits: u32,
+                     threads: usize, y: &mut [i64]) {
+    let rows = kept.len();
+    let plen = sp.patch_len();
+    let in_len = sp.in_len();
+    let opix = sp.out_pixels();
+    debug_assert_eq!(pm.rows, rows);
+    debug_assert_eq!(pm.cols, plen);
+    debug_assert_eq!(acts.len(), n * in_len);
+    debug_assert_eq!(y.len(), n * opix * rows);
+    let low = low_bit_pair(pm.bits, act_bits);
+    let tiles = opix.div_ceil(NR);
+    let shards = shard_ranges(tiles, threads);
+    let yp = ShardPtr(y.as_mut_ptr());
+    let run = |t0: usize, t1: usize, yp: &ShardPtr| {
+        let mut tile = vec![0i32; NR * plen];
+        for s in 0..n {
+            let x = &acts[s * in_len..(s + 1) * in_len];
+            for t in t0..t1 {
+                let p0 = t * NR;
+                let tl = NR.min(opix - p0);
+                let mut cur_g = usize::MAX;
+                for (b, &(r0, mr)) in pm.blocks().iter().enumerate() {
+                    if mr == 0 {
+                        continue;
+                    }
+                    let g = kept[r0] as usize / cout_per_group;
+                    if g != cur_g {
+                        for (pi, tb) in
+                            tile.chunks_mut(plen).enumerate().take(tl)
+                        {
+                            let p = p0 + pi;
+                            extract_patch(x, sp, g, p / sp.out_w,
+                                          p % sp.out_w, tb);
+                        }
+                        cur_g = g;
+                    }
+                    let mut acc = [0i64; MR * NR];
+                    for kb in 0..pm.kblocks() {
+                        let k0 = kb * KC;
+                        let klen = KC.min(plen.saturating_sub(k0));
+                        if klen == 0 {
+                            break;
+                        }
+                        let panel = pm.panel(b, kb);
+                        for pi in 0..tl {
+                            let ab =
+                                &tile[pi * plen + k0..pi * plen + k0
+                                    + klen];
+                            for m in 0..mr {
+                                let wrow =
+                                    &panel[m * KC..m * KC + klen];
+                                acc[m * NR + pi] += if low {
+                                    dot_block_i32(wrow, ab)
+                                } else {
+                                    dot_wide_i64(wrow, ab)
+                                };
+                            }
+                        }
+                    }
+                    for pi in 0..tl {
+                        let ybase = (s * opix + p0 + pi) * rows;
+                        for m in 0..mr {
+                            // SAFETY: this shard owns pixel range
+                            // p0..p0+tl of sample s; rows partition.
+                            unsafe {
+                                *yp.0.add(ybase + r0 + m) =
+                                    acc[m * NR + pi];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    };
+    if shards.len() == 1 {
+        run(0, tiles, &yp);
+        return;
+    }
+    std::thread::scope(|scope| {
+        for &(t0, t1) in &shards {
+            let yp = &yp;
+            let run = &run;
+            scope.spawn(move || run(t0, t1, yp));
+        }
+    });
+}
+
+/// [`dwconv2d_codes`] on the `blocked` backend: filter rows come from
+/// the compile-time panels (no per-call decode), each decoded `k*k`
+/// row stays hot across every output pixel it produces, and
+/// `threads > 1` shards the kept channels across scoped threads (each
+/// channel's outputs are disjoint, and depthwise tap gathers are
+/// per-channel so sharding duplicates no work). Bit-identical to the
+/// scalar oracle: same exact per-row integer sums.
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv2d_panels(pm: &PanelMatrix, kept: &[u32],
+                       cout_per_group: usize, sp: &SpatialPlan,
+                       acts: &[i32], n: usize, act_bits: u32,
+                       threads: usize, y: &mut [i64]) {
+    debug_assert_eq!(sp.groups, sp.in_c);
+    let rows = kept.len();
+    let plen = sp.k * sp.k;
+    let in_len = sp.in_len();
+    let opix = sp.out_pixels();
+    debug_assert_eq!(pm.rows, rows);
+    debug_assert_eq!(pm.cols, plen);
+    debug_assert_eq!(acts.len(), n * in_len);
+    debug_assert_eq!(y.len(), n * opix * rows);
+    // the whole k*k window fits one i32 block at low widths
+    let low = low_bit_pair(pm.bits, act_bits) && plen <= I32_BLOCK;
+    let shards = shard_ranges(rows, threads);
+    let yp = ShardPtr(y.as_mut_ptr());
+    let run = |r_lo: usize, r_hi: usize, yp: &ShardPtr| {
+        let mut row = vec![0i32; plen];
+        for (b, &(r0, mr)) in pm.blocks().iter().enumerate() {
+            for m in 0..mr {
+                let r = r0 + m;
+                if r < r_lo || r >= r_hi {
+                    continue;
+                }
+                for kb in 0..pm.kblocks() {
+                    let k0 = kb * KC;
+                    let klen = KC.min(plen.saturating_sub(k0));
+                    if klen == 0 {
+                        break;
+                    }
+                    row[k0..k0 + klen].copy_from_slice(
+                        &pm.panel(b, kb)[m * KC..m * KC + klen]);
+                }
+                let ci = kept[r] as usize / cout_per_group;
+                for s in 0..n {
+                    let x = &acts[s * in_len..(s + 1) * in_len];
+                    for oh in 0..sp.out_h {
+                        let ih0 = (oh * sp.stride) as isize
+                            - sp.pad_top as isize;
+                        for ow in 0..sp.out_w {
+                            let iw0 = (ow * sp.stride) as isize
+                                - sp.pad_left as isize;
+                            let mut acc32 = 0i32;
+                            let mut acc = 0i64;
+                            for kh in 0..sp.k {
+                                let ih = ih0 + kh as isize;
+                                if ih < 0 || ih as usize >= sp.in_h {
+                                    continue;
+                                }
+                                let xrow = ih as usize * sp.in_w;
+                                for kw in 0..sp.k {
+                                    let iw = iw0 + kw as isize;
+                                    if iw < 0
+                                        || iw as usize >= sp.in_w
+                                    {
+                                        continue;
+                                    }
+                                    let wv = row[kh * sp.k + kw];
+                                    let av = x[(xrow + iw as usize)
+                                        * sp.in_c + ci];
+                                    if low {
+                                        acc32 += wv * av;
+                                    } else {
+                                        acc += wv as i64 * av as i64;
+                                    }
+                                }
+                            }
+                            let yi = (s * opix + oh * sp.out_w + ow)
+                                * rows + r;
+                            // SAFETY: this shard owns kept rows
+                            // r_lo..r_hi; in bounds by the y.len()
+                            // check above.
+                            unsafe {
+                                *yp.0.add(yi) = if low {
+                                    acc32 as i64
+                                } else {
+                                    acc
+                                };
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    };
+    if shards.len() == 1 {
+        run(0, rows, &yp);
+        return;
+    }
+    std::thread::scope(|scope| {
+        for &(r_lo, r_hi) in &shards {
+            let yp = &yp;
+            let run = &run;
+            scope.spawn(move || run(r_lo, r_hi, yp));
+        }
+    });
 }
 
 /// Quantize a flat activation tensor to integer codes in `out`;
@@ -883,9 +1257,163 @@ mod tests {
     fn backend_parse_and_labels_round_trip() {
         assert_eq!(Backend::parse("scalar").unwrap(), Backend::Scalar);
         assert_eq!(Backend::parse("simd").unwrap(), Backend::Simd);
+        assert_eq!(Backend::parse("blocked").unwrap(),
+                   Backend::Blocked);
         assert!(Backend::parse("avx512").is_err());
         assert_eq!(Backend::Scalar.label(), "scalar");
         assert_eq!(Backend::Simd.label(), "simd");
+        assert_eq!(Backend::Blocked.label(), "blocked");
+    }
+
+    #[test]
+    fn shard_ranges_partition_without_gaps() {
+        for units in [0usize, 1, 2, 7, 8, 9, 63, 100] {
+            for threads in [1usize, 2, 3, 4, 8, 200] {
+                let shards = shard_ranges(units, threads);
+                assert!(!shards.is_empty());
+                assert!(shards.len() <= threads.max(1));
+                assert!(shards.len() <= units.max(1));
+                let mut next = 0;
+                for &(a, b) in &shards {
+                    assert_eq!(a, next, "u={units} t={threads}");
+                    assert!(b >= a);
+                    next = b;
+                }
+                assert_eq!(next, units, "u={units} t={threads}");
+                // balanced: sizes differ by at most one
+                let sizes: Vec<usize> =
+                    shards.iter().map(|&(a, b)| b - a).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(),
+                                sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "u={units} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_panels_bit_exact_vs_scalar_every_remainder_shape() {
+        let mut rng = crate::rng::Pcg64::new(29);
+        for (bits, a_bits) in [(2u32, 8u32), (4, 4), (8, 8), (16, 16)] {
+            for rows in [1usize, MR - 1, MR, MR + 1, 3 * MR + 1] {
+                for cols in [1usize, 7, KC - 1, KC, KC + 1,
+                             2 * KC + 17]
+                {
+                    let n = 2;
+                    let hi = (1i64 << (bits - 1)) - 1;
+                    let codes: Vec<i64> = (0..rows * cols)
+                        .map(|_| {
+                            (rng.next_u64() % (2 * hi + 1) as u64)
+                                as i64 - hi
+                        })
+                        .collect();
+                    let w = PackedMatrix::pack(&codes, rows, cols,
+                                               bits, true)
+                        .unwrap();
+                    let pm = PanelMatrix::from_packed(&w);
+                    let amax = (1i64 << a_bits.min(8)) - 1;
+                    let acts: Vec<i32> = (0..n * cols)
+                        .map(|_| {
+                            (rng.next_u64() % (amax + 1) as u64) as i32
+                        })
+                        .collect();
+                    let mut scratch = vec![0i32; cols];
+                    let mut ys = vec![0i64; n * rows];
+                    matmul_packed(&w, &acts, n, a_bits, &mut scratch,
+                                  &mut ys);
+                    for threads in [1usize, 2, 3, 4] {
+                        let mut yb = vec![0i64; n * rows];
+                        matmul_panels(&pm, &acts, n, a_bits, threads,
+                                      &mut yb);
+                        assert_eq!(ys, yb,
+                                   "bits={bits} rows={rows} \
+                                    cols={cols} threads={threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv2d_panels_bit_exact_vs_scalar_with_groups_and_threads() {
+        use crate::models::Padding;
+        let mut rng = crate::rng::Pcg64::new(31);
+        for (groups, stride) in [(1usize, 1usize), (2, 2), (3, 1)] {
+            let (in_h, in_w, cg, k) = (5, 4, 3, 3);
+            let in_c = groups * cg;
+            // odd per-group row count so panel blocks break at group
+            // boundaries below MR
+            let cout = 3 * groups;
+            let sp = SpatialPlan::new(in_h, in_w, in_c, k, stride,
+                                      Padding::Same, groups)
+                .unwrap();
+            let plen = sp.patch_len();
+            let kept: Vec<u32> = (0..cout as u32).collect();
+            let codes: Vec<i64> = (0..cout * plen)
+                .map(|_| (rng.next_u64() % 15) as i64 - 7)
+                .collect();
+            let w = PackedMatrix::pack(&codes, cout, plen, 4, true)
+                .unwrap();
+            let cpg = cout / groups;
+            let pm = PanelMatrix::from_packed_grouped(&w, |r| {
+                kept[r] as usize / cpg
+            });
+            let wd: Vec<i32> = codes.iter().map(|c| *c as i32).collect();
+            let n = 2;
+            let x: Vec<i32> = (0..n * sp.in_len())
+                .map(|_| (rng.next_u64() % 16) as i32)
+                .collect();
+            let mut patch = vec![0i32; plen];
+            let mut ys = vec![0i64; n * sp.out_pixels() * cout];
+            conv2d_codes(&wd, &kept, cpg, &sp, &x, n, true, &mut patch,
+                         &mut ys);
+            for threads in [1usize, 2, 3, 4] {
+                let mut yb = vec![0i64; ys.len()];
+                conv2d_panels(&pm, &kept, cpg, &sp, &x, n, 4, threads,
+                              &mut yb);
+                assert_eq!(ys, yb,
+                           "g={groups} s={stride} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn dwconv2d_panels_bit_exact_vs_scalar_with_pruning_and_threads() {
+        use crate::models::Padding;
+        let mut rng = crate::rng::Pcg64::new(37);
+        for c in [3usize, MR, MR + 3, 2 * MR + 1] {
+            let sp = SpatialPlan::new(5, 5, c, 3, 1, Padding::Same, c)
+                .unwrap();
+            let plen = sp.patch_len();
+            let kept: Vec<u32> = (0..c as u32)
+                .filter(|ch| ch % 3 != 1 || c < 3)
+                .collect();
+            let codes: Vec<i64> = (0..kept.len() * plen)
+                .map(|_| (rng.next_u64() % 7) as i64 - 3)
+                .collect();
+            let w = PackedMatrix::pack(&codes, kept.len(), plen, 4,
+                                       true)
+                .unwrap();
+            let pm = PanelMatrix::from_packed(&w);
+            let wd: Vec<i32> = codes.iter().map(|c| *c as i32).collect();
+            let n = 2;
+            let x: Vec<i32> = (0..n * sp.in_len())
+                .map(|_| (rng.next_u64() % 16) as i32)
+                .collect();
+            for a_bits in [8u32, 16] {
+                let low = low_bit_pair(4, a_bits);
+                let mut ys =
+                    vec![0i64; n * sp.out_pixels() * kept.len()];
+                dwconv2d_codes(&wd, &kept, 1, &sp, &x, n, low,
+                               &mut ys);
+                for threads in [1usize, 2, 3, 4] {
+                    let mut yb = vec![0i64; ys.len()];
+                    dwconv2d_panels(&pm, &kept, 1, &sp, &x, n, a_bits,
+                                    threads, &mut yb);
+                    assert_eq!(ys, yb,
+                               "c={c} a={a_bits} threads={threads}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -14,9 +14,11 @@
 //! * [`kernels`] — packed-weight integer GEMM and im2col-over-codes
 //!   spatial convolution (i32/i64 accumulate, one requantize
 //!   multiply) plus the f32 simulated-quant fallbacks; each integer
-//!   kernel exists as the scalar oracle and a bit-identical SIMD form
-//!   ([`Backend`]), selected per compiled node by the pass pipeline
-//!   and forceable via `BBITS_BACKEND` / `--backend`;
+//!   kernel exists as the scalar oracle, a bit-identical SIMD form,
+//!   and a cache-blocked panel form that can also shard one request
+//!   across scoped threads ([`Backend`], `--intra-threads`), selected
+//!   per compiled node by the pass pipeline and forceable via
+//!   `BBITS_BACKEND` / `--backend`;
 //! * [`serve`] — the batched worker-pool core (micro-batching queue,
 //!   per-worker [`Engine`] instances over one shared compiled program
 //!   pair) plus the single-model [`Server`] wrapper;
@@ -430,16 +432,17 @@ impl SweepRecord {
 /// writers (`bbits engine-bench` and `benches/bench_engine.rs`) so
 /// the machine-readable artifact's description cannot drift.
 pub const BENCH_ENGINE_TITLE: &str =
-    "engine images/sec per bit-width config, scalar vs simd integer \
-     backends vs f32 fallback";
+    "engine images/sec per bit-width config, scalar vs simd vs \
+     blocked integer backends vs f32 fallback";
 
 /// The (int_path, backend) execution configs a sweep measures: the
-/// scalar-vs-SIMD integer pair plus the f32 scalar reference, or just
-/// one integer backend (plus the reference) when forced.
+/// scalar/SIMD/blocked integer trio plus the f32 scalar reference, or
+/// just one integer backend (plus the reference) when forced.
 fn sweep_configs(forced: Option<Backend>) -> Vec<(bool, Backend)> {
     match forced {
         Some(b) => vec![(true, b), (false, Backend::Scalar)],
         None => vec![(true, Backend::Scalar), (true, Backend::Simd),
+                     (true, Backend::Blocked),
                      (false, Backend::Scalar)],
     }
 }
@@ -917,6 +920,15 @@ impl Engine {
     /// the A/B lever behind `bbits serve --no-int` and the benches.
     pub fn set_int_enabled(&mut self, on: bool) {
         self.int_enabled = on;
+    }
+
+    /// Number of scoped threads [`Backend::Blocked`] kernel nodes
+    /// shard one request across (0 and 1 both mean single-threaded).
+    /// Scalar/SIMD nodes ignore it — the lever behind
+    /// `--intra-threads`, capped by the serving pool so workers times
+    /// intra threads never oversubscribes the machine.
+    pub fn set_intra_threads(&mut self, n: usize) {
+        self.st.set_intra_threads(n);
     }
 
     /// Run one request; returns the logits.

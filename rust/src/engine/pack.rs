@@ -132,6 +132,122 @@ fn field_mask(bits: u32) -> u64 {
     }
 }
 
+/// Panel height of the blocked weight layout: how many kept rows one
+/// panel carries. Matches the kernel lane width so a panel's rows fill
+/// the blocked micro-kernel's accumulator block exactly.
+pub const MR: usize = 8;
+
+/// Panel depth of the blocked weight layout. One `[MR x KC]` i32 panel
+/// is `8 * 256 * 4 = 8 KiB` — a quarter of a typical 32 KiB L1d — so a
+/// panel plus the activation tile it is dotted against stay resident
+/// while the micro-kernel streams them.
+pub const KC: usize = 256;
+
+/// Compile-time repack of a [`PackedMatrix`] for the `blocked` kernel
+/// backend: rows are decoded once (no per-call `unpack_row_into`) and
+/// laid out panel-major — row blocks of up to [`MR`] rows, each split
+/// into depth blocks of [`KC`] codes, stored as contiguous `[MR x KC]`
+/// i32 panels. Short blocks are zero-padded to the full panel shape,
+/// which is harmless because a zero code contributes nothing to any
+/// exact integer dot product.
+///
+/// Row blocks never straddle a caller-declared group boundary (see
+/// [`PanelMatrix::from_packed_grouped`]), so a conv panel's rows all
+/// consume the same im2col patch.
+#[derive(Debug, Clone)]
+pub struct PanelMatrix {
+    pub bits: u32,
+    pub signed: bool,
+    /// Kept (dense) row count of the source matrix.
+    pub rows: usize,
+    /// Shared row length (K).
+    pub cols: usize,
+    /// `(first_row, rows_in_block <= MR)` per row block, ascending and
+    /// partitioning `0..rows`.
+    blocks: Vec<(usize, usize)>,
+    /// Depth blocks per row: `ceil(cols / KC)` (min 1).
+    kblocks: usize,
+    data: Vec<i32>,
+}
+
+impl PanelMatrix {
+    /// Repack with no group boundaries (GEMM / depthwise layers).
+    pub fn from_packed(w: &PackedMatrix) -> PanelMatrix {
+        Self::from_packed_grouped(w, |_| 0)
+    }
+
+    /// Repack, starting a fresh row block whenever `group_of(row)`
+    /// changes (conv layers: the group whose patch the row consumes).
+    pub fn from_packed_grouped(w: &PackedMatrix,
+                               group_of: impl Fn(usize) -> usize)
+                               -> PanelMatrix {
+        let (rows, cols) = (w.rows, w.cols);
+        let kblocks = cols.div_ceil(KC).max(1);
+        let mut blocks: Vec<(usize, usize)> = Vec::new();
+        let mut r = 0;
+        while r < rows {
+            let g = group_of(r);
+            let mut mr = 1;
+            while mr < MR && r + mr < rows && group_of(r + mr) == g {
+                mr += 1;
+            }
+            blocks.push((r, mr));
+            r += mr;
+        }
+        if blocks.is_empty() {
+            blocks.push((0, 0));
+        }
+        let mut data = vec![0i32; blocks.len() * kblocks * MR * KC];
+        let mut row = vec![0i32; cols];
+        for (b, &(r0, mr)) in blocks.iter().enumerate() {
+            for m in 0..mr {
+                w.unpack_row_into(r0 + m, &mut row);
+                for kb in 0..kblocks {
+                    let k0 = kb * KC;
+                    let klen = KC.min(cols.saturating_sub(k0));
+                    let dst = ((b * kblocks + kb) * MR + m) * KC;
+                    data[dst..dst + klen]
+                        .copy_from_slice(&row[k0..k0 + klen]);
+                }
+            }
+        }
+        PanelMatrix {
+            bits: w.bits,
+            signed: w.signed,
+            rows,
+            cols,
+            blocks,
+            kblocks,
+            data,
+        }
+    }
+
+    /// The `(first_row, rows_in_block)` row blocks, ascending.
+    pub fn blocks(&self) -> &[(usize, usize)] {
+        &self.blocks
+    }
+
+    /// Depth blocks per row (`ceil(cols / KC)`, min 1).
+    pub fn kblocks(&self) -> usize {
+        self.kblocks
+    }
+
+    /// One contiguous `[MR x KC]` panel: row `m` of row block `b`
+    /// occupies `[m * KC .. m * KC + KC]`, zero-padded past the true
+    /// row count / row length.
+    #[inline]
+    pub fn panel(&self, b: usize, kb: usize) -> &[i32] {
+        let base = (b * self.kblocks + kb) * MR * KC;
+        &self.data[base..base + MR * KC]
+    }
+
+    /// Resident bytes of the decoded panel storage (the price of
+    /// skipping per-call row decode on the blocked backend).
+    pub fn panel_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,5 +301,69 @@ mod tests {
             let p = PackedMatrix::pack(&codes, 1, 5, bits, true).unwrap();
             assert_eq!(p.unpack(), codes, "bits={bits}");
         }
+    }
+
+    /// Read code `(r, c)` back out of the panel layout.
+    fn panel_code(pm: &PanelMatrix, r: usize, c: usize) -> i32 {
+        let (b, m) = pm
+            .blocks()
+            .iter()
+            .enumerate()
+            .find_map(|(b, &(r0, mr))| {
+                (r >= r0 && r < r0 + mr).then_some((b, r - r0))
+            })
+            .unwrap();
+        pm.panel(b, c / KC)[m * KC + c % KC]
+    }
+
+    #[test]
+    fn panel_layout_roundtrips_every_remainder_shape() {
+        let mut rng = crate::rng::Pcg64::new(41);
+        // row counts around MR multiples, row lengths around KC
+        // multiples — every padding case of the panel layout
+        for rows in [1usize, MR - 1, MR, MR + 1, 3 * MR + 1] {
+            for cols in [1usize, 7, KC - 1, KC, KC + 1, 2 * KC + 17] {
+                let codes: Vec<i64> = (0..rows * cols)
+                    .map(|_| (rng.next_u64() % 15) as i64 - 7)
+                    .collect();
+                let w = PackedMatrix::pack(&codes, rows, cols, 4, true)
+                    .unwrap();
+                let pm = PanelMatrix::from_packed(&w);
+                assert_eq!(pm.kblocks(), cols.div_ceil(KC).max(1));
+                let covered: usize =
+                    pm.blocks().iter().map(|&(_, mr)| mr).sum();
+                assert_eq!(covered, rows, "rows={rows}");
+                for r in 0..rows {
+                    for c in 0..cols {
+                        assert_eq!(panel_code(&pm, r, c) as i64,
+                                   codes[r * cols + c],
+                                   "rows={rows} cols={cols} ({r},{c})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_blocks_never_straddle_groups() {
+        // 11 rows in groups [4, 4, 3]: blocks must break at rows 4
+        // and 8 even though MR is wider
+        let codes = vec![1i64; 11 * 6];
+        let w = PackedMatrix::pack(&codes, 11, 6, 2, true).unwrap();
+        let group = |r: usize| r / 4;
+        let pm = PanelMatrix::from_packed_grouped(&w, group);
+        for &(r0, mr) in pm.blocks() {
+            assert!(mr >= 1 && mr <= MR);
+            assert_eq!(group(r0), group(r0 + mr - 1),
+                       "block ({r0},{mr}) straddles a group");
+        }
+        assert_eq!(pm.blocks().iter().map(|&(_, m)| m).sum::<usize>(),
+                   11);
+        // padding rows and padding columns read back as zero
+        let panel = pm.panel(0, 0);
+        for m in 4..MR {
+            assert!(panel[m * KC..(m + 1) * KC].iter().all(|v| *v == 0));
+        }
+        assert!(panel[6..KC].iter().all(|v| *v == 0));
     }
 }

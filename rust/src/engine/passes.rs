@@ -17,12 +17,17 @@
 //! 4. **quantize/requant fusion** — a `Requant` whose f32 output is
 //!    consumed only by the next integer layer's `Quantize` becomes one
 //!    `RequantQuantize`, eliminating the intermediate activation
-//!    buffer between adjacent integer layers;
+//!    buffer between adjacent integer layers; the same rewrite fuses
+//!    `Epilogue -> Quantize` on mixed f32/int chains into an
+//!    `EpilogueQuantize`;
 //! 5. **backend assignment** — each integer kernel node gets its
 //!    [`Backend`] discriminant: a forced choice (`--backend` /
 //!    `BBITS_BACKEND`) when given, otherwise SIMD wherever the
 //!    kernel's lane dimension reaches [`kernels::LANES`] and scalar
-//!    below it (vector setup would outweigh sub-lane work);
+//!    below it (vector setup would outweigh sub-lane work); the auto
+//!    rule never picks [`Backend::Blocked`] — blocking is opt-in, and
+//!    layers that got a blocked node have their decoded weight rows
+//!    repacked here into L1-sized [`PanelMatrix`] panels;
 //! 6. **liveness + arena assignment** (`engine::arena`) — disjoint
 //!    live ranges share scratch space (ping-pong reuse).
 //!
@@ -37,6 +42,7 @@ use std::sync::Arc;
 use super::arena;
 use super::graph::{BufId, BufSpec, DType, Node, PreStep, Program};
 use super::kernels::{self, Backend};
+use super::pack::PanelMatrix;
 use super::{ActSpec, EnginePlan, PlanLayer, PreOp};
 use crate::quant::grid::CodeGrid;
 
@@ -85,7 +91,9 @@ pub(crate) fn compile(plan: Arc<EnginePlan>, int_path: bool,
     elide_pruned(&mut d);
     materialize_pre(&mut d);
     fuse_requant_quantize(&mut d);
+    fuse_epilogue_quantize(&mut d);
     assign_backends(&mut d, forced.or_else(Backend::from_env));
+    let panels = build_panels(&d);
     let layout = arena::assign(&mut d.bufs, &d.nodes, d.input, d.output);
     Program {
         plan: d.plan,
@@ -94,6 +102,7 @@ pub(crate) fn compile(plan: Arc<EnginePlan>, int_path: bool,
         node_layer: d.node_layer,
         node_ids: d.node_ids,
         bufs: d.bufs,
+        panels,
         input: d.input,
         output: d.output,
         f32_len: layout.f32_len,
@@ -395,4 +404,94 @@ fn fuse_requant_quantize(d: &mut Draft) {
         d.push_kept(old_nodes[i].clone(), old_layers[i], old_ids[i]);
         i += 1;
     }
+}
+
+/// Pass 4b: fuse `Epilogue -> Quantize` pairs on mixed f32/int chains
+/// — an f32 layer whose dense output is consumed only by the next
+/// integer layer's quantize goes straight to codes, mirroring
+/// [`fuse_requant_quantize`] for the reference-path epilogue.
+fn fuse_epilogue_quantize(d: &mut Draft) {
+    let old_nodes = std::mem::take(&mut d.nodes);
+    let old_layers = std::mem::take(&mut d.node_layer);
+    let old_ids = std::mem::take(&mut d.node_ids);
+    let mut readers = vec![0usize; d.bufs.len()];
+    for node in &old_nodes {
+        if let Some(b) = node.reads() {
+            readers[b] += 1;
+        }
+    }
+    let mut i = 0;
+    while i < old_nodes.len() {
+        if i + 1 < old_nodes.len() {
+            if let (Node::Epilogue { layer, src, dst, relu },
+                    Node::Quantize { src: qsrc, dst: qdst, grid }) =
+                (&old_nodes[i], &old_nodes[i + 1])
+            {
+                if *dst == *qsrc && readers[*dst] == 1
+                    && *dst != d.output
+                {
+                    // the fused node keeps the epilogue's id (the
+                    // absorbed quantize's id retires)
+                    d.push_kept(Node::EpilogueQuantize {
+                        layer: *layer,
+                        src: *src,
+                        dst: *qdst,
+                        relu: *relu,
+                        grid: *grid,
+                    }, old_layers[i], old_ids[i]);
+                    i += 2;
+                    continue;
+                }
+            }
+        }
+        d.push_kept(old_nodes[i].clone(), old_layers[i], old_ids[i]);
+        i += 1;
+    }
+}
+
+/// Post-assignment panel build: every layer that received a
+/// [`Backend::Blocked`] kernel node gets its decoded weight rows
+/// repacked into L1-sized `[MR x KC]` panels. Grouped convolutions
+/// use the group-aware packing so a row block never straddles a group
+/// boundary (one panel is dotted against one group's patch block);
+/// GEMMs and depthwise convs block kept rows freely — the depthwise
+/// kernel reads rows individually, so its blocks carry no grouping
+/// constraint.
+fn build_panels(d: &Draft) -> Vec<Option<Arc<PanelMatrix>>> {
+    let mut panels: Vec<Option<Arc<PanelMatrix>>> =
+        vec![None; d.plan.layers.len()];
+    for node in &d.nodes {
+        let li = match node {
+            Node::Gemm { layer, int: true,
+                         backend: Backend::Blocked, .. }
+            | Node::DwConv2d { layer,
+                               backend: Backend::Blocked, .. }
+            | Node::Conv2d { layer, int: true,
+                             backend: Backend::Blocked, .. } => *layer,
+            _ => continue,
+        };
+        if panels[li].is_some() {
+            continue;
+        }
+        let l = &d.plan.layers[li];
+        let packed = l
+            .packed
+            .as_ref()
+            .expect("blocked kernel on a layer without packed rows");
+        let pm = match node {
+            Node::Conv2d { .. } => {
+                let sp = l
+                    .spatial
+                    .as_ref()
+                    .expect("blocked conv without spatial");
+                let cpg = l.out_dim / sp.groups;
+                PanelMatrix::from_packed_grouped(packed, |r| {
+                    l.kept[r] as usize / cpg
+                })
+            }
+            _ => PanelMatrix::from_packed(packed),
+        };
+        panels[li] = Some(Arc::new(pm));
+    }
+    panels
 }

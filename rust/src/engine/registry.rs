@@ -513,7 +513,11 @@ impl ModelRegistry {
         let cost_bytes = (int_prog.arena_bytes()
                           + f32_prog.arena_bytes())
             * cfg.max_batch
-            * cfg.workers;
+            * cfg.workers
+            // blocked-backend weight panels are compiled once and
+            // shared by every worker through the program Arc — charged
+            // once, not per worker or per batch slot
+            + int_prog.panel_bytes();
         let trace = self.trace.lock().unwrap().clone();
         let pool = Arc::new(
             Pool::start(plan, int_prog, f32_prog, cfg, stats, trace)

@@ -56,6 +56,12 @@ pub struct ServeConfig {
     /// model's programs compile (and recompile after eviction);
     /// `None` resolves `BBITS_BACKEND`, then per-node auto selection.
     pub backend: Option<Backend>,
+    /// Scoped threads a blocked kernel node shards one request across
+    /// (`--intra-threads`; 1 = off). The pool caps the effective value
+    /// at `available_parallelism / workers` so worker threads times
+    /// intra threads can never oversubscribe the machine. Ignored by
+    /// the scalar/SIMD backends.
+    pub intra_threads: usize,
     /// Per-request latency target (SLO). With a precision ladder
     /// registered, the rung pick chooses the most accurate rung whose
     /// predicted completion still fits this budget; `None` falls back
@@ -75,6 +81,7 @@ impl Default for ServeConfig {
             deadline: Duration::from_millis(2),
             force_f32: false,
             backend: None,
+            intra_threads: 1,
             slo: None,
         }
     }
@@ -90,6 +97,7 @@ pub enum ServeConfigError {
     ZeroQueueCap,
     ZeroMaxBatch,
     ZeroDeadline,
+    ZeroIntraThreads,
     ZeroSlo,
 }
 
@@ -112,6 +120,10 @@ impl fmt::Display for ServeConfigError {
                 write!(f, "serve config needs a non-zero deadline (use \
                            e.g. 1us to effectively disable the \
                            micro-batch window)")
+            }
+            ServeConfigError::ZeroIntraThreads => {
+                write!(f, "serve config needs intra_threads >= 1 (use \
+                           1 to disable intra-request sharding)")
             }
             ServeConfigError::ZeroSlo => {
                 write!(f, "serve config SLO must be non-zero (omit it \
@@ -139,6 +151,9 @@ impl ServeConfig {
         }
         if self.deadline.is_zero() {
             return Err(ServeConfigError::ZeroDeadline);
+        }
+        if self.intra_threads == 0 {
+            return Err(ServeConfigError::ZeroIntraThreads);
         }
         if matches!(self.slo, Some(d) if d.is_zero()) {
             return Err(ServeConfigError::ZeroSlo);
@@ -498,6 +513,13 @@ impl Pool {
                         trace: Option<Arc<TraceRecorder>>)
                         -> std::result::Result<Pool, ServeConfigError> {
         cfg.validate()?;
+        // cap intra-request sharding so workers x intra threads never
+        // oversubscribes the machine, whatever was requested
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let intra =
+            cfg.intra_threads.min((cores / cfg.workers).max(1));
         let shared = Arc::new(Shared {
             state: Mutex::new(QueueState::default()),
             not_empty: Condvar::new(),
@@ -514,7 +536,7 @@ impl Pool {
                 let fp = f32_prog.clone();
                 // worker trace tids start at 1; tid 0 is submitters
                 std::thread::spawn(move || worker_loop(shared, plan,
-                                                       ip, fp,
+                                                       ip, fp, intra,
                                                        wi as u64 + 1))
             })
             .collect();
@@ -592,10 +614,11 @@ impl Drop for Pool {
 
 fn worker_loop(shared: Arc<Shared>, plan: Arc<EnginePlan>,
                int_prog: Arc<Program>, f32_prog: Arc<Program>,
-               tid: u64) {
+               intra: usize, tid: u64) {
     let mut engine = Engine::from_compiled(plan.clone(), int_prog,
                                            f32_prog);
     engine.set_int_enabled(!shared.cfg.force_f32);
+    engine.set_intra_threads(intra);
     if let Some(rec) = &shared.trace {
         // traced pools also profile: per-node spans into the ring,
         // per-kernel aggregates flushed into the stats cell per batch

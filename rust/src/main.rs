@@ -147,8 +147,10 @@ fn plan_from_args(args: &Args, opt: &ExpOptions)
 }
 
 /// The `--backend` flag: force every integer kernel node onto one
-/// backend (`scalar` | `simd`); absent means `BBITS_BACKEND`, then
-/// per-node auto selection. Shared by serve/plan/engine-bench.
+/// backend (`scalar` | `simd` | `blocked`); absent means
+/// `BBITS_BACKEND`, then per-node auto selection (which never picks
+/// `blocked` — the panel form is opt-in). Shared by
+/// serve/plan/engine-bench.
 fn backend_from_args(args: &Args) -> Result<Option<engine::Backend>> {
     match args.opt_flag("backend") {
         None => Ok(None),
@@ -183,6 +185,7 @@ fn cmd_plan(args: &Args, opt: &ExpOptions) -> Result<()> {
         let mut eng = engine::Engine::with_backend(plan.clone(),
                                                    backend);
         eng.set_int_enabled(int_path);
+        eng.set_intra_threads(args.usize_flag("intra-threads", 1)?);
         eng.enable_profiling();
         let xs: Vec<f32> = (0..batch * plan.input_dim)
             .map(|i| ((i as f32) * 0.37).sin())
@@ -259,6 +262,7 @@ fn serve_config_from_args(args: &Args) -> Result<serve::ServeConfig> {
         ),
         force_f32: args.bool_flag("no-int"),
         backend: backend_from_args(args)?,
+        intra_threads: args.usize_flag("intra-threads", 1)?,
         slo,
     };
     cfg.validate()?;
@@ -597,13 +601,18 @@ fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
 }
 
 /// `bbits engine-bench` — packed integer GEMM and spatial conv at
-/// every chain width on synthetic layers, sweeping the scalar and
-/// SIMD kernel backends against the f32 fallback (GEMM sweep shared
-/// with `benches/bench_engine.rs`). Writes the machine-readable
-/// `BENCH_engine.json` (GEMM) and `BENCH_conv.json` (conv) artifacts,
-/// each record carrying a `backend` column; `--backend` restricts the
-/// sweep to one backend.
+/// every chain width on synthetic layers, sweeping the scalar, SIMD
+/// and cache-blocked kernel backends against the f32 fallback (GEMM
+/// sweep shared with `benches/bench_engine.rs`). Writes the
+/// machine-readable `BENCH_engine.json` (GEMM) and `BENCH_conv.json`
+/// (conv) artifacts, each record carrying a `backend` column;
+/// `--backend` restricts the sweep to one backend. `--paper-scale`
+/// instead runs measured forwards through the full 224x224 ResNet18
+/// lowering per backend and writes `BENCH_paper.json`.
 fn cmd_engine_bench(args: &Args) -> Result<()> {
+    if args.bool_flag("paper-scale") {
+        return paper_scale_bench(args);
+    }
     let conv_only = args.bool_flag("conv-only");
     let serve_only = args.bool_flag("serve-only");
     if conv_only && serve_only {
@@ -655,7 +664,7 @@ fn cmd_engine_bench(args: &Args) -> Result<()> {
         bayesian_bits::util::bench::save_json(
             out,
             "spatial conv images/sec per bit-width config, scalar vs \
-             simd integer backends vs f32 fallback",
+             simd vs blocked integer backends vs f32 fallback",
             conv.iter().map(|r| r.to_json()).collect(),
         )?;
         println!("wrote {}", out.display());
@@ -665,6 +674,102 @@ fn cmd_engine_bench(args: &Args) -> Result<()> {
         serve_bench(quick)?;
         ladder_bench(quick)?;
     }
+    Ok(())
+}
+
+/// `bbits engine-bench --paper-scale` — measured (never projected)
+/// forwards through the full paper-scale 224x224 ResNet18 lowering,
+/// one record per backend config, written to `BENCH_paper.json`.
+/// Unlike the synthetic sweeps this times the complete compiled
+/// program — im2col, packed/blocked kernels, the requant chain — so
+/// the blocked-vs-simd ratio the CI smoke asserts on is an
+/// end-to-end number, not a kernel micro-ratio. Every config's
+/// logits are also checked bit-identical against the scalar
+/// oracle's before its timings count.
+fn paper_scale_bench(args: &Args) -> Result<()> {
+    let iters = args.usize_flag("requests", 3)?.max(1);
+    let intra = args.usize_flag(
+        "intra-threads",
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .min(4),
+    )?;
+    let (man, params) = manifest_gen::preset_manifest_at(
+        "resnet18", false, 42, Preset::Paper)?;
+    let plan = Arc::new(engine::lower(&man, &params)?);
+    println!("{}", plan.report());
+    bayesian_bits::util::bench::header(&format!(
+        "paper-scale resnet18 — measured 224x224 forwards, {iters} \
+         per config"
+    ));
+    let configs: [(&str, engine::Backend, usize); 4] = [
+        ("scalar", engine::Backend::Scalar, 1),
+        ("simd", engine::Backend::Simd, 1),
+        ("blocked", engine::Backend::Blocked, 1),
+        ("blocked_intra", engine::Backend::Blocked, intra.max(1)),
+    ];
+    let xs: Vec<f32> = (0..plan.input_dim)
+        .map(|i| ((i as f32) * 0.37).sin())
+        .collect();
+    let mut records = Vec::new();
+    let mut oracle: Option<Vec<f32>> = None;
+    for (name, backend, threads) in configs {
+        let mut eng =
+            engine::Engine::with_backend(plan.clone(), Some(backend));
+        eng.set_intra_threads(threads);
+        // warmup forward doubles as the bit-exactness check: every
+        // backend computes the same exact integer sums, so the
+        // dequantized logits must match the scalar oracle's exactly
+        let y = eng.infer(&xs)?;
+        match &oracle {
+            None => oracle = Some(y),
+            Some(want) => {
+                if *want != y {
+                    bail!("paper-scale parity failure: {name} \
+                           (intra={threads}) diverged from the scalar \
+                           oracle");
+                }
+            }
+        }
+        let mut t: Vec<u64> = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = std::time::Instant::now();
+            eng.infer(&xs)?;
+            t.push(t0.elapsed().as_nanos() as u64);
+        }
+        t.sort_unstable();
+        let median_ns = t[t.len() / 2];
+        let ips = 1e9 / median_ns as f64;
+        println!(
+            "[{name}] intra={threads} median {:.1}ms ({ips:.2} \
+             images/sec)",
+            median_ns as f64 / 1e6
+        );
+        // per-node breakdown from one profiled pass after the timed
+        // loop, which stays uninstrumented
+        eng.enable_profiling();
+        eng.infer(&xs)?;
+        let nodes = eng.kernel_profile(true);
+        records.push(bayesian_bits::util::json::obj(vec![
+            ("backend", bayesian_bits::util::json::s(name)),
+            ("intra_threads", bayesian_bits::util::json::num(
+                threads as f64)),
+            ("median_ms", bayesian_bits::util::json::num(
+                median_ns as f64 / 1e6)),
+            ("images_per_sec", bayesian_bits::util::json::num(ips)),
+            ("nodes", engine::trace::kernel_rows_json(&nodes)),
+        ]));
+    }
+    let out = Path::new("BENCH_paper.json");
+    bayesian_bits::util::bench::save_json(
+        out,
+        "measured end-to-end forwards through the paper-scale 224x224 \
+         ResNet18 lowering: scalar vs simd vs blocked (single-thread \
+         and intra-request sharded) integer backends",
+        records,
+    )?;
+    println!("wrote {}", out.display());
     Ok(())
 }
 

@@ -186,6 +186,53 @@ fn grouped_conv_parity() {
 }
 
 #[test]
+fn blocked_backend_conv_parity_grid_across_intra_threads() {
+    // The blocked panel backend, sharded across 2..4 intra-request
+    // threads, must be bit-identical to the forced-scalar oracle on
+    // a width/stride/grouping grid — exact integer sums cannot move
+    // with panel, tile, or shard order (associativity), so this is an
+    // equality assert, not a tolerance check. Covers standard,
+    // grouped, and depthwise (groups == cin) conv layers.
+    use bayesian_bits::engine::Backend;
+    let mut seed = 4000u64;
+    for &(groups, cin, cout) in
+        &[(1usize, 3usize, 6usize), (2, 6, 6), (6, 6, 6)]
+    {
+        for &w_bits in &[2u32, 4, 8, 16] {
+            for &stride in &[1usize, 2] {
+                seed += 1;
+                let padding = if seed % 2 == 0 {
+                    Padding::Same
+                } else {
+                    Padding::Valid
+                };
+                let label = format!(
+                    "blocked g{groups} w{w_bits} s{stride} {}",
+                    padding.label());
+                let plan = Arc::new(synthetic_conv_plan(
+                    &label, 7, cin, cout, 3, stride, padding, groups,
+                    w_bits, 8, 0.3, seed)
+                    .unwrap());
+                let mut scalar = Engine::with_backend(
+                    plan.clone(), Some(Backend::Scalar));
+                let mut blocked = Engine::with_backend(
+                    plan.clone(), Some(Backend::Blocked));
+                let mut rng = Pcg64::new(seed * 3 + 1);
+                let x: Vec<f32> = (0..plan.input_dim)
+                    .map(|_| rng.normal() * 1.2)
+                    .collect();
+                let want = scalar.infer(&x).unwrap();
+                for threads in 2..=4 {
+                    blocked.set_intra_threads(threads);
+                    let got = blocked.infer(&x).unwrap();
+                    assert_eq!(want, got, "{label} intra={threads}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn fully_pruned_conv_layer_answers_bias_per_pixel() {
     // prune probability 1.0 leaves a single surviving channel by
     // construction; force full pruning via the layer's z2 instead

@@ -44,9 +44,17 @@ fn fused_requant_quantize_counts_per_preset() {
         let int_prog = Program::compile(plan.clone(), true);
         assert_eq!(fused(&int_prog), want, "{model} int path");
         assert_eq!(int_prog.fused_count(), want, "{model} accessor");
-        // the f32 reference path never fuses (it has no Requant)
+        // all-integer preset chains have no mid-chain f32 layer, so
+        // the epilogue fusion never fires on the int path
+        assert_eq!(int_prog.fused_epilogue_count(), 0, "{model}");
+        // the f32 reference path never requant-fuses (it has no
+        // Requant) — but its epilogues feed the next layer's quantize
+        // at exactly the adjacencies the int path requant-fuses, so
+        // the epilogue fusion count mirrors the int fusion count
         let f32_prog = Program::compile(plan.clone(), false);
         assert_eq!(fused(&f32_prog), 0, "{model} f32 path");
+        assert_eq!(f32_prog.fused_epilogue_count(), want,
+                   "{model} f32 epilogue fusion");
         // spatial presets never need the legacy flat adapter
         assert!(
             int_prog
@@ -331,6 +339,79 @@ fn ir_executor_matches_manual_integer_pipeline_bit_exactly() {
     }
 }
 
+/// A chain whose head is a 32-bit layer (`packed: None` — lowered to
+/// an f32 kernel + `Epilogue` even on the int path) feeding two
+/// integer layers: the mixed f32/int shape the epilogue fusion
+/// targets.
+fn mixed_chain_plan() -> EnginePlan {
+    let mut rng = bayesian_bits::rng::Pcg64::new(77);
+    let mut w = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.normal() * 0.5).collect()
+    };
+    let l1 = build_layer(
+        "fp1", &w(6 * 5), 6, 5, &[1.0; 5], 32, 1.5,
+        ActSpec::Int { bits: 8, beta: 3.0, signed: true },
+        Some(vec![0.1, -0.2, 0.3, -0.4, 0.5]), true)
+        .unwrap();
+    let l2 = build_layer(
+        "int2", &w(5 * 4), 5, 4, &[1.0; 4], 4, 1.5,
+        ActSpec::Int { bits: 8, beta: 6.0, signed: false },
+        Some(vec![0.25, -0.5, 0.75, 1.0]), true)
+        .unwrap();
+    let l3 = build_layer(
+        "int3", &w(4 * 3), 4, 3, &[1.0; 3], 8, 1.5,
+        ActSpec::Int { bits: 8, beta: 6.0, signed: false },
+        Some(vec![0.0, 0.1, -0.1]), false)
+        .unwrap();
+    let plan = EnginePlan {
+        model: "mixed".into(),
+        input_dim: 6,
+        output_dim: 3,
+        layers: vec![l1, l2, l3],
+    };
+    plan.validate().unwrap();
+    plan
+}
+
+#[test]
+fn epilogue_quantize_fuses_on_mixed_f32_int_chains() {
+    let plan = Arc::new(mixed_chain_plan());
+    let prog = Program::compile(plan.clone(), true);
+    // the w32 head's epilogue feeds the next integer layer's quantize
+    // and fuses; the int2 -> int3 pair still requant-fuses
+    assert_eq!(prog.fused_epilogue_count(), 1, "int path");
+    assert_eq!(fused(&prog), 1, "int path requant fusion");
+    assert_eq!(prog.fused_count(), 2, "int path accessor");
+    assert!(prog
+        .nodes()
+        .iter()
+        .any(|n| matches!(n, Node::EpilogueQuantize { .. })));
+    assert!(prog.dump().contains("epilogue_quantize"),
+            "{}", prog.dump());
+    // the f32 reference path lowers every layer to kernel + epilogue,
+    // so both adjacencies epilogue-fuse there
+    let f32_prog = Program::compile(plan.clone(), false);
+    assert_eq!(f32_prog.fused_epilogue_count(), 2, "f32 path");
+    assert_eq!(fused(&f32_prog), 0, "f32 path never requant-fuses");
+    // the fused datapath stays bit-exact across kernel backends,
+    // including blocked panels sharded over intra-request threads
+    let mut scalar =
+        Engine::with_backend(plan.clone(), Some(Backend::Scalar));
+    let mut simd =
+        Engine::with_backend(plan.clone(), Some(Backend::Simd));
+    let mut blocked =
+        Engine::with_backend(plan.clone(), Some(Backend::Blocked));
+    blocked.set_intra_threads(2);
+    for t in 0..6 {
+        let x: Vec<f32> = (0..6)
+            .map(|i| ((t * 6 + i) as f32 * 0.53).sin() * 2.0)
+            .collect();
+        let a = scalar.infer(&x).unwrap();
+        assert_eq!(a, simd.infer(&x).unwrap(), "simd t={t}");
+        assert_eq!(a, blocked.infer(&x).unwrap(), "blocked t={t}");
+    }
+}
+
 #[test]
 fn dump_lists_nodes_and_arena_map() {
     let (man, params) = preset_manifest("lenet5", false);
@@ -348,11 +429,22 @@ fn dump_lists_nodes_and_arena_map() {
     assert!(dump.contains("gemm.simd"), "{dump}");
     // one line per node plus header/footer
     assert!(dump.lines().count() >= prog.nodes().len() + 3, "{dump}");
+    // the blocked compile prints .blocked kernel names (CI greps
+    // these too) and is the only compile that carries weight panels
+    let blocked = Program::compile_with_backend(plan.clone(), true,
+                                                Some(Backend::Blocked));
+    let bdump = blocked.dump();
+    assert!(bdump.contains("conv2d.blocked"), "{bdump}");
+    assert!(bdump.contains("gemm.blocked"), "{bdump}");
+    assert!(!bdump.contains(".simd"), "{bdump}");
+    assert!(blocked.panel_bytes() > 0);
+    assert_eq!(prog.panel_bytes(), 0);
     // the scalar compile prints undecorated kernel names
     let prog = Program::compile_with_backend(plan, true,
                                              Some(Backend::Scalar));
     let dump = prog.dump();
     assert!(!dump.contains(".simd"), "{dump}");
+    assert!(!dump.contains(".blocked"), "{dump}");
     assert!(dump.contains("conv2d"), "{dump}");
 }
 
@@ -395,7 +487,10 @@ fn node_ids_are_unique_deterministic_and_backend_invariant() {
             plan.clone(), true, Some(Backend::Scalar));
         let simd = Program::compile_with_backend(
             plan.clone(), true, Some(Backend::Simd));
+        let blocked = Program::compile_with_backend(
+            plan.clone(), true, Some(Backend::Blocked));
         assert_eq!(scalar.node_ids(), simd.node_ids(), "{label}");
+        assert_eq!(scalar.node_ids(), blocked.node_ids(), "{label}");
     }
 }
 
@@ -436,12 +531,13 @@ fn backend_auto_rule_splits_on_lane_width() {
             .iter()
             .filter_map(|n| n.backend())
             .collect();
-        // layer widths (in_dim) are LANES-1, LANES, 4*LANES
+        // layer widths (in_dim) are LANES-1, LANES, 4*LANES — and the
+        // auto rule never picks Blocked (the panel form is opt-in)
         assert_eq!(got,
                    vec![Backend::Scalar, Backend::Simd, Backend::Simd]);
     }
     // a forced compile overrides the rule on every kernel node
-    for forced in [Backend::Scalar, Backend::Simd] {
+    for forced in [Backend::Scalar, Backend::Simd, Backend::Blocked] {
         let prog = Program::compile_with_backend(plan.clone(), true,
                                                  Some(forced));
         for n in prog.nodes() {

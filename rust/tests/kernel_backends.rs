@@ -1,17 +1,20 @@
-//! SIMD kernel backend differential battery: every preset manifest
-//! plus randomized layer shapes run through both the scalar oracle
-//! and the SIMD backend, asserting **bit-exact** logits — including
-//! the blocked-i32 `low_bit` path, the widening i64 path, and pruned
-//! `kept` subsets. Also the paper-scale ResNet18 lowering check (the
-//! ROADMAP's missing end-to-end test): the full 224x224 manifest
-//! lowers through the IR under both backends with backend-invariant
-//! structure and memory accounting, and the committed golden fixture
-//! is pinned bit-exact under the forced-SIMD compile.
+//! Kernel backend differential battery: every preset manifest plus
+//! randomized layer shapes run through the scalar oracle, the SIMD
+//! backend, and the cache-blocked panel backend (single-threaded and
+//! intra-request sharded), asserting **bit-exact** logits —
+//! including the blocked-i32 `low_bit` path, the widening i64 path,
+//! and pruned `kept` subsets. Also the paper-scale ResNet18 lowering
+//! check (the ROADMAP's missing end-to-end test): the full 224x224
+//! manifest lowers through the IR under every backend with
+//! backend-invariant structure and memory accounting, and the
+//! committed golden fixture is pinned bit-exact under the forced
+//! SIMD and blocked compiles.
 //!
-//! Pure host subsystem — always runs. The SIMD kernels compute the
+//! Pure host subsystem — always runs. Every backend computes the
 //! same exact integer accumulators as the scalar kernels (integer
-//! addition is associative), so any mismatch here is a backend bug,
-//! never a tolerance question.
+//! addition is associative, so panel/tile/shard order cannot move a
+//! sum), so any mismatch here is a backend bug, never a tolerance
+//! question.
 
 #[path = "support/mod.rs"]
 mod support;
@@ -28,24 +31,28 @@ use bayesian_bits::rng::Pcg64;
 use bayesian_bits::runtime::manifest_gen::preset_manifest_at;
 use support::{golden_fixture, preset_manifest};
 
-/// Run `n` random inputs through both backends (int path) and assert
-/// bit-exact logits; also asserts the forced-SIMD program really does
-/// carry SIMD kernel nodes, so the battery cannot silently compare
-/// scalar against scalar.
+/// Run `n` random inputs through all three backends (int path) and
+/// assert bit-exact logits — the blocked backend both single-threaded
+/// and sharded across intra-request threads; also asserts the forced
+/// compiles really do carry the forced kernel nodes, so the battery
+/// cannot silently compare scalar against scalar.
 fn assert_backends_bit_exact(label: &str, plan: Arc<EnginePlan>,
                              n: usize, seed: u64) {
     let mut scalar =
         Engine::with_backend(plan.clone(), Some(Backend::Scalar));
     let mut simd =
         Engine::with_backend(plan.clone(), Some(Backend::Simd));
-    let simd_kernels = simd
-        .program(true)
-        .nodes()
-        .iter()
-        .filter(|nd| nd.backend() == Some(Backend::Simd))
-        .count();
+    let mut blocked =
+        Engine::with_backend(plan.clone(), Some(Backend::Blocked));
+    let forced_kernels = |eng: &Engine, b: Backend| {
+        eng.program(true)
+            .nodes()
+            .iter()
+            .filter(|nd| nd.backend() == Some(b))
+            .count()
+    };
     // integer kernel nodes only — an f32 kernel inside the int
-    // program (32-bit chain end) has no SIMD form
+    // program (32-bit chain end) has no SIMD or blocked form
     let kernels_total = simd
         .program(true)
         .nodes()
@@ -53,16 +60,21 @@ fn assert_backends_bit_exact(label: &str, plan: Arc<EnginePlan>,
         .filter(|nd| nd.backend().is_some()
             && !nd.op_name().ends_with(".f32"))
         .count();
-    assert_eq!(simd_kernels, kernels_total,
-               "{label}: forced compile left scalar kernel nodes");
-    let scalar_simd = scalar
-        .program(true)
-        .nodes()
-        .iter()
-        .filter(|nd| nd.backend() == Some(Backend::Simd))
-        .count();
-    assert_eq!(scalar_simd, 0,
+    assert_eq!(forced_kernels(&simd, Backend::Simd), kernels_total,
+               "{label}: forced simd compile left scalar kernel nodes");
+    assert_eq!(forced_kernels(&blocked, Backend::Blocked),
+               kernels_total,
+               "{label}: forced blocked compile left other kernels");
+    assert_eq!(forced_kernels(&scalar, Backend::Simd), 0,
                "{label}: forced scalar compile has SIMD nodes");
+    // a blocked program over any integer kernel carries its weight
+    // panels; the scalar/simd compiles never pay for them
+    if kernels_total > 0 {
+        assert!(blocked.program(true).panel_bytes() > 0,
+                "{label}: blocked compile built no panels");
+    }
+    assert_eq!(scalar.program(true).panel_bytes(), 0, "{label}");
+    assert_eq!(simd.program(true).panel_bytes(), 0, "{label}");
 
     let mut rng = Pcg64::new(seed);
     let xs: Vec<f32> = (0..n * plan.input_dim)
@@ -71,10 +83,23 @@ fn assert_backends_bit_exact(label: &str, plan: Arc<EnginePlan>,
     let a = scalar.infer_batch(&xs, n).unwrap();
     let b = simd.infer_batch(&xs, n).unwrap();
     assert_eq!(a, b, "{label}: scalar vs simd logits diverged");
+    // blocked, single-threaded then sharded — thread counts chosen to
+    // straddle shard boundaries (2 splits evenly, 3 leaves remainders,
+    // 5 exceeds many plans' kept-row/tile counts so some shards are
+    // empty)
+    for threads in [1usize, 2, 3, 5] {
+        blocked.set_intra_threads(threads);
+        let c = blocked.infer_batch(&xs, n).unwrap();
+        assert_eq!(a, c,
+                   "{label}: scalar vs blocked(intra={threads}) \
+                    logits diverged");
+    }
     // single-sample inference agrees with its batched row too
     let one_s = scalar.infer(&xs[..plan.input_dim]).unwrap();
     let one_v = simd.infer(&xs[..plan.input_dim]).unwrap();
+    let one_b = blocked.infer(&xs[..plan.input_dim]).unwrap();
     assert_eq!(one_s, one_v, "{label}: single-sample mismatch");
+    assert_eq!(one_s, one_b, "{label}: single-sample blocked mismatch");
     assert_eq!(one_v, a[..plan.output_dim].to_vec(), "{label}");
 }
 
@@ -205,13 +230,23 @@ fn paper_scale_resnet18_lowering_is_backend_invariant() {
         plan.clone(), true, Some(Backend::Scalar));
     let int_simd = Program::compile_with_backend(
         plan.clone(), true, Some(Backend::Simd));
+    let int_blocked = Program::compile_with_backend(
+        plan.clone(), true, Some(Backend::Blocked));
     // backend choice is purely a kernel-dispatch property: graph
     // structure, fusion, and memory accounting must not move
     assert_eq!(int_scalar.nodes().len(), int_simd.nodes().len());
+    assert_eq!(int_scalar.nodes().len(), int_blocked.nodes().len());
     assert_eq!(int_scalar.fused_count(), int_simd.fused_count());
+    assert_eq!(int_scalar.fused_count(), int_blocked.fused_count());
     assert_eq!(int_scalar.arena_bytes(), int_simd.arena_bytes());
+    assert_eq!(int_scalar.arena_bytes(), int_blocked.arena_bytes());
     assert_eq!(int_scalar.peak_live_bytes(),
                int_simd.peak_live_bytes());
+    // the blocked compile additionally carries decoded weight panels
+    // (charged separately from the arena), the others never do
+    assert!(int_blocked.panel_bytes() > 0);
+    assert_eq!(int_scalar.panel_bytes(), 0);
+    assert_eq!(int_simd.panel_bytes(), 0);
     // the paper-scale graph fuses exactly like the small preset: the
     // layer topology is scale-independent
     let (sman, sparams) = preset_manifest("resnet18", false);
@@ -229,14 +264,38 @@ fn paper_scale_resnet18_lowering_is_backend_invariant() {
             }
         }
     }
+    // ... and never picks Blocked either: the panel form is opt-in
+    if std::env::var("BBITS_BACKEND").is_err() {
+        for nd in auto.nodes() {
+            assert_ne!(nd.backend(), Some(Backend::Blocked),
+                       "auto rule picked blocked for {}",
+                       nd.op_name());
+        }
+    }
     // the f32 reference path never carries SIMD nodes
     let f32_prog = Program::compile_with_backend(
-        plan, false, Some(Backend::Simd));
+        plan.clone(), false, Some(Backend::Simd));
     for nd in f32_prog.nodes() {
         assert_ne!(nd.backend(), Some(Backend::Simd),
                    "f32 path node {} got a SIMD backend",
                    nd.op_name());
     }
+    // one measured paper-scale forward: the blocked backend, sharded
+    // across two intra-request threads, must reproduce the scalar
+    // oracle's 1000-way logits bit-for-bit end to end
+    let mut scalar =
+        Engine::with_backend(plan.clone(), Some(Backend::Scalar));
+    let mut blocked =
+        Engine::with_backend(plan.clone(), Some(Backend::Blocked));
+    blocked.set_intra_threads(2);
+    let xs: Vec<f32> = (0..plan.input_dim)
+        .map(|i| ((i as f32) * 0.37).sin())
+        .collect();
+    let want = scalar.infer(&xs).unwrap();
+    let got = blocked.infer(&xs).unwrap();
+    assert_eq!(want, got,
+               "paper-scale resnet18: blocked(intra=2) diverged from \
+                the scalar oracle");
 }
 
 // -------------------------------------------------------------------
@@ -276,5 +335,42 @@ fn golden_fixture_bit_exact_under_simd_backend() {
     for (i, want) in logits.iter().enumerate() {
         assert_eq!(&batched[i * want.len()..(i + 1) * want.len()],
                    &want[..], "simd batched row {i}");
+    }
+}
+
+// -------------------------------------------------------------------
+// (f) golden fixture pinned bit-exact under the forced-blocked
+//     compile, at every intra-thread count
+// -------------------------------------------------------------------
+
+#[test]
+fn golden_fixture_bit_exact_under_blocked_backend() {
+    let (man, params, exp) = golden_fixture();
+    let plan = Arc::new(lower(&man, &params).unwrap());
+    let mut eng =
+        Engine::with_backend(plan.clone(), Some(Backend::Blocked));
+    let inputs: Vec<Vec<f32>> = exp
+        .get("inputs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| c.f32_vec().unwrap())
+        .collect();
+    let logits: Vec<Vec<f32>> = exp
+        .get("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| c.f32_vec().unwrap())
+        .collect();
+    for threads in [1usize, 2, 4] {
+        eng.set_intra_threads(threads);
+        for (x, want) in inputs.iter().zip(&logits) {
+            let got = eng.infer(x).unwrap();
+            assert_eq!(&got, want,
+                       "blocked(intra={threads}) vs golden fixture");
+        }
     }
 }

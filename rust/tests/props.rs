@@ -8,13 +8,15 @@ use std::collections::BTreeMap;
 use bayesian_bits::bops::{BopCounter, QuantState};
 use bayesian_bits::data::synth::{generate, DatasetSpec};
 use bayesian_bits::engine::kernels::{conv2d_codes, conv2d_codes_simd,
-                                     dot_codes, dot_codes_simd,
-                                     dwconv2d_codes,
+                                     conv2d_panels, dot_codes,
+                                     dot_codes_simd, dwconv2d_codes,
                                      dwconv2d_codes_simd,
-                                     extract_patch, low_bit_pair,
-                                     matmul_packed, matmul_packed_simd,
+                                     dwconv2d_panels, extract_patch,
+                                     low_bit_pair, matmul_packed,
+                                     matmul_packed_simd, matmul_panels,
                                      LANES};
-use bayesian_bits::engine::pack::{code_range, PackedMatrix};
+use bayesian_bits::engine::pack::{code_range, PackedMatrix,
+                                  PanelMatrix, KC, MR};
 use bayesian_bits::engine::SpatialPlan;
 use bayesian_bits::models::{descriptor, Padding, Preset};
 use bayesian_bits::quant::gates::{
@@ -585,6 +587,160 @@ fn prop_simd_dwconv_bit_exact_on_non_lane_channel_counts() {
         dwconv2d_codes_simd(&w, &kept, 1, &sp, &x, n, low, &mut yv);
         PropResult::check(ys == yv, || format!(
             "c{c} k{k} hw{hw} s{stride} low={low} kept={}", kept.len()))
+    });
+}
+
+#[test]
+fn prop_blocked_matmul_bit_exact_at_remainder_panel_shapes() {
+    // Panel-height remainders (rows 1..=3*MR+1), depths on both sides
+    // of the KC boundary that KC never divides (odd offsets), and
+    // thread counts exceeding the row-block count (empty shards):
+    // the packed scalar kernel is the oracle.
+    check("blocked_matmul_remainders", 120, |g: &mut Gen| {
+        let bits = *g.choose(&[2u32, 4, 8, 16]);
+        let a_bits = *g.choose(&[4u32, 8, 16]);
+        let rows = g.usize_in(1, 3 * MR + 1);
+        let cols = match g.usize_in(0, 2) {
+            0 => g.usize_in(1, 3 * LANES + 1),
+            1 => KC - g.usize_in(0, 3),
+            _ => KC + 2 * g.usize_in(0, KC / 2) + 1,
+        };
+        let n = g.usize_in(1, 3);
+        let threads = g.usize_in(1, 5);
+        let (lo, hi) = code_range(bits, true);
+        let span = (hi - lo) as u64 + 1;
+        let codes: Vec<i64> = (0..rows * cols)
+            .map(|_| lo + (g.rng.next_u64() % span) as i64)
+            .collect();
+        let p = match PackedMatrix::pack(&codes, rows, cols, bits,
+                                         true) {
+            Ok(p) => p,
+            Err(e) => return PropResult::Fail(format!("pack: {e}")),
+        };
+        let pm = PanelMatrix::from_packed(&p);
+        let amax = (1u64 << a_bits) - 1;
+        let acts: Vec<i32> = (0..n * cols)
+            .map(|_| (g.rng.next_u64() % (amax + 1)) as i32)
+            .collect();
+        let mut scratch = vec![0i32; cols];
+        let mut ys = vec![0i64; n * rows];
+        let mut yb = ys.clone();
+        matmul_packed(&p, &acts, n, a_bits, &mut scratch, &mut ys);
+        matmul_panels(&pm, &acts, n, a_bits, threads, &mut yb);
+        PropResult::check(ys == yb, || format!(
+            "w{bits}a{a_bits} {rows}x{cols} n={n} t={threads}"))
+    });
+}
+
+#[test]
+fn prop_blocked_conv_bit_exact_on_groups_and_tile_shards() {
+    // Patch lengths KC never divides (odd cg x k*k), group counts, and
+    // output-pixel tile sharding at every thread count vs the scalar
+    // im2col oracle.
+    check("blocked_conv_shards", 80, |g: &mut Gen| {
+        let k = *g.choose(&[1usize, 2, 3]);
+        let groups = *g.choose(&[1usize, 2, 3]);
+        let cg = 2 * g.usize_in(0, 2) + 1; // odd per-group width
+        let in_c = groups * cg;
+        let in_h = g.usize_in(k, 6);
+        let in_w = g.usize_in(k, 6);
+        let stride = g.usize_in(1, 2);
+        let padding =
+            if g.bool() { Padding::Same } else { Padding::Valid };
+        let sp = match SpatialPlan::new(in_h, in_w, in_c, k, stride,
+                                        padding, groups) {
+            Ok(sp) => sp,
+            Err(_) => return PropResult::Pass,
+        };
+        let plen = sp.patch_len();
+        let cpg = g.usize_in(1, 3);
+        let cout = groups * cpg;
+        let mut kept: Vec<u32> =
+            (0..cout as u32).filter(|_| g.bool()).collect();
+        if kept.is_empty() {
+            kept.push(0);
+        }
+        let codes: Vec<i64> = (0..kept.len() * plen)
+            .map(|_| g.usize_in(0, 254) as i64 - 127)
+            .collect();
+        let w: Vec<i32> = codes.iter().map(|v| *v as i32).collect();
+        let p = match PackedMatrix::pack(&codes, kept.len(), plen, 8,
+                                         true) {
+            Ok(p) => p,
+            Err(e) => return PropResult::Fail(format!("pack: {e}")),
+        };
+        let pm = PanelMatrix::from_packed_grouped(
+            &p, |r| kept[r] as usize / cpg);
+        let n = g.usize_in(1, 2);
+        let x: Vec<i32> = (0..n * sp.in_len())
+            .map(|_| g.usize_in(0, 255) as i32)
+            .collect();
+        let mut patch = vec![0i32; plen];
+        let mut ys = vec![0i64; n * sp.out_pixels() * kept.len()];
+        conv2d_codes(&w, &kept, cpg, &sp, &x, n, true, &mut patch,
+                     &mut ys);
+        for threads in 1..=4 {
+            let mut yb = vec![0i64; ys.len()];
+            conv2d_panels(&pm, &kept, cpg, &sp, &x, n, 8, threads,
+                          &mut yb);
+            if yb != ys {
+                return PropResult::Fail(format!(
+                    "k{k} g{groups} cg{cg} {in_h}x{in_w} s{stride} \
+                     t={threads}"));
+            }
+        }
+        PropResult::Pass
+    });
+}
+
+#[test]
+fn prop_blocked_dwconv_bit_exact_across_shard_boundaries() {
+    // Kept-channel counts straddling the shard split: thread counts
+    // from 1 to kept+2 produce empty shards, single-channel shards,
+    // and remainder shards — all bit-exact vs the scalar oracle.
+    check("blocked_dwconv_shards", 80, |g: &mut Gen| {
+        let c = g.usize_in(1, 2 * MR + 3);
+        let k = *g.choose(&[1usize, 3]);
+        let hw = g.usize_in(k.max(2), 6);
+        let stride = g.usize_in(1, 2);
+        let sp = match SpatialPlan::new(hw, hw, c, k, stride,
+                                        Padding::Same, c) {
+            Ok(sp) => sp,
+            Err(_) => return PropResult::Pass,
+        };
+        let mut kept: Vec<u32> =
+            (0..c as u32).filter(|_| g.bool()).collect();
+        if kept.is_empty() {
+            kept.push((c - 1) as u32);
+        }
+        let plen = k * k;
+        let codes: Vec<i64> = (0..kept.len() * plen)
+            .map(|_| g.usize_in(0, 254) as i64 - 127)
+            .collect();
+        let w: Vec<i32> = codes.iter().map(|v| *v as i32).collect();
+        let p = match PackedMatrix::pack(&codes, kept.len(), plen, 8,
+                                         true) {
+            Ok(p) => p,
+            Err(e) => return PropResult::Fail(format!("pack: {e}")),
+        };
+        let pm = PanelMatrix::from_packed(&p);
+        let n = g.usize_in(1, 2);
+        let x: Vec<i32> = (0..n * sp.in_len())
+            .map(|_| g.usize_in(0, 255) as i32)
+            .collect();
+        let mut ys = vec![0i64; n * sp.out_pixels() * kept.len()];
+        dwconv2d_codes(&w, &kept, 1, &sp, &x, n, true, &mut ys);
+        for threads in 1..=kept.len() + 2 {
+            let mut yb = vec![0i64; ys.len()];
+            dwconv2d_panels(&pm, &kept, 1, &sp, &x, n, 8, threads,
+                            &mut yb);
+            if yb != ys {
+                return PropResult::Fail(format!(
+                    "c{c} k{k} hw{hw} s{stride} kept={} t={threads}",
+                    kept.len()));
+            }
+        }
+        PropResult::Pass
     });
 }
 
