@@ -29,7 +29,7 @@ pub struct Args {
 const SWITCHES: &[&str] = &[
     "help", "det-gates", "show-preft", "curves", "quick", "paper-scale",
     "skip-baselines", "no-finetune", "no-int", "conv-only", "dump-ir",
-    "serve-only", "profile",
+    "serve-only", "profile", "verify", "verify-plans",
 ];
 
 /// Flags that take a value (`--flag v` or `--flag=v`). Anything not
@@ -223,6 +223,10 @@ Integer inference engine (rust/src/engine)
                   queue_wait -> batch_form -> infer -> respond) and
                   per-node kernel slices, written as Chrome
                   trace-event JSON (chrome://tracing / Perfetto)
+                  --verify-plans runs the static plan verifier over
+                  every rung's compiled programs at register time and
+                  refuses to serve a plan that fails (overflow-range,
+                  arena-aliasing, IR and backend-invariant proofs)
   plan            lower a checkpoint (or synthetic spec, same flags as
                   serve) and print the plan report; --dump-ir prints
                   the compiled execution graphs (typed node list +
@@ -232,6 +236,13 @@ Integer inference engine (rust/src/engine)
                   --profile runs a few synthetic batches through the
                   instrumented interpreter and prints per-node timings
                   plus the (op, backend, bit-width) aggregate table
+                  --verify compiles both execution paths and runs the
+                  static plan verifier (engine/verify.rs): per-node
+                  overflow range analysis, arena aliasing, IR
+                  well-formedness and backend/panel invariants; exits
+                  non-zero on any finding. With --ladder T1,T2,.. and
+                  a manifest source (--checkpoint or
+                  --model preset:NAME) every rung is verified
   engine-bench    packed integer GEMM + spatial conv, scalar vs simd
                   vs blocked integer backends vs the f32 fallback;
                   writes BENCH_engine.json (GEMM sweep) and
@@ -364,6 +375,14 @@ mod tests {
         assert_eq!(parse("serve --trace-out=t.json")
                        .str_flag("trace-out", "x"),
                    "t.json");
+        // static-verifier switches: plan --verify, serve --verify-plans
+        let v = parse("plan --model preset:lenet5 --verify \
+                       --ladder 0.3,0.9");
+        assert!(v.bool_flag("verify"));
+        assert_eq!(v.f64_list_flag("ladder", &[]).unwrap(),
+                   vec![0.3, 0.9]);
+        assert!(parse("serve --verify-plans")
+            .bool_flag("verify-plans"));
     }
 
     #[test]

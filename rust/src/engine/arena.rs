@@ -16,6 +16,7 @@
 //! two live buffers ever alias.
 
 use super::graph::{BufId, BufSpec, DType, Node};
+use super::verify::VerifyError;
 
 /// Arena footprints produced by [`assign`] (per-sample element units;
 /// `peak_live_bytes` is the fragmentation-free lower bound).
@@ -36,9 +37,12 @@ fn dt_index(dt: DType) -> usize {
 
 /// Assign an arena offset to every reachable buffer. Orphaned buffers
 /// (never written nor read — e.g. eliminated by fusion) keep
-/// `offset = None` and cost nothing.
+/// `offset = None` and cost nothing. A node reading a buffer no
+/// earlier node defined is a pass-pipeline bug; it comes back as a
+/// typed [`VerifyError::UseBeforeDef`] so release builds get the same
+/// diagnosis debug builds used to get from an assert.
 pub(crate) fn assign(bufs: &mut [BufSpec], nodes: &[Node], input: BufId,
-                     output: BufId) -> ArenaLayout {
+                     output: BufId) -> Result<ArenaLayout, VerifyError> {
     let nb = bufs.len();
     // def/last in event time: the input is defined at 0, node i runs
     // at i + 1. A node's src dies no earlier than its dst is born, so
@@ -56,8 +60,9 @@ pub(crate) fn assign(bufs: &mut [BufSpec], nodes: &[Node], input: BufId,
             last[w] = t;
         }
         if let Some(r) = node.reads() {
-            debug_assert_ne!(def[r], usize::MAX,
-                             "node {i} reads undefined buffer {r}");
+            if def[r] == usize::MAX {
+                return Err(VerifyError::UseBeforeDef { node: i, buf: r });
+            }
             if last[r] < t {
                 last[r] = t;
             }
@@ -106,10 +111,10 @@ pub(crate) fn assign(bufs: &mut [BufSpec], nodes: &[Node], input: BufId,
         peak = peak.max(cur);
     }
 
-    ArenaLayout {
+    Ok(ArenaLayout {
         f32_len: lens[0],
         i32_len: lens[1],
         i64_len: lens[2],
         peak_live_bytes: peak,
-    }
+    })
 }

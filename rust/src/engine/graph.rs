@@ -339,6 +339,18 @@ pub struct Program {
     /// attribution survives the pass pipeline (a fused node keeps the
     /// id of the requantize it absorbed).
     pub(crate) node_ids: Vec<usize>,
+    /// High-water mark of the pass pipeline's id allocator: every
+    /// legal node id is `< id_bound`.
+    pub(crate) id_bound: usize,
+    /// Ids the pipeline allocated but retired before the final node
+    /// list (absorbed by fusion, dropped by elision) — recorded at
+    /// compile time so `engine::verify` can reject any later
+    /// reference to them.
+    pub(crate) retired_ids: Vec<usize>,
+    /// The resolved backend override this program was compiled under
+    /// (`--backend` / `BBITS_BACKEND` / `ServeConfig.backend`), if
+    /// any — what licenses non-auto backend choices to the verifier.
+    pub(crate) forced_backend: Option<Backend>,
     pub(crate) bufs: Vec<BufSpec>,
     /// Compile-time weight panels for [`Backend::Blocked`] kernel
     /// nodes, keyed by layer index (`None` for layers without one).
@@ -363,7 +375,7 @@ impl Program {
     /// `BBITS_BACKEND` env override, falling back to per-node auto
     /// selection.
     pub fn compile(plan: Arc<EnginePlan>, int_path: bool) -> Program {
-        super::passes::compile(plan, int_path, None)
+        Self::compile_with_backend(plan, int_path, None)
     }
 
     /// [`Self::compile`] with every integer kernel node forced onto
@@ -371,7 +383,63 @@ impl Program {
     /// the lever behind `--backend` and the differential test battery.
     pub fn compile_with_backend(plan: Arc<EnginePlan>, int_path: bool,
                                 forced: Option<Backend>) -> Program {
+        Self::try_compile_with_backend(plan, int_path, forced)
+            .unwrap_or_else(|e| {
+                panic!("plan failed static verification at compile: {e}")
+            })
+    }
+
+    /// Fallible compile: the pass pipeline plus (in debug builds) the
+    /// automatic `engine::verify` run, surfacing any
+    /// [`super::verify::VerifyError`] instead of panicking — what
+    /// `bbits plan --verify` and `ServeConfig.verify_plans` call.
+    pub fn try_compile_with_backend(
+        plan: Arc<EnginePlan>, int_path: bool, forced: Option<Backend>,
+    ) -> Result<Program, super::verify::VerifyError> {
         super::passes::compile(plan, int_path, forced)
+    }
+
+    /// Run the full static analysis suite on this compiled program
+    /// (see `engine::verify`); `Ok(())` or the first defect.
+    pub fn verify(&self) -> Result<(), super::verify::VerifyError> {
+        super::verify::verify(self)
+    }
+
+    /// High-water mark of the pass pipeline's node-id allocator.
+    pub fn id_bound(&self) -> usize {
+        self.id_bound
+    }
+
+    /// Ids the pass pipeline allocated and then retired (fusion /
+    /// elision) — never legal in [`Self::node_ids`].
+    pub fn retired_node_ids(&self) -> &[usize] {
+        &self.retired_ids
+    }
+
+    /// Mutable node access for the verifier's mutation battery
+    /// (`tests/verify.rs` hand-corrupts compiled programs). Not part
+    /// of the serving API.
+    #[doc(hidden)]
+    pub fn nodes_mut(&mut self) -> &mut [Node] {
+        &mut self.nodes
+    }
+
+    /// See [`Self::nodes_mut`].
+    #[doc(hidden)]
+    pub fn bufs_mut(&mut self) -> &mut [BufSpec] {
+        &mut self.bufs
+    }
+
+    /// See [`Self::nodes_mut`].
+    #[doc(hidden)]
+    pub fn node_ids_mut(&mut self) -> &mut [usize] {
+        &mut self.node_ids
+    }
+
+    /// See [`Self::nodes_mut`].
+    #[doc(hidden)]
+    pub fn panels_mut(&mut self) -> &mut Vec<Option<Arc<PanelMatrix>>> {
+        &mut self.panels
     }
 
     pub fn plan(&self) -> &EnginePlan {

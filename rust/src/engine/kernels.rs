@@ -54,9 +54,12 @@ use super::pack::{PackedMatrix, PanelMatrix, KC, MR};
 use super::SpatialPlan;
 use crate::quant::grid::quantize_codes_host;
 
-/// i32 accumulation block: with |w| <= 127 and |a| <= 255, a block sum
-/// is bounded by 127 * 255 * 4096 < 2^27 — far from i32 overflow.
-const I32_BLOCK: usize = 4096;
+/// i32 accumulation block length of the low-bit scalar/SIMD paths.
+/// Legality is not argued here: `engine::verify` derives the
+/// worst-case block sum `max|w| * max|a| * I32_BLOCK` from each
+/// node's actual operand code ranges and proves it below `i32::MAX`
+/// on every compiled plan.
+pub const I32_BLOCK: usize = 4096;
 
 /// Exact dot product of two code vectors. `low_bit` selects the
 /// blocked-i32 fast path (safe when both operands are <= 8 bits).
@@ -234,27 +237,36 @@ unsafe fn dot_block_i32_avx2(w: &[i32], a: &[i32]) -> i64 {
     // instead of an out-of-bounds vector load
     let len = w.len().min(a.len());
     let n = len - len % (2 * LANES);
-    let mut acc = _mm256_setzero_si256();
-    let mut i = 0;
-    while i < n {
-        let w0 = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
-        let w1 = _mm256_loadu_si256(
-            w.as_ptr().add(i + LANES) as *const __m256i);
-        let a0 = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
-        let a1 = _mm256_loadu_si256(
-            a.as_ptr().add(i + LANES) as *const __m256i);
-        let wp = _mm256_packs_epi32(w0, w1);
-        let ap = _mm256_packs_epi32(a0, a1);
-        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wp, ap));
-        i += 2 * LANES;
+    // SAFETY: the caller guarantees AVX2 (this fn's only contract
+    // beyond the slice bounds); every unaligned load reads
+    // `i .. i + LANES` with `i + 2 * LANES <= n <= len`, inside both
+    // slices, and the store targets a local array of exactly LANES
+    // i32s.
+    unsafe {
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i < n {
+            let w0 =
+                _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+            let w1 = _mm256_loadu_si256(
+                w.as_ptr().add(i + LANES) as *const __m256i);
+            let a0 =
+                _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let a1 = _mm256_loadu_si256(
+                a.as_ptr().add(i + LANES) as *const __m256i);
+            let wp = _mm256_packs_epi32(w0, w1);
+            let ap = _mm256_packs_epi32(a0, a1);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wp, ap));
+            i += 2 * LANES;
+        }
+        let mut lanes = [0i32; LANES];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut tail = 0i32;
+        for j in n..len {
+            tail += w[j] * a[j];
+        }
+        lanes.iter().map(|v| *v as i64).sum::<i64>() + tail as i64
     }
-    let mut lanes = [0i32; LANES];
-    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
-    let mut tail = 0i32;
-    for j in n..len {
-        tail += w[j] * a[j];
-    }
-    lanes.iter().map(|v| *v as i64).sum::<i64>() + tail as i64
 }
 
 /// NEON specialization (baseline on aarch64, no runtime detection):
@@ -758,7 +770,13 @@ pub fn shard_ranges(units: usize, threads: usize)
 /// depthwise) or output-pixel tiles (conv), and each output element is
 /// owned by exactly one block/tile.
 struct ShardPtr(*mut i64);
+// SAFETY: the pointer targets the caller's output slice, which
+// outlives the scoped-thread join; shards never read it and write
+// only their own disjoint index set (see the struct doc), so moving
+// the wrapper across threads cannot race.
 unsafe impl Send for ShardPtr {}
+// SAFETY: shared access is write-only to disjoint indices (above);
+// no aliasing mutable access exists through `&ShardPtr`.
 unsafe impl Sync for ShardPtr {}
 
 /// One GEMM row block of [`matmul_panels`]: accumulate the block's

@@ -67,6 +67,7 @@ mod passes;
 pub mod registry;
 pub mod serve;
 pub mod trace;
+pub mod verify;
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -88,6 +89,7 @@ pub use registry::{pick_rung, CacheStats, ModelRegistry, RungInfo,
 pub use serve::{ServeConfig, ServeConfigError, ServeStats, Server};
 pub use trace::{Histogram, KernelKey, NodeTimer, SpanKind,
                 TraceRecorder};
+pub use verify::{verify_all, VerifyError};
 
 /// Spatial execution geometry of one conv/dwconv layer: input feature
 /// map, kernel/stride/groups, and the padding resolved to explicit
@@ -746,6 +748,20 @@ pub fn compile_pair_with(plan: &Arc<EnginePlan>,
                                             forced)),
      Arc::new(Program::compile_with_backend(plan.clone(), false,
                                             forced)))
+}
+
+/// Fallible [`compile_pair_with`]: surfaces a [`VerifyError`] from
+/// either path's compile instead of panicking — what the registry's
+/// lazy checkout and `ServeConfig.verify_plans` register-time proof
+/// go through.
+pub fn try_compile_pair_with(plan: &Arc<EnginePlan>,
+                             forced: Option<Backend>)
+                             -> Result<(Arc<Program>, Arc<Program>),
+                                       VerifyError> {
+    Ok((Arc::new(Program::try_compile_with_backend(plan.clone(), true,
+                                                   forced)?),
+        Arc::new(Program::try_compile_with_backend(plan.clone(), false,
+                                                   forced)?)))
 }
 
 /// One inference executor: a shared read-only plan compiled once into

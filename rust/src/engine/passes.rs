@@ -43,6 +43,7 @@ use super::arena;
 use super::graph::{BufId, BufSpec, DType, Node, PreStep, Program};
 use super::kernels::{self, Backend};
 use super::pack::PanelMatrix;
+use super::verify::VerifyError;
 use super::{ActSpec, EnginePlan, PlanLayer, PreOp};
 use crate::quant::grid::CodeGrid;
 
@@ -86,21 +87,41 @@ impl Draft {
 }
 
 pub(crate) fn compile(plan: Arc<EnginePlan>, int_path: bool,
-                      forced: Option<Backend>) -> Program {
+                      forced: Option<Backend>)
+                      -> Result<Program, VerifyError> {
     let mut d = build(plan, int_path);
     elide_pruned(&mut d);
     materialize_pre(&mut d);
     fuse_requant_quantize(&mut d);
     fuse_epilogue_quantize(&mut d);
-    assign_backends(&mut d, forced.or_else(Backend::from_env));
+    // the resolved override (CLI/env) is recorded on the program so
+    // the verifier knows whether a non-auto backend choice is legal
+    let forced = forced.or_else(Backend::from_env);
+    assign_backends(&mut d, forced);
     let panels = build_panels(&d);
-    let layout = arena::assign(&mut d.bufs, &d.nodes, d.input, d.output);
-    Program {
+    let layout =
+        arena::assign(&mut d.bufs, &d.nodes, d.input, d.output)?;
+    // ids allocated during the pipeline but absent from the final
+    // node list (absorbed by fusion, dropped by elision) — stored so
+    // post-compile verification can reject any reference to them
+    let retired_ids: Vec<usize> = {
+        let mut present = vec![false; d.next_id];
+        for &id in &d.node_ids {
+            if let Some(p) = present.get_mut(id) {
+                *p = true;
+            }
+        }
+        (0..d.next_id).filter(|&id| !present[id]).collect()
+    };
+    let prog = Program {
         plan: d.plan,
         int_path: d.int_path,
         nodes: d.nodes,
         node_layer: d.node_layer,
         node_ids: d.node_ids,
+        id_bound: d.next_id,
+        retired_ids,
+        forced_backend: forced,
         bufs: d.bufs,
         panels,
         input: d.input,
@@ -109,7 +130,13 @@ pub(crate) fn compile(plan: Arc<EnginePlan>, int_path: bool,
         i32_len: layout.i32_len,
         i64_len: layout.i64_len,
         peak_live: layout.peak_live_bytes,
-    }
+    };
+    // debug builds prove every compiled artifact; release builds
+    // verify only when asked (`plan --verify`, `verify_plans`) so
+    // compile latency stays flat — the hot loop never pays either way
+    #[cfg(debug_assertions)]
+    super::verify::verify(&prog)?;
+    Ok(prog)
 }
 
 /// Resolve a layer's [`PreOp`] (plus the legacy width bridge) against

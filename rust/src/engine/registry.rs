@@ -313,6 +313,30 @@ impl ModelRegistry {
                       rungs[0].1.input_dim, rungs[0].1.output_dim);
             }
         }
+        if cfg.verify_plans {
+            // prove every rung before it can serve: compile both
+            // paths transiently and run the static verifier. The
+            // compiled pair is discarded — checkout still compiles
+            // lazily, so a verified-but-cold model costs no cache
+            // budget until first use.
+            for (t, plan) in &rungs {
+                let (int_prog, f32_prog) =
+                    super::try_compile_pair_with(plan, cfg.backend)
+                        .map_err(|e| {
+                            anyhow!("model {id:?} rung t={t}: plan \
+                                     failed static verification at \
+                                     compile: {e}")
+                        })?;
+                for prog in [&int_prog, &f32_prog] {
+                    prog.verify().map_err(|e| {
+                        anyhow!("model {id:?} rung t={t} ({} path): \
+                                 static plan verification failed: {e}",
+                                if prog.int_path() { "int" }
+                                else { "f32" })
+                    })?;
+                }
+            }
+        }
         let rungs: Vec<Rung> = rungs
             .into_iter()
             .enumerate()
@@ -504,7 +528,10 @@ impl ModelRegistry {
         let (plan, cfg, stats) =
             (r.plan.clone(), e.cfg.clone(), r.stats.clone());
         let (int_prog, f32_prog) =
-            super::compile_pair_with(&plan, cfg.backend);
+            super::try_compile_pair_with(&plan, cfg.backend)
+                .map_err(|e| anyhow!("model {id:?}: plan failed \
+                                      static verification at \
+                                      compile: {e}"))?;
         // full resident set of the pair: every worker's ExecState can
         // materialize either path (force_f32 A/B lever, parity
         // checks), so both arenas are pinned while the rung is warm —

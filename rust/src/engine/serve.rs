@@ -67,6 +67,13 @@ pub struct ServeConfig {
     /// predicted completion still fits this budget; `None` falls back
     /// to pure queue-pressure shedding. Ignored by single-rung models.
     pub slo: Option<Duration>,
+    /// Run the static plan verifier (`engine::verify`) over every
+    /// rung's compiled program pair at register time, rejecting the
+    /// model with a typed error instead of serving an unsound plan
+    /// (`bbits serve --verify-plans`). Debug builds always verify at
+    /// compile; this opts release builds in. Register-time only —
+    /// no per-request cost.
+    pub verify_plans: bool,
 }
 
 impl Default for ServeConfig {
@@ -83,6 +90,7 @@ impl Default for ServeConfig {
             backend: None,
             intra_threads: 1,
             slo: None,
+            verify_plans: false,
         }
     }
 }

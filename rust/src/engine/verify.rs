@@ -1,0 +1,1092 @@
+//! Static plan verification: machine-checked proofs over compiled
+//! [`Program`]s.
+//!
+//! The pass pipeline's output used to be trusted on the strength of
+//! prose — the blocked-i32 accumulator bound lived in a `kernels.rs`
+//! comment, arena non-aliasing was pinned by one independent test, and
+//! a buggy pass would only surface as a wrong answer (or a silent
+//! integer overflow) at serve time. This module turns those arguments
+//! into analyses that run against every compiled artifact:
+//!
+//! 1. **Value-range / overflow analysis** — per-buffer integer
+//!    intervals are seeded from each producing grid's code range and
+//!    propagated through the node list; at every integer kernel the
+//!    worst-case accumulator magnitude `max|w| * max|a| * block_len`
+//!    is computed from the *actual* operand ranges and the kernel's
+//!    accumulation geometry ([`kernels::I32_BLOCK`] chunks on the
+//!    scalar/SIMD paths, [`pack::KC`]-deep panels on the blocked
+//!    backend, the whole patch for depthwise) and compared against
+//!    `i32::MAX` / `i64::MAX`. The bound is *derived*, never assumed:
+//!    a 16-bit grid smuggled onto a node the kernel will dispatch down
+//!    the low-bit path is rejected here, not at overflow time.
+//! 2. **Arena soundness** — liveness is recomputed from the node list
+//!    independently of `engine::arena`, and any two simultaneously
+//!    live buffers of one dtype whose assigned slots overlap (or fall
+//!    outside the arena) are rejected.
+//! 3. **IR well-formedness** — def-before-use, single writer per
+//!    buffer, dtype/shape agreement on every edge, pass-stable node-id
+//!    uniqueness, and no reference to an id the pass pipeline retired.
+//! 4. **Backend invariants** — blocked nodes carry panels whose
+//!    MR/KC geometry, zero-padded remainders, and per-group row blocks
+//!    match the node's layer; SIMD/scalar assignments obey the
+//!    lane-width auto rule unless a forced override is recorded.
+//!
+//! [`verify`] returns the first [`VerifyError`]; [`verify_all`]
+//! collects every finding. Neither ever panics — a corrupt program
+//! produces errors, not index faults (every access is guarded), which
+//! is what lets the mutation battery in `tests/verify.rs` feed this
+//! module deliberately broken programs.
+//!
+//! Debug builds run [`verify`] automatically at the end of
+//! `Program::compile`; release builds opt in via `bbits plan --verify`
+//! or `ServeConfig::verify_plans` (the registry then proves every
+//! ladder rung at register time). Verification is compile-time only —
+//! the interpreter hot loop never pays for it.
+
+use std::fmt;
+
+use super::graph::{BufId, DType, Node, Program};
+use super::kernels::{self, Backend};
+use super::pack::{code_range, KC, MR};
+use super::ActSpec;
+
+/// One statically-proven defect in a compiled [`Program`]. Each
+/// variant is a distinct failure class; `tests/verify.rs` pins the
+/// mapping from hand-made corruption to variant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VerifyError {
+    /// Parallel program arrays disagree (nodes / node_ids /
+    /// node_layer / panels lengths) or a node names a layer outside
+    /// the plan — nothing else can be trusted, so this reports alone.
+    Malformed { detail: String },
+    /// A node references a buffer id outside the buffer table.
+    BadBuffer { node: usize, buf: BufId },
+    /// A reachable buffer was never assigned an arena slot.
+    UnassignedBuffer { node: usize, buf: BufId },
+    /// A node reads a buffer no earlier node (or the input) defined —
+    /// the typed form of the `engine::arena` use-before-def assert.
+    UseBeforeDef { node: usize, buf: BufId },
+    /// Two nodes write the same buffer (every buffer has exactly one
+    /// producer in a well-formed program).
+    MultipleWriters { buf: BufId, first: usize, second: usize },
+    /// A `Pre` placeholder survived compilation (the materialization
+    /// pass must expand every one).
+    TransientNode { node: usize },
+    /// Two nodes carry the same pass-stable id.
+    DuplicateNodeId { id: usize, first: usize, second: usize },
+    /// A node id at or past the id allocator's high-water mark.
+    UnknownNodeId { node: usize, id: usize, bound: usize },
+    /// A node carries an id the pass pipeline retired (absorbed by
+    /// fusion or dropped by elision) — stale attribution at best, a
+    /// resurrected node at worst.
+    RetiredNodeId { node: usize, id: usize },
+    /// An edge's buffer dtype disagrees with what the node computes.
+    EdgeDType { node: usize, buf: BufId, want: DType, got: DType },
+    /// An edge's buffer length disagrees with the node's static shape.
+    EdgeShape { node: usize, buf: BufId, want: usize, got: usize },
+    /// Program input/output spec disagrees with the plan.
+    BadIo { detail: String },
+    /// Two simultaneously-live buffers share arena bytes.
+    ArenaAlias {
+        a: BufId,
+        b: BufId,
+        dtype: DType,
+        /// Element ranges `[offset, offset + len)` of the two slots.
+        a_slot: (usize, usize),
+        b_slot: (usize, usize),
+    },
+    /// A buffer's slot runs past the end of its dtype arena.
+    ArenaOutOfBounds { buf: BufId, dtype: DType, end: usize, arena: usize },
+    /// Worst-case accumulator magnitude exceeds the accumulator type:
+    /// `max_w * max_a * block_len > limit` — the machine-checked form
+    /// of the bound `kernels.rs` used to state in prose.
+    AccumulatorOverflow {
+        node: usize,
+        op: &'static str,
+        path: AccPath,
+        max_w: i64,
+        max_a: i64,
+        block_len: usize,
+        bound: i128,
+        limit: i128,
+    },
+    /// A low-bit-path operand can exceed the i16 range the AVX2
+    /// `vpmaddwd` form packs into (`_mm256_packs_epi32` saturates).
+    PackSaturation { node: usize, max_code: i64, limit: i64 },
+    /// The i16-pair multiply-add `w0*a0 + w1*a1` can exceed i32.
+    PairSumOverflow { node: usize, max_w: i64, max_a: i64 },
+    /// An integer kernel whose activation source has no propagated
+    /// code range (its producer is not a quantizing node).
+    MissingRange { node: usize, buf: BufId },
+    /// A blocked kernel node whose layer has no compiled panels.
+    MissingPanels { node: usize, layer: usize },
+    /// Panel storage inconsistent with the node's layer (dims, block
+    /// partition, depth-block count, padding, data size).
+    PanelGeometry { layer: usize, detail: String },
+    /// A conv panel row block spans two filter groups.
+    PanelGroupStraddle { layer: usize, block: usize },
+    /// A backend assignment the auto rule could not have produced and
+    /// no forced override explains.
+    BackendRule {
+        node: usize,
+        backend: Backend,
+        lane_dim: usize,
+        lanes: usize,
+    },
+}
+
+/// Which accumulator a kernel's dispatch rule selects for a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccPath {
+    /// Blocked i32 partial sums spilled into an i64 total.
+    BlockedI32,
+    /// Straight-to-i64 wide path.
+    WideI64,
+}
+
+impl fmt::Display for AccPath {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AccPath::BlockedI32 => write!(f, "blocked-i32"),
+            AccPath::WideI64 => write!(f, "wide-i64"),
+        }
+    }
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyError::Malformed { detail } => {
+                write!(f, "malformed program: {detail}")
+            }
+            VerifyError::BadBuffer { node, buf } => write!(
+                f,
+                "node {node} references buffer {buf} outside the \
+                 buffer table"
+            ),
+            VerifyError::UnassignedBuffer { node, buf } => write!(
+                f,
+                "buffer {buf} (touched by node {node}) is live but \
+                 has no arena slot"
+            ),
+            VerifyError::UseBeforeDef { node, buf } => write!(
+                f,
+                "node {node} reads buffer {buf} before any node \
+                 defines it"
+            ),
+            VerifyError::MultipleWriters { buf, first, second } => {
+                write!(
+                    f,
+                    "buffer {buf} is written by node {first} and \
+                     again by node {second}"
+                )
+            }
+            VerifyError::TransientNode { node } => write!(
+                f,
+                "node {node} is a transient Pre placeholder the \
+                 materialization pass must expand"
+            ),
+            VerifyError::DuplicateNodeId { id, first, second } => {
+                write!(
+                    f,
+                    "pass-stable id {id} is carried by node {first} \
+                     and node {second}"
+                )
+            }
+            VerifyError::UnknownNodeId { node, id, bound } => write!(
+                f,
+                "node {node} carries id {id}, past the allocator \
+                 high-water mark {bound}"
+            ),
+            VerifyError::RetiredNodeId { node, id } => write!(
+                f,
+                "node {node} carries id {id}, which the pass \
+                 pipeline retired"
+            ),
+            VerifyError::EdgeDType { node, buf, want, got } => write!(
+                f,
+                "node {node}: buffer {buf} is {}, node needs {}",
+                got.label(),
+                want.label()
+            ),
+            VerifyError::EdgeShape { node, buf, want, got } => write!(
+                f,
+                "node {node}: buffer {buf} holds {got} elements, \
+                 node needs {want}"
+            ),
+            VerifyError::BadIo { detail } => {
+                write!(f, "program io: {detail}")
+            }
+            VerifyError::ArenaAlias { a, b, dtype, a_slot, b_slot } => {
+                write!(
+                    f,
+                    "simultaneously-live {} buffers {a} [{}..{}) and \
+                     {b} [{}..{}) share arena space",
+                    dtype.label(),
+                    a_slot.0,
+                    a_slot.1,
+                    b_slot.0,
+                    b_slot.1
+                )
+            }
+            VerifyError::ArenaOutOfBounds { buf, dtype, end, arena } => {
+                write!(
+                    f,
+                    "buffer {buf} ends at {} element {end} of an \
+                     arena holding {arena}",
+                    dtype.label()
+                )
+            }
+            VerifyError::AccumulatorOverflow {
+                node,
+                op,
+                path,
+                max_w,
+                max_a,
+                block_len,
+                bound,
+                limit,
+            } => write!(
+                f,
+                "node {node} ({op}): {path} accumulator can reach \
+                 |w|*|a|*block = {max_w}*{max_a}*{block_len} = \
+                 {bound} > {limit}"
+            ),
+            VerifyError::PackSaturation { node, max_code, limit } => {
+                write!(
+                    f,
+                    "node {node}: low-bit operand can reach \
+                     {max_code}, past the i16 pack limit {limit} \
+                     (vpmaddwd would saturate)"
+                )
+            }
+            VerifyError::PairSumOverflow { node, max_w, max_a } => {
+                write!(
+                    f,
+                    "node {node}: i16-pair sum 2*{max_w}*{max_a} \
+                     exceeds i32"
+                )
+            }
+            VerifyError::MissingRange { node, buf } => write!(
+                f,
+                "node {node}: integer kernel reads buffer {buf} \
+                 with no propagated code range"
+            ),
+            VerifyError::MissingPanels { node, layer } => write!(
+                f,
+                "node {node}: blocked backend on layer {layer} with \
+                 no compiled weight panels"
+            ),
+            VerifyError::PanelGeometry { layer, detail } => {
+                write!(f, "layer {layer} panels: {detail}")
+            }
+            VerifyError::PanelGroupStraddle { layer, block } => write!(
+                f,
+                "layer {layer} panel row block {block} spans two \
+                 filter groups"
+            ),
+            VerifyError::BackendRule {
+                node,
+                backend,
+                lane_dim,
+                lanes,
+            } => write!(
+                f,
+                "node {node}: backend {} with lane dimension \
+                 {lane_dim} violates the auto rule (simd at >= \
+                 {lanes} lanes, blocked only when forced) and no \
+                 forced override is recorded",
+                backend.label()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Verify a compiled program; `Ok(())` or the first defect found.
+pub fn verify(prog: &Program) -> Result<(), VerifyError> {
+    match verify_all(prog).into_iter().next() {
+        None => Ok(()),
+        Some(e) => Err(e),
+    }
+}
+
+/// Verify a compiled program and collect every defect. Never panics:
+/// all indexing is guarded, so deliberately corrupted programs (the
+/// mutation battery) report errors instead of faulting.
+pub fn verify_all(prog: &Program) -> Vec<VerifyError> {
+    let mut errs = Vec::new();
+    if let Err(e) = check_structure(prog) {
+        // parallel arrays disagree: per-node analyses would index
+        // out of step, so report the structural defect alone
+        return vec![e];
+    }
+    check_node_ids(prog, &mut errs);
+    check_buffers_and_edges(prog, &mut errs);
+    check_io(prog, &mut errs);
+    let live = check_dataflow(prog, &mut errs);
+    check_arena(prog, &live, &mut errs);
+    check_backends(prog, &mut errs);
+    check_overflow(prog, &mut errs);
+    errs
+}
+
+// ------------------------------------------------------------------
+// Structure / ids
+// ------------------------------------------------------------------
+
+fn check_structure(prog: &Program) -> Result<(), VerifyError> {
+    let n = prog.nodes.len();
+    if prog.node_ids.len() != n || prog.node_layer.len() != n {
+        return Err(VerifyError::Malformed {
+            detail: format!(
+                "parallel arrays disagree: {n} nodes, {} ids, {} \
+                 layer indices",
+                prog.node_ids.len(),
+                prog.node_layer.len()
+            ),
+        });
+    }
+    if prog.panels.len() != prog.plan.layers.len() {
+        return Err(VerifyError::Malformed {
+            detail: format!(
+                "panel table has {} entries for {} layers",
+                prog.panels.len(),
+                prog.plan.layers.len()
+            ),
+        });
+    }
+    for (i, node) in prog.nodes.iter().enumerate() {
+        if let Some(li) = node.layer() {
+            if li >= prog.plan.layers.len() {
+                return Err(VerifyError::Malformed {
+                    detail: format!(
+                        "node {i} ({}) names layer {li} of {}",
+                        node.op_name(),
+                        prog.plan.layers.len()
+                    ),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+fn check_node_ids(prog: &Program, errs: &mut Vec<VerifyError>) {
+    let mut first_at = std::collections::BTreeMap::new();
+    for (i, &id) in prog.node_ids.iter().enumerate() {
+        if id >= prog.id_bound {
+            errs.push(VerifyError::UnknownNodeId {
+                node: i,
+                id,
+                bound: prog.id_bound,
+            });
+            continue;
+        }
+        if prog.retired_ids.contains(&id) {
+            errs.push(VerifyError::RetiredNodeId { node: i, id });
+        }
+        match first_at.get(&id) {
+            None => {
+                first_at.insert(id, i);
+            }
+            Some(&first) => errs.push(VerifyError::DuplicateNodeId {
+                id,
+                first,
+                second: i,
+            }),
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Edges: buffer ids, dtypes, shapes
+// ------------------------------------------------------------------
+
+/// `(dtype, len)` the node requires of one buffer; `len == None`
+/// accepts any length (the flat width adapter's input).
+type EdgeSpec = (DType, Option<usize>);
+
+/// Expected `(src, dst)` edge specs of a node, from the plan's static
+/// shapes. `None` when the node's layer geometry is itself broken
+/// (reported separately).
+fn edge_specs(prog: &Program, node: &Node)
+              -> Option<(Option<EdgeSpec>, EdgeSpec)> {
+    let layer = |li: usize| prog.plan.layers.get(li);
+    Some(match node {
+        Node::Pre { .. } => return None,
+        Node::MaxPool2 { h, w, c, .. } => (
+            Some((DType::F32, Some(h * w * c))),
+            (DType::F32, Some((h / 2) * (w / 2) * c)),
+        ),
+        Node::GlobalAvgPool { h, w, c, .. } => {
+            (Some((DType::F32, Some(h * w * c))), (DType::F32, Some(*c)))
+        }
+        Node::AdaptSpatial { from, to, .. } => (
+            Some((DType::F32, Some(from.0 * from.1 * from.2))),
+            (DType::F32, Some(to.0 * to.1 * to.2)),
+        ),
+        Node::AdaptFeatures { want, .. } => {
+            // the flat adapter pools/replicates from any width
+            (Some((DType::F32, None)), (DType::F32, Some(*want)))
+        }
+        Node::Quantize { src, .. } => {
+            let len = prog.bufs.get(*src).map(|b| b.len);
+            (Some((DType::F32, len)), (DType::I32, len))
+        }
+        Node::Dequantize { src, .. } => {
+            let len = prog.bufs.get(*src).map(|b| b.len);
+            (Some((DType::I32, len)), (DType::F32, len))
+        }
+        Node::Gemm { layer: li, int, .. }
+        | Node::Conv2d { layer: li, int, .. } => {
+            let l = layer(*li)?;
+            let opix = l
+                .spatial
+                .as_ref()
+                .map(|sp| sp.out_pixels())
+                .unwrap_or(1);
+            let (sdt, ddt) =
+                if *int { (DType::I32, DType::I64) }
+                else { (DType::F32, DType::F32) };
+            (
+                Some((sdt, Some(l.input_len()))),
+                (ddt, Some(opix * l.kept.len())),
+            )
+        }
+        Node::DwConv2d { layer: li, .. } => {
+            let l = layer(*li)?;
+            let opix = l
+                .spatial
+                .as_ref()
+                .map(|sp| sp.out_pixels())
+                .unwrap_or(1);
+            (
+                Some((DType::I32, Some(l.input_len()))),
+                (DType::I64, Some(opix * l.kept.len())),
+            )
+        }
+        Node::Requant { layer: li, .. } => {
+            let l = layer(*li)?;
+            let opix = l
+                .spatial
+                .as_ref()
+                .map(|sp| sp.out_pixels())
+                .unwrap_or(1);
+            (
+                Some((DType::I64, Some(opix * l.kept.len()))),
+                (DType::F32, Some(l.output_len())),
+            )
+        }
+        Node::Epilogue { layer: li, .. } => {
+            let l = layer(*li)?;
+            let opix = l
+                .spatial
+                .as_ref()
+                .map(|sp| sp.out_pixels())
+                .unwrap_or(1);
+            (
+                Some((DType::F32, Some(opix * l.kept.len()))),
+                (DType::F32, Some(l.output_len())),
+            )
+        }
+        Node::EpilogueQuantize { layer: li, .. } => {
+            let l = layer(*li)?;
+            let opix = l
+                .spatial
+                .as_ref()
+                .map(|sp| sp.out_pixels())
+                .unwrap_or(1);
+            (
+                Some((DType::F32, Some(opix * l.kept.len()))),
+                (DType::I32, Some(l.output_len())),
+            )
+        }
+        Node::RequantQuantize { layer: li, .. } => {
+            let l = layer(*li)?;
+            let opix = l
+                .spatial
+                .as_ref()
+                .map(|sp| sp.out_pixels())
+                .unwrap_or(1);
+            (
+                Some((DType::I64, Some(opix * l.kept.len()))),
+                (DType::I32, Some(l.output_len())),
+            )
+        }
+        Node::BiasFill { layer: li, .. } => {
+            let l = layer(*li)?;
+            (None, (DType::F32, Some(l.output_len())))
+        }
+    })
+}
+
+fn check_edge(prog: &Program, node: usize, buf: BufId, spec: EdgeSpec,
+              errs: &mut Vec<VerifyError>) {
+    let Some(b) = prog.bufs.get(buf) else {
+        errs.push(VerifyError::BadBuffer { node, buf });
+        return;
+    };
+    let (want_dt, want_len) = spec;
+    if b.dtype != want_dt {
+        errs.push(VerifyError::EdgeDType {
+            node,
+            buf,
+            want: want_dt,
+            got: b.dtype,
+        });
+    }
+    if let Some(want) = want_len {
+        if b.len != want {
+            errs.push(VerifyError::EdgeShape {
+                node,
+                buf,
+                want,
+                got: b.len,
+            });
+        }
+    }
+}
+
+fn check_buffers_and_edges(prog: &Program, errs: &mut Vec<VerifyError>) {
+    for (i, node) in prog.nodes.iter().enumerate() {
+        if matches!(node, Node::Pre { .. }) {
+            errs.push(VerifyError::TransientNode { node: i });
+            continue;
+        }
+        match edge_specs(prog, node) {
+            None => {
+                // Pre handled above; a None from a bad layer index was
+                // already reported by check_structure
+            }
+            Some((src_spec, dst_spec)) => {
+                match (node.reads(), src_spec) {
+                    (Some(src), Some(spec)) => {
+                        check_edge(prog, i, src, spec, errs)
+                    }
+                    (Some(src), None) if prog.bufs.get(src).is_none() => {
+                        errs.push(VerifyError::BadBuffer {
+                            node: i,
+                            buf: src,
+                        });
+                    }
+                    _ => {}
+                }
+                check_edge(prog, i, node.writes(), dst_spec, errs);
+            }
+        }
+    }
+}
+
+fn check_io(prog: &Program, errs: &mut Vec<VerifyError>) {
+    match prog.bufs.get(prog.input) {
+        None => errs.push(VerifyError::BadIo {
+            detail: format!("input buffer {} out of range", prog.input),
+        }),
+        Some(b) => {
+            if b.dtype != DType::F32 || b.len != prog.plan.input_dim {
+                errs.push(VerifyError::BadIo {
+                    detail: format!(
+                        "input buffer is {} x{}, plan wants f32 x{}",
+                        b.dtype.label(),
+                        b.len,
+                        prog.plan.input_dim
+                    ),
+                });
+            }
+        }
+    }
+    match prog.bufs.get(prog.output) {
+        None => errs.push(VerifyError::BadIo {
+            detail: format!("output buffer {} out of range", prog.output),
+        }),
+        Some(b) => {
+            if b.dtype != DType::F32 || b.len != prog.plan.output_dim {
+                errs.push(VerifyError::BadIo {
+                    detail: format!(
+                        "output buffer is {} x{}, plan wants f32 x{}",
+                        b.dtype.label(),
+                        b.len,
+                        prog.plan.output_dim
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Dataflow: def-before-use, single writer, live intervals
+// ------------------------------------------------------------------
+
+/// Per-buffer live interval in event time (input defined at 0, node
+/// `i` runs at `i + 1`, the caller reads the output at `len + 1`) —
+/// recomputed here from the node list, deliberately independent of
+/// the `engine::arena` implementation it cross-checks.
+struct Liveness {
+    def: Vec<usize>,
+    last: Vec<usize>,
+}
+
+const UNDEF: usize = usize::MAX;
+
+fn check_dataflow(prog: &Program, errs: &mut Vec<VerifyError>)
+                  -> Liveness {
+    let nb = prog.bufs.len();
+    let mut def = vec![UNDEF; nb];
+    let mut last = vec![0usize; nb];
+    let mut writer = vec![UNDEF; nb];
+    if prog.input < nb {
+        def[prog.input] = 0;
+    }
+    for (i, node) in prog.nodes.iter().enumerate() {
+        let t = i + 1;
+        if let Some(r) = node.reads() {
+            if r >= nb {
+                // reported as BadBuffer by the edge pass
+            } else if def[r] == UNDEF {
+                errs.push(VerifyError::UseBeforeDef { node: i, buf: r });
+            } else {
+                last[r] = last[r].max(t);
+            }
+        }
+        let w = node.writes();
+        if w >= nb {
+            continue;
+        }
+        if writer[w] != UNDEF {
+            errs.push(VerifyError::MultipleWriters {
+                buf: w,
+                first: writer[w],
+                second: i,
+            });
+        }
+        writer[w] = i;
+        if def[w] == UNDEF {
+            def[w] = t;
+        }
+        last[w] = last[w].max(t);
+    }
+    if prog.output < nb && def[prog.output] != UNDEF {
+        last[prog.output] = prog.nodes.len() + 1;
+    }
+    Liveness { def, last }
+}
+
+// ------------------------------------------------------------------
+// Arena soundness
+// ------------------------------------------------------------------
+
+fn arena_len(prog: &Program, dt: DType) -> usize {
+    match dt {
+        DType::F32 => prog.f32_len,
+        DType::I32 => prog.i32_len,
+        DType::I64 => prog.i64_len,
+    }
+}
+
+fn check_arena(prog: &Program, live: &Liveness,
+               errs: &mut Vec<VerifyError>) {
+    let nb = prog.bufs.len();
+    // reachable = has a live interval (the input counts even if no
+    // node reads it; orphaned buffers keep offset None and are free)
+    let reachable: Vec<BufId> = (0..nb)
+        .filter(|&b| live.def.get(b).is_some_and(|d| *d != UNDEF))
+        .collect();
+    for &b in &reachable {
+        let spec = &prog.bufs[b];
+        let Some(off) = spec.offset else {
+            // find a node touching it for the report
+            let node = prog
+                .nodes
+                .iter()
+                .position(|n| {
+                    n.writes() == b || n.reads() == Some(b)
+                })
+                .unwrap_or(0);
+            errs.push(VerifyError::UnassignedBuffer { node, buf: b });
+            continue;
+        };
+        let end = off + spec.len;
+        let arena = arena_len(prog, spec.dtype);
+        if end > arena {
+            errs.push(VerifyError::ArenaOutOfBounds {
+                buf: b,
+                dtype: spec.dtype,
+                end,
+                arena,
+            });
+        }
+    }
+    // pairwise: same dtype, overlapping live intervals, overlapping
+    // slots. Quadratic in buffer count, which is tens per program.
+    for (ai, &a) in reachable.iter().enumerate() {
+        let (Some(ao), sa) = (prog.bufs[a].offset, &prog.bufs[a]) else {
+            continue;
+        };
+        for &b in &reachable[ai + 1..] {
+            let (Some(bo), sb) = (prog.bufs[b].offset, &prog.bufs[b])
+            else {
+                continue;
+            };
+            if sa.dtype != sb.dtype {
+                continue;
+            }
+            let lives_overlap = live.def[a] <= live.last[b]
+                && live.def[b] <= live.last[a];
+            let slots_overlap = ao < bo + sb.len && bo < ao + sa.len;
+            if lives_overlap && slots_overlap && sa.len > 0 && sb.len > 0
+            {
+                errs.push(VerifyError::ArenaAlias {
+                    a,
+                    b,
+                    dtype: sa.dtype,
+                    a_slot: (ao, ao + sa.len),
+                    b_slot: (bo, bo + sb.len),
+                });
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Backend invariants
+// ------------------------------------------------------------------
+
+/// Lane dimension the auto rule inspects for an integer kernel node —
+/// mirrors `passes::assign_backends`.
+fn lane_dim(prog: &Program, node: &Node) -> Option<usize> {
+    match node {
+        Node::Gemm { layer, int: true, .. }
+        | Node::Conv2d { layer, int: true, .. } => {
+            prog.plan.layers.get(*layer).map(|l| l.in_dim)
+        }
+        Node::DwConv2d { layer, .. } => {
+            prog.plan.layers.get(*layer).map(|l| l.kept.len())
+        }
+        _ => None,
+    }
+}
+
+fn check_backends(prog: &Program, errs: &mut Vec<VerifyError>) {
+    for (i, node) in prog.nodes.iter().enumerate() {
+        let Some(backend) = node.backend() else { continue };
+        let Some(lane) = lane_dim(prog, node) else {
+            // f32-form kernel: must stay scalar
+            if backend != Backend::Scalar {
+                errs.push(VerifyError::BackendRule {
+                    node: i,
+                    backend,
+                    lane_dim: 0,
+                    lanes: kernels::LANES,
+                });
+            }
+            continue;
+        };
+        if backend == Backend::Blocked {
+            check_panels(prog, i, node, errs);
+        }
+        if prog.forced_backend.is_some() {
+            continue;
+        }
+        // unforced: the auto rule picks SIMD at lane_dim >= LANES,
+        // scalar below, and never blocked
+        let auto_ok = match backend {
+            Backend::Simd => lane >= kernels::LANES,
+            Backend::Scalar => lane < kernels::LANES,
+            Backend::Blocked => false,
+        };
+        if !auto_ok {
+            errs.push(VerifyError::BackendRule {
+                node: i,
+                backend,
+                lane_dim: lane,
+                lanes: kernels::LANES,
+            });
+        }
+    }
+}
+
+fn check_panels(prog: &Program, i: usize, node: &Node,
+                errs: &mut Vec<VerifyError>) {
+    let Some(li) = node.layer() else { return };
+    let Some(l) = prog.plan.layers.get(li) else { return };
+    let Some(Some(pm)) = prog.panels.get(li) else {
+        errs.push(VerifyError::MissingPanels { node: i, layer: li });
+        return;
+    };
+    let mut geom = |detail: String| {
+        errs.push(VerifyError::PanelGeometry { layer: li, detail });
+    };
+    let Some(packed) = l.packed.as_ref() else {
+        geom("blocked node on a layer without packed rows".into());
+        return;
+    };
+    if pm.bits != packed.bits || pm.signed != packed.signed {
+        geom(format!(
+            "panel codes are {}-bit signed={}, packed rows are {}-bit \
+             signed={}",
+            pm.bits, pm.signed, packed.bits, packed.signed
+        ));
+    }
+    // reduction length the kernel dots a panel row against
+    let red = match node {
+        Node::DwConv2d { .. } => {
+            l.spatial.as_ref().map(|sp| sp.k * sp.k).unwrap_or(l.in_dim)
+        }
+        _ => l.in_dim,
+    };
+    if pm.rows != l.kept.len() || pm.cols != red {
+        geom(format!(
+            "panel is {}x{}, node needs {}x{red}",
+            pm.rows,
+            pm.cols,
+            l.kept.len()
+        ));
+        return; // block/padding checks below assume the dims
+    }
+    let want_kb = if pm.cols == 0 { 1 } else { pm.cols.div_ceil(KC) };
+    if pm.kblocks() != want_kb {
+        geom(format!(
+            "{} depth blocks for {} cols (want {want_kb})",
+            pm.kblocks(),
+            pm.cols
+        ));
+        return;
+    }
+    // row blocks partition 0..rows in ascending <= MR chunks
+    let blocks = pm.blocks();
+    let mut next = 0usize;
+    for &(r0, mr) in blocks {
+        if r0 != next || mr > MR || (mr == 0 && pm.rows != 0) {
+            geom(format!(
+                "row blocks do not partition 0..{} (block at {r0} of \
+                 {mr} rows, expected start {next})",
+                pm.rows
+            ));
+            return;
+        }
+        next += mr;
+    }
+    if next != pm.rows {
+        geom(format!(
+            "row blocks cover {next} of {} rows",
+            pm.rows
+        ));
+        return;
+    }
+    if pm.panel_bytes() != blocks.len() * pm.kblocks() * MR * KC * 4 {
+        geom(format!(
+            "panel storage is {} bytes for {} blocks x {} depth blocks",
+            pm.panel_bytes(),
+            blocks.len(),
+            pm.kblocks()
+        ));
+        return;
+    }
+    // conv row blocks must not straddle filter groups (one panel is
+    // dotted against exactly one group's patch block)
+    if let (Node::Conv2d { .. }, Some(sp)) = (node, l.spatial.as_ref()) {
+        if sp.groups > 0 && l.out_dim % sp.groups == 0 {
+            let cpg = (l.out_dim / sp.groups).max(1);
+            for (bi, &(r0, mr)) in blocks.iter().enumerate() {
+                let gs: Vec<usize> = (r0..r0 + mr)
+                    .filter_map(|r| l.kept.get(r))
+                    .map(|&k| k as usize / cpg)
+                    .collect();
+                if gs.windows(2).any(|w| w[0] != w[1]) {
+                    errs.push(VerifyError::PanelGroupStraddle {
+                        layer: li,
+                        block: bi,
+                    });
+                }
+            }
+        }
+    }
+    // zero-padded remainders: rows past a block's true count and
+    // codes past the true row length must be zero (a zero code is
+    // the only content that cannot change an exact integer sum)
+    for (b, &(_, mr)) in blocks.iter().enumerate() {
+        for kb in 0..pm.kblocks() {
+            let k0 = kb * KC;
+            let klen = KC.min(pm.cols.saturating_sub(k0));
+            let panel = pm.panel(b, kb);
+            let pad_bad = (0..MR).any(|m| {
+                let row = &panel[m * KC..(m + 1) * KC];
+                if m >= mr {
+                    row.iter().any(|&v| v != 0)
+                } else {
+                    row[klen..].iter().any(|&v| v != 0)
+                }
+            });
+            if pad_bad {
+                errs.push(VerifyError::PanelGeometry {
+                    layer: li,
+                    detail: format!(
+                        "block {b} depth block {kb}: remainder not \
+                         zero-padded"
+                    ),
+                });
+                return;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Value-range / overflow analysis
+// ------------------------------------------------------------------
+
+/// Magnitude bound of an inclusive code interval.
+fn interval_mag(lo: i64, hi: i64) -> i64 {
+    lo.abs().max(hi.abs())
+}
+
+/// The i32 partial-sum block length a kernel node accumulates before
+/// spilling to i64, from its backend's actual accumulation geometry.
+fn block_len(node: &Node, red: usize) -> usize {
+    match node {
+        // depthwise accumulates the whole patch in one i32 when low
+        // (the kernel refuses the low path past I32_BLOCK)
+        Node::DwConv2d { .. } => red,
+        _ => match node.backend() {
+            Some(Backend::Blocked) => red.min(KC),
+            _ => red.min(kernels::I32_BLOCK),
+        },
+    }
+}
+
+fn check_overflow(prog: &Program, errs: &mut Vec<VerifyError>) {
+    let nb = prog.bufs.len();
+    // per-buffer code interval, seeded by quantizing producers
+    let mut range: Vec<Option<(i64, i64)>> = vec![None; nb];
+    for (i, node) in prog.nodes.iter().enumerate() {
+        // propagate the producing grid's range to the written buffer
+        match node {
+            Node::Quantize { grid, .. }
+            | Node::EpilogueQuantize { grid, .. }
+            | Node::RequantQuantize { grid, .. } => {
+                if let Some(r) = range.get_mut(node.writes()) {
+                    *r = Some((grid.code_lo(), grid.code_hi()));
+                }
+            }
+            _ => {}
+        }
+        let (int_kernel, op) = match node {
+            Node::Gemm { int: true, .. } => (true, node.op_name()),
+            Node::Conv2d { int: true, .. } => (true, node.op_name()),
+            Node::DwConv2d { .. } => (true, node.op_name()),
+            _ => (false, ""),
+        };
+        if !int_kernel {
+            continue;
+        }
+        let Some(li) = node.layer() else { continue };
+        let Some(l) = prog.plan.layers.get(li) else { continue };
+        let Some(packed) = l.packed.as_ref() else {
+            errs.push(VerifyError::Malformed {
+                detail: format!(
+                    "node {i} ({op}) runs the integer path on layer \
+                     {li} without packed rows"
+                ),
+            });
+            continue;
+        };
+        // weight range from the packed width's code range
+        let (wlo, whi) = code_range(packed.bits, packed.signed);
+        let max_w = interval_mag(wlo, whi);
+        // activation range from the *propagated* producer interval —
+        // the declared ActSpec width only selects the dispatch path
+        let Some(src) = node.reads() else { continue };
+        let Some(Some((alo, ahi))) = range.get(src) else {
+            errs.push(VerifyError::MissingRange { node: i, buf: src });
+            continue;
+        };
+        let max_a = interval_mag(*alo, *ahi);
+        // the dispatch decision mirrors the kernels: declared widths
+        // pick the path, the derived ranges must prove it safe
+        let a_bits = match l.act {
+            ActSpec::Int { bits, .. } => bits,
+            ActSpec::F32 => {
+                errs.push(VerifyError::Malformed {
+                    detail: format!(
+                        "node {i} ({op}) on layer {li} has no integer \
+                         activation grid"
+                    ),
+                });
+                continue;
+            }
+        };
+        let red = match node {
+            Node::DwConv2d { .. } => l
+                .spatial
+                .as_ref()
+                .map(|sp| sp.k * sp.k)
+                .unwrap_or(l.in_dim),
+            _ => l.in_dim,
+        };
+        let mut low = kernels::low_bit_pair(packed.bits, a_bits);
+        if matches!(node, Node::DwConv2d { .. }) {
+            low = low && red <= kernels::I32_BLOCK;
+        }
+        if low {
+            let blk = block_len(node, red);
+            let bound =
+                max_w as i128 * max_a as i128 * blk as i128;
+            if bound > i32::MAX as i128 {
+                errs.push(VerifyError::AccumulatorOverflow {
+                    node: i,
+                    op,
+                    path: AccPath::BlockedI32,
+                    max_w,
+                    max_a,
+                    block_len: blk,
+                    bound,
+                    limit: i32::MAX as i128,
+                });
+                continue;
+            }
+            // the GEMM/conv low path can reach the AVX2 vpmaddwd
+            // form: operands are packed to i16 (saturating) and each
+            // pair sum w0*a0 + w1*a1 must fit one i32 lane step
+            if !matches!(node, Node::DwConv2d { .. }) {
+                let lim = i16::MAX as i64;
+                if max_w > lim || max_a > lim {
+                    errs.push(VerifyError::PackSaturation {
+                        node: i,
+                        max_code: max_w.max(max_a),
+                        limit: lim,
+                    });
+                    continue;
+                }
+                if 2 * max_w as i128 * max_a as i128
+                    > i32::MAX as i128
+                {
+                    errs.push(VerifyError::PairSumOverflow {
+                        node: i,
+                        max_w,
+                        max_a,
+                    });
+                }
+            }
+        } else {
+            // wide path: the whole reduction accumulates in i64
+            let bound =
+                max_w as i128 * max_a as i128 * red as i128;
+            if bound > i64::MAX as i128 {
+                errs.push(VerifyError::AccumulatorOverflow {
+                    node: i,
+                    op,
+                    path: AccPath::WideI64,
+                    max_w,
+                    max_a,
+                    block_len: red,
+                    bound,
+                    limit: i64::MAX as i128,
+                });
+            }
+        }
+    }
+}
+

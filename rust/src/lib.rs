@@ -37,6 +37,11 @@
 //! * [`report`] — tables, Pareto fronts, ASCII plots, architecture viz.
 //! * [`config`] + [`cli`] — run configuration and the `bbits` launcher.
 
+// every unsafe operation must sit in an explicit `unsafe {}` block
+// with its own `SAFETY:` argument, even inside `unsafe fn` (the CI
+// lint job additionally denies `clippy::undocumented_unsafe_blocks`)
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod baselines;
 pub mod bops;
 pub mod cli;

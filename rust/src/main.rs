@@ -130,6 +130,12 @@ fn plan_from_args(args: &Args, opt: &ExpOptions)
                   man.name);
         }
         engine::lower_with_mode(&man, &state.params, &mode)
+    } else if args.str_flag("model", "").starts_with("preset:") {
+        // the multi-model SPEC grammar's preset form, usable without
+        // a checkpoint: `bbits plan --model preset:resnet18`
+        let (man, params) =
+            model_source_from_spec(&args.str_flag("model", ""))?;
+        engine::lower(&man, &params)
     } else {
         let dims =
             args.usize_list_flag("dims", &[128, 256, 256, 10])?;
@@ -170,6 +176,9 @@ fn cmd_plan(args: &Args, opt: &ExpOptions) -> Result<()> {
     let plan = Arc::new(plan_from_args(args, opt)?);
     println!("{}", plan.report());
     let backend = backend_from_args(args)?;
+    if args.bool_flag("verify") {
+        verify_plans_from_args(args, opt, backend)?;
+    }
     if args.bool_flag("dump-ir") {
         let int_prog = engine::graph::Program::compile_with_backend(
             plan.clone(), true, backend);
@@ -233,6 +242,104 @@ fn cmd_plan(args: &Args, opt: &ExpOptions) -> Result<()> {
     Ok(())
 }
 
+/// The plans `bbits plan --verify` proves: the base plan alone, or —
+/// when the model source is manifest-based (a checkpoint or a
+/// `preset:` spec) and `--ladder T1,T2,...` is given — one lowering
+/// per gate threshold, exactly the rungs `serve --ladder` would
+/// register.
+fn plans_for_verify(args: &Args, opt: &ExpOptions)
+                    -> Result<Vec<(String, Arc<engine::EnginePlan>)>> {
+    let ladder = args.f64_list_flag("ladder", &[])?;
+    if ladder.is_empty() {
+        return Ok(vec![("plan".to_string(),
+                        Arc::new(plan_from_args(args, opt)?))]);
+    }
+    let (man, params, mode) = if let Some(ckpt) =
+        args.opt_flag("checkpoint")
+    {
+        let model = args.str_flag("model", "lenet5");
+        let mode = Mode::parse(&args.str_flag("mode", "bb"))?;
+        let man =
+            Manifest::load(Path::new(&opt.artifacts_dir), &model)?;
+        let (ck_model, state) = checkpoint::load(Path::new(ckpt))?;
+        if ck_model != man.name {
+            bail!("checkpoint is for {ck_model:?}, manifest is {:?}",
+                  man.name);
+        }
+        (man, state.params, mode)
+    } else if args.str_flag("model", "").starts_with("preset:") {
+        let (man, params) =
+            model_source_from_spec(&args.str_flag("model", ""))?;
+        (man, params, Mode::parse(&args.str_flag("mode", "bb"))?)
+    } else {
+        bail!("--verify --ladder needs a manifest-level model source \
+               to lower at several thresholds: pass --checkpoint CKPT \
+               or --model preset:NAME");
+    };
+    ladder
+        .iter()
+        .map(|&t| {
+            let plan =
+                engine::lower_with_mode_at(&man, &params, &mode, t)?;
+            Ok((format!("rung t={t}"), Arc::new(plan)))
+        })
+        .collect()
+}
+
+/// `bbits plan --verify`: compile every requested plan on both
+/// execution paths and run the full static analysis suite
+/// (`engine::verify`) — value-range/overflow proofs, arena aliasing,
+/// IR well-formedness, backend/panel invariants. Exits non-zero if
+/// any plan fails.
+fn verify_plans_from_args(args: &Args, opt: &ExpOptions,
+                          backend: Option<engine::Backend>)
+                          -> Result<()> {
+    let plans = plans_for_verify(args, opt)?;
+    let mut failures = 0usize;
+    for (label, plan) in &plans {
+        for int_path in [true, false] {
+            let path = if int_path { "int" } else { "f32" };
+            let prog = match
+                engine::graph::Program::try_compile_with_backend(
+                    plan.clone(), int_path, backend)
+            {
+                Ok(p) => p,
+                Err(e) => {
+                    failures += 1;
+                    println!("verify: {label} [{path}] FAIL at \
+                              compile: {e}");
+                    continue;
+                }
+            };
+            let errs = engine::verify_all(&prog);
+            if errs.is_empty() {
+                println!(
+                    "verify: {label} [{path}] ok — {} nodes, {} \
+                     buffers, arena {} B",
+                    prog.nodes().len(),
+                    prog.bufs().len(),
+                    prog.arena_bytes()
+                );
+            } else {
+                for e in &errs {
+                    println!("verify: {label} [{path}] FAIL: {e}");
+                }
+                failures += errs.len();
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("static plan verification failed with {failures} \
+               error(s)");
+    }
+    println!(
+        "verify: {} plan(s) passed static verification on both \
+         execution paths",
+        plans.len()
+    );
+    Ok(())
+}
+
 /// The serve worker-pool knobs shared by the single- and multi-model
 /// paths of `bbits serve`.
 fn serve_config_from_args(args: &Args) -> Result<serve::ServeConfig> {
@@ -264,6 +371,7 @@ fn serve_config_from_args(args: &Args) -> Result<serve::ServeConfig> {
         backend: backend_from_args(args)?,
         intra_threads: args.usize_flag("intra-threads", 1)?,
         slo,
+        verify_plans: args.bool_flag("verify-plans"),
     };
     cfg.validate()?;
     Ok(cfg)

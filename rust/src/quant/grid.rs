@@ -157,6 +157,20 @@ impl CodeGrid {
         let xc = pact_clip(v, self.alpha_clip, self.beta_clip);
         (round_half_even(xc / self.step) as i64).clamp(self.lo, self.hi)
     }
+
+    /// Smallest code this grid can emit (`code` clamps into
+    /// `[code_lo, code_hi]`) — the interval the static plan verifier
+    /// (`engine::verify`) propagates through the compiled graph.
+    #[inline]
+    pub fn code_lo(&self) -> i64 {
+        self.lo
+    }
+
+    /// Largest code this grid can emit.
+    #[inline]
+    pub fn code_hi(&self) -> i64 {
+        self.hi
+    }
 }
 
 /// Integer grid codes for the fixed-width quantizer — the lowering

@@ -1,0 +1,400 @@
+//! Mutation battery for the static plan verifier (`engine::verify`).
+//!
+//! Every clean program the pass pipeline can produce must verify with
+//! zero findings (presets x backends x ladder rungs, both execution
+//! paths); every hand-made corruption must be rejected with its
+//! *specific* typed [`VerifyError`] — aliased arena slots, a swapped
+//! panel, a 16-bit grid smuggled onto a low-bit node, a reference to
+//! a retired node id, and so on. Programs are corrupted through the
+//! `#[doc(hidden)]` mutation seams on [`Program`], after compiling
+//! cleanly (debug builds auto-verify inside compile, so the
+//! corruption must happen afterwards).
+
+use std::sync::Arc;
+
+use bayesian_bits::config::Mode;
+use bayesian_bits::engine::graph::{Node, Program};
+use bayesian_bits::engine::pack::{PackedMatrix, PanelMatrix};
+use bayesian_bits::engine::verify::AccPath;
+use bayesian_bits::engine::{self, kernels, synthetic_plan, verify_all,
+                            Backend, VerifyError};
+use bayesian_bits::quant::grid::CodeGrid;
+
+#[path = "support/mod.rs"]
+mod support;
+
+/// Compile a synthetic GEMM chain on one forced backend and assert it
+/// verifies clean — the starting point for every mutation below.
+fn clean_program(dims: &[usize], w_bits: u32, a_bits: u32,
+                 int_path: bool, backend: Backend) -> Program {
+    let plan = Arc::new(
+        synthetic_plan("verify", dims, w_bits, a_bits, 0.0, 7).unwrap());
+    let prog =
+        Program::try_compile_with_backend(plan, int_path, Some(backend))
+            .unwrap();
+    let errs = verify_all(&prog);
+    assert!(errs.is_empty(),
+            "clean {dims:?} w{w_bits}a{a_bits} {backend:?} plan must \
+             verify: {errs:?}");
+    prog
+}
+
+// ---------------------------------------------------------------- clean
+
+/// Every preset x ladder rung x backend x path compiles to a program
+/// with zero findings — the sweep `bbits plan --verify` runs in CI.
+#[test]
+fn clean_presets_verify_on_every_backend_and_rung() {
+    for model in ["lenet5", "vgg7", "resnet18", "mobilenetv2"] {
+        let (man, params) = support::preset_manifest(model, false);
+        for t in [0.3, 0.5, 0.9] {
+            let plan = Arc::new(
+                engine::lower_with_mode_at(&man, &params,
+                                           &Mode::BayesianBits, t)
+                    .unwrap());
+            for be in [Backend::Scalar, Backend::Simd, Backend::Blocked] {
+                for int in [true, false] {
+                    let prog = Program::try_compile_with_backend(
+                        plan.clone(), int, Some(be))
+                        .unwrap_or_else(|e| panic!(
+                            "{model} t={t} {be:?} int={int}: {e}"));
+                    let errs = verify_all(&prog);
+                    assert!(errs.is_empty(),
+                            "{model} t={t} {be:?} int={int}: {errs:?}");
+                }
+            }
+        }
+    }
+}
+
+/// Synthetic plans across widths / bit pairs / pruning also verify
+/// clean on every backend.
+#[test]
+fn clean_synthetic_plans_verify() {
+    for (dims, w, a, prune) in [
+        (&[8usize, 16, 4][..], 4u32, 8u32, 0.2f64),
+        (&[64, 32, 10][..], 8, 8, 0.0),
+        (&[16, 24, 24, 6][..], 2, 4, 0.3),
+        (&[40, 12][..], 8, 16, 0.0),
+    ] {
+        let plan = Arc::new(
+            synthetic_plan("sweep", dims, w, a, prune, 11).unwrap());
+        for be in [Backend::Scalar, Backend::Simd, Backend::Blocked] {
+            for int in [true, false] {
+                let prog = Program::try_compile_with_backend(
+                    plan.clone(), int, Some(be)).unwrap();
+                let errs = verify_all(&prog);
+                assert!(errs.is_empty(),
+                        "{dims:?} w{w}a{a} {be:?} int={int}: {errs:?}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- arena
+
+/// Aliasing two simultaneously-live f32 slots (epilogue src and dst)
+/// is rejected as `ArenaAlias` naming both buffers.
+#[test]
+fn aliased_live_slots_rejected() {
+    let mut prog = clean_program(&[64, 32, 10], 4, 8, false,
+                                 Backend::Scalar);
+    let (src, dst) = prog
+        .nodes()
+        .iter()
+        .find_map(|n| match n {
+            Node::Epilogue { src, dst, .. } => Some((*src, *dst)),
+            _ => None,
+        })
+        .expect("f32 program ends in an epilogue");
+    let off = prog.bufs()[src].offset.expect("src has a slot");
+    prog.bufs_mut()[dst].offset = Some(off);
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e,
+                VerifyError::ArenaAlias { a, b, .. }
+                    if (*a == src && *b == dst)
+                        || (*a == dst && *b == src))),
+            "expected ArenaAlias({src}, {dst}), got {errs:?}");
+}
+
+/// A slot running past the end of its dtype arena is rejected as
+/// `ArenaOutOfBounds`.
+#[test]
+fn out_of_bounds_slot_rejected() {
+    let mut prog = clean_program(&[64, 32, 10], 4, 8, false,
+                                 Backend::Scalar);
+    let out = prog.output();
+    prog.bufs_mut()[out].offset = Some(1 << 24);
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::ArenaOutOfBounds { buf, .. }
+                    if *buf == out)),
+            "expected ArenaOutOfBounds({out}), got {errs:?}");
+}
+
+// ------------------------------------------------------------- overflow
+
+/// Replace the first quantizer's grid with the given one — the
+/// "widen a node's codes without switching accumulators" mutation.
+fn smuggle_grid(prog: &mut Program, grid: CodeGrid) {
+    let q = prog
+        .nodes_mut()
+        .iter_mut()
+        .find_map(|n| match n {
+            Node::Quantize { grid, .. } => Some(grid),
+            _ => None,
+        })
+        .expect("int program starts with a quantize");
+    *q = grid;
+}
+
+/// A 16-bit unsigned grid smuggled onto a declared-8-bit node keeps
+/// the low-bit dispatch (the declared width picks the path) but the
+/// derived bound `max|w| * max|a| * block_len` now exceeds `i32`:
+/// 127 * 65535 * 4096 > 2^31. The limit the verifier reports is the
+/// accumulator type's own bound, not a hard-coded safety margin.
+#[test]
+fn widened_grid_overflows_low_bit_accumulator() {
+    let mut prog = clean_program(&[4096, 16, 10], 8, 8, true,
+                                 Backend::Scalar);
+    smuggle_grid(&mut prog, CodeGrid::new(1.0, 16, false));
+    let errs = verify_all(&prog);
+    let err = errs
+        .iter()
+        .find(|e| matches!(e, VerifyError::AccumulatorOverflow { .. }))
+        .unwrap_or_else(|| panic!(
+            "expected AccumulatorOverflow, got {errs:?}"));
+    let VerifyError::AccumulatorOverflow {
+        path, max_w, max_a, block_len, bound, limit, ..
+    } = err else { unreachable!() };
+    assert_eq!(*path, AccPath::BlockedI32);
+    assert_eq!(*max_w, 127);
+    assert_eq!(*max_a, 65535);
+    assert_eq!(*block_len, kernels::I32_BLOCK);
+    assert_eq!(*limit, i32::MAX as i128, "limit is derived from the \
+               accumulator type, not a fixed margin");
+    assert!(*bound > *limit);
+}
+
+/// The same smuggled grid on a short reduction (64 columns) fits the
+/// i32 accumulator but exceeds what the AVX2 `vpmaddwd` form can pack
+/// into i16 lanes — a *different* typed error for the same mutation
+/// class at a different shape.
+#[test]
+fn widened_grid_saturates_i16_pack() {
+    let mut prog = clean_program(&[64, 16, 10], 8, 8, true,
+                                 Backend::Scalar);
+    smuggle_grid(&mut prog, CodeGrid::new(1.0, 16, false));
+    let errs = verify_all(&prog);
+    assert!(!errs.iter().any(|e| matches!(
+                e, VerifyError::AccumulatorOverflow { .. })),
+            "64-deep reduction fits i32: {errs:?}");
+    assert!(errs.iter().any(|e| matches!(
+                e,
+                VerifyError::PackSaturation { max_code: 65535,
+                                              limit: 32767, .. })),
+            "expected PackSaturation(65535 > 32767), got {errs:?}");
+}
+
+/// The accumulator bound is derived from each backend's real block
+/// length: the same smuggled grid overflows the scalar path's
+/// `I32_BLOCK`-deep chunks but fits the blocked backend's `KC`-deep
+/// panels (127 * 65535 * 256 < 2^31).
+#[test]
+fn block_length_is_backend_derived() {
+    let mut scalar = clean_program(&[8192, 16, 10], 8, 8, true,
+                                   Backend::Scalar);
+    smuggle_grid(&mut scalar, CodeGrid::new(1.0, 16, false));
+    let errs = verify_all(&scalar);
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::AccumulatorOverflow { .. })),
+            "scalar path accumulates 4096-deep: {errs:?}");
+
+    let mut blocked = clean_program(&[8192, 16, 10], 8, 8, true,
+                                    Backend::Blocked);
+    smuggle_grid(&mut blocked, CodeGrid::new(1.0, 16, false));
+    let errs = verify_all(&blocked);
+    assert!(!errs.iter().any(|e| matches!(
+                e, VerifyError::AccumulatorOverflow { .. })),
+            "KC-deep panels keep the bound under i32: {errs:?}");
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::PackSaturation { .. })),
+            "the i16 pack bound still rejects 16-bit codes: {errs:?}");
+}
+
+/// An integer kernel whose source has no propagated code range (its
+/// producer is not a quantizer) is rejected as `MissingRange` — plus
+/// the dtype mismatch the rewiring introduces.
+#[test]
+fn unquantized_kernel_source_rejected() {
+    let mut prog = clean_program(&[64, 32, 10], 8, 8, true,
+                                 Backend::Scalar);
+    let input = prog.input();
+    for n in prog.nodes_mut().iter_mut() {
+        if let Node::Gemm { src, .. } = n {
+            *src = input;
+            break;
+        }
+    }
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::MissingRange { buf, .. }
+                    if *buf == input)),
+            "expected MissingRange({input}), got {errs:?}");
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::EdgeDType { .. })),
+            "expected EdgeDType alongside, got {errs:?}");
+}
+
+// ---------------------------------------------------------------- ids
+
+/// Referencing a node id the pass pipeline retired (here: the ids
+/// consumed by requant+quantize fusion) is rejected as
+/// `RetiredNodeId`.
+#[test]
+fn retired_node_id_rejected() {
+    let mut prog = clean_program(&[64, 32, 10], 4, 8, true,
+                                 Backend::Scalar);
+    let retired = prog.retired_node_ids().to_vec();
+    assert!(!retired.is_empty(),
+            "fused plan must have retired ids");
+    prog.node_ids_mut()[0] = retired[0];
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::RetiredNodeId { id, .. }
+                    if *id == retired[0])),
+            "expected RetiredNodeId({}), got {errs:?}", retired[0]);
+}
+
+/// An id past the pipeline's allocator high-water mark is rejected as
+/// `UnknownNodeId`.
+#[test]
+fn unknown_node_id_rejected() {
+    let mut prog = clean_program(&[64, 32, 10], 4, 8, true,
+                                 Backend::Scalar);
+    let bogus = prog.id_bound() + 5;
+    prog.node_ids_mut()[0] = bogus;
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::UnknownNodeId { id, .. }
+                    if *id == bogus)),
+            "expected UnknownNodeId({bogus}), got {errs:?}");
+}
+
+/// Two nodes sharing one id is rejected as `DuplicateNodeId`.
+#[test]
+fn duplicate_node_id_rejected() {
+    let mut prog = clean_program(&[64, 32, 10], 4, 8, true,
+                                 Backend::Scalar);
+    let first = prog.node_ids()[0];
+    prog.node_ids_mut()[1] = first;
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::DuplicateNodeId { id, .. }
+                    if *id == first)),
+            "expected DuplicateNodeId({first}), got {errs:?}");
+}
+
+// ------------------------------------------------------------- dataflow
+
+/// Rewiring a node to read a buffer defined later in the program is
+/// rejected as `UseBeforeDef` by the recomputed liveness.
+#[test]
+fn use_before_def_rejected() {
+    let mut prog = clean_program(&[64, 32, 10], 4, 8, true,
+                                 Backend::Scalar);
+    let acc = prog
+        .nodes()
+        .iter()
+        .find_map(|n| match n {
+            Node::Gemm { dst, .. } => Some(*dst),
+            _ => None,
+        })
+        .expect("int program has a gemm accumulator");
+    match &mut prog.nodes_mut()[0] {
+        Node::Quantize { src, .. } => *src = acc,
+        other => panic!("node 0 should be quantize, got {other:?}"),
+    }
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::UseBeforeDef { buf, .. }
+                    if *buf == acc)),
+            "expected UseBeforeDef({acc}), got {errs:?}");
+}
+
+// -------------------------------------------------------------- panels
+
+/// Swapping a layer's panel for one packed from a different matrix
+/// (wrong rows/cols, so wrong MR/KC partition) is rejected as
+/// `PanelGeometry`.
+#[test]
+fn shrunken_panel_rejected() {
+    let mut prog = clean_program(&[64, 32, 10], 4, 8, true,
+                                 Backend::Blocked);
+    let codes: Vec<i64> = vec![1, -1, 2, 0, 1, -2];
+    let small = PackedMatrix::pack(&codes, 2, 3, 4, true);
+    prog.panels_mut()[0] =
+        Some(Arc::new(PanelMatrix::from_packed(&small)));
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::PanelGeometry { layer: 0, .. })),
+            "expected PanelGeometry(layer 0), got {errs:?}");
+}
+
+/// A blocked node whose layer has no compiled panels is rejected as
+/// `MissingPanels`.
+#[test]
+fn missing_panels_rejected() {
+    let mut prog = clean_program(&[64, 32, 10], 4, 8, true,
+                                 Backend::Blocked);
+    prog.panels_mut()[0] = None;
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::MissingPanels { layer: 0, .. })),
+            "expected MissingPanels(layer 0), got {errs:?}");
+}
+
+/// Truncating the panel table desynchronizes the parallel arrays —
+/// the structural check reports `Malformed` (alone: nothing else can
+/// be trusted once the arrays disagree).
+#[test]
+fn structural_corruption_reports_malformed() {
+    let mut prog = clean_program(&[64, 32, 10], 4, 8, true,
+                                 Backend::Blocked);
+    prog.panels_mut().truncate(1);
+    let errs = verify_all(&prog);
+    assert_eq!(errs.len(), 1, "structural errors report alone: {errs:?}");
+    assert!(matches!(errs[0], VerifyError::Malformed { .. }),
+            "expected Malformed, got {errs:?}");
+}
+
+// ------------------------------------------------------------- backends
+
+/// Without a forced override, a SIMD assignment on a lane dimension
+/// below the vector width is one the auto rule could not have
+/// produced — rejected as `BackendRule`.
+#[test]
+fn backend_auto_rule_enforced() {
+    // this test exercises the unforced path, so the env override must
+    // not be in effect for this compile (every other test in this
+    // binary forces its backend explicitly)
+    std::env::remove_var("BBITS_BACKEND");
+    let plan = Arc::new(
+        synthetic_plan("small", &[4, 4, 10], 8, 8, 0.0, 5).unwrap());
+    let mut prog =
+        Program::try_compile_with_backend(plan, true, None).unwrap();
+    assert!(verify_all(&prog).is_empty());
+    for n in prog.nodes_mut().iter_mut() {
+        if let Node::Gemm { backend, .. } = n {
+            *backend = Backend::Simd;
+            break;
+        }
+    }
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e,
+                VerifyError::BackendRule { backend: Backend::Simd,
+                                           lane_dim: 4, lanes: 8, .. })),
+            "expected BackendRule(simd, lane 4 < 8), got {errs:?}");
+}
