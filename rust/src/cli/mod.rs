@@ -29,7 +29,7 @@ pub struct Args {
 const SWITCHES: &[&str] = &[
     "help", "det-gates", "show-preft", "curves", "quick", "paper-scale",
     "skip-baselines", "no-finetune", "no-int", "conv-only", "dump-ir",
-    "serve-only", "profile", "verify", "verify-plans",
+    "serve-only", "profile", "verify", "verify-plans", "prewarm",
 ];
 
 /// Flags that take a value (`--flag v` or `--flag=v`). Anything not
@@ -43,7 +43,7 @@ const VALUE_FLAGS: &[&str] = &[
     "checkpoint", "dims", "wbits", "abits", "prune", "max-batch",
     "deadline-ms", "queue-cap", "clients", "requests", "rows", "cols",
     "batch", "hw", "cin", "cout", "ksize", "plan-cache-mb", "backend",
-    "trace-out", "ladder", "slo-ms", "intra-threads",
+    "trace-out", "ladder", "slo-ms", "intra-threads", "save", "load",
 ];
 
 impl Args {
@@ -227,6 +227,10 @@ Integer inference engine (rust/src/engine)
                   every rung's compiled programs at register time and
                   refuses to serve a plan that fails (overflow-range,
                   arena-aliasing, IR and backend-invariant proofs)
+                  --load FILE serves a saved plan artifact instead of
+                  lowering a checkpoint (see plan --save); --prewarm
+                  compiles every rung before traffic starts, so the
+                  first request of each rung is a cache hit
   plan            lower a checkpoint (or synthetic spec, same flags as
                   serve) and print the plan report; --dump-ir prints
                   the compiled execution graphs (typed node list +
@@ -243,14 +247,25 @@ Integer inference engine (rust/src/engine)
                   non-zero on any finding. With --ladder T1,T2,.. and
                   a manifest source (--checkpoint or
                   --model preset:NAME) every rung is verified
+                  --save FILE serializes the lowered plan to a
+                  versioned binary artifact (checksummed; packed code
+                  grids included); --load FILE decodes one instead of
+                  lowering — every load re-validates structure and
+                  code grids and runs the static verifier, so a
+                  corrupt artifact is a typed error, never a served
+                  plan
   engine-bench    packed integer GEMM + spatial conv, scalar vs simd
                   vs blocked integer backends vs the f32 fallback;
                   writes BENCH_engine.json (GEMM sweep) and
                   BENCH_conv.json (conv sweep) with a backend column
                   per record, plus a multi-model serve sweep to
                   BENCH_serve.json (per-model p50/p99 + plan-cache
-                  eviction counters) and an SLO deadline-pressure
-                  sweep to BENCH_ladder.json (ladder vs static plan)
+                  eviction counters), an SLO deadline-pressure
+                  sweep to BENCH_ladder.json (ladder vs static plan),
+                  and a model-lifecycle sweep to BENCH_lifecycle.json
+                  (artifact-vs-lowering cold start; a warm model's
+                  p99 while another model cold-compiles — per-rung
+                  latches keep the two tails identical)
                   --rows N --cols N --batch B (GEMM; skip: --conv-only)
                   --hw N --cin N --cout N --ksize K (conv layer)
                   --backend scalar|simd|blocked restricts the sweep
@@ -383,6 +398,12 @@ mod tests {
                    vec![0.3, 0.9]);
         assert!(parse("serve --verify-plans")
             .bool_flag("verify-plans"));
+        // plan-artifact flags: --save/--load values, --prewarm switch
+        let s = parse("plan --dims 8,4 --save p.plan");
+        assert_eq!(s.opt_flag("save"), Some("p.plan"));
+        let l = parse("serve --load p.plan --prewarm");
+        assert_eq!(l.opt_flag("load"), Some("p.plan"));
+        assert!(l.bool_flag("prewarm"));
     }
 
     #[test]

@@ -1,0 +1,467 @@
+//! Serialized plan artifacts: a versioned binary encode/decode for a
+//! lowered [`EnginePlan`] — packed code grids included — so a cold
+//! start is a file read instead of checkpoint→lower. The CLI surface
+//! is `bbits plan --save FILE` / `--load FILE`; the registry side is
+//! `register` + [`super::registry::ModelRegistry::prewarm`].
+//!
+//! ## Format (version 1)
+//!
+//! ```text
+//!   magic    8 bytes  "BBITPLAN"
+//!   version  u32 LE   1
+//!   body              model name, dims, layer table (below)
+//!   checksum u64 LE   FNV-1a over every preceding byte
+//! ```
+//!
+//! All integers are little-endian; lengths are u64, counts/tags u32 or
+//! u8; f32 values are raw IEEE-754 bit patterns. Each layer serializes
+//! every [`PlanLayer`] field, with [`PackedMatrix`] stored as its raw
+//! packed words (bits/signed/rows/cols + `u64` word array). Panel
+//! matrices for the blocked backend are **not** stored — they are a
+//! compile-time derivation and are rebuilt by `Program` compilation.
+//!
+//! ## Trust model
+//!
+//! A decoded artifact is *data*, never trusted: the checksum catches
+//! torn writes, [`PackedMatrix::from_raw`] re-validates every code
+//! field and padding bit, `EnginePlan::validate` re-checks structure,
+//! and [`load_plan_verified`] additionally compiles both program
+//! paths and runs the full static verifier (`engine::verify`) on
+//! them — in release builds too, where compile alone does not verify.
+//! A corrupt artifact is therefore always a typed [`anyhow::Error`]
+//! (or [`VerifyError`]-carrying) failure, never UB or garbage codes.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::pack::PackedMatrix;
+use super::{ActSpec, Backend, EnginePlan, PlanLayer, PreOp,
+            SpatialPlan};
+
+/// File magic: 8 bytes at offset 0.
+pub const MAGIC: &[u8; 8] = b"BBITPLAN";
+
+/// Current artifact format version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// FNV-1a 64-bit over `bytes` — dependency-free integrity check; this
+/// guards against corruption (torn writes, truncation, bit rot), not
+/// against an adversary.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Byte-appending encoder for the artifact body.
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for x in v {
+            self.f32(*x);
+        }
+    }
+
+    fn u32s(&mut self, v: &[u32]) {
+        self.u64(v.len() as u64);
+        for x in v {
+            self.u32(*x);
+        }
+    }
+
+    fn u64s(&mut self, v: &[u64]) {
+        self.u64(v.len() as u64);
+        for x in v {
+            self.u64(*x);
+        }
+    }
+}
+
+/// Bounds-checked cursor over the artifact body; every read is a
+/// typed truncation error instead of a panic.
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+/// Upper bound on any one decoded length field — rejects absurd
+/// lengths from corrupt bytes before they turn into huge allocations.
+const MAX_LEN: u64 = 1 << 32;
+
+/// Pre-allocation cap for decoded arrays: a corrupt length field must
+/// fail on a bounds-checked read, not on a giant up-front allocation.
+const PREALLOC_CAP: usize = 1 << 16;
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.pos < n {
+            bail!("plan artifact truncated: need {n} bytes at offset \
+                   {}, have {}", self.pos, self.b.len() - self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn len(&mut self, what: &str) -> Result<usize> {
+        let n = self.u64()?;
+        if n > MAX_LEN {
+            bail!("plan artifact: implausible {what} length {n}");
+        }
+        Ok(n as usize)
+    }
+
+    fn usize(&mut self, what: &str) -> Result<usize> {
+        self.len(what)
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let n = self.len(what)?;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| anyhow!("plan artifact: {what} is not UTF-8"))
+    }
+
+    fn f32s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.len(what)?;
+        let mut v = Vec::with_capacity(n.min(PREALLOC_CAP));
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    fn u32s(&mut self, what: &str) -> Result<Vec<u32>> {
+        let n = self.len(what)?;
+        let mut v = Vec::with_capacity(n.min(PREALLOC_CAP));
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    fn u64s(&mut self, what: &str) -> Result<Vec<u64>> {
+        let n = self.len(what)?;
+        let mut v = Vec::with_capacity(n.min(PREALLOC_CAP));
+        for _ in 0..n {
+            v.push(self.u64()?);
+        }
+        Ok(v)
+    }
+}
+
+fn enc_spatial(e: &mut Enc, sp: &SpatialPlan) {
+    for v in [sp.in_h, sp.in_w, sp.in_c, sp.k, sp.stride, sp.groups,
+              sp.pad_top, sp.pad_left, sp.out_h, sp.out_w]
+    {
+        e.u64(v as u64);
+    }
+}
+
+fn dec_spatial(d: &mut Dec) -> Result<SpatialPlan> {
+    Ok(SpatialPlan { in_h: d.usize("in_h")?,
+                     in_w: d.usize("in_w")?,
+                     in_c: d.usize("in_c")?,
+                     k: d.usize("k")?,
+                     stride: d.usize("stride")?,
+                     groups: d.usize("groups")?,
+                     pad_top: d.usize("pad_top")?,
+                     pad_left: d.usize("pad_left")?,
+                     out_h: d.usize("out_h")?,
+                     out_w: d.usize("out_w")? })
+}
+
+fn enc_pre(e: &mut Enc, pre: &PreOp) {
+    match pre {
+        PreOp::Direct => e.u8(0),
+        PreOp::MaxPool2 { h, w, c } => {
+            e.u8(1);
+            e.u64(*h as u64);
+            e.u64(*w as u64);
+            e.u64(*c as u64);
+        }
+        PreOp::GlobalAvgPool { h, w, c } => {
+            e.u8(2);
+            e.u64(*h as u64);
+            e.u64(*w as u64);
+            e.u64(*c as u64);
+        }
+        PreOp::AdaptSpatial { from, to } => {
+            e.u8(3);
+            for v in [from.0, from.1, from.2, to.0, to.1, to.2] {
+                e.u64(v as u64);
+            }
+        }
+    }
+}
+
+fn dec_pre(d: &mut Dec) -> Result<PreOp> {
+    Ok(match d.u8()? {
+        0 => PreOp::Direct,
+        1 => PreOp::MaxPool2 { h: d.usize("pool h")?,
+                               w: d.usize("pool w")?,
+                               c: d.usize("pool c")? },
+        2 => PreOp::GlobalAvgPool { h: d.usize("gap h")?,
+                                    w: d.usize("gap w")?,
+                                    c: d.usize("gap c")? },
+        3 => PreOp::AdaptSpatial {
+            from: (d.usize("adapt from h")?, d.usize("adapt from w")?,
+                   d.usize("adapt from c")?),
+            to: (d.usize("adapt to h")?, d.usize("adapt to w")?,
+                 d.usize("adapt to c")?),
+        },
+        t => bail!("plan artifact: unknown pre-op tag {t}"),
+    })
+}
+
+/// Encode a plan to the versioned artifact byte format (magic +
+/// format version + body + checksum).
+pub fn encode_plan(plan: &EnginePlan) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.buf.extend_from_slice(MAGIC);
+    e.u32(FORMAT_VERSION);
+    e.str(&plan.model);
+    e.u64(plan.input_dim as u64);
+    e.u64(plan.output_dim as u64);
+    e.u64(plan.layers.len() as u64);
+    for l in &plan.layers {
+        e.str(&l.name);
+        e.u64(l.in_dim as u64);
+        e.u64(l.out_dim as u64);
+        e.u32(l.w_bits);
+        e.u32s(&l.kept);
+        match &l.packed {
+            None => e.u8(0),
+            Some(p) => {
+                e.u8(1);
+                e.u32(p.bits);
+                e.u8(p.signed as u8);
+                e.u64(p.rows as u64);
+                e.u64(p.cols as u64);
+                e.u64s(p.raw_words());
+            }
+        }
+        e.f32(l.w_scale);
+        e.f32s(&l.f32_rows);
+        match l.act {
+            ActSpec::F32 => e.u8(0),
+            ActSpec::Int { bits, beta, signed } => {
+                e.u8(1);
+                e.u32(bits);
+                e.f32(beta);
+                e.u8(signed as u8);
+            }
+        }
+        match &l.bias {
+            None => e.u8(0),
+            Some(b) => {
+                e.u8(1);
+                e.f32s(b);
+            }
+        }
+        e.u8(l.relu as u8);
+        match &l.spatial {
+            None => e.u8(0),
+            Some(sp) => {
+                e.u8(1);
+                enc_spatial(&mut e, sp);
+            }
+        }
+        enc_pre(&mut e, &l.pre);
+    }
+    let sum = fnv1a(&e.buf);
+    e.u64(sum);
+    e.buf
+}
+
+fn dec_bool(d: &mut Dec, what: &str) -> Result<bool> {
+    match d.u8()? {
+        0 => Ok(false),
+        1 => Ok(true),
+        t => bail!("plan artifact: bad {what} flag {t}"),
+    }
+}
+
+/// Decode an artifact back into a plan. Checks magic, format version,
+/// and checksum before touching the body; re-validates packed code
+/// grids and plan structure after. Every failure is a typed error.
+pub fn decode_plan(bytes: &[u8]) -> Result<EnginePlan> {
+    if bytes.len() < MAGIC.len() + 4 + 8 {
+        bail!("plan artifact truncated: {} bytes is smaller than the \
+               fixed header + checksum", bytes.len());
+    }
+    if &bytes[..MAGIC.len()] != MAGIC {
+        bail!("not a plan artifact: bad magic (expected {:?})",
+              std::str::from_utf8(MAGIC).unwrap());
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let actual = fnv1a(body);
+    if stored != actual {
+        bail!("plan artifact checksum mismatch: stored \
+               {stored:#018x}, computed {actual:#018x} — the file is \
+               corrupt or was truncated/extended");
+    }
+    let mut d = Dec { b: body, pos: MAGIC.len() };
+    let version = d.u32()?;
+    if version != FORMAT_VERSION {
+        bail!("plan artifact format version {version} is not \
+               supported (this build reads version {FORMAT_VERSION})");
+    }
+    let model = d.str("model name")?;
+    let input_dim = d.usize("input_dim")?;
+    let output_dim = d.usize("output_dim")?;
+    let nlayers = d.len("layer count")?;
+    let mut layers = Vec::with_capacity(nlayers.min(PREALLOC_CAP));
+    for li in 0..nlayers {
+        let name = d.str("layer name")?;
+        let in_dim = d.usize("in_dim")?;
+        let out_dim = d.usize("out_dim")?;
+        let w_bits = d.u32()?;
+        let kept = d.u32s("kept channels")?;
+        let packed = if dec_bool(&mut d, "packed-present")? {
+            let bits = d.u32()?;
+            let signed = dec_bool(&mut d, "packed-signed")?;
+            let rows = d.usize("packed rows")?;
+            let cols = d.usize("packed cols")?;
+            let words = d.u64s("packed words")?;
+            Some(PackedMatrix::from_raw(bits, signed, rows, cols,
+                                        words)
+                .with_context(|| {
+                    format!("plan artifact: layer {li} packed matrix")
+                })?)
+        } else {
+            None
+        };
+        let w_scale = d.f32()?;
+        let f32_rows = d.f32s("f32 rows")?;
+        let act = match d.u8()? {
+            0 => ActSpec::F32,
+            1 => ActSpec::Int { bits: d.u32()?,
+                                beta: d.f32()?,
+                                signed: dec_bool(&mut d,
+                                                 "act-signed")? },
+            t => bail!("plan artifact: unknown act tag {t}"),
+        };
+        let bias = if dec_bool(&mut d, "bias-present")? {
+            Some(d.f32s("bias")?)
+        } else {
+            None
+        };
+        let relu = dec_bool(&mut d, "relu")?;
+        let spatial = if dec_bool(&mut d, "spatial-present")? {
+            Some(dec_spatial(&mut d)?)
+        } else {
+            None
+        };
+        let pre = dec_pre(&mut d)?;
+        layers.push(PlanLayer { name, in_dim, out_dim, w_bits, kept,
+                                packed, w_scale, f32_rows, act, bias,
+                                relu, spatial, pre });
+    }
+    if d.pos != body.len() {
+        bail!("plan artifact: {} trailing bytes after the layer table",
+              body.len() - d.pos);
+    }
+    let plan = EnginePlan { model, input_dim, output_dim, layers };
+    plan.validate()
+        .context("plan artifact decoded but fails plan validation")?;
+    Ok(plan)
+}
+
+/// Write `plan` to `path` as a versioned artifact; returns the byte
+/// count written.
+pub fn save_plan(path: &Path, plan: &EnginePlan) -> Result<usize> {
+    let bytes = encode_plan(plan);
+    std::fs::write(path, &bytes)
+        .with_context(|| format!("write plan artifact {path:?}"))?;
+    Ok(bytes.len())
+}
+
+/// Read + decode an artifact. Structure and packed grids are
+/// validated; for the full static-verifier proof use
+/// [`load_plan_verified`].
+pub fn load_plan(path: &Path) -> Result<EnginePlan> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("read plan artifact {path:?}"))?;
+    decode_plan(&bytes)
+        .with_context(|| format!("decode plan artifact {path:?}"))
+}
+
+/// [`load_plan`] plus the machine-checked proof: compile both program
+/// paths (optionally forcing `backend`) and run `engine::verify` on
+/// each — explicitly, so release builds get the same guarantee as
+/// debug builds. The compiled pair is discarded; serving recompiles
+/// lazily as usual. This is what the registry pre-warm path and
+/// `bbits plan --load` go through.
+pub fn load_plan_verified(path: &Path, backend: Option<Backend>)
+                          -> Result<EnginePlan> {
+    let plan = load_plan(path)?;
+    let arc = Arc::new(plan);
+    let (int_prog, f32_prog) =
+        super::try_compile_pair_with(&arc, backend).map_err(|e| {
+            anyhow!("plan artifact {path:?}: decoded plan failed \
+                     static verification at compile: {e}")
+        })?;
+    for prog in [&int_prog, &f32_prog] {
+        prog.verify().map_err(|e| {
+            anyhow!("plan artifact {path:?} ({} path): static plan \
+                     verification failed: {e}",
+                    if prog.int_path() { "int" } else { "f32" })
+        })?;
+    }
+    // the compiled programs hold plan Arcs; drop them so the plan can
+    // be handed back by value (clone fallback is unreachable today)
+    drop((int_prog, f32_prog));
+    Ok(Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone()))
+}

@@ -59,6 +59,7 @@
 //! pins the whole pipeline bit-exactly.
 
 mod arena;
+pub mod artifact;
 pub mod graph;
 pub mod kernels;
 pub mod lower;
@@ -80,6 +81,7 @@ use crate::util::bench::{Bench, Summary};
 use crate::util::json::{num, s as jstr, Json};
 use pack::PackedMatrix;
 
+pub use artifact::{load_plan, load_plan_verified, save_plan};
 pub use graph::{ExecState, Program};
 pub use kernels::Backend;
 pub use lower::{lower, lower_with_mode, lower_with_mode_at,

@@ -122,6 +122,65 @@ impl PackedMatrix {
     pub fn packed_bytes(&self) -> usize {
         self.data.len() * 8
     }
+
+    /// The raw packed words, row-major with `cols.div_ceil(64/bits)`
+    /// words per row — the plan-artifact serialization unit
+    /// ([`crate::engine::artifact`]).
+    pub fn raw_words(&self) -> &[u64] {
+        &self.data
+    }
+
+    /// Rebuild a matrix from raw packed words (the artifact decode
+    /// path). Validates width/geometry and that every padding bit and
+    /// code field is in range, so a corrupt artifact surfaces as a
+    /// typed error here rather than as garbage codes downstream.
+    pub fn from_raw(bits: u32, signed: bool, rows: usize, cols: usize,
+                    data: Vec<u64>) -> Result<PackedMatrix> {
+        if !PACK_BITS.contains(&bits) {
+            bail!("unsupported pack width {bits} (chain: {PACK_BITS:?})");
+        }
+        let per = (64 / bits) as usize;
+        let words_per_row = cols.div_ceil(per);
+        if data.len() != words_per_row * rows {
+            bail!("packed data has {} words, {rows}x{cols} at {bits} \
+                   bits needs {}", data.len(), words_per_row * rows);
+        }
+        let m = PackedMatrix { bits, signed, rows, cols, words_per_row,
+                               data };
+        let (lo, hi) = code_range(bits, signed);
+        let mask = field_mask(bits);
+        let ext = 64 - bits;
+        for r in 0..rows {
+            let words = &m.data
+                [r * words_per_row..(r + 1) * words_per_row];
+            for c in 0..cols {
+                let raw = (words[c / per]
+                    >> ((c % per) as u32 * bits))
+                    & mask;
+                let q = if signed {
+                    ((raw << ext) as i64) >> ext
+                } else {
+                    raw as i64
+                };
+                if q < lo || q > hi {
+                    bail!("packed code {q} at ({r},{c}) outside \
+                           {bits}-bit range [{lo}, {hi}]");
+                }
+            }
+            // padding fields past `cols` must be zero — a nonzero pad
+            // means torn or misaligned artifact bytes
+            for c in cols..words_per_row * per {
+                let raw = (words[c / per]
+                    >> ((c % per) as u32 * bits))
+                    & mask;
+                if raw != 0 {
+                    bail!("nonzero padding field at row {r} col {c} \
+                           in packed data");
+                }
+            }
+        }
+        Ok(m)
+    }
 }
 
 fn field_mask(bits: u32) -> u64 {

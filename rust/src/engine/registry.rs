@@ -9,15 +9,41 @@
 //!
 //! ```text
 //!   Router::submit(model_id, x)
-//!        │  (name -> entry, rung pick, LRU touch, lazy compile)
+//!        │  (name -> entry, rung pick, LRU touch, slot claim)
 //!        v
-//!   ModelRegistry ── entry "a" ── rung t0.20/w2 ── Arc<EnginePlan>
-//!        │               │            └─ Active: {int+f32 Programs,
-//!        │               │                        Pool: queue+workers}
-//!        │               └─ rung t0.90/w8 ── … (cold: plan only)
-//!        ├─ entry "b" ── rung t0.34/w8 (single-rung = classic entry)
-//!        └─ CacheStats {hits, misses, recompiles, evictions}
+//!   ModelRegistry ── entry "a" ── version 2 (current: all routing)
+//!        │               │            ├─ rung t0.20/w2 ── Slot::Warm
+//!        │               │            │    {int+f32 Programs,
+//!        │               │            │     Pool: queue+workers}
+//!        │               │            └─ rung t0.90/w8 ── Slot::Cold
+//!        │               └─ version 1 (draining; retired once idle)
+//!        ├─ entry "b" ── version 3 ── rung t0.34/w8 ─ Slot::Compiling
+//!        │                                              (latch)
+//!        └─ CacheStats {hits, misses, recompiles, evictions,
+//!                       latch_waits, swaps, drained}
 //! ```
+//!
+//! **Compile latches.** A cold rung's checkpoint→compile→verify→
+//! pool-spawn runs *off* the registry mutex: `checkout` takes the
+//! lock only to claim the slot (`Cold → Compiling(latch)`) or read it
+//! back, racing submits to the same rung park on the rung's own
+//! latch, and submits to every other model see only an O(1) critical
+//! section — a cold compile never blocks warm traffic. The builder
+//! reconciles LRU/byte accounting (and the miss/recompile counters)
+//! under the lock only after the compile succeeded; a failed compile
+//! rolls the slot back to `Cold` untouched.
+//!
+//! **Versioned hot-swap.** Re-registering an id pushes a new ladder
+//! version: new submits route to it immediately, in-flight requests
+//! drain on the old version's rungs, and the superseded version is
+//! retired (pools shut down, bytes reclaimed, `cache.drained`) once
+//! every rung is idle — retirement ticks on submits, registrations,
+//! stats scrapes, and explicit [`ModelRegistry::retire_idle`] calls.
+//!
+//! **Fast cold start.** A lowered plan can be serialized to a
+//! versioned artifact ([`super::artifact`]) and reloaded without the
+//! checkpoint→lower step; [`ModelRegistry::prewarm`] then compiles
+//! every rung eagerly so the first request is a cache hit.
 //!
 //! Registration is cheap: a rung owns only the lowered
 //! [`EnginePlan`] (the weights). Both execution
@@ -45,7 +71,7 @@
 //! recompiled pool.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
@@ -61,16 +87,27 @@ use crate::rng::Pcg64;
 use crate::runtime::Manifest;
 use crate::util::json::{num, obj, Json};
 
-/// Plan-cache counters: every submit is a hit (programs resident) or
-/// a miss (cold compile); recompiles are the subset of misses whose
-/// rung had been compiled before (i.e. evicted in between). All four
-/// count rung-granular events.
+/// Plan-cache + lifecycle counters: every submit is a hit (programs
+/// resident), a miss (cold compile completed by this submit), or a
+/// latch wait (parked on another submit's in-flight compile);
+/// recompiles are the subset of misses whose rung had been compiled
+/// before (i.e. evicted in between). `swaps` counts re-registrations
+/// that installed a new ladder version under an existing name,
+/// `drained` counts superseded versions retired after their in-flight
+/// work drained. All counters are rung- or version-granular events.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub recompiles: u64,
     pub evictions: u64,
+    /// Submits that parked on a per-rung compile latch instead of
+    /// running (or being blocked by) the cold compile themselves.
+    pub latch_waits: u64,
+    /// Hot-swaps: `register*` under an already-registered name.
+    pub swaps: u64,
+    /// Superseded ladder versions retired once fully idle.
+    pub drained: u64,
 }
 
 impl CacheStats {
@@ -80,6 +117,9 @@ impl CacheStats {
             ("misses", num(self.misses as f64)),
             ("recompiles", num(self.recompiles as f64)),
             ("evictions", num(self.evictions as f64)),
+            ("latch_waits", num(self.latch_waits as f64)),
+            ("swaps", num(self.swaps as f64)),
+            ("drained", num(self.drained as f64)),
         ])
     }
 }
@@ -153,6 +193,63 @@ struct Active {
     cost_bytes: usize,
 }
 
+/// One-shot completion latch for a rung's cold compile. The submit
+/// that claims a cold slot compiles off the registry lock; racing
+/// submits to the *same* rung park here — on the rung's own condvar,
+/// never the registry mutex — until the compiler publishes the pool
+/// (or the failure). Submits to other models and warm rungs take the
+/// registry lock only for the O(1) slot readback.
+struct CompileLatch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+enum LatchState {
+    Pending,
+    Ready(Arc<Pool>),
+    Failed(String),
+}
+
+impl CompileLatch {
+    fn new() -> CompileLatch {
+        CompileLatch { state: Mutex::new(LatchState::Pending),
+                       cv: Condvar::new() }
+    }
+
+    fn ready(&self, pool: Arc<Pool>) {
+        *self.state.lock().unwrap() = LatchState::Ready(pool);
+        self.cv.notify_all();
+    }
+
+    fn fail(&self, err: &str) {
+        *self.state.lock().unwrap() =
+            LatchState::Failed(err.to_string());
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> std::result::Result<Arc<Pool>, String> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            match &*g {
+                LatchState::Pending => g = self.cv.wait(g).unwrap(),
+                LatchState::Ready(p) => return Ok(p.clone()),
+                LatchState::Failed(e) => return Err(e.clone()),
+            }
+        }
+    }
+}
+
+/// Lifecycle state of one rung's compiled side.
+enum Slot {
+    /// No compiled programs resident (never compiled, or evicted).
+    Cold,
+    /// A submit claimed the slot and is compiling off-lock; racing
+    /// submits park on the latch.
+    Compiling(Arc<CompileLatch>),
+    /// Compiled programs + pool resident and serving.
+    Warm(Active),
+}
+
 /// One rung of a model's precision ladder.
 struct Rung {
     label: String,
@@ -163,14 +260,19 @@ struct Rung {
     /// Survives eviction — stats are per *rung*, not per pool; the
     /// latency histogram is also the rung's measured cost signal.
     stats: Arc<StatsCell>,
-    active: Option<Active>,
+    slot: Slot,
     /// LRU tick of the last submit.
     last_used: u64,
     /// Whether this rung has ever compiled (recompile accounting).
     compiled_once: bool,
 }
 
-struct Entry {
+/// One registered ladder version. Re-registering an id pushes a new
+/// version: new submits route to the newest, in-flight work drains on
+/// the old rungs, and a superseded version is retired (pools shut
+/// down, bytes reclaimed) once every rung is idle.
+struct Version {
+    version: u64,
     cfg: ServeConfig,
     /// Ascending gate threshold == ascending precision; `rungs.last()`
     /// is the most accurate (the idle default), `rungs[0]` the
@@ -179,10 +281,28 @@ struct Entry {
     rungs: Vec<Rung>,
 }
 
-impl Entry {
-    /// The most accurate rung — the model's canonical plan.
+impl Version {
+    /// The most accurate rung — the version's canonical plan.
     fn top(&self) -> &Rung {
-        self.rungs.last().expect("entry has at least one rung")
+        self.rungs.last().expect("ladder has at least one rung")
+    }
+}
+
+struct Entry {
+    /// Oldest → newest; `versions.last()` is current (all routing),
+    /// earlier versions only drain. Never empty.
+    versions: Vec<Version>,
+}
+
+impl Entry {
+    fn current(&self) -> &Version {
+        self.versions.last().expect("entry has at least one version")
+    }
+
+    fn current_mut(&mut self) -> &mut Version {
+        self.versions
+            .last_mut()
+            .expect("entry has at least one version")
     }
 }
 
@@ -214,10 +334,22 @@ struct Inner {
     entries: BTreeMap<String, Entry>,
     /// Monotonic LRU clock, bumped per submit.
     clock: u64,
+    /// Monotonic ladder-version allocator (global across models).
+    next_version: u64,
     resident_bytes: usize,
     cache: CacheStats,
     closed: bool,
 }
+
+/// Test seam: called off the registry lock at the top of every cold
+/// rung compile with `(model_id, rung)`. Lets tests stall a compile
+/// (to race warm traffic against it) or fail it deterministically.
+/// Not a stable API.
+#[doc(hidden)]
+pub type CompileHook =
+    Arc<dyn Fn(&str, usize) -> std::result::Result<(), String>
+            + Send
+            + Sync>;
 
 /// Named multi-model serving front-end. See the module docs for the
 /// architecture; [`Router`] is the cheap clonable submit handle.
@@ -228,6 +360,8 @@ pub struct ModelRegistry {
     /// Span recorder handed to every pool spawned after `set_trace`;
     /// `None` keeps the serve path on its zero-overhead branch.
     trace: Mutex<Option<Arc<TraceRecorder>>>,
+    /// Test-only compile delay/failure injection ([`CompileHook`]).
+    compile_hook: Mutex<Option<CompileHook>>,
 }
 
 impl Default for ModelRegistry {
@@ -242,7 +376,8 @@ impl ModelRegistry {
     pub fn new() -> ModelRegistry {
         ModelRegistry { inner: Mutex::new(Inner::default()),
                         budget_bytes: None,
-                        trace: Mutex::new(None) }
+                        trace: Mutex::new(None),
+                        compile_hook: Mutex::new(None) }
     }
 
     /// Registry whose compiled programs + arenas are LRU-evicted once
@@ -251,19 +386,48 @@ impl ModelRegistry {
     pub fn with_budget(bytes: usize) -> ModelRegistry {
         ModelRegistry { inner: Mutex::new(Inner::default()),
                         budget_bytes: Some(bytes),
-                        trace: Mutex::new(None) }
+                        trace: Mutex::new(None),
+                        compile_hook: Mutex::new(None) }
     }
 
     pub fn budget_bytes(&self) -> Option<usize> {
         self.budget_bytes
     }
 
-    /// Attach (or detach) a span recorder. Pools spawned afterwards —
-    /// lazy compiles and post-eviction recompiles included — record
-    /// request spans and per-node kernel slices into it; pools already
-    /// running are unaffected, so set this before the first request.
-    pub fn set_trace(&self, trace: Option<Arc<TraceRecorder>>) {
+    /// Attach (or detach) a span recorder. Every pool spawned
+    /// afterwards — lazy compiles and post-eviction recompiles
+    /// included — records request spans and per-node kernel slices
+    /// into it. A pool keeps the recorder it started with, so this
+    /// **errors if any pool is already running or compiling**: attach
+    /// the recorder before the first request instead of mid-traffic
+    /// (evict the model first to force a recompile if you must
+    /// re-attach late).
+    pub fn set_trace(&self, trace: Option<Arc<TraceRecorder>>)
+                     -> Result<()> {
+        // held across the write so a cold claim can't slip between
+        // the liveness check and the recorder swap
+        let g = self.inner.lock().unwrap();
+        let live = g.entries.values().any(|e| {
+            e.versions.iter().any(|v| {
+                v.rungs
+                 .iter()
+                 .any(|r| !matches!(r.slot, Slot::Cold))
+            })
+        });
+        if live {
+            bail!("set_trace: pools are already running — a live pool \
+                   keeps the recorder it started with; attach the \
+                   recorder before the first request (or evict first)");
+        }
         *self.trace.lock().unwrap() = trace;
+        drop(g);
+        Ok(())
+    }
+
+    /// Install (or clear) the test-only cold-compile hook.
+    #[doc(hidden)]
+    pub fn _set_compile_hook(&self, hook: Option<CompileHook>) {
+        *self.compile_hook.lock().unwrap() = hook;
     }
 
     /// Register a lowered plan under `id` as a single-rung ladder at
@@ -354,7 +518,7 @@ impl ModelRegistry {
                     w_bits,
                     plan,
                     stats: Arc::new(StatsCell::new()),
-                    active: None,
+                    slot: Slot::Cold,
                     last_used: 0,
                     compiled_once: false,
                 }
@@ -364,10 +528,29 @@ impl ModelRegistry {
         if g.closed {
             bail!("registry is shut down");
         }
-        if g.entries.contains_key(id) {
-            bail!("model {id:?} is already registered");
+        let inner = &mut *g;
+        inner.next_version += 1;
+        let version =
+            Version { version: inner.next_version, cfg, rungs };
+        match inner.entries.get_mut(id) {
+            // hot-swap: the new version becomes current — every new
+            // submit routes to it, in-flight requests drain on the old
+            // rungs, and the superseded version retires (pools shut
+            // down, bytes reclaimed, `cache.drained`) once idle
+            Some(e) => {
+                e.versions.push(version);
+                inner.cache.swaps += 1;
+            }
+            None => {
+                inner.entries.insert(id.to_string(),
+                                     Entry { versions: vec![version] });
+            }
         }
-        g.entries.insert(id.to_string(), Entry { cfg, rungs });
+        let freed = sweep_idle_versions(inner);
+        drop(g);
+        for a in freed {
+            a.pool.shutdown();
+        }
         Ok(())
     }
 
@@ -423,7 +606,9 @@ impl ModelRegistry {
     }
 
     /// The live rung pick for `id`: per-rung measured p90 + backlog
-    /// gauges against the model's SLO and queue capacity.
+    /// gauges against the model's SLO and queue capacity. Always
+    /// picks within the *current* ladder version — older versions
+    /// only drain.
     fn pick_rung_for(&self, id: &str) -> Result<usize> {
         let (cells, slo, queue_cap, max_batch) = {
             let g = self.inner.lock().unwrap();
@@ -432,11 +617,12 @@ impl ModelRegistry {
                     g.entries.keys().map(|k| k.as_str()).collect();
                 bail!("unknown model {id:?} (registered: {known:?})");
             };
-            if e.rungs.len() <= 1 {
+            let v = e.current();
+            if v.rungs.len() <= 1 {
                 return Ok(0);
             }
-            (e.rungs.iter().map(|r| r.stats.clone()).collect::<Vec<_>>(),
-             e.cfg.slo, e.cfg.queue_cap, e.cfg.max_batch)
+            (v.rungs.iter().map(|r| r.stats.clone()).collect::<Vec<_>>(),
+             v.cfg.slo, v.cfg.queue_cap, v.cfg.max_batch)
         };
         // gauge + histogram reads happen off the registry lock — a
         // stats scrape or busy worker must not stall routing
@@ -480,53 +666,133 @@ impl ModelRegistry {
                tight for the offered concurrency");
     }
 
-    /// LRU-touch rung `rung` of `id`, lazily compiling + evicting as
-    /// needed, and return its live pool.
+    /// LRU-touch rung `rung` of `id`'s **current** ladder version,
+    /// lazily compiling + evicting as needed, and return its live
+    /// pool. The registry lock is held only to claim or read back the
+    /// rung slot — the checkpoint→compile→verify→pool-spawn work of a
+    /// cold rung runs off-lock behind the rung's [`CompileLatch`], so
+    /// a cold compile never blocks a warm model's submit.
     fn checkout(&self, id: &str, rung: usize, width: usize)
                 -> Result<Arc<Pool>> {
-        // evicted pools collected under the lock, drained after it —
-        // a victim's queue join must not stall other models' submits
-        let mut victims: Vec<Active> = Vec::new();
-        let mut g = self.inner.lock().unwrap();
-        // split the guard once so entries / cache / resident_bytes
-        // borrow as disjoint fields
-        let inner = &mut *g;
-        if inner.closed {
-            bail!("registry is shut down");
+        let (claim, retired) = {
+            let mut g = self.inner.lock().unwrap();
+            // split the guard once so entries / cache /
+            // resident_bytes borrow as disjoint fields
+            let inner = &mut *g;
+            if inner.closed {
+                bail!("registry is shut down");
+            }
+            // superseded versions whose pools have drained retire on
+            // the next registry touch; pools shut down off-lock below
+            let retired = sweep_idle_versions(inner);
+            let claim = claim_slot(inner, id, rung, width);
+            (claim, retired)
+        };
+        for a in retired {
+            a.pool.shutdown();
         }
-        if !inner.entries.contains_key(id) {
-            let known: Vec<&str> =
-                inner.entries.keys().map(|k| k.as_str()).collect();
-            bail!("unknown model {id:?} (registered: {known:?})");
+        match claim? {
+            Claim::Hit(pool) => Ok(pool),
+            Claim::Wait(latch) => latch.wait().map_err(|e| {
+                anyhow!("model {id:?}: the cold compile this submit \
+                         parked on failed: {e}")
+            }),
+            Claim::Build(job) => self.build_rung(id, rung, job),
         }
-        inner.clock += 1;
-        let now = inner.clock;
-        let e = inner.entries.get_mut(id).unwrap();
-        if rung >= e.rungs.len() {
-            bail!("model {id:?} has {} ladder rungs, rung {rung} \
-                   requested", e.rungs.len());
+    }
+
+    /// Run one claimed cold compile off-lock and reconcile the
+    /// outcome: on success the pool is installed (miss/recompile
+    /// counters and byte accounting settle here, and the LRU sweep
+    /// runs), on failure the slot rolls back to Cold with **no**
+    /// counter movement — a failed compile is not a miss and must not
+    /// make the next success report as a recompile. Either way the
+    /// latch is published so parked submits wake.
+    fn build_rung(&self, id: &str, rung: usize, job: BuildJob)
+                  -> Result<Arc<Pool>> {
+        let BuildJob { latch, plan, cfg, stats, version,
+                       compiled_once } = job;
+        match self.compile_slot(id, rung, plan, &cfg, stats) {
+            Err(err) => {
+                {
+                    let mut g = self.inner.lock().unwrap();
+                    if let Some(r) =
+                        find_rung(&mut g, id, version, rung)
+                    {
+                        if matches!(r.slot, Slot::Compiling(_)) {
+                            r.slot = Slot::Cold;
+                        }
+                    }
+                }
+                latch.fail(&format!("{err:#}"));
+                Err(err)
+            }
+            Ok((pool, cost_bytes)) => {
+                let mut victims: Vec<Active> = Vec::new();
+                let installed = {
+                    let mut g = self.inner.lock().unwrap();
+                    let inner = &mut *g;
+                    let found = !inner.closed
+                        && find_rung_inner(inner, id, version, rung)
+                            .is_some();
+                    if found {
+                        inner.cache.misses += 1;
+                        if compiled_once {
+                            inner.cache.recompiles += 1;
+                        }
+                        let r = find_rung_inner(inner, id, version,
+                                                rung)
+                            .expect("rung found above");
+                        r.compiled_once = true;
+                        r.slot = Slot::Warm(Active {
+                            pool: pool.clone(),
+                            cost_bytes,
+                        });
+                        inner.resident_bytes += cost_bytes;
+                        if let Some(budget) = self.budget_bytes {
+                            sweep_lru(inner, budget,
+                                      (id, version, rung),
+                                      &mut victims);
+                        }
+                    }
+                    found
+                };
+                // drain each victim's queue (every ticket answered)
+                // and join its workers with the registry unlocked;
+                // the programs + arenas drop with the pool
+                for a in victims {
+                    a.pool.shutdown();
+                }
+                if installed {
+                    latch.ready(pool.clone());
+                    Ok(pool)
+                } else {
+                    // the registry shut down while we compiled: the
+                    // slot is gone — drain the orphan pool and wake
+                    // parked submits with the typed failure
+                    pool.shutdown();
+                    latch.fail("rung was retired during its cold \
+                                compile");
+                    bail!("model {id:?}: rung was retired during its \
+                           cold compile");
+                }
+            }
         }
-        let r = &mut e.rungs[rung];
-        if width != r.plan.input_dim {
-            bail!("request has {width} values, model {id:?} wants {}",
-                  r.plan.input_dim);
+    }
+
+    /// The off-lock portion of a cold compile: test hook, compile +
+    /// static verification of both program paths, cost computation,
+    /// pool spawn. Holds no registry state.
+    fn compile_slot(&self, id: &str, rung: usize,
+                    plan: Arc<EnginePlan>, cfg: &ServeConfig,
+                    stats: Arc<StatsCell>)
+                    -> Result<(Arc<Pool>, usize)> {
+        if let Some(hook) = self.compile_hook.lock().unwrap().clone() {
+            hook(id, rung).map_err(|e| {
+                anyhow!("model {id:?} rung {rung}: compile hook \
+                         failed: {e}")
+            })?;
         }
-        r.last_used = now;
-        if let Some(a) = &r.active {
-            inner.cache.hits += 1;
-            return Ok(a.pool.clone());
-        }
-        // cold: compile both paths and spawn the pool. Done under the
-        // registry lock — submits to other (warm) models queue behind
-        // this compile; acceptable at current plan sizes, and it keeps
-        // the LRU/byte accounting trivially consistent.
-        inner.cache.misses += 1;
-        if r.compiled_once {
-            inner.cache.recompiles += 1;
-        }
-        r.compiled_once = true;
-        let (plan, cfg, stats) =
-            (r.plan.clone(), e.cfg.clone(), r.stats.clone());
         let (int_prog, f32_prog) =
             super::try_compile_pair_with(&plan, cfg.backend)
                 .map_err(|e| anyhow!("model {id:?}: plan failed \
@@ -547,54 +813,18 @@ impl ModelRegistry {
             + int_prog.panel_bytes();
         let trace = self.trace.lock().unwrap().clone();
         let pool = Arc::new(
-            Pool::start(plan, int_prog, f32_prog, cfg, stats, trace)
+            Pool::start(plan, int_prog, f32_prog, cfg.clone(), stats,
+                        trace)
                 .map_err(|e| anyhow!("{e}"))?,
         );
-        inner.resident_bytes += cost_bytes;
-        if let Some(budget) = self.budget_bytes {
-            while inner.resident_bytes > budget {
-                // evict the least-recently-used *other* resident rung
-                // (a cold rung of this same model is fair game)
-                let victim = inner
-                    .entries
-                    .iter()
-                    .flat_map(|(k, e)| {
-                        e.rungs.iter().enumerate().map(move |(ri, r)| {
-                            (k, ri, r)
-                        })
-                    })
-                    .filter(|(k, ri, r)| {
-                        r.active.is_some()
-                            && !(k.as_str() == id && *ri == rung)
-                    })
-                    .min_by_key(|(_, _, r)| r.last_used)
-                    .map(|(k, ri, _)| (k.clone(), ri));
-                let Some((vk, vr)) = victim else { break };
-                let a = inner.entries.get_mut(&vk).unwrap().rungs[vr]
-                    .active
-                    .take()
-                    .unwrap();
-                inner.resident_bytes -= a.cost_bytes;
-                inner.cache.evictions += 1;
-                victims.push(a);
-            }
-        }
-        inner.entries.get_mut(id).unwrap().rungs[rung].active =
-            Some(Active { pool: pool.clone(), cost_bytes });
-        drop(g);
-        // drain each victim's queue (every ticket answered) and join
-        // its workers with the registry unlocked; the programs +
-        // arenas drop with the pool
-        for a in victims {
-            a.pool.shutdown();
-        }
-        Ok(pool)
+        Ok((pool, cost_bytes))
     }
 
     /// Drop every resident rung of `id` (compiled programs + pool,
-    /// draining each queue), as the budget sweep would. Returns false
-    /// if unknown or already fully cold. The entry itself stays
-    /// registered.
+    /// draining each queue, across every live ladder version), as the
+    /// budget sweep would. Returns false if unknown or already fully
+    /// cold; rungs mid-compile are left to their builder. The entry
+    /// itself stays registered.
     pub fn evict(&self, id: &str) -> bool {
         let actives: Vec<Active> = {
             let mut g = self.inner.lock().unwrap();
@@ -603,13 +833,22 @@ impl ModelRegistry {
                 return false;
             };
             let mut v = Vec::new();
-            for r in e.rungs.iter_mut() {
-                if let Some(a) = r.active.take() {
-                    inner.resident_bytes -= a.cost_bytes;
-                    inner.cache.evictions += 1;
-                    v.push(a);
+            let mut bytes = 0usize;
+            let mut evictions = 0u64;
+            for ver in e.versions.iter_mut() {
+                for r in ver.rungs.iter_mut() {
+                    match std::mem::replace(&mut r.slot, Slot::Cold) {
+                        Slot::Warm(a) => {
+                            bytes += a.cost_bytes;
+                            evictions += 1;
+                            v.push(a);
+                        }
+                        other => r.slot = other,
+                    }
                 }
             }
+            inner.resident_bytes -= bytes;
+            inner.cache.evictions += evictions;
             v
         };
         if actives.is_empty() {
@@ -622,30 +861,79 @@ impl ModelRegistry {
         true
     }
 
+    /// Eagerly compile + spawn every rung of `id`'s current ladder
+    /// version — the register-time pre-warm path, so the first submit
+    /// is a cache hit instead of a cold compile. Each rung counts as
+    /// a normal miss; submits racing the pre-warm park on the same
+    /// per-rung latches.
+    pub fn prewarm(&self, id: &str) -> Result<()> {
+        let widths: Vec<usize> = {
+            let g = self.inner.lock().unwrap();
+            let Some(e) = g.entries.get(id) else {
+                let known: Vec<&str> =
+                    g.entries.keys().map(|k| k.as_str()).collect();
+                bail!("unknown model {id:?} (registered: {known:?})");
+            };
+            e.current()
+             .rungs
+             .iter()
+             .map(|r| r.plan.input_dim)
+             .collect()
+        };
+        for (rung, width) in widths.into_iter().enumerate() {
+            self.checkout(id, rung, width)?;
+        }
+        Ok(())
+    }
+
+    /// Run one retirement sweep: superseded ladder versions with no
+    /// in-flight compile and zero backlog on every rung are removed
+    /// and their pools drained. Returns the number of versions
+    /// retired. Retirement also runs opportunistically on every
+    /// submit, registration, and stats scrape, so calling this is
+    /// only needed to bound *when* an idle old version's memory is
+    /// reclaimed.
+    pub fn retire_idle(&self) -> u64 {
+        let (freed, n) = {
+            let mut g = self.inner.lock().unwrap();
+            let inner = &mut *g;
+            let before = inner.cache.drained;
+            let freed = sweep_idle_versions(inner);
+            (freed, inner.cache.drained - before)
+        };
+        for a in freed {
+            a.pool.shutdown();
+        }
+        n
+    }
+
     /// Registered model ids, sorted.
     pub fn model_ids(&self) -> Vec<String> {
         self.inner.lock().unwrap().entries.keys().cloned().collect()
     }
 
-    /// The model's canonical lowered plan — the most accurate rung's
-    /// (always resident, even when the compiled programs are evicted).
+    /// The model's canonical lowered plan — the current version's
+    /// most accurate rung's (always resident, even when the compiled
+    /// programs are evicted).
     pub fn plan(&self, id: &str) -> Option<Arc<EnginePlan>> {
         self.inner
             .lock()
             .unwrap()
             .entries
             .get(id)
-            .map(|e| e.top().plan.clone())
+            .map(|e| e.current().top().plan.clone())
     }
 
-    /// Reporting view of `id`'s ladder, ascending threshold order.
+    /// Reporting view of `id`'s current ladder version, ascending
+    /// threshold order.
     pub fn ladder(&self, id: &str) -> Option<Vec<RungInfo>> {
         let rungs: Vec<(String, f64, f64, u32, bool, Arc<StatsCell>)> = {
             let g = self.inner.lock().unwrap();
-            g.entries.get(id)?.rungs
+            g.entries.get(id)?.current().rungs
                 .iter()
                 .map(|r| (r.label.clone(), r.threshold, r.score,
-                          r.w_bits, r.active.is_some(),
+                          r.w_bits,
+                          matches!(r.slot, Slot::Warm(_)),
                           r.stats.clone()))
                 .collect()
         };
@@ -658,14 +946,27 @@ impl ModelRegistry {
             .collect())
     }
 
-    /// Whether any of `id`'s rungs is currently resident.
+    /// Whether any of `id`'s rungs (any live version) is currently
+    /// resident.
     pub fn is_resident(&self, id: &str) -> Option<bool> {
+        self.inner.lock().unwrap().entries.get(id).map(|e| {
+            e.versions.iter().any(|v| {
+                v.rungs
+                 .iter()
+                 .any(|r| matches!(r.slot, Slot::Warm(_)))
+            })
+        })
+    }
+
+    /// `id`'s current ladder version number and how many versions are
+    /// still live (current + superseded-but-draining).
+    pub fn versions(&self, id: &str) -> Option<(u64, usize)> {
         self.inner
             .lock()
             .unwrap()
             .entries
             .get(id)
-            .map(|e| e.rungs.iter().any(|r| r.active.is_some()))
+            .map(|e| (e.current().version, e.versions.len()))
     }
 
     /// Summed cost of every resident compiled rung.
@@ -684,25 +985,27 @@ impl ModelRegistry {
         Some(merged_cells_stats(&cells))
     }
 
-    /// The stats cell of `id`'s most accurate rung (test oracle
-    /// access; single-rung models have exactly one cell).
+    /// The stats cell of `id`'s current most accurate rung (test
+    /// oracle access; single-rung models have exactly one cell).
     pub(crate) fn stats_cell(&self, id: &str) -> Option<Arc<StatsCell>> {
         self.inner
             .lock()
             .unwrap()
             .entries
             .get(id)
-            .map(|e| e.top().stats.clone())
+            .map(|e| e.current().top().stats.clone())
     }
 
-    /// Every stats cell of `id`'s ladder, ascending threshold order.
+    /// Every stats cell of `id`'s ladder across **all** live versions
+    /// (oldest first), so per-model totals keep counting traffic that
+    /// is still draining on a superseded version.
     fn rung_cells(&self, id: &str) -> Option<Vec<Arc<StatsCell>>> {
-        self.inner
-            .lock()
-            .unwrap()
-            .entries
-            .get(id)
-            .map(|e| e.rungs.iter().map(|r| r.stats.clone()).collect())
+        self.inner.lock().unwrap().entries.get(id).map(|e| {
+            e.versions
+             .iter()
+             .flat_map(|v| v.rungs.iter().map(|r| r.stats.clone()))
+             .collect()
+        })
     }
 
     /// Aggregate stats across every model and rung: counters and
@@ -716,25 +1019,39 @@ impl ModelRegistry {
             let g = self.inner.lock().unwrap();
             g.entries
                 .values()
-                .flat_map(|e| e.rungs.iter().map(|r| r.stats.clone()))
+                .flat_map(|e| {
+                    e.versions.iter().flat_map(|v| {
+                        v.rungs.iter().map(|r| r.stats.clone())
+                    })
+                })
                 .collect()
         };
         merged_cells_stats(&cells)
     }
 
     /// The full stats surface as one JSON document:
-    /// `{"models": {id: ServeStats… + "rungs": {label: rung row…}},
+    /// `{"models": {id: ServeStats… + "rungs": {label: rung row…}
+    ///              + "version"/"versions_live"},
     ///   "aggregate": ServeStats,
-    ///   "cache": {hits, misses, recompiles, evictions,
-    ///             budget_bytes, resident_bytes, resident_models}}`.
+    ///   "cache": {hits, misses, recompiles, evictions, latch_waits,
+    ///             swaps, drained, budget_bytes, resident_bytes,
+    ///             resident_models}}`.
     /// Each rung row is the rung's own ServeStats plus its threshold,
-    /// proxy score, max weight bits, and residency.
+    /// proxy score, max weight bits, and residency (current ladder
+    /// version; per-model totals also count draining old versions).
+    /// A stats scrape doubles as a retirement tick: superseded
+    /// versions that have gone idle are reclaimed first.
     pub fn stats_json(&self) -> Json {
+        self.retire_idle();
         let ids = self.model_ids();
         let mut models = BTreeMap::new();
         for id in &ids {
             let Some(cells) = self.rung_cells(id) else { continue };
             let Some(infos) = self.ladder(id) else { continue };
+            let Some((version, versions_live)) = self.versions(id)
+            else {
+                continue;
+            };
             let mut st = match merged_cells_stats(&cells).to_json() {
                 Json::Obj(m) => m,
                 _ => unreachable!("ServeStats::to_json is an object"),
@@ -769,13 +1086,22 @@ impl ModelRegistry {
                 rungs.insert(info.label, Json::Obj(row));
             }
             st.insert("rungs".to_string(), Json::Obj(rungs));
+            st.insert("version".to_string(), num(version as f64));
+            st.insert("versions_live".to_string(),
+                      num(versions_live as f64));
             models.insert(id.clone(), Json::Obj(st));
         }
         let g = self.inner.lock().unwrap();
         let resident: Vec<Json> = g
             .entries
             .iter()
-            .filter(|(_, e)| e.rungs.iter().any(|r| r.active.is_some()))
+            .filter(|(_, e)| {
+                e.versions.iter().any(|v| {
+                    v.rungs
+                     .iter()
+                     .any(|r| matches!(r.slot, Slot::Warm(_)))
+                })
+            })
             .map(|(k, _)| Json::Str(k.clone()))
             .collect();
         // start from the canonical counter serialization so a counter
@@ -802,28 +1128,208 @@ impl ModelRegistry {
         ]))
     }
 
-    /// Stop accepting requests and drain + join every resident pool.
-    /// Queued requests are still answered; idempotent.
+    /// Stop accepting requests and drain + join every resident pool
+    /// (every live version). Queued requests are still answered;
+    /// idempotent. A rung mid-compile is left to its builder, which
+    /// observes `closed`, drains its orphan pool, and fails its latch.
     pub fn shutdown(&self) {
         let actives: Vec<Active> = {
             let mut g = self.inner.lock().unwrap();
             let inner = &mut *g;
             inner.closed = true;
             let mut v = Vec::new();
+            let mut bytes = 0usize;
             for e in inner.entries.values_mut() {
-                for r in e.rungs.iter_mut() {
-                    if let Some(a) = r.active.take() {
-                        inner.resident_bytes -= a.cost_bytes;
-                        v.push(a);
+                for ver in e.versions.iter_mut() {
+                    for r in ver.rungs.iter_mut() {
+                        match std::mem::replace(&mut r.slot,
+                                                Slot::Cold) {
+                            Slot::Warm(a) => {
+                                bytes += a.cost_bytes;
+                                v.push(a);
+                            }
+                            other => r.slot = other,
+                        }
                     }
                 }
             }
+            inner.resident_bytes -= bytes;
             v
         };
         for a in actives {
             a.pool.shutdown();
         }
     }
+}
+
+/// What one locked claim pass decided for a checkout.
+enum Claim {
+    /// Rung is warm: counted as a hit.
+    Hit(Arc<Pool>),
+    /// Another submit is compiling this rung: park on its latch.
+    Wait(Arc<CompileLatch>),
+    /// This submit claimed the cold slot: compile off-lock.
+    Build(BuildJob),
+}
+
+/// Everything a claimed cold compile needs off-lock, captured under
+/// the claim so the builder never re-reads registry state it didn't
+/// pin.
+struct BuildJob {
+    latch: Arc<CompileLatch>,
+    plan: Arc<EnginePlan>,
+    cfg: ServeConfig,
+    stats: Arc<StatsCell>,
+    /// Ladder version the slot belongs to — the install step re-finds
+    /// the rung by (id, version, rung) so a hot-swap racing the
+    /// compile can never install into the wrong ladder.
+    version: u64,
+    compiled_once: bool,
+}
+
+/// The O(1) under-lock portion of checkout: validate, LRU-touch, and
+/// read back or claim the rung slot of `id`'s current version.
+fn claim_slot(inner: &mut Inner, id: &str, rung: usize, width: usize)
+              -> Result<Claim> {
+    if !inner.entries.contains_key(id) {
+        let known: Vec<&str> =
+            inner.entries.keys().map(|k| k.as_str()).collect();
+        bail!("unknown model {id:?} (registered: {known:?})");
+    }
+    inner.clock += 1;
+    let now = inner.clock;
+    let e = inner.entries.get_mut(id).unwrap();
+    let v = e.current_mut();
+    if rung >= v.rungs.len() {
+        bail!("model {id:?} has {} ladder rungs, rung {rung} \
+               requested", v.rungs.len());
+    }
+    let version = v.version;
+    let cfg = v.cfg.clone();
+    let r = &mut v.rungs[rung];
+    if width != r.plan.input_dim {
+        bail!("request has {width} values, model {id:?} wants {}",
+              r.plan.input_dim);
+    }
+    r.last_used = now;
+    Ok(match &r.slot {
+        Slot::Warm(a) => {
+            inner.cache.hits += 1;
+            Claim::Hit(a.pool.clone())
+        }
+        Slot::Compiling(latch) => {
+            inner.cache.latch_waits += 1;
+            Claim::Wait(latch.clone())
+        }
+        Slot::Cold => {
+            let latch = Arc::new(CompileLatch::new());
+            r.slot = Slot::Compiling(latch.clone());
+            Claim::Build(BuildJob { latch,
+                                    plan: r.plan.clone(),
+                                    cfg,
+                                    stats: r.stats.clone(),
+                                    version,
+                                    compiled_once: r.compiled_once })
+        }
+    })
+}
+
+/// Locate a rung by (id, ladder version, rung index); `None` once the
+/// version has been retired or the id dropped.
+fn find_rung_inner<'a>(inner: &'a mut Inner, id: &str, version: u64,
+                       rung: usize) -> Option<&'a mut Rung> {
+    inner
+        .entries
+        .get_mut(id)?
+        .versions
+        .iter_mut()
+        .find(|v| v.version == version)?
+        .rungs
+        .get_mut(rung)
+}
+
+fn find_rung<'a>(g: &'a mut std::sync::MutexGuard<'_, Inner>, id: &str,
+                 version: u64, rung: usize) -> Option<&'a mut Rung> {
+    find_rung_inner(&mut *g, id, version, rung)
+}
+
+/// Evict least-recently-used warm rungs (any model, any version —
+/// except the rung just installed, identified by `keep`) until the
+/// resident byte total fits `budget`. Victims are handed back for
+/// off-lock shutdown.
+fn sweep_lru(inner: &mut Inner, budget: usize,
+             keep: (&str, u64, usize), victims: &mut Vec<Active>) {
+    let (keep_id, keep_version, keep_rung) = keep;
+    while inner.resident_bytes > budget {
+        let victim = inner
+            .entries
+            .iter()
+            .flat_map(|(k, e)| {
+                e.versions.iter().flat_map(move |v| {
+                    v.rungs
+                     .iter()
+                     .enumerate()
+                     .map(move |(ri, r)| (k, v.version, ri, r))
+                })
+            })
+            .filter(|(k, vv, ri, r)| {
+                matches!(r.slot, Slot::Warm(_))
+                    && !(k.as_str() == keep_id
+                         && *vv == keep_version
+                         && *ri == keep_rung)
+            })
+            .min_by_key(|(_, _, _, r)| r.last_used)
+            .map(|(k, vv, ri, _)| (k.clone(), vv, ri));
+        let Some((vk, vv, vr)) = victim else { break };
+        let e = inner.entries.get_mut(&vk).expect("victim id exists");
+        let ver = e
+            .versions
+            .iter_mut()
+            .find(|v| v.version == vv)
+            .expect("victim version exists");
+        let a = match std::mem::replace(&mut ver.rungs[vr].slot,
+                                        Slot::Cold) {
+            Slot::Warm(a) => a,
+            _ => unreachable!("victim filter selects warm slots"),
+        };
+        inner.resident_bytes -= a.cost_bytes;
+        inner.cache.evictions += 1;
+        victims.push(a);
+    }
+}
+
+/// Retire superseded ladder versions whose rungs have fully drained:
+/// no in-flight compile and zero backlog. Warm pools are handed back
+/// for off-lock shutdown; bytes and the `drained` counter settle
+/// here. The current (last) version is never retired.
+fn sweep_idle_versions(inner: &mut Inner) -> Vec<Active> {
+    let mut freed = Vec::new();
+    let mut bytes_freed = 0usize;
+    let mut drained = 0u64;
+    for e in inner.entries.values_mut() {
+        let mut i = 0;
+        while e.versions.len() > 1 && i < e.versions.len() - 1 {
+            let idle = e.versions[i].rungs.iter().all(|r| {
+                !matches!(r.slot, Slot::Compiling(_))
+                    && r.stats.backlog() == 0
+            });
+            if !idle {
+                i += 1;
+                continue;
+            }
+            let v = e.versions.remove(i);
+            for r in v.rungs {
+                if let Slot::Warm(a) = r.slot {
+                    bytes_freed += a.cost_bytes;
+                    freed.push(a);
+                }
+            }
+            drained += 1;
+        }
+    }
+    inner.resident_bytes -= bytes_freed;
+    inner.cache.drained += drained;
+    freed
 }
 
 /// Merge a set of stats cells into one [`ServeStats`].

@@ -801,7 +801,9 @@ impl Server {
     fn start_inner(plan: Arc<EnginePlan>, cfg: ServeConfig,
                    trace: Option<Arc<TraceRecorder>>) -> Result<Server> {
         let registry = Arc::new(ModelRegistry::new());
-        registry.set_trace(trace);
+        registry
+            .set_trace(trace)
+            .expect("fresh registry has no running pools");
         let id = if plan.model.is_empty() {
             "default".to_string()
         } else {
@@ -925,6 +927,46 @@ mod tests {
     // Per-field ServeConfig validation (typed ServeConfigError) is
     // pinned in tests/serve.rs (config_zero_fields_are_typed_errors_
     // not_hangs) alongside the other lifecycle edges.
+
+    // Sized for the Miri CI lane (see ci.yml): a [2,3,2] plan and one
+    // worker keep the interpreter run to seconds while still crossing
+    // every queue/condvar/join edge of the shutdown path twice.
+    #[test]
+    fn pool_shutdown_drains_joins_and_stays_idempotent() {
+        let plan = Arc::new(
+            synthetic_plan("m", &[2, 3, 2], 4, 4, 0.0, 5).unwrap());
+        let server = Server::start(
+            plan.clone(),
+            ServeConfig {
+                workers: 1,
+                queue_cap: 4,
+                max_batch: 2,
+                deadline: Duration::from_micros(1),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let mut eng = Engine::new(plan);
+        let tickets: Vec<(Ticket, Vec<f32>)> = (0..2)
+            .map(|i| {
+                let x = vec![0.25 * (i as f32 + 1.0), -0.5];
+                let want = eng.infer(&x).unwrap();
+                (server.submit(x).unwrap(), want)
+            })
+            .collect();
+        // shutdown drains: both queued tickets still get answers
+        let registry = server.registry().clone();
+        let stats = server.shutdown();
+        for (t, want) in tickets {
+            assert_eq!(t.wait().unwrap(), want);
+        }
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.errors, 0);
+        // idempotent: a second shutdown (and later Drop) is a no-op,
+        // and post-shutdown submits are rejected, not queued forever
+        registry.shutdown();
+        assert!(registry.submit("m", vec![0.0, 0.0]).is_err());
+    }
 
     #[test]
     fn closed_loop_counts_every_request() {

@@ -30,6 +30,15 @@
 //!    MR/KC geometry, zero-padded remainders, and per-group row blocks
 //!    match the node's layer; SIMD/scalar assignments obey the
 //!    lane-width auto rule unless a forced override is recorded.
+//! 5. **f32 range / adapter geometry** — the integer intervals extend
+//!    through the float edges: requantize-scale products
+//!    (`acc_bound * |scale| + max|bias|`), dequantize steps, and
+//!    f32-path matmuls are bounded and rejected when the bound is
+//!    non-finite or past `f32::MAX` (the kernel would materialize
+//!    `inf`); `AdaptSpatial`/`AdaptFeatures` nodes are checked
+//!    against the plan manifest (the layer's pre-op tuple and its
+//!    spatial input geometry), catching transposed adapters whose
+//!    flat length is right but whose NHWC interpretation is not.
 //!
 //! [`verify`] returns the first [`VerifyError`]; [`verify_all`]
 //! collects every finding. Neither ever panics — a corrupt program
@@ -48,7 +57,7 @@ use std::fmt;
 use super::graph::{BufId, DType, Node, Program};
 use super::kernels::{self, Backend};
 use super::pack::{code_range, KC, MR};
-use super::ActSpec;
+use super::{ActSpec, PlanLayer, PreOp};
 
 /// One statically-proven defect in a compiled [`Program`]. Each
 /// variant is a distinct failure class; `tests/verify.rs` pins the
@@ -133,6 +142,16 @@ pub enum VerifyError {
         lane_dim: usize,
         lanes: usize,
     },
+    /// A statically-bounded f32 edge can exceed `f32::MAX` (or the
+    /// bound itself is non-finite): a requantize-scale product,
+    /// dequantize step, bias add, or f32-path matmul whose worst case
+    /// materializes `inf` and poisons everything downstream.
+    F32RangeOverflow { node: usize, op: &'static str, bound: f64 },
+    /// An adapter node's geometry disagrees with the plan manifest:
+    /// `AdaptSpatial` from/to vs the layer's pre-op tuple and spatial
+    /// input dims, or `AdaptFeatures` width vs the layer's input
+    /// width.
+    AdapterGeometry { node: usize, detail: String },
 }
 
 /// Which accumulator a kernel's dispatch rule selects for a node.
@@ -298,6 +317,15 @@ impl fmt::Display for VerifyError {
                  forced override is recorded",
                 backend.label()
             ),
+            VerifyError::F32RangeOverflow { node, op, bound } => write!(
+                f,
+                "node {node} ({op}): f32 edge can reach magnitude \
+                 {bound:e}, past f32::MAX — the kernel would \
+                 materialize inf"
+            ),
+            VerifyError::AdapterGeometry { node, detail } => {
+                write!(f, "node {node}: adapter geometry: {detail}")
+            }
         }
     }
 }
@@ -329,6 +357,7 @@ pub fn verify_all(prog: &Program) -> Vec<VerifyError> {
     check_arena(prog, &live, &mut errs);
     check_backends(prog, &mut errs);
     check_overflow(prog, &mut errs);
+    check_adapters(prog, &mut errs);
     errs
 }
 
@@ -961,6 +990,11 @@ fn check_overflow(prog: &Program, errs: &mut Vec<VerifyError>) {
     let nb = prog.bufs.len();
     // per-buffer code interval, seeded by quantizing producers
     let mut range: Vec<Option<(i64, i64)>> = vec![None; nb];
+    // per-buffer f32 magnitude bound and i64-accumulator magnitude
+    // bound (as f64, so a corrupt scale can only saturate to inf,
+    // never wrap) — the float continuation of `range`
+    let mut fmag: Vec<Option<f64>> = vec![None; nb];
+    let mut accmag: Vec<Option<f64>> = vec![None; nb];
     for (i, node) in prog.nodes.iter().enumerate() {
         // propagate the producing grid's range to the written buffer
         match node {
@@ -973,6 +1007,8 @@ fn check_overflow(prog: &Program, errs: &mut Vec<VerifyError>) {
             }
             _ => {}
         }
+        propagate_f32(prog, i, node, &range, &mut fmag,
+                      &mut accmag, errs);
         let (int_kernel, op) = match node {
             Node::Gemm { int: true, .. } => (true, node.op_name()),
             Node::Conv2d { int: true, .. } => (true, node.op_name()),
@@ -1026,6 +1062,11 @@ fn check_overflow(prog: &Program, errs: &mut Vec<VerifyError>) {
                 .unwrap_or(l.in_dim),
             _ => l.in_dim,
         };
+        // the i64 total a downstream requantize will scale: w*a over
+        // the full reduction, independent of the partial-sum path
+        if let Some(r) = accmag.get_mut(node.writes()) {
+            *r = Some(max_w as f64 * max_a as f64 * red as f64);
+        }
         let mut low = kernels::low_bit_pair(packed.bits, a_bits);
         if matches!(node, Node::DwConv2d { .. }) {
             low = low && red <= kernels::I32_BLOCK;
@@ -1086,6 +1127,229 @@ fn check_overflow(prog: &Program, errs: &mut Vec<VerifyError>) {
                     limit: i64::MAX as i128,
                 });
             }
+        }
+    }
+}
+
+/// Largest-magnitude bias entry of a layer (`0` when bias-less);
+/// NaN-propagating so a poisoned bias fails the finiteness check
+/// instead of vanishing under IEEE `max`.
+fn bias_mag(l: &PlanLayer) -> f64 {
+    let mut m = 0.0f64;
+    if let Some(b) = &l.bias {
+        for &v in b {
+            let a = (v as f64).abs();
+            if a.is_nan() {
+                return f64::NAN;
+            }
+            m = m.max(a);
+        }
+    }
+    m
+}
+
+/// Largest-magnitude entry of a layer's simulated-quant f32 rows,
+/// NaN-propagating like [`bias_mag`].
+fn rows_mag(rows: &[f32]) -> f64 {
+    let mut m = 0.0f64;
+    for &v in rows {
+        let a = (v as f64).abs();
+        if a.is_nan() {
+            return f64::NAN;
+        }
+        m = m.max(a);
+    }
+    m
+}
+
+/// Extend the integer code intervals through the program's f32 edges.
+/// A per-buffer worst-case magnitude is pushed through dequantize
+/// steps, f32-path kernels, requantize-scale products, and epilogue
+/// bias adds; any edge whose bound is non-finite or past `f32::MAX`
+/// is rejected (the interpreter would materialize `inf`). Pool and
+/// adapter nodes never increase magnitude, so they pass their source
+/// bound through; the program input itself is unbounded (`None`),
+/// which leaves edges unchecked until the first quantize pins a
+/// range — the analysis only ever *under*-reports, never cries wolf.
+fn propagate_f32(
+    prog: &Program,
+    i: usize,
+    node: &Node,
+    range: &[Option<(i64, i64)>],
+    fmag: &mut [Option<f64>],
+    accmag: &mut [Option<f64>],
+    errs: &mut Vec<VerifyError>,
+) {
+    let layer = |li: usize| prog.plan.layers.get(li);
+    let check = |errs: &mut Vec<VerifyError>, bound: f64,
+                 op: &'static str| {
+        if !bound.is_finite() || bound > f32::MAX as f64 {
+            errs.push(VerifyError::F32RangeOverflow {
+                node: i,
+                op,
+                bound,
+            });
+        }
+        bound
+    };
+    match node {
+        Node::Dequantize { src, dst, step } => {
+            let Some((lo, hi)) = range.get(*src).copied().flatten()
+            else {
+                return;
+            };
+            let b = check(
+                errs,
+                (*step as f64).abs() * interval_mag(lo, hi) as f64,
+                node.op_name(),
+            );
+            if let Some(slot) = fmag.get_mut(*dst) {
+                *slot = Some(b);
+            }
+        }
+        Node::MaxPool2 { src, dst, .. }
+        | Node::GlobalAvgPool { src, dst, .. }
+        | Node::AdaptSpatial { src, dst, .. }
+        | Node::AdaptFeatures { src, dst, .. } => {
+            let m = fmag.get(*src).copied().flatten();
+            if let Some(slot) = fmag.get_mut(*dst) {
+                *slot = m;
+            }
+        }
+        Node::Gemm { layer: li, src, dst, int: false, .. }
+        | Node::Conv2d { layer: li, src, dst, int: false, .. } => {
+            let Some(l) = layer(*li) else { return };
+            let Some(m) = fmag.get(*src).copied().flatten() else {
+                return;
+            };
+            let b = check(
+                errs,
+                m * rows_mag(&l.f32_rows) * l.in_dim as f64,
+                node.op_name(),
+            );
+            if let Some(slot) = fmag.get_mut(*dst) {
+                *slot = Some(b);
+            }
+        }
+        Node::Requant { layer: li, src, dst, scale, .. } => {
+            let Some(l) = layer(*li) else { return };
+            let Some(a) = accmag.get(*src).copied().flatten() else {
+                return;
+            };
+            let b = check(
+                errs,
+                a * scale.abs() + bias_mag(l),
+                node.op_name(),
+            );
+            if let Some(slot) = fmag.get_mut(*dst) {
+                *slot = Some(b);
+            }
+        }
+        Node::RequantQuantize { layer: li, src, scale, .. } => {
+            let Some(l) = layer(*li) else { return };
+            let Some(a) = accmag.get(*src).copied().flatten() else {
+                return;
+            };
+            // dst carries codes (its range is seeded from the grid);
+            // the bound guards the f32 intermediate inside the fusion
+            check(errs, a * scale.abs() + bias_mag(l), node.op_name());
+        }
+        Node::Epilogue { layer: li, src, dst, .. } => {
+            let Some(l) = layer(*li) else { return };
+            let Some(m) = fmag.get(*src).copied().flatten() else {
+                return;
+            };
+            let b = check(errs, m + bias_mag(l), node.op_name());
+            if let Some(slot) = fmag.get_mut(*dst) {
+                *slot = Some(b);
+            }
+        }
+        Node::EpilogueQuantize { layer: li, src, .. } => {
+            let Some(l) = layer(*li) else { return };
+            let Some(m) = fmag.get(*src).copied().flatten() else {
+                return;
+            };
+            check(errs, m + bias_mag(l), node.op_name());
+        }
+        Node::BiasFill { layer: li, dst, .. } => {
+            let Some(l) = layer(*li) else { return };
+            let b = check(errs, bias_mag(l), node.op_name());
+            if let Some(slot) = fmag.get_mut(*dst) {
+                *slot = Some(b);
+            }
+        }
+        _ => {}
+    }
+}
+
+// ------------------------------------------------------------------
+// Adapter geometry vs the plan manifest
+// ------------------------------------------------------------------
+
+/// Check `AdaptSpatial`/`AdaptFeatures` nodes against the plan
+/// manifest. An adapter is only ever materialized from its owning
+/// layer's pre-op, so its tuple must match the manifest's, and when
+/// the layer is spatial the adapter must feed exactly the spatial
+/// input geometry — a transposed tuple has the right flat length but
+/// a silently wrong NHWC interpretation, which no downstream shape
+/// check can see.
+fn check_adapters(prog: &Program, errs: &mut Vec<VerifyError>) {
+    for (i, node) in prog.nodes.iter().enumerate() {
+        let Some(&li) = prog.node_layer.get(i) else { continue };
+        let Some(l) = prog.plan.layers.get(li) else { continue };
+        match node {
+            Node::AdaptSpatial { from, to, .. } => {
+                match &l.pre {
+                    PreOp::AdaptSpatial { from: mf, to: mt } => {
+                        if from != mf || to != mt {
+                            errs.push(VerifyError::AdapterGeometry {
+                                node: i,
+                                detail: format!(
+                                    "AdaptSpatial {from:?}->{to:?} \
+                                     disagrees with layer {li}'s \
+                                     manifest pre-op {mf:?}->{mt:?}"
+                                ),
+                            });
+                        }
+                    }
+                    other => {
+                        errs.push(VerifyError::AdapterGeometry {
+                            node: i,
+                            detail: format!(
+                                "AdaptSpatial node on layer {li}, \
+                                 whose manifest pre-op is {other:?}"
+                            ),
+                        });
+                    }
+                }
+                if let Some(sp) = &l.spatial {
+                    let want = (sp.in_h, sp.in_w, sp.in_c);
+                    if *to != want {
+                        errs.push(VerifyError::AdapterGeometry {
+                            node: i,
+                            detail: format!(
+                                "AdaptSpatial feeds layer {li} as \
+                                 {to:?} but its spatial plan reads \
+                                 {want:?}"
+                            ),
+                        });
+                    }
+                }
+            }
+            Node::AdaptFeatures { want, .. } => {
+                let need = l.input_len();
+                if *want != need {
+                    errs.push(VerifyError::AdapterGeometry {
+                        node: i,
+                        detail: format!(
+                            "AdaptFeatures width {want} disagrees \
+                             with layer {li}'s manifest input width \
+                             {need}"
+                        ),
+                    });
+                }
+            }
+            _ => {}
         }
     }
 }

@@ -117,6 +117,14 @@ fn run(argv: &[String]) -> Result<()> {
 /// plan otherwise. Shared by `bbits serve` and `bbits plan`.
 fn plan_from_args(args: &Args, opt: &ExpOptions)
                   -> Result<engine::EnginePlan> {
+    if let Some(path) = args.opt_flag("load") {
+        // a saved artifact replaces lowering entirely; the verified
+        // load re-validates structure + code grids and runs the
+        // static verifier, so a corrupt file is a typed error here
+        return engine::load_plan_verified(Path::new(path),
+                                          backend_from_args(args)?)
+            .with_context(|| format!("--load {path:?}"));
+    }
     if let Some(ckpt) = args.opt_flag("checkpoint") {
         let model = args.str_flag("model", "lenet5");
         // the mode the checkpoint was trained in decides which gate
@@ -175,6 +183,13 @@ fn backend_from_args(args: &Args) -> Result<Option<engine::Backend>> {
 fn cmd_plan(args: &Args, opt: &ExpOptions) -> Result<()> {
     let plan = Arc::new(plan_from_args(args, opt)?);
     println!("{}", plan.report());
+    if let Some(path) = args.opt_flag("save") {
+        let n = engine::save_plan(Path::new(path), &plan)?;
+        logging::info(format!(
+            "plan artifact written to {path:?} ({n} bytes; decode \
+             re-verifies checksum, code grids, and plan structure)"
+        ));
+    }
     let backend = backend_from_args(args)?;
     if args.bool_flag("verify") {
         verify_plans_from_args(args, opt, backend)?;
@@ -483,6 +498,14 @@ fn cmd_serve(args: &Args, opt: &ExpOptions) -> Result<()> {
             Arc::new(plan), cfg, rec.clone())?,
         None => serve::Server::start(Arc::new(plan), cfg)?,
     };
+    if args.bool_flag("prewarm") {
+        let id = if server.plan().model.is_empty() {
+            "default".to_string()
+        } else {
+            server.plan().model.clone()
+        };
+        server.registry().prewarm(&id)?;
+    }
     let stats = serve::closed_loop(&server, clients, requests, 7)?;
     println!("{stats}");
     let out = opt.out_path("serve_stats.json");
@@ -519,10 +542,13 @@ fn cmd_serve_ladder_single(args: &Args, opt: &ExpOptions,
     let registry = Arc::new(ModelRegistry::new());
     let trace = trace_from_args(args);
     if let Some((_, rec)) = &trace {
-        registry.set_trace(Some(rec.clone()));
+        registry.set_trace(Some(rec.clone()))?;
     }
     registry.register_ladder(&model, &man, &state.params, &mode,
                              ladder, cfg.clone())?;
+    if args.bool_flag("prewarm") {
+        registry.prewarm(&model)?;
+    }
     print_ladder(&registry, &model);
     logging::info(format!(
         "serving the {}-rung ladder with {} workers/rung (max batch \
@@ -608,7 +634,7 @@ fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
     };
     let trace = trace_from_args(args);
     if let Some((_, rec)) = &trace {
-        registry.set_trace(Some(rec.clone()));
+        registry.set_trace(Some(rec.clone()))?;
     }
     let ladder = args.f64_list_flag("ladder", &[])?;
     let mut ids = Vec::new();
@@ -629,6 +655,11 @@ fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
             print_ladder(&registry, name);
         }
         ids.push(name.clone());
+    }
+    if args.bool_flag("prewarm") {
+        for id in &ids {
+            registry.prewarm(id)?;
+        }
     }
     let clients = args.usize_flag("clients", 8)?;
     let requests = args.usize_flag("requests", 200)?;
@@ -660,8 +691,8 @@ fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
     );
     // registry stats JSON, with the load window's throughput numbers
     // patched over the raw per-model snapshots; the per-node kernel
-    // counters and the per-rung ladder rows only the registry
-    // snapshot carries survive the patch
+    // counters, per-rung ladder rows, and ladder version counters
+    // only the registry snapshot carries survive the patch
     let mut json = registry.stats_json();
     if let Json::Obj(top) = &mut json {
         let carry: BTreeMap<String, Vec<(String, Json)>> =
@@ -671,7 +702,8 @@ fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
                     .filter_map(|(id, m)| match m {
                         Json::Obj(f) => Some((
                             id.clone(),
-                            ["kernels", "rungs"]
+                            ["kernels", "rungs", "version",
+                             "versions_live"]
                                 .iter()
                                 .filter_map(|k| {
                                     f.get(*k).map(|v| {
@@ -716,7 +748,10 @@ fn cmd_serve_multi(args: &Args, opt: &ExpOptions,
 /// (conv) artifacts, each record carrying a `backend` column;
 /// `--backend` restricts the sweep to one backend. `--paper-scale`
 /// instead runs measured forwards through the full 224x224 ResNet18
-/// lowering per backend and writes `BENCH_paper.json`.
+/// lowering per backend and writes `BENCH_paper.json`. The serve
+/// family also emits `BENCH_lifecycle.json` ([`lifecycle_bench`]):
+/// artifact-vs-lowering cold start and warm-tail isolation during a
+/// cold compile.
 fn cmd_engine_bench(args: &Args) -> Result<()> {
     if args.bool_flag("paper-scale") {
         return paper_scale_bench(args);
@@ -781,6 +816,7 @@ fn cmd_engine_bench(args: &Args) -> Result<()> {
     if !conv_only {
         serve_bench(quick)?;
         ladder_bench(quick)?;
+        lifecycle_bench(quick)?;
     }
     Ok(())
 }
@@ -1102,6 +1138,165 @@ fn ladder_bench(quick: bool) -> Result<()> {
          requests served within a calibrated deadline under closed-loop \
          pressure, with per-rung request counts",
         records,
+    )?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Model-lifecycle sweep behind `BENCH_lifecycle.json`, all measured:
+///
+/// 1. **Cold start** — median wall-clock of manifest → lower →
+///    compile-both-paths vs artifact decode → compile-both-paths for
+///    the same model (plus the artifact byte size). The artifact path
+///    skips lowering entirely, which is the `--load` pitch.
+/// 2. **Warm tail isolation** — p50/p99 of a warm model's
+///    submit→response latency while a *different* model's cold rung
+///    compile deliberately holds its latch for `hold_ms` (via the
+///    compile hook), against the same loop with no compile running.
+///    With per-rung latches the two distributions must agree; the
+///    pre-latch design serialized the warm submits behind the
+///    registry lock for the whole compile.
+fn lifecycle_bench(quick: bool) -> Result<()> {
+    let (man, params) = manifest_gen::preset_manifest("lenet5",
+                                                      false, 42)?;
+    let iters = if quick { 3 } else { 7 };
+    bayesian_bits::util::bench::header(&format!(
+        "model lifecycle — lenet5 cold start x{iters}, warm tail \
+         during a held cold compile"
+    ));
+    let median = |t: &mut Vec<u64>| -> f64 {
+        t.sort_unstable();
+        t[t.len() / 2] as f64 / 1e6
+    };
+    let mut lower_ns = Vec::with_capacity(iters);
+    let mut artifact_ns = Vec::with_capacity(iters);
+    let mut artifact_bytes = 0usize;
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        let plan = Arc::new(engine::lower(&man, &params)?);
+        let _progs = engine::try_compile_pair_with(&plan, None)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        lower_ns.push(t0.elapsed().as_nanos() as u64);
+        let bytes = engine::artifact::encode_plan(&plan);
+        artifact_bytes = bytes.len();
+        let t1 = std::time::Instant::now();
+        let decoded =
+            Arc::new(engine::artifact::decode_plan(&bytes)?);
+        let _progs = engine::try_compile_pair_with(&decoded, None)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        artifact_ns.push(t1.elapsed().as_nanos() as u64);
+    }
+    let (lower_ms, artifact_ms) =
+        (median(&mut lower_ns), median(&mut artifact_ns));
+    println!(
+        "cold start: lower+compile {lower_ms:.2}ms, artifact \
+         decode+compile {artifact_ms:.2}ms ({artifact_bytes} B \
+         artifact)"
+    );
+
+    // warm tail: model "w" serves a tight submit/wait loop while
+    // model "c"'s first compile holds its rung latch for hold_ms
+    let cfg = serve::ServeConfig {
+        workers: 2,
+        queue_cap: 64,
+        max_batch: 8,
+        deadline: std::time::Duration::from_micros(200),
+        ..serve::ServeConfig::default()
+    };
+    let hold_ms: u64 = if quick { 150 } else { 400 };
+    let samples = if quick { 400 } else { 2000 };
+    let warm =
+        Arc::new(engine::synthetic_plan("w", &[64, 128, 10], 4, 8,
+                                        0.0, 5)?);
+    let cold =
+        Arc::new(engine::synthetic_plan("c", &[96, 192, 12], 8, 8,
+                                        0.0, 6)?);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("w", warm.clone(), cfg.clone())?;
+    registry.register("c", cold, cfg)?;
+    let x = vec![0.25f32; warm.input_dim];
+    registry.submit("w", x.clone())?.wait()?; // warm the rung
+    let drive = |n: usize, stop: Option<&std::thread::JoinHandle<_>>|
+                 -> Result<Vec<u64>> {
+        let mut lat = Vec::with_capacity(n);
+        while lat.len() < n
+            || stop.map(|h| !h.is_finished()).unwrap_or(false)
+        {
+            let t0 = std::time::Instant::now();
+            registry.submit("w", x.clone())?.wait()?;
+            lat.push(t0.elapsed().as_nanos() as u64);
+        }
+        Ok(lat)
+    };
+    let pct = |lat: &mut Vec<u64>, p: f64| -> f64 {
+        lat.sort_unstable();
+        lat[((lat.len() as f64 - 1.0) * p).round() as usize] as f64
+            / 1e6
+    };
+    let mut base = drive(samples, None)?;
+    let (base_p50, base_p99) = (pct(&mut base, 0.50),
+                                pct(&mut base, 0.99));
+    registry._set_compile_hook(Some(Arc::new(move |id: &str, _| {
+        if id == "c" {
+            std::thread::sleep(
+                std::time::Duration::from_millis(hold_ms));
+        }
+        Ok(())
+    })));
+    let reg = registry.clone();
+    let cold_submit = std::thread::spawn(move || {
+        reg.submit("c", vec![0.5f32; 96]).and_then(|t| t.wait())
+    });
+    let mut during = drive(samples, Some(&cold_submit))?;
+    cold_submit
+        .join()
+        .map_err(|_| anyhow::anyhow!("cold submit panicked"))??;
+    registry._set_compile_hook(None);
+    let (during_p50, during_p99) = (pct(&mut during, 0.50),
+                                    pct(&mut during, 0.99));
+    let cache = registry.cache_stats();
+    registry.shutdown();
+    println!(
+        "warm tail: idle p50 {base_p50:.3}ms p99 {base_p99:.3}ms; \
+         during a {hold_ms}ms cold compile p50 {during_p50:.3}ms p99 \
+         {during_p99:.3}ms over {} samples ({} latch waits by warm \
+         traffic)",
+        during.len(), cache.latch_waits
+    );
+    let out = Path::new("BENCH_lifecycle.json");
+    bayesian_bits::util::bench::save_json(
+        out,
+        "model lifecycle: artifact-vs-lowering cold start down to \
+         compiled programs, and a warm model's latency tail while \
+         another model's cold rung compile holds its latch",
+        vec![
+            bayesian_bits::util::json::obj(vec![
+                ("record", bayesian_bits::util::json::s("cold_start")),
+                ("lower_compile_ms",
+                 bayesian_bits::util::json::num(lower_ms)),
+                ("artifact_compile_ms",
+                 bayesian_bits::util::json::num(artifact_ms)),
+                ("artifact_bytes", bayesian_bits::util::json::num(
+                    artifact_bytes as f64)),
+            ]),
+            bayesian_bits::util::json::obj(vec![
+                ("record", bayesian_bits::util::json::s("warm_tail")),
+                ("hold_ms", bayesian_bits::util::json::num(
+                    hold_ms as f64)),
+                ("samples", bayesian_bits::util::json::num(
+                    during.len() as f64)),
+                ("baseline_p50_ms",
+                 bayesian_bits::util::json::num(base_p50)),
+                ("baseline_p99_ms",
+                 bayesian_bits::util::json::num(base_p99)),
+                ("during_cold_p50_ms",
+                 bayesian_bits::util::json::num(during_p50)),
+                ("during_cold_p99_ms",
+                 bayesian_bits::util::json::num(during_p99)),
+                ("warm_latch_waits", bayesian_bits::util::json::num(
+                    cache.latch_waits as f64)),
+            ]),
+        ],
     )?;
     println!("wrote {}", out.display());
     Ok(())

@@ -1,19 +1,26 @@
 //! Multi-model registry/router battery: routing by model id,
 //! byte-budget LRU eviction with transparent recompilation, plan-cache
-//! counters, and isolation of per-model stats. Synthetic plans give
-//! deterministic integer outputs, so every served response is checked
-//! bit-exactly against a direct `Engine` oracle — including responses
-//! served *after* the model's compiled programs were evicted.
+//! counters, and isolation of per-model stats — plus the model
+//! lifecycle paths: per-rung compile latches (a cold compile never
+//! blocks warm traffic), versioned hot-swap with drain-then-retire,
+//! pre-warming, and failed-compile counter hygiene. Synthetic plans
+//! give deterministic integer outputs, so every served response is
+//! checked bit-exactly against a direct `Engine` oracle — including
+//! responses served *after* the model's compiled programs were
+//! evicted.
 
 #[path = "support/mod.rs"]
 mod support;
 
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
 
 use bayesian_bits::engine::registry::{closed_loop_router,
                                       ModelRegistry, Router};
 use bayesian_bits::engine::serve::ServeConfig;
+use bayesian_bits::engine::trace::TraceRecorder;
 use bayesian_bits::engine::{lower, synthetic_plan, Engine, EnginePlan};
 
 fn cfg() -> ServeConfig {
@@ -168,9 +175,11 @@ fn explicit_evict_then_serve_again() {
 fn registration_and_routing_errors_are_typed_and_early() {
     let registry = ModelRegistry::new();
     registry.register("a", plan_a(), cfg()).unwrap();
-    // duplicate id
-    let err = registry.register("a", plan_b(), cfg()).unwrap_err();
-    assert!(format!("{err}").contains("already registered"), "{err}");
+    // re-registering an id is NOT an error any more — it installs a
+    // new ladder version (hot-swap, pinned by the lifecycle tests
+    // below)
+    registry.register("a", plan_a(), cfg()).unwrap();
+    assert_eq!(registry.cache_stats().swaps, 1);
     // empty id
     assert!(registry.register("", plan_b(), cfg()).is_err());
     // invalid config is rejected at registration, not first submit
@@ -246,6 +255,235 @@ fn stats_json_exposes_models_aggregate_and_cache() {
     // round-trips through the serializer
     let text = j.to_string();
     bayesian_bits::util::json::Json::parse(&text).unwrap();
+}
+
+// ------------------------------------------------------- lifecycle
+
+/// A failed cold compile must move **no** cache counters and leave
+/// the rung cold: a failed compile is not a miss, and the next
+/// successful compile is a first compile, not a recompile. (The
+/// counters used to be bumped before the compile could fail.)
+#[test]
+fn failed_compile_moves_no_counters() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("a", plan_a(), cfg()).unwrap();
+    registry._set_compile_hook(Some(Arc::new(
+        |_: &str, _: usize| Err("injected failure".to_string()))));
+    let err = registry.submit("a", input(8, 0)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected failure"), "{msg}");
+    let c = registry.cache_stats();
+    assert_eq!((c.hits, c.misses, c.recompiles, c.evictions,
+                c.latch_waits),
+               (0, 0, 0, 0, 0),
+               "a failed compile must not move counters: {c:?}");
+    assert_eq!(registry.is_resident("a"), Some(false));
+    // with the failure cleared the same rung compiles as a plain
+    // first miss — not a recompile
+    registry._set_compile_hook(None);
+    let want = Engine::new(plan_a()).infer(&input(8, 0)).unwrap();
+    assert_eq!(registry.submit("a", input(8, 0)).unwrap()
+                   .wait().unwrap(), want);
+    let c = registry.cache_stats();
+    assert_eq!((c.misses, c.recompiles), (1, 0), "{c:?}");
+    registry.shutdown();
+}
+
+/// The tentpole regression pin: a cold rung compile runs off the
+/// registry lock behind a per-rung latch, so warm models keep
+/// serving while it is in flight, and a second submit to the cold
+/// rung parks on the latch (counted) instead of compiling twice.
+/// Before the latches this test deadlocked: the compile held the
+/// registry mutex and every warm submit queued behind it.
+#[test]
+fn cold_compile_never_blocks_warm_traffic() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("w", plan_a(), cfg()).unwrap();
+    registry.register("c", plan_b(), cfg()).unwrap();
+
+    // gate: the cold model's compile blocks until released; the warm
+    // model's compile passes straight through
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let entered = Arc::new(AtomicBool::new(false));
+    let (g2, e2) = (gate.clone(), entered.clone());
+    registry._set_compile_hook(Some(Arc::new(
+        move |id: &str, _rung: usize| {
+            if id == "c" {
+                e2.store(true, Ordering::SeqCst);
+                let (m, cv) = &*g2;
+                let mut go = m.lock().unwrap();
+                while !*go {
+                    go = cv.wait(go).unwrap();
+                }
+            }
+            Ok(())
+        })));
+
+    // warm up w (one miss)
+    let mut ew = Engine::new(plan_a());
+    let w0 = ew.infer(&input(8, 0)).unwrap();
+    assert_eq!(registry.submit("w", input(8, 0)).unwrap()
+                   .wait().unwrap(), w0);
+
+    // start c's cold compile; it stalls inside the hook
+    let mut eb = Engine::new(plan_b());
+    let c0 = eb.infer(&input(6, 0)).unwrap();
+    let c1 = eb.infer(&input(6, 1)).unwrap();
+    let r1 = registry.clone();
+    let t1 = thread::spawn(move || {
+        r1.submit("c", input(6, 0)).unwrap().wait().unwrap()
+    });
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !entered.load(Ordering::SeqCst) {
+        assert!(Instant::now() < deadline, "compile never started");
+        thread::sleep(Duration::from_millis(1));
+    }
+
+    // warm traffic flows while the cold compile is pinned in flight
+    for i in 1..=4 {
+        let want = ew.infer(&input(8, i)).unwrap();
+        assert_eq!(registry.submit("w", input(8, i)).unwrap()
+                       .wait().unwrap(), want);
+    }
+    let c = registry.cache_stats();
+    assert_eq!(c.hits, 4, "warm submits are pure hits: {c:?}");
+    assert_eq!(c.misses, 1, "c's miss only counts on install: {c:?}");
+    assert_eq!(c.latch_waits, 0, "{c:?}");
+
+    // a second submit to the cold rung parks on the latch instead of
+    // compiling a second copy
+    let r2 = registry.clone();
+    let t2 = thread::spawn(move || {
+        r2.submit("c", input(6, 1)).unwrap().wait().unwrap()
+    });
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while registry.cache_stats().latch_waits < 1 {
+        assert!(Instant::now() < deadline,
+                "second submit never parked on the latch");
+        thread::sleep(Duration::from_millis(1));
+    }
+
+    // release the compile; both parked requests complete bit-exactly
+    {
+        let (m, cv) = &*gate;
+        *m.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    assert_eq!(t1.join().unwrap(), c0);
+    assert_eq!(t2.join().unwrap(), c1);
+
+    let c = registry.cache_stats();
+    assert_eq!(c.misses, 2, "one compile for two submits: {c:?}");
+    assert_eq!(c.latch_waits, 1, "{c:?}");
+    assert_eq!(c.hits, 4, "{c:?}");
+    assert_eq!(c.recompiles, 0, "{c:?}");
+    registry._set_compile_hook(None);
+    registry.shutdown();
+}
+
+/// Re-registering a live id installs a new ladder version: new
+/// submits route to the new plan, the superseded version retires
+/// once idle (pools shut down, bytes reclaimed), and the `swaps` /
+/// `drained` counters plus the per-model version fields record the
+/// transition.
+#[test]
+fn hot_swap_routes_new_version_and_retires_old() {
+    let v1 = plan_a();
+    // same 8 -> 4 interface, different hidden layer: a genuinely
+    // different function behind the same name
+    let v2: Arc<EnginePlan> = Arc::new(
+        synthetic_plan("a2", &[8, 24, 4], 4, 8, 0.0, 17).unwrap());
+    let x = input(8, 3);
+    let want_v1 = Engine::new(v1.clone()).infer(&x).unwrap();
+    let want_v2 = Engine::new(v2.clone()).infer(&x).unwrap();
+    assert_ne!(want_v1, want_v2,
+               "swap must be observable through outputs");
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("a", v1, cfg()).unwrap();
+    assert_eq!(registry.submit("a", x.clone()).unwrap()
+                   .wait().unwrap(), want_v1);
+    assert_eq!(registry.versions("a"), Some((1, 1)));
+    let warm_bytes = registry.resident_bytes();
+    assert!(warm_bytes > 0);
+
+    registry.register("a", v2, cfg()).unwrap();
+    let c = registry.cache_stats();
+    assert_eq!(c.swaps, 1, "{c:?}");
+    // the old version was idle (its one request had completed), so
+    // the registration sweep retired it on the spot: pools shut
+    // down, bytes reclaimed
+    assert_eq!(c.drained, 1, "{c:?}");
+    assert_eq!(registry.resident_bytes(), 0);
+    let (version, live) = registry.versions("a").unwrap();
+    assert_eq!(version, 2);
+    assert_eq!(live, 1);
+
+    // new submits route to the new plan
+    assert_eq!(registry.submit("a", x).unwrap().wait().unwrap(),
+               want_v2);
+
+    // the transition is visible in stats_json
+    let j = registry.stats_json();
+    let cache = j.get("cache").unwrap();
+    assert_eq!(cache.get("swaps").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(cache.get("drained").unwrap().as_usize().unwrap(), 1);
+    let a = j.get("models").unwrap().get("a").unwrap();
+    assert_eq!(a.get("version").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(a.get("versions_live").unwrap().as_usize().unwrap(), 1);
+    registry.shutdown();
+}
+
+/// `prewarm` compiles every rung of the current ladder version up
+/// front, so the first real submit is a cache hit instead of paying
+/// a cold compile.
+#[test]
+fn prewarm_makes_first_submit_a_hit() {
+    let lo = plan_a();
+    let hi: Arc<EnginePlan> = Arc::new(
+        synthetic_plan("a2", &[8, 24, 4], 4, 8, 0.0, 17).unwrap());
+    let registry = Arc::new(ModelRegistry::new());
+    registry
+        .register_ladder_plans("lad",
+                               vec![(0.3, lo.clone()), (0.6, hi)],
+                               cfg())
+        .unwrap();
+    assert_eq!(registry.is_resident("lad"), Some(false));
+    registry.prewarm("lad").unwrap();
+    assert_eq!(registry.is_resident("lad"), Some(true));
+    let c = registry.cache_stats();
+    assert_eq!((c.misses, c.hits), (2, 0), "{c:?}");
+    // the first submits to both rungs are now pure hits
+    let want = Engine::new(lo).infer(&input(8, 0)).unwrap();
+    assert_eq!(registry.submit_rung("lad", 0, input(8, 0)).unwrap()
+                   .wait().unwrap(), want);
+    registry.submit_rung("lad", 1, input(8, 1)).unwrap()
+        .wait().unwrap();
+    let c = registry.cache_stats();
+    assert_eq!((c.misses, c.hits), (2, 2), "{c:?}");
+    assert!(registry.prewarm("nope").is_err());
+    registry.shutdown();
+}
+
+/// `set_trace` only affects pools spawned afterwards, so attaching a
+/// recorder while pools are live would silently trace nothing — the
+/// registry rejects it with a typed error instead. Evicting (forcing
+/// the pools cold) releases the contract.
+#[test]
+fn set_trace_rejects_attach_while_pools_running() {
+    let registry = ModelRegistry::new();
+    registry.register("a", plan_a(), cfg()).unwrap();
+    // no pools yet: attaching is fine
+    registry.set_trace(Some(TraceRecorder::new())).unwrap();
+    registry.submit("a", input(8, 0)).unwrap().wait().unwrap();
+    // a pool is live now — it keeps the recorder it started with, so
+    // swapping (or detaching) must be refused, not silently ignored
+    let err = registry.set_trace(None).unwrap_err();
+    assert!(format!("{err}").contains("already running"), "{err}");
+    // forcing the model cold releases the contract
+    assert!(registry.evict("a"));
+    registry.set_trace(None).unwrap();
+    registry.shutdown();
 }
 
 #[test]

@@ -369,6 +369,182 @@ fn structural_corruption_reports_malformed() {
             "expected Malformed, got {errs:?}");
 }
 
+// ------------------------------------------------------- f32 ranges
+
+/// Corrupting a requantize scale to a huge value makes the statically
+/// bounded f32 edge exceed `f32::MAX` — rejected as
+/// `F32RangeOverflow` on the requantizing node. Before this check
+/// nothing bounded the folded `s_w * s_a` product: a corrupt scale
+/// would serve `inf` logits without a single failed assertion.
+#[test]
+fn huge_requant_scale_rejected() {
+    let mut prog = clean_program(&[64, 32, 10], 8, 8, true,
+                                 Backend::Scalar);
+    let mut hit = None;
+    for (i, n) in prog.nodes_mut().iter_mut().enumerate() {
+        match n {
+            Node::Requant { scale, .. }
+            | Node::RequantQuantize { scale, .. } => {
+                *scale = 1e300;
+                hit = Some(i);
+                break;
+            }
+            _ => {}
+        }
+    }
+    let node = hit.expect("int program requantizes");
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::F32RangeOverflow { node: n, .. }
+                    if *n == node)),
+            "expected F32RangeOverflow(node {node}), got {errs:?}");
+}
+
+/// A non-finite requantize scale (NaN) trips the same finiteness
+/// check, even though no ordered comparison against `f32::MAX` can
+/// see NaN.
+#[test]
+fn nan_requant_scale_rejected() {
+    let mut prog = clean_program(&[64, 32, 10], 8, 8, true,
+                                 Backend::Scalar);
+    for n in prog.nodes_mut().iter_mut() {
+        match n {
+            Node::Requant { scale, .. }
+            | Node::RequantQuantize { scale, .. } => {
+                *scale = f64::NAN;
+                break;
+            }
+            _ => {}
+        }
+    }
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::F32RangeOverflow { .. })),
+            "expected F32RangeOverflow for NaN scale, got {errs:?}");
+}
+
+/// A corrupt dequantize step blows the bound on the simulated-quant
+/// reference path the same way — the range propagation covers the
+/// f32 edges on both execution paths.
+#[test]
+fn huge_dequantize_step_rejected() {
+    let mut prog = clean_program(&[64, 32, 10], 8, 8, false,
+                                 Backend::Scalar);
+    let mut hit = None;
+    for (i, n) in prog.nodes_mut().iter_mut().enumerate() {
+        if let Node::Dequantize { step, .. } = n {
+            *step = f32::MAX;
+            hit = Some(i);
+            break;
+        }
+    }
+    let node = hit.expect("f32 program dequantizes its activations");
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::F32RangeOverflow { node: n, .. }
+                    if *n == node)),
+            "expected F32RangeOverflow(node {node}), got {errs:?}");
+}
+
+// -------------------------------------------------------- adapters
+
+/// An `AdaptSpatial` node whose geometry disagrees with the plan
+/// manifest is rejected as `AdapterGeometry` even when its flat
+/// length is untouched. Swap a materialized max pool for a
+/// product-preserving spatial adapter: every edge-shape check stays
+/// blind (all flat widths still agree), only the comparison against
+/// the layer's manifest pre-op and spatial input sees the wrong NHWC
+/// interpretation.
+#[test]
+fn adapt_spatial_against_manifest_rejected() {
+    let mut found = None;
+    for model in ["vgg7", "lenet5", "resnet18"] {
+        let (man, params) = support::preset_manifest(model, false);
+        let plan = Arc::new(
+            engine::lower_with_mode_at(&man, &params,
+                                       &Mode::BayesianBits, 0.5)
+                .unwrap());
+        let prog = Program::try_compile_with_backend(
+            plan, true, Some(Backend::Scalar)).unwrap();
+        if prog.nodes().iter().any(|n| matches!(
+                n, Node::MaxPool2 { .. })) {
+            found = Some(prog);
+            break;
+        }
+    }
+    let mut prog = found.expect("a spatial preset materializes a \
+                                 max pool");
+    assert!(verify_all(&prog).is_empty());
+    let (idx, repl) = prog
+        .nodes()
+        .iter()
+        .enumerate()
+        .find_map(|(i, n)| match n {
+            Node::MaxPool2 { src, dst, h, w, c } => {
+                Some((i, Node::AdaptSpatial {
+                    src: *src,
+                    dst: *dst,
+                    from: (*h, *w, *c),
+                    // same flat product as the pool's output, so no
+                    // shape check can object
+                    to: (h / 2, (w / 2) * c, 1),
+                }))
+            }
+            _ => None,
+        })
+        .unwrap();
+    prog.nodes_mut()[idx] = repl;
+    let errs = verify_all(&prog);
+    assert!(!errs.iter().any(|e| matches!(
+                e, VerifyError::EdgeShape { .. })),
+            "flat widths unchanged — shape checks stay blind: {errs:?}");
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::AdapterGeometry { node, .. }
+                    if *node == idx)),
+            "expected AdapterGeometry(node {idx}), got {errs:?}");
+}
+
+/// An `AdaptFeatures` bridge a buggy pass resized *consistently*
+/// (node and its output buffer together) keeps its own edges
+/// agreeing; the manifest comparison still pins the corruption to
+/// the bridge, because the owning layer's input width is the one
+/// width a rewrite pass cannot change.
+#[test]
+fn resized_adapt_features_rejected() {
+    // the legacy flattened schema is what lowers with the bridge
+    let (man, params) = support::preset_manifest("lenet5", true);
+    let plan = Arc::new(
+        engine::lower_with_mode_at(&man, &params,
+                                   &Mode::BayesianBits, 0.5)
+            .unwrap());
+    let mut prog = Program::try_compile_with_backend(
+        plan, true, Some(Backend::Scalar)).unwrap();
+    assert!(verify_all(&prog).is_empty(),
+            "legacy lenet5 verifies clean");
+    let (idx, dst, want) = prog
+        .nodes()
+        .iter()
+        .enumerate()
+        .find_map(|(i, n)| match n {
+            Node::AdaptFeatures { dst, want, .. } => {
+                Some((i, *dst, *want))
+            }
+            _ => None,
+        })
+        .expect("legacy manifest lowers with an AdaptFeatures bridge");
+    assert!(want > 1);
+    match &mut prog.nodes_mut()[idx] {
+        Node::AdaptFeatures { want, .. } => *want -= 1,
+        _ => unreachable!(),
+    }
+    prog.bufs_mut()[dst].len = want - 1;
+    let errs = verify_all(&prog);
+    assert!(errs.iter().any(|e| matches!(
+                e, VerifyError::AdapterGeometry { node, .. }
+                    if *node == idx)),
+            "expected AdapterGeometry(node {idx}), got {errs:?}");
+}
+
 // ------------------------------------------------------------- backends
 
 /// Without a forced override, a SIMD assignment on a lane dimension
